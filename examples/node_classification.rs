@@ -1,0 +1,40 @@
+//! Dynamic node classification (Table 2's protocol) as a standalone example:
+//! train the encoder self-supervised, freeze it, replay the stream to
+//! collect dynamic embeddings for labeled events, train the MLP head, and
+//! report ROC-AUC on the chronological tail.
+//!
+//!     cargo run --release --example node_classification [-- --dataset mooc --model tgn]
+
+use pres::config::ExperimentConfig;
+use pres::training::Trainer;
+use pres::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["std"])?;
+    let dataset = args.get_or("dataset", "mooc");
+    let model = args.get_or("model", "tgn");
+    let mut cfg = ExperimentConfig::default_with(dataset, model, 200, !args.flag("std"));
+    cfg.epochs = args.usize_or("epochs", 5)?;
+
+    println!("stage 1: self-supervised encoder training ({model} on {dataset}-like)");
+    let mut trainer = Trainer::from_config(&cfg)?;
+    for epoch in 0..cfg.epochs {
+        let r = trainer.train_epoch(epoch)?;
+        println!("  epoch {}: loss {:.4} train AP {:.4}", epoch, r.train_loss, r.train_ap);
+    }
+
+    println!("stage 2: replay stream, collect labeled dynamic embeddings");
+    let (test_ap, rows) = trainer.eval_test(true)?;
+    let positives = rows.iter().filter(|(_, l)| *l > 0.5).count();
+    println!(
+        "  {} labeled events ({} positive), link-pred test AP {:.4}",
+        rows.len(),
+        positives,
+        test_ap
+    );
+
+    println!("stage 3: train the classification head, report tail ROC-AUC");
+    let auc = pres::eval::nodeclf::train_and_auc(&trainer.engine, &rows, cfg.seed)?;
+    println!("  node classification ROC-AUC: {auc:.4}");
+    Ok(())
+}

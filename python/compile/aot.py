@@ -1,0 +1,146 @@
+"""AOT pipeline: lower every (model, batch, kind) step to HLO *text* and
+emit artifacts/manifest.json describing the exact ABI for the rust runtime.
+
+HLO text — NOT ``lowered.compiler_ir('hlo').as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The compiled temporal-batch sizes. Figures sweep across these; Table 1
+# contrasts the per-dataset base size with 4x larger PRES batches.
+BATCH_SIZES = (25, 50, 100, 200, 400, 800, 1600)
+# Sequential-oracle artifacts (per-event replay in tests / fig. 3): TGN only.
+ORACLE_BATCHES = (1, 5, 10)
+
+QUICK_MATRIX = [
+    ("tgn", 25), ("tgn", 100), ("jodie", 100), ("apan", 100), ("tgn", 1),
+]
+
+
+def to_hlo_text(fn, args) -> str:
+    # keep_unused pins the ABI: inputs a model variant ignores (e.g. TGN's
+    # c_*_dt) must still be ENTRY parameters so rust can pack positionally.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(specs):
+    return [
+        {"name": n, "shape": list(s), "dtype": d} for n, s, d in specs
+    ]
+
+
+def build(out_dir: str, quick: bool = False, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    if quick:
+        matrix = list(QUICK_MATRIX)
+    else:
+        matrix = [(m, b) for m in model.MODELS for b in BATCH_SIZES]
+        matrix += [("tgn", b) for b in ORACLE_BATCHES]
+
+    artifacts = []
+    t_start = time.time()
+    for name_model, b in matrix:
+        for kind in ("train", "eval"):
+            name = f"{name_model}_b{b}_{kind}"
+            if only and only not in name:
+                continue
+            fn, inputs, outs = model.make_step(name_model, b, kind)
+            t0 = time.time()
+            text = to_hlo_text(fn, model.example_args(inputs))
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            artifacts.append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "model": name_model,
+                    "kind": kind,
+                    "batch": b,
+                    "inputs": _spec_json(inputs),
+                    "outputs": _spec_json(outs),
+                }
+            )
+            print(f"  {name}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s")
+
+    for kind in ("train", "eval"):
+        name = f"clf_{kind}"
+        if only and only not in name:
+            continue
+        fn, inputs, outs = model.make_clf_step(kind)
+        text = to_hlo_text(fn, model.example_args(inputs))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "file": fname,
+                "model": "clf",
+                "kind": kind,
+                "batch": model.DIMS["clf_batch"],
+                "inputs": _spec_json(inputs),
+                "outputs": _spec_json(outs),
+            }
+        )
+
+    manifest = {
+        "version": 1,
+        "dims": model.DIMS,
+        "adam": {"b1": model.ADAM_B1, "b2": model.ADAM_B2, "eps": model.ADAM_EPS},
+        "params": {
+            m: [
+                {"name": n, "shape": list(s), "init": init}
+                for n, s, init in model.param_specs(m)
+            ]
+            for m in model.MODELS
+        },
+        "clf_params": [
+            {"name": n, "shape": list(s), "init": init}
+            for n, s, init in model.clf_param_specs()
+        ],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"wrote {len(artifacts)} artifacts + manifest to {out_dir} "
+        f"in {time.time()-t_start:.1f}s"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="reduced matrix for CI")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    jax.config.update("jax_platform_name", "cpu")
+    build(args.out, quick=args.quick, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

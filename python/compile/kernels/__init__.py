@@ -1,0 +1,22 @@
+"""L1: Pallas kernels for the MDGNN hot spots (interpret-mode on CPU).
+
+Every kernel has a pure-jnp oracle in ref.py; correctness is enforced by
+python/tests/test_kernels.py (hypothesis sweeps over shapes) and backward
+passes go through the oracle formulas via custom VJP (see common.ref_vjp).
+"""
+
+from .attention import temporal_attention
+from .gru import fused_gru
+from .jodie import jodie_project
+from .mailbox import masked_mean
+from .pres import pres_correct
+from .time_enc import time_encode
+
+__all__ = [
+    "temporal_attention",
+    "fused_gru",
+    "jodie_project",
+    "masked_mean",
+    "pres_correct",
+    "time_encode",
+]

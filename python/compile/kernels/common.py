@@ -1,0 +1,99 @@
+"""Shared Pallas helpers for the PRES kernel suite.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers each kernel to plain HLO ops
+that the rust runtime can compile and run. On a real TPU the same
+``pallas_call`` bodies lower to Mosaic; the BlockSpecs below are written for
+that target (VMEM-sized batch blocks, MXU-aligned feature widths — see
+DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+# Batch-block size used by all kernels. 128 rows x <=384 f32 features keeps
+# each kernel's working set well under 1 MB of VMEM while feeding the MXU
+# (128x128 systolic array) full tiles on the row dimension.
+MAX_BLOCK_B = 128
+
+INTERPRET = True  # CPU PJRT: interpret-mode only. See module docstring.
+
+
+def pick_block_b(b: int) -> int:
+    """Largest divisor of ``b`` that is <= MAX_BLOCK_B.
+
+    The compiled batch sizes (25, 50, 100, 200, ..., 1600) all admit a
+    divisor of 100 or are themselves <= 128; arbitrary test sizes fall back
+    to smaller divisors (worst case 1 — still correct, just more grid steps).
+    """
+    if b <= MAX_BLOCK_B:
+        return b
+    for cand in range(MAX_BLOCK_B, 0, -1):
+        if b % cand == 0:
+            return cand
+    return 1
+
+
+def call(kernel, out_shape, grid, in_specs, out_specs):
+    """``pl.pallas_call`` with the suite-wide interpret setting."""
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        interpret=INTERPRET,
+    )
+
+
+def row_spec(block_b: int, *feature_dims: int):
+    """BlockSpec for a tensor blocked over dim 0, full width elsewhere."""
+    shape = (block_b, *feature_dims)
+    ndim = len(shape)
+
+    def index_map(i, _nd=ndim):
+        return (i,) + (0,) * (_nd - 1)
+
+    return pl.BlockSpec(shape, index_map)
+
+
+def full_spec(*dims: int):
+    """BlockSpec for a tensor replicated to every grid step (weights)."""
+    ndim = len(dims)
+
+    def index_map(i, _nd=ndim):
+        return (0,) * _nd
+
+    return pl.BlockSpec(tuple(dims), index_map)
+
+
+def ref_vjp(ref_fn):
+    """Wrap a pallas forward with a custom VJP whose backward runs the
+    pure-jnp reference formula.
+
+    Pallas has no general autodiff; the forward hot path stays a kernel
+    while XLA fuses the reference backward. ``ref_fn`` must be numerically
+    identical to the kernel (enforced by python/tests/test_kernels.py).
+    """
+
+    def decorator(pallas_fn):
+        @jax.custom_vjp
+        @functools.wraps(pallas_fn)
+        def wrapped(*args):
+            return pallas_fn(*args)
+
+        def fwd(*args):
+            return pallas_fn(*args), args
+
+        def bwd(args, ct):
+            _, pullback = jax.vjp(ref_fn, *args)
+            return pullback(ct)
+
+        wrapped.defvjp(fwd, bwd)
+        return wrapped
+
+    return decorator

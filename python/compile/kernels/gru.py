@@ -1,0 +1,54 @@
+"""Pallas kernel: fused GRU memory cell (the MEM module's hot spot).
+
+One matmul per operand against a fused [.., 3*dh] gate bank (cuDNN layout)
+instead of three separate gate GEMMs: on TPU this feeds the MXU two large
+[block_b, dx|dh] x [dx|dh, 3*dh] tiles per block (dh=64 -> 192-wide bank,
+MXU-aligned), then finishes the gate nonlinearity in VPU registers.
+
+VMEM per block (block_b=128, dx=dh=64, f32):
+  x 32KB + h 32KB + wx 48KB + wh 48KB + bias 1.5KB + out 32KB ~ 0.19 MB.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common, ref
+
+
+def _kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, o_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    bias = b_ref[...]
+    dh = h.shape[1]
+    gx = jnp.dot(x, wx_ref[...]) + bias[0][None, :]
+    gh = jnp.dot(h, wh_ref[...]) + bias[1][None, :]
+    r = jax.nn.sigmoid(gx[:, :dh] + gh[:, :dh])
+    z = jax.nn.sigmoid(gx[:, dh : 2 * dh] + gh[:, dh : 2 * dh])
+    n = jnp.tanh(gx[:, 2 * dh :] + r * gh[:, 2 * dh :])
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+@common.ref_vjp(ref.fused_gru)
+def fused_gru(x, h, wx, wh, bias):
+    """x: [b, dx], h: [b, dh], wx: [dx, 3dh], wh: [dh, 3dh], bias: [2, 3dh].
+
+    Returns the next memory state [b, dh]. See ref.fused_gru.
+    """
+    b, dx = x.shape
+    dh = h.shape[1]
+    bb = common.pick_block_b(b)
+    return common.call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, dh), jnp.float32),
+        grid=(b // bb,),
+        in_specs=[
+            common.row_spec(bb, dx),
+            common.row_spec(bb, dh),
+            common.full_spec(dx, 3 * dh),
+            common.full_spec(dh, 3 * dh),
+            common.full_spec(2, 3 * dh),
+        ],
+        out_specs=common.row_spec(bb, dh),
+    )(x, h, wx, wh, bias)

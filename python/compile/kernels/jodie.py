@@ -1,0 +1,37 @@
+"""Pallas kernel: JODIE's time-projected embedding h = s * (1 + dt * w).
+
+JODIE (Kumar et al. 2019) evolves an embedding between events by a learned
+linear drift in elapsed time; this is its EMB module and the only compute
+between memory rows and decoder, so it is kerneled despite being small.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common, ref
+
+
+def _kernel(s_ref, dt_ref, w_ref, o_ref):
+    s = s_ref[...]
+    dt = dt_ref[...]
+    o_ref[...] = s * (1.0 + dt[:, None] * w_ref[...][None, :])
+
+
+@common.ref_vjp(ref.jodie_project)
+def jodie_project(s, dt, w):
+    """s: [b, d], dt: [b], w: [d] -> [b, d]. See ref.jodie_project."""
+    b, d = s.shape
+    bb = common.pick_block_b(b)
+    return common.call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        grid=(b // bb,),
+        in_specs=[
+            common.row_spec(bb, d),
+            common.row_spec(bb),
+            common.full_spec(d),
+        ],
+        out_specs=common.row_spec(bb, d),
+    )(s, dt, w)

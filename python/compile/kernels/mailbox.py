@@ -1,0 +1,40 @@
+"""Pallas kernel: masked mailbox mean (APAN's aggregation primitive).
+
+APAN (Wang et al. 2021) delivers messages ("mails") to neighbor mailboxes
+asynchronously and aggregates the mailbox at embedding time. The rust
+coordinator maintains the per-vertex mailbox ring buffer; this kernel
+performs the masked mean over the K most recent mails. (APAN's attention
+variant reuses kernels/attention.py with mails as keys/values.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common, ref
+
+
+def _kernel(x_ref, m_ref, o_ref):
+    x = x_ref[...]
+    mask = m_ref[...]
+    num = jnp.sum(x * mask[:, :, None], axis=1)
+    den = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    o_ref[...] = num / den
+
+
+@common.ref_vjp(ref.masked_mean)
+def masked_mean(x, mask):
+    """x: [b, K, d], mask: [b, K] -> [b, d]. See ref.masked_mean."""
+    b, K, d = x.shape
+    bb = common.pick_block_b(b)
+    return common.call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        grid=(b // bb,),
+        in_specs=[
+            common.row_spec(bb, K, d),
+            common.row_spec(bb, K),
+        ],
+        out_specs=common.row_spec(bb, d),
+    )(x, mask)

@@ -1,0 +1,51 @@
+"""Pallas kernel: PRES prediction-correction fusion (paper Eq. 8 + Eq. 9 input).
+
+s_bar = gamma * s_new + (1 - gamma) * s_pred and the innovation
+delta = s_bar - s_new are produced in one elementwise pass. gamma is a
+*learnable* scalar (sigmoid-squashed upstream so it stays in [0, 1]; the
+paper's gamma), so this kernel sits on the differentiated path — the
+custom VJP routes gradients to s_new, s_pred and gamma via the reference
+formula.
+
+The rust coordinator consumes delta to update the per-vertex GMM trackers
+(Eq. 9) and writes s_bar back into the memory store.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common, ref
+
+
+def _kernel(s_new_ref, s_pred_ref, gamma_ref, sbar_ref, delta_ref):
+    s_new = s_new_ref[...]
+    s_pred = s_pred_ref[...]
+    g = gamma_ref[...][:, None]
+    s_bar = g * s_new + (1.0 - g) * s_pred
+    sbar_ref[...] = s_bar
+    delta_ref[...] = s_bar - s_new
+
+
+@common.ref_vjp(ref.pres_correct)
+def pres_correct(s_new, s_pred, gamma):
+    """s_new/s_pred: [b, d], gamma: [b] per row -> (s_bar, delta) [b, d].
+
+    gamma rows equal to 1 make the correction a no-op for that row — the
+    coordinator uses this to gate the filter onto pending-event rows only.
+    """
+    b, d = s_new.shape
+    bb = common.pick_block_b(b)
+    out = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    return common.call(
+        _kernel,
+        out_shape=(out, out),
+        grid=(b // bb,),
+        in_specs=[
+            common.row_spec(bb, d),
+            common.row_spec(bb, d),
+            common.row_spec(bb),
+        ],
+        out_specs=(common.row_spec(bb, d), common.row_spec(bb, d)),
+    )(s_new, s_pred, gamma)

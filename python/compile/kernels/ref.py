@@ -1,0 +1,96 @@
+"""Pure-jnp oracle for every Pallas kernel in the suite.
+
+These are the ground truth the kernels are tested against
+(python/tests/test_kernels.py, hypothesis sweeps) and the formulas the
+custom-VJP backward passes differentiate through (kernels/common.py).
+Keep each function a line-for-line mathematical statement of the op.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def time_encode(dt, omega, phi):
+    """Bochner-style functional time encoding: cos(dt * omega + phi).
+
+    dt: [n] non-negative time deltas; omega, phi: [D]. Returns [n, D].
+    (Xu et al. 2020 / TGN's learnable time encoder.)
+    """
+    return jnp.cos(dt[:, None] * omega[None, :] + phi[None, :])
+
+
+def fused_gru(x, h, wx, wh, bias):
+    """cuDNN-layout GRU cell (single fused gate bank per operand).
+
+    x: [b, dx] input (message), h: [b, dh] previous state,
+    wx: [dx, 3*dh], wh: [dh, 3*dh], bias: [2, 3*dh] (input bias, hidden bias).
+    Gate order along the 3*dh axis: reset | update | candidate.
+    Returns [b, dh].
+    """
+    dh = h.shape[1]
+    gx = x @ wx + bias[0][None, :]
+    gh = h @ wh + bias[1][None, :]
+    r = jax.nn.sigmoid(gx[:, :dh] + gh[:, :dh])
+    z = jax.nn.sigmoid(gx[:, dh : 2 * dh] + gh[:, dh : 2 * dh])
+    n = jnp.tanh(gx[:, 2 * dh :] + r * gh[:, 2 * dh :])
+    return (1.0 - z) * n + z * h
+
+
+def temporal_attention(q, k, v, mask, num_heads):
+    """Multi-head scaled-dot attention of one query over K neighbors.
+
+    q: [b, H*dk], k: [b, K, H*dk], v: [b, K, H*dv], mask: [b, K] in {0,1}.
+    Fully-masked rows (no temporal neighbors yet) return zeros.
+    Returns [b, H*dv].
+    """
+    b, K, hdk = k.shape
+    dv = v.shape[2] // num_heads
+    dk = hdk // num_heads
+    qh = q.reshape(b, num_heads, dk)
+    kh = k.reshape(b, K, num_heads, dk)
+    vh = v.reshape(b, K, num_heads, dv)
+    scores = jnp.einsum("bhd,bkhd->bhk", qh, kh) / jnp.sqrt(jnp.float32(dk))
+    scores = scores + (1.0 - mask[:, None, :]) * jnp.float32(-1e9)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    expw = jnp.exp(scores) * mask[:, None, :]
+    denom = jnp.sum(expw, axis=-1, keepdims=True)
+    att = expw / jnp.maximum(denom, 1e-9)
+    out = jnp.einsum("bhk,bkhd->bhd", att, vh)
+    return out.reshape(b, num_heads * dv)
+
+
+def pres_correct(s_new, s_pred, gamma):
+    """PRES correction (paper Eq. 8) + GMM innovation (Eq. 9 input).
+
+    s_bar = gamma * s_new + (1 - gamma) * s_pred,  delta = s_bar - s_new.
+
+    gamma: [b] per-row fusion weight. The coordinator gates the correction
+    to rows whose vertex actually has pending events in the batch (the
+    "noisy measurements" of the paper's filter); clean rows get gamma = 1
+    and pass through untouched. delta is the innovation the rust-side GMM
+    trackers accumulate. Returns (s_bar [b, d], delta [b, d]).
+    """
+    g = gamma[:, None]
+    s_bar = g * s_new + (1.0 - g) * s_pred
+    delta = s_bar - s_new
+    return s_bar, delta
+
+
+def jodie_project(s, dt, w):
+    """JODIE's time-projected embedding: h = s * (1 + dt * w).
+
+    s: [b, d] memory, dt: [b] elapsed time, w: [d] learnable projection.
+    """
+    return s * (1.0 + dt[:, None] * w[None, :])
+
+
+def masked_mean(x, mask):
+    """Masked mean over axis 1 (APAN mailbox aggregation).
+
+    x: [b, K, d], mask: [b, K] in {0,1}. Empty mailboxes yield zeros.
+    """
+    num = jnp.sum(x * mask[:, :, None], axis=1)
+    den = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return num / den

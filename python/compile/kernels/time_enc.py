@@ -1,0 +1,37 @@
+"""Pallas kernel: functional time encoding phi(dt) = cos(dt * omega + phi).
+
+The time encoder is evaluated 2+3*(K+1) times per training step (every
+message and every attention key carries one), which made it a named hot
+spot in TGOpt (Wang & Mendis 2023); fusing it keeps the encode on-chip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common, ref
+
+
+def _kernel(dt_ref, omega_ref, phi_ref, o_ref):
+    dt = dt_ref[...]
+    o_ref[...] = jnp.cos(dt[:, None] * omega_ref[...][None, :] + phi_ref[...][None, :])
+
+
+@common.ref_vjp(ref.time_encode)
+def time_encode(dt, omega, phi):
+    """dt: [n], omega/phi: [D] -> [n, D]. See ref.time_encode."""
+    n = dt.shape[0]
+    d = omega.shape[0]
+    bb = common.pick_block_b(n)
+    return common.call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        grid=(n // bb,),
+        in_specs=[
+            common.row_spec(bb),
+            common.full_spec(d),
+            common.full_spec(d),
+        ],
+        out_specs=common.row_spec(bb, d),
+    )(dt, omega, phi)

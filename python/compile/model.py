@@ -1,0 +1,545 @@
+"""L2: MDGNN encoders (TGN / JODIE / APAN) + PRES objective, fused per-step.
+
+One jitted function = one training iteration of Algorithm 2 (paper App. A):
+
+    messages -> memory update -> PRES correction (Eq. 8) -> lag-one splice
+    -> embeddings -> BCE + beta * (1 - memory coherence) (Eq. 10) -> Adam
+
+Everything differentiable lives here so the rust coordinator performs exactly
+one PJRT call per step. The executable never sees the [N, d] memory: the
+coordinator gathers rows for the 2b "update rows" of the previous batch and
+the current batch's vertices/neighbors, and splices fresh states via match
+indices (DESIGN.md §1). STANDARD training is the same artifact with
+pres_on = 0 and beta = 0.
+
+Shapes depend only on (model, batch size); see aot.py for the artifact
+matrix and the manifest consumed by rust/src/runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+# ---------------------------------------------------------------------------
+# Dimension conventions (DESIGN.md §3). MXU-aligned: d=64, gate bank 192.
+# ---------------------------------------------------------------------------
+
+DIMS = dict(
+    d_mem=64,     # memory state width
+    d_msg=64,     # message width
+    d_edge=16,    # edge feature width (zero vector for non-attributed data)
+    d_time=16,    # functional time encoding width
+    k_nbr=10,     # sampled temporal neighbors / mailbox slots
+    heads=2,      # attention heads
+    d_qk=64,      # total query/key width (heads * 32)
+    d_val=64,     # total value width
+    d_emb=64,     # output embedding width
+    msg_hidden=128,
+    dec_hidden=128,
+    clf_hidden=64,
+    clf_batch=256,
+)
+
+MODELS = ("tgn", "jodie", "apan")
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs. The manifest serializes these so the rust coordinator can
+# initialize parameters host-side with its own RNG and upload them once.
+# ---------------------------------------------------------------------------
+
+
+def _glorot(shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    return {"kind": "glorot_uniform", "fan_in": fan_in, "fan_out": fan_out}
+
+
+def _zeros():
+    return {"kind": "zeros"}
+
+
+def _const(values):
+    return {"kind": "const", "values": [float(v) for v in values]}
+
+
+def _time_encoder_specs():
+    # TGN-style timescale spread: omega_i = 10^{-4 i / D}. phi = 0.
+    d = DIMS["d_time"]
+    omega = [10.0 ** (-4.0 * i / max(d - 1, 1)) for i in range(d)]
+    return [
+        ("time_omega", (d,), _const(omega)),
+        ("time_phi", (d,), _const([0.0] * d)),
+    ]
+
+
+def param_specs(model: str):
+    """Ordered [(name, shape, init)] for ``model``. Order defines the ABI."""
+    d, dm, de, dt = DIMS["d_mem"], DIMS["d_msg"], DIMS["d_edge"], DIMS["d_time"]
+    dqk, dv, demb = DIMS["d_qk"], DIMS["d_val"], DIMS["d_emb"]
+    mh, dh = DIMS["msg_hidden"], DIMS["dec_hidden"]
+    msg_in = 2 * d + de + dt
+
+    specs = list(_time_encoder_specs())
+    specs += [
+        ("msg_w1", (msg_in, mh), _glorot((msg_in, mh))),
+        ("msg_b1", (mh,), _zeros()),
+        ("msg_w2", (mh, dm), _glorot((mh, dm))),
+        ("msg_b2", (dm,), _zeros()),
+    ]
+    if model == "jodie":
+        # vanilla RNN memory cell
+        specs += [
+            ("rnn_wx", (dm, d), _glorot((dm, d))),
+            ("rnn_wh", (d, d), _glorot((d, d))),
+            ("rnn_b", (d,), _zeros()),
+            ("proj_w", (d,), _zeros()),  # drift starts at identity projection
+        ]
+    else:
+        specs += [
+            ("gru_wx", (dm, 3 * d), _glorot((dm, 3 * d))),
+            ("gru_wh", (d, 3 * d), _glorot((d, 3 * d))),
+            ("gru_b", (2, 3 * d), _zeros()),
+        ]
+    if model == "tgn":
+        k_in = d + de + dt
+        specs += [
+            ("att_wq", (d + dt, dqk), _glorot((d + dt, dqk))),
+            ("att_wk", (k_in, dqk), _glorot((k_in, dqk))),
+            ("att_wv", (k_in, dv), _glorot((k_in, dv))),
+            ("att_wo", (d + dv, demb), _glorot((d + dv, demb))),
+            ("att_bo", (demb,), _zeros()),
+        ]
+    elif model == "apan":
+        k_in = dm + dt
+        specs += [
+            ("att_wq", (d, dqk), _glorot((d, dqk))),
+            ("att_wk", (k_in, dqk), _glorot((k_in, dqk))),
+            ("att_wv", (k_in, dv), _glorot((k_in, dv))),
+            ("att_wo", (d + 2 * dv, demb), _glorot((d + 2 * dv, demb))),
+            ("att_bo", (demb,), _zeros()),
+        ]
+    # decoder (temporal link prediction head)
+    specs += [
+        ("dec_w1", (2 * demb, dh), _glorot((2 * demb, dh))),
+        ("dec_b1", (dh,), _zeros()),
+        ("dec_w2", (dh, 1), _glorot((dh, 1))),
+        ("dec_b2", (1,), _zeros()),
+        # PRES learnable fusion gamma (Eq. 8), sigmoid-squashed. raw=3.9 ->
+        # gamma ~ 0.98: the correction starts as a gentle nudge toward the
+        # prediction and training adapts the gain.
+        ("gamma_raw", (1,), _const([3.9])),
+    ]
+    return specs
+
+
+def clf_param_specs():
+    """Node-classification head (Table 2 protocol): 2-layer MLP on embeddings."""
+    demb, ch = DIMS["d_emb"], DIMS["clf_hidden"]
+    return [
+        ("clf_w1", (demb, ch), _glorot((demb, ch))),
+        ("clf_b1", (ch,), _zeros()),
+        ("clf_w2", (ch, 1), _glorot((ch, 1))),
+        ("clf_b2", (1,), _zeros()),
+    ]
+
+
+def init_params(model: str, seed: int = 0):
+    """Python-side initialization (tests only; rust has its own impl)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, shape, init in param_specs(model) if model != "clf" else clf_param_specs():
+        key, sub = jax.random.split(key)
+        if init["kind"] == "zeros":
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif init["kind"] == "const":
+            out[name] = jnp.asarray(init["values"], jnp.float32).reshape(shape)
+        else:
+            limit = (6.0 / (init["fan_in"] + init["fan_out"])) ** 0.5
+            out[name] = jax.random.uniform(sub, shape, jnp.float32, -limit, limit)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Modules
+# ---------------------------------------------------------------------------
+
+
+def _time_enc(p, dt):
+    return kernels.time_encode(dt, p["time_omega"], p["time_phi"])
+
+
+def _message(p, self_mem, other_mem, efeat, dt):
+    """MSG module: MLP over [s_self, s_other, e, phi(dt)] (paper Eq. 1)."""
+    x = jnp.concatenate([self_mem, other_mem, efeat, _time_enc(p, dt)], axis=1)
+    hidden = jax.nn.relu(x @ p["msg_w1"] + p["msg_b1"])
+    return hidden @ p["msg_w2"] + p["msg_b2"]
+
+
+def _memory_update(model, p, msg, mem):
+    """MEM module: GRU (TGN/APAN) or vanilla RNN (JODIE)."""
+    if model == "jodie":
+        return jnp.tanh(msg @ p["rnn_wx"] + mem @ p["rnn_wh"] + p["rnn_b"])
+    return kernels.fused_gru(msg, mem, p["gru_wx"], p["gru_wh"], p["gru_b"])
+
+
+def _coherence(prev_mem, new_mem, wmask):
+    """Memory coherence of a batch (Eq. 10): Frobenius cosine between the
+    masked previous and new memory state matrices of the updated vertices."""
+    w = wmask[:, None]
+    a = prev_mem * w
+    b = new_mem * w
+    num = jnp.sum(a * b)
+    den = jnp.sqrt(jnp.sum(a * a)) * jnp.sqrt(jnp.sum(b * b))
+    return num / jnp.maximum(den, 1e-9)
+
+
+def _embed_tgn(p, mem, dt, nbr_mem, nbr_efeat, nbr_dt, nbr_mask):
+    b, K, _ = nbr_mem.shape
+    q_in = jnp.concatenate([mem, _time_enc(p, jnp.zeros_like(dt))], axis=1)
+    q = q_in @ p["att_wq"]
+    phi_n = _time_enc(p, nbr_dt.reshape(-1)).reshape(b, K, -1)
+    kv_in = jnp.concatenate([nbr_mem, nbr_efeat, phi_n], axis=2)
+    flat = kv_in.reshape(b * K, -1)
+    k = (flat @ p["att_wk"]).reshape(b, K, -1)
+    v = (flat @ p["att_wv"]).reshape(b, K, -1)
+    att = kernels.temporal_attention(q, k, v, nbr_mask, DIMS["heads"])
+    return jnp.tanh(jnp.concatenate([mem, att], axis=1) @ p["att_wo"] + p["att_bo"])
+
+
+def _embed_jodie(p, mem, dt):
+    return kernels.jodie_project(mem, dt, p["proj_w"])
+
+
+def _embed_apan(p, mem, mail, mail_dt, mail_mask):
+    b, K, _ = mail.shape
+    q = mem @ p["att_wq"]
+    phi_m = _time_enc(p, mail_dt.reshape(-1)).reshape(b, K, -1)
+    kv_in = jnp.concatenate([mail, phi_m], axis=2)
+    flat = kv_in.reshape(b * K, -1)
+    k = (flat @ p["att_wk"]).reshape(b, K, -1)
+    v = (flat @ p["att_wv"]).reshape(b, K, -1)
+    att = kernels.temporal_attention(q, k, v, mail_mask, DIMS["heads"])
+    pooled = kernels.masked_mean(v, mail_mask)
+    cat = jnp.concatenate([mem, att, pooled], axis=1)
+    return jnp.tanh(cat @ p["att_wo"] + p["att_bo"])
+
+
+def _decode(p, h_src, h_dst):
+    x = jnp.concatenate([h_src, h_dst], axis=1)
+    hidden = jax.nn.relu(x @ p["dec_w1"] + p["dec_b1"])
+    return (hidden @ p["dec_w2"] + p["dec_b2"])[:, 0]
+
+
+def _splice(match, updated, store_mem):
+    """Lag-one intra-step splice: take the freshly corrected state for
+    vertices the previous batch just updated, else the store value."""
+    idx = jnp.maximum(match, 0)
+    sel = updated[idx]
+    return jnp.where((match >= 0)[:, None], sel, store_mem)
+
+
+# ---------------------------------------------------------------------------
+# Data input specs (the step ABI; mirrored into the manifest for rust)
+# ---------------------------------------------------------------------------
+
+
+def data_input_specs(model: str, b: int):
+    """Ordered [(name, shape, dtype)] of non-parameter inputs."""
+    d, dm, de, K = DIMS["d_mem"], DIMS["d_msg"], DIMS["d_edge"], DIMS["k_nbr"]
+    U = 2 * b
+    specs = [
+        # update rows (previous batch, src-side then dst-side; U = 2b)
+        ("u_self_mem", (U, d), "f32"),
+        ("u_other_mem", (U, d), "f32"),
+        ("u_efeat", (U, de), "f32"),
+        ("u_dt", (U,), "f32"),
+        ("u_pred", (U, d), "f32"),
+        ("u_wmask", (U,), "f32"),
+        # 1.0 where the row's vertex has pending events inside the batch —
+        # the rows whose measurement is noisy and gets filtered (Eq. 8)
+        ("u_cmask", (U,), "f32"),
+        # current (predicted) batch
+        ("c_src_mem", (b, d), "f32"),
+        ("c_dst_mem", (b, d), "f32"),
+        ("c_neg_mem", (b, d), "f32"),
+        ("c_src_match", (b,), "i32"),
+        ("c_dst_match", (b,), "i32"),
+        ("c_neg_match", (b,), "i32"),
+        ("c_src_dt", (b,), "f32"),
+        ("c_dst_dt", (b,), "f32"),
+        ("c_neg_dt", (b,), "f32"),
+    ]
+    if model == "tgn":
+        for role in ("src", "dst", "neg"):
+            specs += [
+                (f"n_{role}_mem", (b, K, d), "f32"),
+                (f"n_{role}_efeat", (b, K, de), "f32"),
+                (f"n_{role}_dt", (b, K), "f32"),
+                (f"n_{role}_mask", (b, K), "f32"),
+            ]
+    elif model == "apan":
+        for role in ("src", "dst", "neg"):
+            specs += [
+                (f"n_{role}_mail", (b, K, dm), "f32"),
+                (f"n_{role}_dt", (b, K), "f32"),
+                (f"n_{role}_mask", (b, K), "f32"),
+            ]
+    specs += [
+        ("beta", (), "f32"),
+        ("pres_on", (), "f32"),
+    ]
+    return specs
+
+
+TRAIN_SCALARS = [("lr", (), "f32"), ("step_t", (), "f32")]
+
+
+def output_specs(model: str, b: int, kind: str):
+    """Ordered [(name, shape, dtype)] of step outputs after params/opt."""
+    d, dm, demb = DIMS["d_mem"], DIMS["d_msg"], DIMS["d_emb"]
+    U = 2 * b
+    return [
+        ("u_sbar", (U, d), "f32"),
+        ("u_delta", (U, d), "f32"),
+        ("u_msg", (U, dm), "f32"),
+        ("pos_logit", (b,), "f32"),
+        ("neg_logit", (b,), "f32"),
+        # dynamic source embeddings, consumed by the node-classification head
+        ("h_src", (b, demb), "f32"),
+        ("loss", (), "f32"),
+        ("bce", (), "f32"),
+        ("coherence", (), "f32"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The fused step
+# ---------------------------------------------------------------------------
+
+
+def _forward(model: str, p: dict, data: dict):
+    """Shared forward pass. Returns (loss, aux dict)."""
+    # 1-2. messages + memory update for the previous batch's update rows
+    msg = _message(p, data["u_self_mem"], data["u_other_mem"], data["u_efeat"], data["u_dt"])
+    s_new = _memory_update(model, p, msg, data["u_self_mem"])
+
+    # 3. PRES prediction-correction (Eq. 8), gated to pending-event rows:
+    # rows without temporal discontinuity are clean measurements and keep
+    # gamma = 1 (no-op). pres_on = 0 forces gamma = 1 everywhere -> STANDARD.
+    g = jax.nn.sigmoid(p["gamma_raw"])[0]
+    gate = data["pres_on"] * data["u_cmask"]
+    gamma_rows = 1.0 - gate * (1.0 - g)
+    s_bar, delta = kernels.pres_correct(s_new, data["u_pred"], gamma_rows)
+
+    # 4. memory coherence of this batch (Eq. 10)
+    coh = _coherence(data["u_self_mem"], s_bar, data["u_wmask"])
+
+    # 5. lag-one splice into the current batch's memory rows
+    mem_src = _splice(data["c_src_match"], s_bar, data["c_src_mem"])
+    mem_dst = _splice(data["c_dst_match"], s_bar, data["c_dst_mem"])
+    mem_neg = _splice(data["c_neg_match"], s_bar, data["c_neg_mem"])
+
+    # 6. embeddings
+    if model == "tgn":
+        embed = lambda role, mem, dt: _embed_tgn(
+            p, mem, dt,
+            data[f"n_{role}_mem"], data[f"n_{role}_efeat"],
+            data[f"n_{role}_dt"], data[f"n_{role}_mask"],
+        )
+    elif model == "apan":
+        embed = lambda role, mem, dt: _embed_apan(
+            p, mem, data[f"n_{role}_mail"], data[f"n_{role}_dt"], data[f"n_{role}_mask"]
+        )
+    else:
+        embed = lambda role, mem, dt: _embed_jodie(p, mem, dt)
+    h_src = embed("src", mem_src, data["c_src_dt"])
+    h_dst = embed("dst", mem_dst, data["c_dst_dt"])
+    h_neg = embed("neg", mem_neg, data["c_neg_dt"])
+
+    # 7. temporal link prediction loss (self-supervised BCE)
+    pos = _decode(p, h_src, h_dst)
+    neg = _decode(p, h_src, h_neg)
+    bce = jnp.mean(jax.nn.softplus(-pos) + jax.nn.softplus(neg))
+
+    # 8. total objective (Eq. 10)
+    loss = bce + data["beta"] * (1.0 - coh)
+    aux = dict(
+        u_sbar=s_bar, u_delta=delta, u_msg=msg,
+        pos_logit=pos, neg_logit=neg, bce=bce, coherence=coh,
+        h_src=h_src, h_dst=h_dst,
+    )
+    return loss, aux
+
+
+def _adam(params: list, grads: list, m: list, v: list, lr, t):
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_p.append(p - step)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def make_step(model: str, b: int, kind: str) -> tuple[Callable, list, list]:
+    """Build the flat-argument step function for (model, batch, kind).
+
+    kind: "train" (params + Adam state + data + lr/step_t) or
+          "eval"  (params + data only; no parameter update).
+
+    Returns (fn, input_specs, output_specs) where input_specs is the exact
+    positional ABI: params, [m, v,] data..., [lr, step_t].
+    All outputs are returned as one flat tuple:
+    train: (*params', *m', *v', *step_outputs); eval: (*step_outputs,).
+    """
+    assert model in MODELS and kind in ("train", "eval")
+    pspecs = param_specs(model)
+    dspecs = data_input_specs(model, b)
+    names = [n for n, _, _ in pspecs]
+    n_params = len(pspecs)
+
+    inputs = [(n, s, "f32") for n, s, _ in pspecs]
+    if kind == "train":
+        inputs += [(f"adam_m_{n}", s, "f32") for n, s, _ in pspecs]
+        inputs += [(f"adam_v_{n}", s, "f32") for n, s, _ in pspecs]
+    inputs += dspecs
+    if kind == "train":
+        inputs += TRAIN_SCALARS
+
+    aux_order = [n for n, _, _ in output_specs(model, b, kind)]
+
+    def unpack_data(flat_data):
+        return {n: a for (n, _, _), a in zip(dspecs, flat_data)}
+
+    if kind == "eval":
+
+        def fn(*args):
+            params = {n: a for n, a in zip(names, args[:n_params])}
+            data = unpack_data(args[n_params:])
+            loss, aux = _forward(model, params, data)
+            return tuple(aux[n] if n != "loss" else loss for n in aux_order)
+
+    else:
+
+        def fn(*args):
+            plist = list(args[:n_params])
+            m = list(args[n_params : 2 * n_params])
+            v = list(args[2 * n_params : 3 * n_params])
+            data = unpack_data(args[3 * n_params : 3 * n_params + len(dspecs)])
+            lr, step_t = args[3 * n_params + len(dspecs) :]
+
+            def loss_fn(pl):
+                params = {n: a for n, a in zip(names, pl)}
+                return _forward(model, params, data)
+
+            (loss_unused, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(plist)
+            new_p, new_m, new_v = _adam(plist, grads, m, v, lr, step_t)
+            return tuple(new_p) + tuple(new_m) + tuple(new_v) + tuple(
+                aux[n] if n != "loss" else loss_unused for n in aux_order
+            )
+
+    outs = output_specs(model, b, kind)
+    if kind == "train":
+        outs = (
+            [(n, s, "f32") for n, s, _ in pspecs]
+            + [(f"adam_m_{n}", s, "f32") for n, s, _ in pspecs]
+            + [(f"adam_v_{n}", s, "f32") for n, s, _ in pspecs]
+            + outs
+        )
+    return fn, inputs, outs
+
+
+# ---------------------------------------------------------------------------
+# Node-classification head (Table 2)
+# ---------------------------------------------------------------------------
+
+
+def _clf_forward(p, emb):
+    hidden = jax.nn.relu(emb @ p["clf_w1"] + p["clf_b1"])
+    return (hidden @ p["clf_w2"] + p["clf_b2"])[:, 0]
+
+
+def make_clf_step(kind: str) -> tuple[Callable, list, list]:
+    """Classifier train/eval step over frozen dynamic embeddings.
+
+    train inputs: params(4), m(4), v(4), emb [b, d_emb], labels [b],
+                  weight [b] (masks padding rows), lr, step_t.
+    eval inputs:  params(4), emb.
+    """
+    b = DIMS["clf_batch"]
+    demb = DIMS["d_emb"]
+    pspecs = clf_param_specs()
+    names = [n for n, _, _ in pspecs]
+    n_params = len(pspecs)
+
+    if kind == "eval":
+        inputs = [(n, s, "f32") for n, s, _ in pspecs] + [("emb", (b, demb), "f32")]
+        outs = [("logits", (b,), "f32")]
+
+        def fn(*args):
+            p = {n: a for n, a in zip(names, args[:n_params])}
+            return (_clf_forward(p, args[n_params]),)
+
+    else:
+        inputs = (
+            [(n, s, "f32") for n, s, _ in pspecs]
+            + [(f"adam_m_{n}", s, "f32") for n, s, _ in pspecs]
+            + [(f"adam_v_{n}", s, "f32") for n, s, _ in pspecs]
+            + [
+                ("emb", (b, demb), "f32"),
+                ("labels", (b,), "f32"),
+                ("weight", (b,), "f32"),
+            ]
+            + TRAIN_SCALARS
+        )
+        outs = (
+            [(n, s, "f32") for n, s, _ in pspecs]
+            + [(f"adam_m_{n}", s, "f32") for n, s, _ in pspecs]
+            + [(f"adam_v_{n}", s, "f32") for n, s, _ in pspecs]
+            + [("loss", (), "f32"), ("logits", (b,), "f32")]
+        )
+
+        def fn(*args):
+            plist = list(args[:n_params])
+            m = list(args[n_params : 2 * n_params])
+            v = list(args[2 * n_params : 3 * n_params])
+            emb, labels, weight, lr, step_t = args[3 * n_params :]
+
+            def loss_fn(pl):
+                p = {n: a for n, a in zip(names, pl)}
+                logits = _clf_forward(p, emb)
+                per = labels * jax.nn.softplus(-logits) + (1.0 - labels) * jax.nn.softplus(logits)
+                return jnp.sum(per * weight) / jnp.maximum(jnp.sum(weight), 1.0), logits
+
+            (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(plist)
+            new_p, new_m, new_v = _adam(plist, grads, m, v, lr, step_t)
+            return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, logits)
+
+    return fn, inputs, outs
+
+
+# ---------------------------------------------------------------------------
+# Example-argument helper for lowering / tests
+# ---------------------------------------------------------------------------
+
+
+def example_args(input_specs, seed: int = 0):
+    """ShapeDtypeStructs for jit lowering (no values materialized)."""
+    out = []
+    for _, shape, dtype in input_specs:
+        out.append(
+            jax.ShapeDtypeStruct(shape, jnp.int32 if dtype == "i32" else jnp.float32)
+        )
+    return out

@@ -1,0 +1,82 @@
+"""AOT pipeline checks: HLO text is emitted, parseable-looking, and the
+manifest ABI matches the model's declared specs exactly."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out), quick=True)
+    with open(out / "manifest.json") as f:
+        return out, json.load(f)
+
+
+def test_manifest_lists_all_quick_artifacts(built):
+    out, manifest = built
+    names = {a["name"] for a in manifest["artifacts"]}
+    for m, b in aot.QUICK_MATRIX:
+        assert f"{m}_b{b}_train" in names
+        assert f"{m}_b{b}_eval" in names
+    assert "clf_train" in names and "clf_eval" in names
+
+
+def test_hlo_files_exist_and_look_like_hlo(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path)
+        head = open(path).read(4096)
+        assert "HloModule" in head
+        assert "ENTRY" in open(path).read()
+
+
+def test_manifest_abi_matches_model_specs(built):
+    _, manifest = built
+    for a in manifest["artifacts"]:
+        if a["model"] == "clf":
+            _, inputs, outs = model.make_clf_step(a["kind"])
+        else:
+            _, inputs, outs = model.make_step(a["model"], a["batch"], a["kind"])
+        assert a["inputs"] == aot._spec_json(inputs)
+        assert a["outputs"] == aot._spec_json(outs)
+
+
+def test_hlo_entry_arity_matches_manifest(built):
+    """The ENTRY computation must take exactly len(inputs) parameters."""
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = open(os.path.join(out, a["file"])).read()
+        lines = text[text.index("ENTRY") :].splitlines()
+        body = []
+        for line in lines[1:]:
+            if line.strip() == "}":
+                break
+            body.append(line)
+        n_params = sum(1 for line in body if " parameter(" in line)
+        assert n_params == len(a["inputs"]), a["name"]
+
+
+def test_param_specs_cover_every_model(built):
+    _, manifest = built
+    for m in model.MODELS:
+        specs = manifest["params"][m]
+        assert [tuple(s["shape"]) for s in specs] == [
+            tuple(s) for _, s, _ in model.param_specs(m)
+        ]
+        # every init spec must be one of the kinds rust implements
+        for s in specs:
+            assert s["init"]["kind"] in ("glorot_uniform", "zeros", "const")
+
+
+def test_dims_roundtrip(built):
+    _, manifest = built
+    assert manifest["dims"] == model.DIMS

@@ -1,0 +1,311 @@
+"""Kernel vs. oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-divisible batch sizes that stress
+the block picker) and value ranges; every pallas kernel must match its
+pure-jnp reference to float32 tolerance, and its custom-VJP gradients must
+match jax.grad of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _close(a, b, atol=ATOL, rtol=RTOL):
+    # f32 kernels vs f32 reference: forward passes agree to ~1e-5; gradient
+    # comparisons accumulate over reductions, so callers pass looser bounds.
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------- time_encode
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_time_encode_matches_ref(n, d, seed):
+    r = _rng(seed)
+    dt = jnp.asarray(r.uniform(0, 50, size=n), jnp.float32)
+    omega = jnp.asarray(r.normal(size=d), jnp.float32)
+    phi = jnp.asarray(r.normal(size=d), jnp.float32)
+    _close(kernels.time_encode(dt, omega, phi), ref.time_encode(dt, omega, phi))
+
+
+def test_time_encode_grads_match_ref():
+    r = _rng(0)
+    dt = jnp.asarray(r.uniform(0, 50, size=64), jnp.float32)
+    omega = jnp.asarray(r.normal(size=16), jnp.float32)
+    phi = jnp.asarray(r.normal(size=16), jnp.float32)
+    f_k = lambda *a: jnp.sum(kernels.time_encode(*a) ** 2)
+    f_r = lambda *a: jnp.sum(ref.time_encode(*a) ** 2)
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(dt, omega, phi)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(dt, omega, phi)
+    for a, b in zip(gk, gr):
+        _close(a, b, atol=2e-3, rtol=2e-3)
+
+
+# ------------------------------------------------------------------ fused_gru
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 260),
+    dx=st.sampled_from([8, 32, 64]),
+    dh=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_gru_matches_ref(b, dx, dh, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(b, dx)), jnp.float32)
+    h = jnp.asarray(r.normal(size=(b, dh)), jnp.float32)
+    wx = jnp.asarray(r.normal(size=(dx, 3 * dh)) * 0.1, jnp.float32)
+    wh = jnp.asarray(r.normal(size=(dh, 3 * dh)) * 0.1, jnp.float32)
+    bias = jnp.asarray(r.normal(size=(2, 3 * dh)) * 0.1, jnp.float32)
+    _close(kernels.fused_gru(x, h, wx, wh, bias), ref.fused_gru(x, h, wx, wh, bias))
+
+
+def test_fused_gru_gate_semantics():
+    """z == 1 (huge update-gate bias) must return h unchanged."""
+    b, dx, dh = 4, 8, 8
+    r = _rng(1)
+    x = jnp.asarray(r.normal(size=(b, dx)), jnp.float32)
+    h = jnp.asarray(r.normal(size=(b, dh)), jnp.float32)
+    wx = jnp.zeros((dx, 3 * dh), jnp.float32)
+    wh = jnp.zeros((dh, 3 * dh), jnp.float32)
+    bias = np.zeros((2, 3 * dh), np.float32)
+    bias[0, dh : 2 * dh] = 100.0  # update gate saturated at 1
+    out = kernels.fused_gru(x, h, wx, wh, jnp.asarray(bias))
+    _close(out, h)
+
+
+def test_fused_gru_grads_match_ref():
+    r = _rng(2)
+    b, dx, dh = 32, 16, 16
+    args = (
+        jnp.asarray(r.normal(size=(b, dx)), jnp.float32),
+        jnp.asarray(r.normal(size=(b, dh)), jnp.float32),
+        jnp.asarray(r.normal(size=(dx, 3 * dh)) * 0.1, jnp.float32),
+        jnp.asarray(r.normal(size=(dh, 3 * dh)) * 0.1, jnp.float32),
+        jnp.asarray(r.normal(size=(2, 3 * dh)) * 0.1, jnp.float32),
+    )
+    f_k = lambda *a: jnp.sum(kernels.fused_gru(*a) ** 2)
+    f_r = lambda *a: jnp.sum(ref.fused_gru(*a) ** 2)
+    gk = jax.grad(f_k, argnums=tuple(range(5)))(*args)
+    gr = jax.grad(f_r, argnums=tuple(range(5)))(*args)
+    for a, b_ in zip(gk, gr):
+        _close(a, b_, atol=2e-3, rtol=2e-3)
+
+
+# --------------------------------------------------------- temporal_attention
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 200),
+    K=st.integers(1, 16),
+    heads=st.sampled_from([1, 2, 4]),
+    dk=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, K, heads, dk, seed):
+    r = _rng(seed)
+    q = jnp.asarray(r.normal(size=(b, heads * dk)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    mask = jnp.asarray(r.integers(0, 2, size=(b, K)), jnp.float32)
+    _close(
+        kernels.temporal_attention(q, k, v, mask, heads),
+        ref.temporal_attention(q, k, v, mask, heads),
+    )
+
+
+def test_attention_fully_masked_rows_are_zero():
+    r = _rng(3)
+    b, K, heads, dk = 8, 5, 2, 8
+    q = jnp.asarray(r.normal(size=(b, heads * dk)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    mask = jnp.zeros((b, K), jnp.float32)
+    out = kernels.temporal_attention(q, k, v, mask, heads)
+    _close(out, jnp.zeros_like(out))
+
+
+def test_attention_single_neighbor_passthrough():
+    """With exactly one unmasked neighbor the output is that neighbor's value."""
+    r = _rng(4)
+    b, K, heads, dk = 6, 4, 2, 8
+    q = jnp.asarray(r.normal(size=(b, heads * dk)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    mask = np.zeros((b, K), np.float32)
+    mask[:, 2] = 1.0
+    out = kernels.temporal_attention(q, k, v, jnp.asarray(mask), heads)
+    _close(out, v[:, 2, :])
+
+
+def test_attention_grads_match_ref():
+    r = _rng(5)
+    b, K, heads, dk = 16, 6, 2, 8
+    q = jnp.asarray(r.normal(size=(b, heads * dk)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, K, heads * dk)), jnp.float32)
+    mask = jnp.asarray(r.integers(0, 2, size=(b, K)), jnp.float32)
+    f_k = lambda q, k, v: jnp.sum(kernels.temporal_attention(q, k, v, mask, heads) ** 2)
+    f_r = lambda q, k, v: jnp.sum(ref.temporal_attention(q, k, v, mask, heads) ** 2)
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        _close(a, b_, atol=2e-3, rtol=2e-3)
+
+
+# --------------------------------------------------------------- pres_correct
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 260),
+    d=st.sampled_from([4, 32, 64]),
+    gamma=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pres_correct_matches_ref(b, d, gamma, seed):
+    r = _rng(seed)
+    s_new = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    s_pred = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    g = jnp.full((b,), gamma, jnp.float32)
+    sk, dk_ = kernels.pres_correct(s_new, s_pred, g)
+    sr, dr = ref.pres_correct(s_new, s_pred, g)
+    _close(sk, sr)
+    _close(dk_, dr)
+
+
+def test_pres_correct_gamma_one_is_standard():
+    """gamma = 1 recovers STANDARD training: s_bar == s_new, delta == 0."""
+    r = _rng(6)
+    s_new = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+    s_pred = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+    s_bar, delta = kernels.pres_correct(s_new, s_pred, jnp.ones((32,), jnp.float32))
+    _close(s_bar, s_new)
+    _close(delta, jnp.zeros_like(delta))
+
+
+def test_pres_correct_gamma_zero_is_pure_prediction():
+    r = _rng(7)
+    s_new = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+    s_pred = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+    s_bar, delta = kernels.pres_correct(s_new, s_pred, jnp.zeros((32,), jnp.float32))
+    _close(s_bar, s_pred)
+    _close(delta, s_pred - s_new)
+
+
+def test_pres_correct_grads_flow_to_gamma():
+    r = _rng(8)
+    s_new = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+    s_pred = jnp.asarray(r.normal(size=(32, 16)), jnp.float32)
+
+    def loss(g):
+        s_bar, _ = kernels.pres_correct(s_new, s_pred, g)
+        return jnp.sum(s_bar**2)
+
+    g0 = jnp.full((32,), 0.3, jnp.float32)
+    g = jax.grad(loss)(g0)
+    gr = jax.grad(lambda g_: jnp.sum(ref.pres_correct(s_new, s_pred, g_)[0] ** 2))(g0)
+    _close(g, gr, atol=2e-3, rtol=2e-3)
+    assert float(jnp.abs(g).max()) > 0.0
+
+
+# -------------------------------------------------------------- jodie_project
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 260), d=st.sampled_from([4, 32, 64]), seed=st.integers(0, 2**31 - 1))
+def test_jodie_project_matches_ref(b, d, seed):
+    r = _rng(seed)
+    s = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0, 10, size=b), jnp.float32)
+    w = jnp.asarray(r.normal(size=d) * 0.1, jnp.float32)
+    _close(kernels.jodie_project(s, dt, w), ref.jodie_project(s, dt, w))
+
+
+def test_jodie_project_zero_dt_identity():
+    r = _rng(9)
+    s = jnp.asarray(r.normal(size=(16, 8)), jnp.float32)
+    w = jnp.asarray(r.normal(size=8), jnp.float32)
+    _close(kernels.jodie_project(s, jnp.zeros(16, jnp.float32), w), s)
+
+
+# ---------------------------------------------------------------- masked_mean
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 200),
+    K=st.integers(1, 16),
+    d=st.sampled_from([4, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_mean_matches_ref(b, K, d, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(b, K, d)), jnp.float32)
+    mask = jnp.asarray(r.integers(0, 2, size=(b, K)), jnp.float32)
+    _close(kernels.masked_mean(x, mask), ref.masked_mean(x, mask))
+
+
+def test_masked_mean_empty_mailbox_is_zero():
+    x = jnp.ones((4, 5, 8), jnp.float32)
+    out = kernels.masked_mean(x, jnp.zeros((4, 5), jnp.float32))
+    _close(out, jnp.zeros_like(out))
+
+
+def test_masked_mean_full_mask_is_mean():
+    r = _rng(10)
+    x = jnp.asarray(r.normal(size=(4, 5, 8)), jnp.float32)
+    out = kernels.masked_mean(x, jnp.ones((4, 5), jnp.float32))
+    _close(out, jnp.mean(x, axis=1))
+
+
+# ----------------------------------------------------------- jit-compat smoke
+
+
+def test_kernels_compose_under_jit():
+    """The full kernel chain must lower under jit (the aot.py path)."""
+    r = _rng(11)
+    b, d, K, heads = 50, 64, 10, 2
+
+    @jax.jit
+    def chain(x, h, wx, wh, bias, q, kk, v, mask, gamma):
+        s = kernels.fused_gru(x, h, wx, wh, bias)
+        s_bar, delta = kernels.pres_correct(s, h, gamma)
+        e = kernels.temporal_attention(q, kk, v, mask, heads)
+        return jnp.sum(s_bar) + jnp.sum(e) + jnp.sum(delta)
+
+    out = chain(
+        jnp.asarray(r.normal(size=(b, d)), jnp.float32),
+        jnp.asarray(r.normal(size=(b, d)), jnp.float32),
+        jnp.asarray(r.normal(size=(d, 3 * d)) * 0.05, jnp.float32),
+        jnp.asarray(r.normal(size=(d, 3 * d)) * 0.05, jnp.float32),
+        jnp.asarray(r.normal(size=(2, 3 * d)) * 0.05, jnp.float32),
+        jnp.asarray(r.normal(size=(b, d)), jnp.float32),
+        jnp.asarray(r.normal(size=(b, K, d)), jnp.float32),
+        jnp.asarray(r.normal(size=(b, K, d)), jnp.float32),
+        jnp.asarray(r.integers(0, 2, size=(b, K)), jnp.float32),
+        jnp.full((b,), 0.7, jnp.float32),
+    )
+    assert np.isfinite(float(out))

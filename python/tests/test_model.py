@@ -1,0 +1,246 @@
+"""L2 model invariants: step semantics that the rust coordinator relies on.
+
+These tests pin down the ABI behaviour the coordinator assumes: STANDARD
+mode recovery (pres_on=0), lag-one splice correctness, coherence bounds,
+Adam updates, and that a few steps of training on a learnable toy stream
+actually reduce the loss.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 8
+R = np.random.default_rng(0)
+
+
+def _data(model_name, b=B, pres_on=0.0, beta=0.0, seed=1):
+    r = np.random.default_rng(seed)
+    out = []
+    for name, shape, dtype in model.data_input_specs(model_name, b):
+        if name == "beta":
+            arr = np.float32(beta)
+        elif name == "pres_on":
+            arr = np.float32(pres_on)
+        elif dtype == "i32":
+            arr = np.full(shape, -1, np.int32)
+        elif name.endswith("_mask") or name == "u_wmask":
+            arr = r.integers(0, 2, size=shape).astype(np.float32)
+        elif name.endswith("_dt"):
+            arr = r.uniform(0, 5, size=shape).astype(np.float32)
+        else:
+            arr = (r.normal(size=shape) * 0.5).astype(np.float32)
+        out.append(jnp.asarray(arr))
+    return out
+
+
+def _params_list(model_name, seed=0):
+    p = model.init_params(model_name, seed)
+    return [p[n] for n, _, _ in model.param_specs(model_name)]
+
+
+def _run_eval(model_name, data, b=B):
+    fn, inputs, outs = model.make_step(model_name, b, "eval")
+    res = fn(*(_params_list(model_name) + data))
+    return {n: r for (n, _, _), r in zip(outs, res)}
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_eval_output_shapes(m):
+    out = _run_eval(m, _data(m))
+    assert out["u_sbar"].shape == (2 * B, model.DIMS["d_mem"])
+    assert out["u_delta"].shape == (2 * B, model.DIMS["d_mem"])
+    assert out["u_msg"].shape == (2 * B, model.DIMS["d_msg"])
+    assert out["pos_logit"].shape == (B,)
+    assert out["neg_logit"].shape == (B,)
+    assert out["loss"].shape == ()
+    for v in out.values():
+        assert np.all(np.isfinite(np.asarray(v)))
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_standard_mode_ignores_prediction(m):
+    """pres_on=0 must make the step independent of u_pred (gamma forced to 1)
+    and produce zero innovation — this is how STANDARD shares the artifact."""
+    data1 = _data(m, pres_on=0.0, seed=2)
+    data2 = list(data1)
+    idx = [n for n, _, _ in model.data_input_specs(m, B)].index("u_pred")
+    data2[idx] = data2[idx] + 100.0
+    o1, o2 = _run_eval(m, data1), _run_eval(m, data2)
+    np.testing.assert_allclose(o1["u_sbar"], o2["u_sbar"], atol=1e-6)
+    np.testing.assert_allclose(o1["loss"], o2["loss"], atol=1e-6)
+    np.testing.assert_allclose(o1["u_delta"], np.zeros_like(o1["u_delta"]), atol=1e-6)
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_pres_mode_uses_prediction(m):
+    data1 = _data(m, pres_on=1.0, seed=3)
+    data2 = list(data1)
+    idx = [n for n, _, _ in model.data_input_specs(m, B)].index("u_pred")
+    data2[idx] = data2[idx] + 1.0
+    o1, o2 = _run_eval(m, data1), _run_eval(m, data2)
+    assert not np.allclose(o1["u_sbar"], o2["u_sbar"], atol=1e-4)
+    # innovation must be nonzero when prediction differs from update
+    assert float(np.abs(np.asarray(o1["u_delta"])).max()) > 1e-6
+
+
+def test_coherence_in_unit_interval():
+    for m in model.MODELS:
+        out = _run_eval(m, _data(m, seed=4))
+        c = float(out["coherence"])
+        assert -1.0 - 1e-5 <= c <= 1.0 + 1e-5
+
+
+def test_splice_selects_updated_rows():
+    """A current-batch vertex matched to update-row j must embed from the
+    corrected state s_bar[j], not the store value."""
+    m = "jodie"  # embedding = projected memory -> easiest to observe
+    names = [n for n, _, _ in model.data_input_specs(m, B)]
+    data = _data(m, seed=5)
+    # give src row 0 a match to update row 3, dt 0 so embedding == memory
+    match = np.full(B, -1, np.int32)
+    match[0] = 3
+    data[names.index("c_src_match")] = jnp.asarray(match)
+    dt = np.asarray(data[names.index("c_src_dt")]).copy()
+    dt[0] = 0.0
+    data[names.index("c_src_dt")] = jnp.asarray(dt)
+
+    out = _run_eval(m, data)
+    # reconstruct: with dt=0, JODIE embedding is the memory itself; decoder
+    # consumes it, so instead check via u_sbar: rerun with c_src_mem[0]
+    # perturbed — output must NOT change (the splice overrides the store row).
+    data2 = list(data)
+    csm = np.asarray(data2[names.index("c_src_mem")]).copy()
+    csm[0] += 50.0
+    data2[names.index("c_src_mem")] = jnp.asarray(csm)
+    out2 = _run_eval(m, data2)
+    np.testing.assert_allclose(out["pos_logit"][0], out2["pos_logit"][0], atol=1e-5)
+
+    # and without the match, the same perturbation must change the logit
+    data3 = list(data2)
+    data3[names.index("c_src_match")] = jnp.asarray(np.full(B, -1, np.int32))
+    out3 = _run_eval(m, data3)
+    assert not np.allclose(out["pos_logit"][0], out3["pos_logit"][0], atol=1e-3)
+
+
+def test_beta_scales_coherence_penalty():
+    m = "tgn"
+    o0 = _run_eval(m, _data(m, beta=0.0, seed=6))
+    o1 = _run_eval(m, _data(m, beta=0.5, seed=6))
+    expected = float(o0["loss"]) + 0.5 * (1.0 - float(o0["coherence"]))
+    np.testing.assert_allclose(float(o1["loss"]), expected, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_train_step_improves_loss_on_fixed_batch(m):
+    """A few Adam steps on one fixed batch must reduce the BCE (sanity that
+    gradients flow through msg/mem/emb/decoder and the splice)."""
+    fn, inputs, outs = model.make_step(m, B, "train")
+    params = _params_list(m)
+    mstate = [jnp.zeros_like(p) for p in params]
+    vstate = [jnp.zeros_like(p) for p in params]
+    data = _data(m, pres_on=1.0, beta=0.1, seed=7)
+    jfn = jax.jit(fn)
+    n_p = len(params)
+    out_names = [n for n, _, _ in outs]
+    first_bce = last_bce = None
+    for t in range(1, 16):
+        res = jfn(*params, *mstate, *vstate, *data, jnp.float32(1e-2), jnp.float32(t))
+        params = list(res[:n_p])
+        mstate = list(res[n_p : 2 * n_p])
+        vstate = list(res[2 * n_p : 3 * n_p])
+        bce = float(res[out_names.index("bce")])
+        if first_bce is None:
+            first_bce = bce
+        last_bce = bce
+    assert last_bce < first_bce * 0.9, (first_bce, last_bce)
+
+
+def test_train_matches_manual_adam():
+    """One train step == eval forward + jax.grad + reference Adam."""
+    m = "jodie"
+    fn_t, _, outs_t = model.make_step(m, B, "train")
+    params = _params_list(m)
+    n_p = len(params)
+    data = _data(m, pres_on=1.0, beta=0.2, seed=8)
+    mstate = [jnp.zeros_like(p) for p in params]
+    vstate = [jnp.zeros_like(p) for p in params]
+    lr, t = 1e-2, 1.0
+
+    res = fn_t(*params, *mstate, *vstate, *data, jnp.float32(lr), jnp.float32(t))
+    got_params = res[:n_p]
+
+    # manual reference
+    names = [n for n, _, _ in model.param_specs(m)]
+    dspecs = model.data_input_specs(m, B)
+
+    def loss_fn(pl):
+        d = {n: a for (n, _, _), a in zip(dspecs, data)}
+        loss, _ = model._forward(m, {n: a for n, a in zip(names, pl)}, d)
+        return loss
+
+    grads = jax.grad(loss_fn)(params)
+    for p, g, gp in zip(params, grads, got_params):
+        mm = (1 - model.ADAM_B1) * g
+        vv = (1 - model.ADAM_B2) * g * g
+        step = lr * (mm / (1 - model.ADAM_B1**t)) / (
+            jnp.sqrt(vv / (1 - model.ADAM_B2**t)) + model.ADAM_EPS
+        )
+        np.testing.assert_allclose(np.asarray(p - step), np.asarray(gp), atol=1e-5)
+
+
+def test_clf_step_learns_separable_labels():
+    fn, inputs, outs = model.make_clf_step("train")
+    b = model.DIMS["clf_batch"]
+    demb = model.DIMS["d_emb"]
+    r = np.random.default_rng(9)
+    w_true = r.normal(size=demb).astype(np.float32)
+    emb = r.normal(size=(b, demb)).astype(np.float32)
+    labels = (emb @ w_true > 0).astype(np.float32)
+    weight = np.ones(b, np.float32)
+
+    params = [model.init_params("clf", 0)[n] for n, _, _ in model.clf_param_specs()]
+    mstate = [jnp.zeros_like(p) for p in params]
+    vstate = [jnp.zeros_like(p) for p in params]
+    jfn = jax.jit(fn)
+    n_p = len(params)
+    losses = []
+    for t in range(1, 40):
+        res = jfn(
+            *params, *mstate, *vstate,
+            jnp.asarray(emb), jnp.asarray(labels), jnp.asarray(weight),
+            jnp.float32(5e-2), jnp.float32(t),
+        )
+        params = list(res[:n_p])
+        mstate = list(res[n_p : 2 * n_p])
+        vstate = list(res[2 * n_p : 3 * n_p])
+        losses.append(float(res[3 * n_p]))
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+
+
+def test_clf_weight_masks_padding():
+    fn, _, _ = model.make_clf_step("train")
+    b = model.DIMS["clf_batch"]
+    demb = model.DIMS["d_emb"]
+    r = np.random.default_rng(10)
+    emb = r.normal(size=(b, demb)).astype(np.float32)
+    labels = r.integers(0, 2, size=b).astype(np.float32)
+    weight = np.ones(b, np.float32)
+    weight[b // 2 :] = 0.0
+
+    params = [model.init_params("clf", 0)[n] for n, _, _ in model.clf_param_specs()]
+    zeros = [jnp.zeros_like(p) for p in params]
+
+    res1 = fn(*params, *zeros, *zeros, jnp.asarray(emb), jnp.asarray(labels),
+              jnp.asarray(weight), jnp.float32(1e-2), jnp.float32(1))
+    # flipping labels in the masked half must not change the loss
+    labels2 = labels.copy()
+    labels2[b // 2 :] = 1.0 - labels2[b // 2 :]
+    res2 = fn(*params, *zeros, *zeros, jnp.asarray(emb), jnp.asarray(labels2),
+              jnp.asarray(weight), jnp.float32(1e-2), jnp.float32(1))
+    np.testing.assert_allclose(float(res1[12]), float(res2[12]), atol=1e-6)

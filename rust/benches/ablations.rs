@@ -1,0 +1,50 @@
+//! Ablation benches for DESIGN.md's coordinator design choices:
+//!   * plan caching across epochs (cfg.prefetch) vs rebuild-per-epoch
+//!   * anchor-set fraction: GMM cost/memory at 1.0 / 0.25 / 0.0
+//!   * PRES on/off overhead at a fixed batch size
+
+use pres::config::ExperimentConfig;
+use pres::training::Trainer;
+use pres::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("ablations").with_iters(3, 12);
+    b.header();
+
+    // plan caching
+    for (name, prefetch) in [("plans_cached", true), ("plans_rebuilt", false)] {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        cfg.prefetch = prefetch;
+        cfg.epochs = 1;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        tr.train_epoch(0).unwrap();
+        b.run(name, || {
+            tr.train_epoch(1).unwrap();
+        });
+    }
+
+    // anchor-set fraction (PRES tracker coverage)
+    for frac in [1.0f32, 0.25, 0.0] {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, true);
+        cfg.anchor_fraction = frac;
+        cfg.epochs = 1;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        tr.train_epoch(0).unwrap();
+        println!("    anchor={frac}: gmm bytes = {:.2} MB", tr.memory_bytes() as f64 / 1e6);
+        b.run(&format!("anchor_{frac}"), || {
+            tr.train_epoch(1).unwrap();
+        });
+    }
+
+    // PRES coordinator overhead vs STANDARD at the same batch
+    for (name, pres) in [("std_b400", false), ("pres_b400", true)] {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 400, pres);
+        cfg.epochs = 1;
+        let mut tr = Trainer::from_config(&cfg).unwrap();
+        tr.train_epoch(0).unwrap();
+        b.run(name, || {
+            tr.train_epoch(1).unwrap();
+        });
+    }
+    b.write_csv().unwrap();
+}

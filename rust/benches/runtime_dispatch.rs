@@ -1,0 +1,55 @@
+//! PJRT dispatch overhead: executable call latency vs payload size, and
+//! literal creation/fetch costs. Quantifies the fixed per-step cost that
+//! makes small temporal batches slow (the CPU analogue of the paper's
+//! GPU-underutilization argument).
+
+use std::path::Path;
+
+use pres::model::ModelState;
+use pres::runtime::engine::{fetch_f32, lit_f32};
+use pres::runtime::{DType, Engine};
+use pres::util::bench::{black_box, Bench};
+use xla::Literal;
+
+fn main() {
+    let engine = Engine::new(Path::new("artifacts")).expect("run `make artifacts`");
+    let mut b = Bench::new("runtime_dispatch").with_iters(5, 60);
+    b.header();
+
+    // literal staging costs
+    let host_small = vec![0.5f32; 64];
+    let host_big = vec![0.5f32; 1600 * 10 * 64];
+    b.run("lit_create_256B", || {
+        black_box(lit_f32(&host_small, &[64]).unwrap());
+    });
+    b.run("lit_create_4MB", || {
+        black_box(lit_f32(&host_big, &[1600, 10, 64]).unwrap());
+    });
+    let big = lit_f32(&host_big, &[1600, 10, 64]).unwrap();
+    let mut out = vec![0.0f32; host_big.len()];
+    b.run("lit_fetch_4MB", || {
+        fetch_f32(&big, &mut out).unwrap();
+    });
+
+    // full eval-step dispatch at several batch sizes (params + data)
+    for batch in [25usize, 100, 400, 1600] {
+        let step = engine.step("tgn", batch, "eval").unwrap();
+        let state = ModelState::init(&engine, "tgn", 0).unwrap();
+        let data: Vec<Literal> = step.spec.inputs[state.len()..]
+            .iter()
+            .map(|t| match t.dtype {
+                DType::I32 => pres::runtime::engine::lit_i32(
+                    &vec![-1i32; t.elems()],
+                    &t.shape,
+                )
+                .unwrap(),
+                DType::F32 => lit_f32(&vec![0.1f32; t.elems()], &t.shape).unwrap(),
+            })
+            .collect();
+        let args: Vec<&Literal> = state.params.iter().chain(data.iter()).collect();
+        b.run(&format!("eval_dispatch_tgn_b{batch}"), || {
+            black_box(step.run(&args).unwrap());
+        });
+    }
+    b.write_csv().unwrap();
+}

@@ -1,0 +1,99 @@
+//! Microbenches for the L3 substrates on the hot path: pending-set
+//! analysis, neighbor index, memory store, GMM trackers, negative sampling,
+//! metrics. Run with `cargo bench --bench substrates`.
+
+use pres::batching::BatchPlan;
+use pres::datagen;
+use pres::memory::gmm::Role;
+use pres::memory::{GmmTrackers, MemoryStore};
+use pres::metrics::ranking::{average_precision, roc_auc};
+use pres::sampler::{NegativeSampler, NeighborEntry, NeighborIndex};
+use pres::util::bench::{black_box, Bench};
+use pres::util::rng::Pcg32;
+
+fn main() {
+    let profile = datagen::profile("wiki").unwrap();
+    let ds = datagen::generate(&profile, 0);
+    let log = &ds.log;
+
+    let mut b = Bench::new("substrates");
+    b.header();
+
+    for batch in [100usize, 400, 1600] {
+        b.run(&format!("pending_plan_b{batch}"), || {
+            black_box(BatchPlan::build(log, 1000..1000 + batch));
+        });
+    }
+
+    // neighbor index insert+gather at dataset scale
+    b.run("neighbor_index_epoch_insert", || {
+        let mut idx = NeighborIndex::new(log.num_nodes, 10);
+        for (i, e) in log.events.iter().enumerate().take(10_000) {
+            idx.insert_event(e.src, e.dst, e.t, i as u32);
+        }
+        black_box(idx.degree(0));
+    });
+    let mut idx = NeighborIndex::new(log.num_nodes, 10);
+    for (i, e) in log.events.iter().enumerate() {
+        idx.insert_event(e.src, e.dst, e.t, i as u32);
+    }
+    let mut out = [NeighborEntry::default(); 10];
+    b.run("neighbor_gather_batch400x3", || {
+        for e in &log.events[5000..5400] {
+            black_box(idx.gather(e.src, &mut out));
+            black_box(idx.gather(e.dst, &mut out));
+            black_box(idx.gather(e.dst, &mut out));
+        }
+    });
+
+    // memory store gather/scatter of a 2b update-row block
+    let mut store = MemoryStore::new(log.num_nodes, 64);
+    let mut row = vec![0.5f32; 64];
+    b.run("memory_scatter_gather_800rows", || {
+        for e in &log.events[2000..2400] {
+            store.gather_into(e.src, &mut row);
+            store.scatter(e.dst, &row, e.t);
+        }
+    });
+
+    // GMM predict + observe over an update block
+    let mut gmm = GmmTrackers::new(log.num_nodes, 64, 1.0, 0);
+    let s1 = vec![0.1f32; 64];
+    let s2 = vec![0.3f32; 64];
+    let mut pred = vec![0.0f32; 64];
+    b.run("gmm_predict_observe_800rows", || {
+        for e in &log.events[3000..3400] {
+            gmm.predict_into(e.src, Role::Src, &s1, 1.0, &mut pred);
+            gmm.observe(e.src, Role::Src, &s1, &s2, 1.0);
+            gmm.predict_into(e.dst, Role::Dst, &s1, 1.0, &mut pred);
+            gmm.observe(e.dst, Role::Dst, &s1, &s2, 1.0);
+        }
+    });
+
+    // negative sampling
+    let sampler = NegativeSampler::new(log);
+    let mut rng = Pcg32::new(7);
+    let mut negs = vec![0u32; 400];
+    b.run("negative_sample_b400", || {
+        sampler.sample_batch(log, 4000..4400, &mut rng, &mut negs);
+        black_box(negs[0]);
+    });
+
+    // ranking metrics at eval scale
+    let mut mrng = Pcg32::new(9);
+    let scores: Vec<f32> = (0..8000).map(|_| mrng.f32()).collect();
+    let labels: Vec<bool> = (0..8000).map(|_| mrng.below(2) == 0).collect();
+    b.run("average_precision_8k", || {
+        black_box(average_precision(&scores, &labels));
+    });
+    b.run("roc_auc_8k", || {
+        black_box(roc_auc(&scores, &labels));
+    });
+
+    // dataset generation itself
+    b.run("datagen_wiki_25k", || {
+        black_box(datagen::generate(&profile, 1));
+    });
+
+    b.write_csv().unwrap();
+}

@@ -1,0 +1,35 @@
+//! The Table 1 speedup source: epoch wall-time at the STANDARD base batch
+//! vs PRES at 4x, per model. `cargo bench --bench table1_epoch_time`.
+
+use pres::config::ExperimentConfig;
+use pres::training::Trainer;
+use pres::util::bench::Bench;
+
+fn main() {
+    let base = 50usize;
+    let mut b = Bench::new("table1_epoch_time").with_iters(3, 10);
+    b.header();
+    for model in ["tgn", "jodie", "apan"] {
+        let mut times = [0.0f64; 2];
+        for (i, (batch, pres)) in [(base, false), (4 * base, true)].into_iter().enumerate() {
+            let mut cfg = ExperimentConfig::default_with("wiki", model, batch, pres);
+            cfg.epochs = 1;
+            let mut tr = Trainer::from_config(&cfg).unwrap();
+            tr.train_epoch(0).unwrap(); // warm the executable
+            let label = format!(
+                "{model}_{}_b{batch}",
+                if pres { "pres" } else { "std" }
+            );
+            let row = b.run(&label, || {
+                tr.train_epoch(1).unwrap();
+            });
+            times[i] = row.mean_ns;
+        }
+        println!(
+            "    {model}: speedup = {:.2}x (STANDARD b{base} -> PRES b{})",
+            times[0] / times[1],
+            4 * base
+        );
+    }
+    b.write_csv().unwrap();
+}

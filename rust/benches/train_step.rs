@@ -1,0 +1,40 @@
+//! One-training-iteration latency per (model, batch): the end-to-end hot
+//! path (assemble -> PJRT execute -> write-back), measured per phase.
+//! This is the number the Table 1 speedup decomposes into.
+
+use pres::config::ExperimentConfig;
+use pres::training::Trainer;
+use pres::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("train_step").with_iters(5, 40);
+    b.header();
+    for model in ["tgn", "jodie", "apan"] {
+        for batch in [25usize, 100, 400, 1600] {
+            let mut cfg = ExperimentConfig::default_with("wiki", model, batch, true);
+            cfg.epochs = 1;
+            cfg.data_scale = 1.0;
+            let mut tr = match Trainer::from_config(&cfg) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("skip {model} b={batch}: {e}");
+                    continue;
+                }
+            };
+            // one warm epoch primes the XLA executable + caches
+            tr.train_epoch(0).unwrap();
+            b.run(&format!("{model}_b{batch}_epoch"), || {
+                tr.train_epoch(1).unwrap();
+            });
+            let r = tr.train_epoch(2).unwrap();
+            println!(
+                "    breakdown: assemble {:.1}% execute {:.1}% writeback {:.1}% ({:.0} events/s)",
+                r.assemble_secs / r.epoch_secs * 100.0,
+                r.execute_secs / r.epoch_secs * 100.0,
+                r.writeback_secs / r.epoch_secs * 100.0,
+                r.events_per_sec,
+            );
+        }
+    }
+    b.write_csv().unwrap();
+}

@@ -1,0 +1,71 @@
+//! Temporal batch partitioning + pending-set analysis (paper §3.1).
+//!
+//! This module owns the paper's core bookkeeping: which events inside a
+//! temporal batch are *pending* on one another (Def. 1-2), which update
+//! row carries the final state of each vertex under batch processing (the
+//! temporal-discontinuity dedup), and how the next batch's vertices match
+//! into the previous batch's freshly updated rows (the lag-one splice).
+
+pub mod pending;
+
+pub use pending::{BatchPlan, PendingStats};
+
+/// Partition an event range into consecutive temporal batches of size `b`.
+/// The last partial batch is dropped (a fixed shape is required by the AOT
+/// executables; at most b-1 of |E| events are unused, matching TGL).
+pub fn partition(range: std::ops::Range<usize>, b: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(b > 0);
+    let mut out = Vec::new();
+    let mut lo = range.start;
+    while lo + b <= range.end {
+        out.push(lo..lo + b);
+        lo += b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn partition_basic() {
+        let parts = partition(0..10, 3);
+        assert_eq!(parts, vec![0..3, 3..6, 6..9]);
+    }
+
+    #[test]
+    fn partition_exact() {
+        assert_eq!(partition(5..11, 3), vec![5..8, 8..11]);
+    }
+
+    #[test]
+    fn property_partition_covers_prefix_in_order() {
+        prop::check_msg(
+            "partition covers consecutive prefix exactly once",
+            1,
+            200,
+            |rng| {
+                let start = rng.below(50) as usize;
+                let len = rng.below(500) as usize;
+                let b = 1 + rng.below(64) as usize;
+                (start, len, b)
+            },
+            |&(start, len, b)| {
+                let parts = partition(start..start + len, b);
+                let mut expect = start;
+                for p in &parts {
+                    if p.start != expect || p.len() != b {
+                        return Err(format!("bad part {p:?}, expect start {expect}"));
+                    }
+                    expect = p.end;
+                }
+                if start + len - expect >= b {
+                    return Err("dropped a full batch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,316 @@
+//! Pending-set analysis and the update-row plan for one temporal batch.
+//!
+//! Definitions (paper §3.1): event e' is *pending* on e if they share a
+//! vertex and t' < t; the *pending set* P(e, B) collects e's pending events
+//! inside batch B. Batch processing applies only one memory update per
+//! vertex (the temporal discontinuity), so the plan:
+//!
+//! * lays out 2b *update rows* — row r in [0, b) is the src side of event
+//!   (start + r), row b + r its dst side;
+//! * marks per vertex the *last* occurrence (write-back mask): that row's
+//!   corrected state is what enters the memory store, mirroring the
+//!   "single transition" in Fig. 2(b)'s bottom panel;
+//! * exposes `last_row_of`, which the next batch uses to splice freshly
+//!   updated states into its own rows (the in-graph lag-one gather);
+//! * measures pending statistics, the quantity Theorems 1-2 reason about.
+
+use std::collections::HashMap;
+
+use crate::graph::EventLog;
+
+/// Aggregate pending-event statistics of one batch (paper Def. 2).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PendingStats {
+    /// Events whose pending set is non-empty.
+    pub pending_events: usize,
+    /// Sum over events of |P(e, B)| (pairs sharing a vertex, earlier-first).
+    pub pending_pairs: usize,
+    /// Vertices updated more than once (their intermediate states are lost).
+    pub collided_vertices: usize,
+    /// Total distinct vertices in the batch.
+    pub distinct_vertices: usize,
+}
+
+/// The per-batch plan consumed by the step assembler.
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    /// Event index range into the log.
+    pub range: std::ops::Range<usize>,
+    /// Vertex per update row; length 2b (src sides then dst sides).
+    pub upd_vertex: Vec<u32>,
+    /// Event log index per update row.
+    pub upd_event: Vec<u32>,
+    /// 1.0 where the row is the vertex's last occurrence in the batch.
+    pub wmask: Vec<f32>,
+    /// 1.0 where the row's vertex occurs more than once in the batch —
+    /// i.e. its batch update suffers temporal discontinuity (Def. 1) and
+    /// is a "noisy measurement" for the PRES filter.
+    pub collided: Vec<f32>,
+    /// vertex -> its last update row (the row whose corrected state the
+    /// next batch should splice in).
+    last_row: HashMap<u32, u32>,
+    pub stats: PendingStats,
+}
+
+impl BatchPlan {
+    /// Analyze `range` of `log`. O(b) time, O(distinct vertices) space.
+    pub fn build(log: &EventLog, range: std::ops::Range<usize>) -> BatchPlan {
+        let b = range.len();
+        let u = 2 * b;
+        let mut upd_vertex = vec![0u32; u];
+        let mut upd_event = vec![0u32; u];
+        let mut wmask = vec![0.0f32; u];
+        let mut collided = vec![0.0f32; u];
+        let mut last_row: HashMap<u32, u32> = HashMap::with_capacity(u);
+        let mut occurrences: HashMap<u32, u32> = HashMap::with_capacity(u);
+        // prior events per normalized endpoint pair: corrects the double
+        // count when a prior event shares BOTH endpoints with this one
+        let mut pair_counts: HashMap<(u32, u32), u32> = HashMap::with_capacity(u);
+        let mut pending_events = 0usize;
+        let mut pending_pairs = 0usize;
+
+        for (r, i) in range.clone().enumerate() {
+            let ev = log.events[i];
+            // |P(e, B)| = prior events sharing src + sharing dst - sharing both
+            let prior_src = occurrences.get(&ev.src).copied().unwrap_or(0);
+            let prior_dst = occurrences.get(&ev.dst).copied().unwrap_or(0);
+            let key = (ev.src.min(ev.dst), ev.src.max(ev.dst));
+            let prior_both = pair_counts.get(&key).copied().unwrap_or(0);
+            let pending = (prior_src + prior_dst - prior_both) as usize;
+            if pending > 0 {
+                pending_events += 1;
+                pending_pairs += pending;
+            }
+            *occurrences.entry(ev.src).or_insert(0) += 1;
+            *occurrences.entry(ev.dst).or_insert(0) += 1;
+            *pair_counts.entry(key).or_insert(0) += 1;
+
+            upd_vertex[r] = ev.src;
+            upd_event[r] = i as u32;
+            upd_vertex[b + r] = ev.dst;
+            upd_event[b + r] = i as u32;
+            // later insert wins: row order within the batch is chronological
+            // (src and dst sides of one event are simultaneous; dst row
+            // index b + r > r keeps the map deterministic)
+            last_row.insert(ev.src, r as u32);
+            last_row.insert(ev.dst, (b + r) as u32);
+        }
+
+        for (&v, &r) in &last_row {
+            debug_assert_eq!(upd_vertex[r as usize], v);
+            wmask[r as usize] = 1.0;
+        }
+        for (r, &v) in upd_vertex.iter().enumerate() {
+            if occurrences.get(&v).copied().unwrap_or(0) > 1 {
+                collided[r] = 1.0;
+            }
+        }
+        let collided_vertices = occurrences.values().filter(|&&c| c > 1).count();
+        let stats = PendingStats {
+            pending_events,
+            pending_pairs,
+            collided_vertices,
+            distinct_vertices: occurrences.len(),
+        };
+        BatchPlan {
+            range,
+            upd_vertex,
+            upd_event,
+            wmask,
+            collided,
+            last_row,
+            stats,
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.range.len()
+    }
+
+    /// Row count (2b).
+    pub fn rows(&self) -> usize {
+        self.upd_vertex.len()
+    }
+
+    /// Last update row of `v` in this batch, if any.
+    #[inline]
+    pub fn last_row_of(&self, v: u32) -> Option<u32> {
+        self.last_row.get(&v).copied()
+    }
+
+    /// Fill `out[i] = last_row_of(vertices[i])` or -1 (the lag-one match
+    /// indices the executable uses to splice fresh states).
+    pub fn match_rows(&self, vertices: &[u32], out: &mut [i32]) {
+        debug_assert_eq!(vertices.len(), out.len());
+        for (slot, &v) in out.iter_mut().zip(vertices) {
+            *slot = self.last_row.get(&v).map_or(-1, |&r| r as i32);
+        }
+    }
+}
+
+/// Naive O(b^2) pending-pair count, kept as the property-test oracle.
+pub fn pending_pairs_naive(log: &EventLog, range: std::ops::Range<usize>) -> usize {
+    let evs = &log.events[range];
+    let mut total = 0;
+    for (j, e) in evs.iter().enumerate() {
+        for e2 in &evs[..j] {
+            let shares = e.src == e2.src
+                || e.src == e2.dst
+                || e.dst == e2.src
+                || e.dst == e2.dst;
+            if shares {
+                total += 1;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Event, NO_LABEL};
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn log_with(pairs: &[(u32, u32)]) -> EventLog {
+        let mut log = EventLog::new(16, 8, 0);
+        for (i, &(s, d)) in pairs.iter().enumerate() {
+            log.push(Event { src: s, dst: d, t: i as f32, label: NO_LABEL }, &[])
+                .unwrap();
+        }
+        log
+    }
+
+    #[test]
+    fn layout_src_rows_then_dst_rows() {
+        let log = log_with(&[(0, 8), (1, 9)]);
+        let plan = BatchPlan::build(&log, 0..2);
+        assert_eq!(plan.upd_vertex, vec![0, 1, 8, 9]);
+        assert_eq!(plan.upd_event, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn wmask_marks_last_occurrence_only() {
+        // vertex 0 is src of events 0 and 1 -> only row 1 wins
+        let log = log_with(&[(0, 8), (0, 9)]);
+        let plan = BatchPlan::build(&log, 0..2);
+        assert_eq!(plan.wmask, vec![0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(plan.last_row_of(0), Some(1));
+        assert_eq!(plan.last_row_of(8), Some(2));
+        assert_eq!(plan.last_row_of(9), Some(3));
+    }
+
+    #[test]
+    fn pending_stats_simple() {
+        // e1 pends on e0 (share vertex 0); e2 pends on both? shares 0 with
+        // e0,e1 -> pending_pairs = 1 (e1) + 2 (e2) = 3
+        let log = log_with(&[(0, 8), (0, 9), (0, 10)]);
+        let plan = BatchPlan::build(&log, 0..3);
+        assert_eq!(plan.stats.pending_events, 2);
+        assert_eq!(plan.stats.pending_pairs, 3);
+        assert_eq!(plan.stats.collided_vertices, 1);
+        assert_eq!(plan.stats.distinct_vertices, 4);
+    }
+
+    #[test]
+    fn no_pending_in_disjoint_batch() {
+        let log = log_with(&[(0, 8), (1, 9), (2, 10)]);
+        let plan = BatchPlan::build(&log, 0..3);
+        assert_eq!(plan.stats.pending_events, 0);
+        assert_eq!(plan.stats.collided_vertices, 0);
+        assert!(plan.wmask.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn match_rows_hits_and_misses() {
+        let log = log_with(&[(0, 8), (1, 8)]);
+        let plan = BatchPlan::build(&log, 0..2);
+        let mut out = [0i32; 4];
+        plan.match_rows(&[0, 1, 8, 5], &mut out);
+        assert_eq!(out, [0, 1, 3, -1]);
+    }
+
+    #[test]
+    fn subrange_plans_use_log_indices() {
+        let log = log_with(&[(0, 8), (1, 9), (2, 10), (3, 11)]);
+        let plan = BatchPlan::build(&log, 2..4);
+        assert_eq!(plan.upd_event, vec![2, 3, 2, 3]);
+        assert_eq!(plan.upd_vertex, vec![2, 3, 10, 11]);
+    }
+
+    #[test]
+    fn property_pending_pairs_match_naive_oracle() {
+        prop::check_msg(
+            "pending pairs == O(b^2) oracle",
+            7,
+            150,
+            |rng: &mut Pcg32| {
+                let b = 1 + rng.below(40) as usize;
+                (0..b)
+                    .map(|_| (rng.below(8), 8 + rng.below(8)))
+                    .collect::<Vec<_>>()
+            },
+            |pairs| {
+                let log = log_with(pairs);
+                let plan = BatchPlan::build(&log, 0..pairs.len());
+                let naive = pending_pairs_naive(&log, 0..pairs.len());
+                if plan.stats.pending_pairs != naive {
+                    return Err(format!(
+                        "fast {} != naive {naive}",
+                        plan.stats.pending_pairs
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_wmask_invariants() {
+        prop::check_msg(
+            "wmask: one winner per vertex, winner is max row",
+            11,
+            150,
+            |rng: &mut Pcg32| {
+                let b = 1 + rng.below(40) as usize;
+                (0..b)
+                    .map(|_| (rng.below(6), 6 + rng.below(6)))
+                    .collect::<Vec<_>>()
+            },
+            |pairs| {
+                let log = log_with(pairs);
+                let plan = BatchPlan::build(&log, 0..pairs.len());
+                let mut winners: HashMap<u32, Vec<u32>> = HashMap::new();
+                for (r, &v) in plan.upd_vertex.iter().enumerate() {
+                    if plan.wmask[r] == 1.0 {
+                        winners.entry(v).or_default().push(r as u32);
+                    }
+                }
+                for (v, rows) in &winners {
+                    if rows.len() != 1 {
+                        return Err(format!("vertex {v} has {} winners", rows.len()));
+                    }
+                    let max_row = plan
+                        .upd_vertex
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &u)| u == *v)
+                        .map(|(r, _)| r as u32)
+                        .max()
+                        .unwrap();
+                    if rows[0] != max_row {
+                        return Err(format!("vertex {v}: winner {} != max {max_row}", rows[0]));
+                    }
+                }
+                // every distinct vertex has exactly one winner
+                let distinct: std::collections::HashSet<u32> =
+                    plan.upd_vertex.iter().copied().collect();
+                if winners.len() != distinct.len() {
+                    return Err("some vertex lost its winner".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Experiment configuration: JSON-loadable, CLI-overridable, with defaults
+//! mirroring the paper's protocol (beta = 0.1, Adam 1e-3, 5 trials).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Everything needed to reproduce one training run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset profile name: wiki | reddit | mooc | lastfm | gdelt | tiny.
+    pub dataset: String,
+    /// Encoder: tgn | jodie | apan.
+    pub model: String,
+    /// Temporal batch size (must be one of the compiled artifact sizes).
+    pub batch_size: usize,
+    /// Enable PRES (prediction-correction + coherence smoothing).
+    pub pres: bool,
+    /// Coherence-smoothing strength (paper uses 0.1).
+    pub beta: f32,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Fraction of vertices carrying full GMM trackers (1.0 = all; the
+    /// paper's anchor-set heuristic for memory-constrained deployments).
+    pub anchor_fraction: f32,
+    /// Directory with HLO artifacts + manifest.json.
+    pub artifacts_dir: String,
+    /// Evaluate on val split every n epochs (0 = only at the end).
+    pub eval_every: usize,
+    /// Overlap next-batch assembly with the current PJRT call.
+    pub prefetch: bool,
+    /// Scale events generated (1.0 = profile default; figures use < 1 for
+    /// quick sweeps).
+    pub data_scale: f32,
+}
+
+impl ExperimentConfig {
+    pub fn default_with(dataset: &str, model: &str, batch_size: usize, pres: bool) -> Self {
+        ExperimentConfig {
+            dataset: dataset.to_string(),
+            model: model.to_string(),
+            batch_size,
+            pres,
+            beta: if pres { 0.1 } else { 0.0 },
+            epochs: 10,
+            lr: 1e-3,
+            seed: 0,
+            anchor_fraction: 1.0,
+            artifacts_dir: "artifacts".to_string(),
+            eval_every: 0,
+            prefetch: true,
+            data_scale: 1.0,
+        }
+    }
+
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        Self::from_json(&j).with_context(|| format!("config {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default_with(
+            j.get("dataset")?.as_str()?,
+            j.get("model")?.as_str()?,
+            j.get("batch_size")?.as_usize()?,
+            j.opt("pres").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+        );
+        if let Some(v) = j.opt("beta") {
+            cfg.beta = v.as_f32()?;
+        }
+        if let Some(v) = j.opt("epochs") {
+            cfg.epochs = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("lr") {
+            cfg.lr = v.as_f32()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            cfg.seed = v.as_u64()?;
+        }
+        if let Some(v) = j.opt("anchor_fraction") {
+            cfg.anchor_fraction = v.as_f32()?;
+        }
+        if let Some(v) = j.opt("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("eval_every") {
+            cfg.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("prefetch") {
+            cfg.prefetch = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("data_scale") {
+            cfg.data_scale = v.as_f32()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !["tgn", "jodie", "apan"].contains(&self.model.as_str()) {
+            bail!("unknown model '{}'", self.model);
+        }
+        if self.batch_size == 0 {
+            bail!("batch_size must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.anchor_fraction) {
+            bail!("anchor_fraction must be in [0, 1]");
+        }
+        if self.beta < 0.0 {
+            bail!("beta must be non-negative");
+        }
+        if !(self.data_scale > 0.0) {
+            bail!("data_scale must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("model", Json::str(&self.model)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("pres", Json::Bool(self.pres)),
+            ("beta", Json::num(self.beta as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("anchor_fraction", Json::num(self.anchor_fraction as f64)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("prefetch", Json::Bool(self.prefetch)),
+            ("data_scale", Json::num(self.data_scale as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let cfg = ExperimentConfig::default_with("wiki", "tgn", 200, true);
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.dataset, "wiki");
+        assert_eq!(back.batch_size, 200);
+        assert!(back.pres);
+        assert_eq!(back.beta, 0.1);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        cfg.model = "gpt".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        cfg.anchor_fraction = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pres_default_beta() {
+        assert_eq!(ExperimentConfig::default_with("w", "tgn", 1, true).beta, 0.1);
+        assert_eq!(ExperimentConfig::default_with("w", "tgn", 1, false).beta, 0.0);
+    }
+}

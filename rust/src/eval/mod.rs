@@ -1,0 +1,3 @@
+//! Downstream-task evaluation pipelines (beyond the in-loop link AP).
+
+pub mod nodeclf;

@@ -1,0 +1,88 @@
+//! Dynamic node classification (paper Table 2).
+//!
+//! Protocol (following TGN/JODIE): the MDGNN encoder is frozen; the dynamic
+//! source embeddings h_src(t) collected during stream replay are paired
+//! with the dynamic node labels (state flips), split chronologically, and a
+//! small MLP head — the `clf_train`/`clf_eval` artifacts — is trained on
+//! them. We report ROC-AUC on the held-out tail.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::metrics::ranking::roc_auc;
+use crate::model::ModelState;
+use crate::runtime::engine::{fetch_f32, lit_f32, lit_scalar};
+use crate::runtime::Engine;
+
+/// Train the classification head on `rows` = (embedding, label) in stream
+/// order; returns test ROC-AUC over the chronological last 30%.
+pub fn train_and_auc(engine: &Engine, rows: &[(Vec<f32>, f32)], seed: u64) -> Result<f64> {
+    let dims = engine.manifest().dims;
+    let b = dims.clf_batch;
+    if rows.len() < 8 {
+        return Ok(f64::NAN); // not enough labeled events to measure
+    }
+    let split = rows.len() * 70 / 100;
+    let (train_rows, test_rows) = rows.split_at(split);
+
+    let train_step = engine.step("clf", b, "train")?;
+    let eval_step = engine.step("clf", b, "eval")?;
+    let mut state = ModelState::init(engine, "clf", seed)?;
+
+    // epochs over padded minibatches
+    let mut emb = vec![0.0f32; b * dims.d_emb];
+    let mut labels = vec![0.0f32; b];
+    let mut weight = vec![0.0f32; b];
+    const EPOCHS: usize = 30;
+    for _ in 0..EPOCHS {
+        for chunk in train_rows.chunks(b) {
+            emb.iter_mut().for_each(|x| *x = 0.0);
+            labels.iter_mut().for_each(|x| *x = 0.0);
+            weight.iter_mut().for_each(|x| *x = 0.0);
+            for (j, (e, l)) in chunk.iter().enumerate() {
+                emb[j * dims.d_emb..(j + 1) * dims.d_emb].copy_from_slice(e);
+                labels[j] = *l;
+                weight[j] = 1.0;
+            }
+            let data = [
+                lit_f32(&emb, &[b, dims.d_emb])?,
+                lit_f32(&labels, &[b])?,
+                lit_f32(&weight, &[b])?,
+                lit_scalar(1e-2)?,
+                lit_scalar((state.step + 1) as f32)?,
+            ];
+            let args: Vec<&Literal> = state
+                .params
+                .iter()
+                .chain(state.adam_m.iter())
+                .chain(state.adam_v.iter())
+                .chain(data.iter())
+                .collect();
+            let mut outputs = train_step.run(&args)?;
+            state.absorb_outputs(&mut outputs);
+        }
+    }
+
+    // score the test tail
+    let mut scores = Vec::with_capacity(test_rows.len());
+    let mut bools = Vec::with_capacity(test_rows.len());
+    let mut logits = vec![0.0f32; b];
+    for chunk in test_rows.chunks(b) {
+        emb.iter_mut().for_each(|x| *x = 0.0);
+        for (j, (e, _)) in chunk.iter().enumerate() {
+            emb[j * dims.d_emb..(j + 1) * dims.d_emb].copy_from_slice(e);
+        }
+        let data = [lit_f32(&emb, &[b, dims.d_emb])?];
+        let args: Vec<&Literal> = state.params.iter().chain(data.iter()).collect();
+        let outputs = eval_step.run(&args)?;
+        fetch_f32(&outputs[0], &mut logits)?;
+        for (j, (_, l)) in chunk.iter().enumerate() {
+            scores.push(logits[j]);
+            bools.push(*l > 0.5);
+        }
+    }
+    if bools.iter().all(|&x| x) || bools.iter().all(|&x| !x) {
+        return Ok(f64::NAN); // degenerate test labels
+    }
+    Ok(roc_auc(&scores, &bools))
+}

@@ -1,0 +1,166 @@
+//! Shared experiment-lab infrastructure for the figure/table harnesses:
+//! engine + dataset caching across runs, sweep execution, CSV emission and
+//! terminal ASCII plots.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::graph::Dataset;
+use crate::runtime::Engine;
+use crate::training::Trainer;
+use crate::util::cli::Args;
+
+/// Experiment laboratory: one engine (compile cache) + one dataset instance
+/// per (name, seed, scale) shared by every trainer in a sweep.
+pub struct Lab {
+    pub engine: Rc<Engine>,
+    datasets: RefCell<HashMap<(String, u64, u32), Rc<Dataset>>>,
+    /// Effort knobs (CLI-overridable; --quick shrinks everything).
+    pub trials: usize,
+    pub epochs: usize,
+    pub data_scale: f32,
+}
+
+impl Lab {
+    pub fn from_args(args: &Args) -> Result<Lab> {
+        let quick = args.flag("quick");
+        Ok(Lab {
+            engine: Rc::new(Engine::new(Path::new(args.get_or("artifacts", "artifacts")))?),
+            datasets: RefCell::new(HashMap::new()),
+            trials: args.usize_or("trials", if quick { 1 } else { 3 })?,
+            epochs: args.usize_or("epochs", if quick { 3 } else { 6 })?,
+            data_scale: args.f32_or("data-scale", if quick { 0.25 } else { 0.5 })?,
+        })
+    }
+
+    pub fn dataset(&self, cfg: &ExperimentConfig) -> Result<Rc<Dataset>> {
+        let key = (
+            cfg.dataset.clone(),
+            cfg.seed,
+            (cfg.data_scale * 1000.0) as u32,
+        );
+        if let Some(ds) = self.datasets.borrow().get(&key) {
+            return Ok(ds.clone());
+        }
+        let ds = Rc::new(Trainer::make_dataset(cfg)?);
+        self.datasets.borrow_mut().insert(key, ds.clone());
+        Ok(ds)
+    }
+
+    pub fn trainer(&self, cfg: &ExperimentConfig) -> Result<Trainer> {
+        Trainer::with_shared(cfg, self.engine.clone(), self.dataset(cfg)?)
+    }
+
+    /// Base config with the lab's effort knobs applied.
+    pub fn config(&self, dataset: &str, model: &str, batch: usize, pres: bool) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default_with(dataset, model, batch, pres);
+        cfg.epochs = self.epochs;
+        cfg.data_scale = self.data_scale;
+        cfg.eval_every = 0;
+        cfg
+    }
+
+    /// Train `cfg.epochs` epochs, return (final val AP, mean epoch secs).
+    /// The dataset seed stays fixed (the paper varies only the training
+    /// stochasticity across trials); `trial` seeds init + negatives.
+    pub fn final_val_ap(&self, cfg: &ExperimentConfig, trial: u64) -> Result<(f64, f64)> {
+        let mut cfg = cfg.clone();
+        let data_seed = cfg.seed;
+        cfg.seed = data_seed * 1000 + trial;
+        // keep the dataset cache hit: regenerate under the data seed
+        let ds = {
+            let mut dcfg = cfg.clone();
+            dcfg.seed = data_seed;
+            self.dataset(&dcfg)?
+        };
+        let mut tr = Trainer::with_shared(&cfg, self.engine.clone(), ds)?;
+        let mut secs = Vec::new();
+        for e in 0..cfg.epochs {
+            secs.push(tr.train_epoch(e)?.epoch_secs);
+        }
+        Ok((tr.eval_val()?, crate::util::stats::mean(&secs)))
+    }
+
+    /// Per-epoch val-AP curve for one trial.
+    pub fn val_curve(&self, cfg: &ExperimentConfig, trial: u64) -> Result<Vec<f64>> {
+        let mut cfg = cfg.clone();
+        let data_seed = cfg.seed;
+        cfg.seed = data_seed * 1000 + trial;
+        let ds = {
+            let mut dcfg = cfg.clone();
+            dcfg.seed = data_seed;
+            self.dataset(&dcfg)?
+        };
+        let mut tr = Trainer::with_shared(&cfg, self.engine.clone(), ds)?;
+        let mut curve = Vec::with_capacity(cfg.epochs);
+        for e in 0..cfg.epochs {
+            tr.train_epoch(e)?;
+            curve.push(tr.eval_val()?);
+        }
+        Ok(curve)
+    }
+}
+
+/// Write a CSV under results/ and report the path.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.csv");
+    let mut out = String::from(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    std::fs::write(&path, out)?;
+    println!("-> wrote {path}");
+    Ok(())
+}
+
+/// Minimal terminal line plot: one row of series, shared x.
+pub fn ascii_plot(title: &str, xlabel: &str, series: &[(&str, &[(f64, f64)])]) {
+    const W: usize = 64;
+    const H: usize = 16;
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, s)| s.iter().copied()).collect();
+    if all.is_empty() {
+        return;
+    }
+    let (x0, x1) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(a, b), &(x, _)| (a.min(x), b.max(x)));
+    let (y0, y1) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(a, b), &(_, y)| (a.min(y), b.max(y)));
+    let (y0, y1) = if (y1 - y0).abs() < 1e-12 {
+        (y0 - 0.5, y1 + 0.5)
+    } else {
+        (y0, y1)
+    };
+    let mut grid = vec![vec![' '; W]; H];
+    let marks = ['o', 'x', '+', '*', '#', '@'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts.iter() {
+            let cx = (((x - x0) / (x1 - x0).max(1e-12)) * (W - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (H - 1) as f64).round() as usize;
+            let row = H - 1 - cy.min(H - 1);
+            grid[row][cx.min(W - 1)] = marks[si % marks.len()];
+        }
+    }
+    println!("\n  {title}");
+    println!("  {:+.3} ┐", y1);
+    for row in &grid {
+        println!("         │{}", row.iter().collect::<String>());
+    }
+    println!("  {:+.3} └{}", y0, "─".repeat(W));
+    println!("          {x0:<10.1} {xlabel:^42} {x1:>10.1}");
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
+        .collect();
+    println!("          legend: {}", legend.join("   "));
+}

@@ -1,0 +1,396 @@
+//! Figure harnesses: regenerate every figure in the paper's evaluation
+//! (Fig. 3, 4/9-13, 5/14, 15, 16, 17, 18, 19) on the synthetic testbed.
+//!
+//! ```text
+//!     pres-train figure <id|all> [--dataset X] [--trials N] [--epochs N]
+//!                                 [--quick] [--data-scale F]
+//! ```
+//!
+//! Each harness prints the paper-shaped series, renders a terminal plot,
+//! and writes a CSV under results/ for EXPERIMENTS.md.
+
+pub mod common;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::util::cli::Args;
+use crate::util::stats;
+use common::{ascii_plot, write_csv, Lab};
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let lab = Lab::from_args(args)?;
+    match which {
+        "3" => fig3(&lab, args),
+        "4" | "9" | "10" | "11" | "12" | "13" => fig4(&lab, args),
+        "5" | "14" => fig5(&lab, args),
+        "15" => fig15(&lab, args),
+        "16" => fig16(&lab, args),
+        "17" => fig17(&lab, args),
+        "18" => fig18(&lab, args),
+        "19" => fig19(&lab, args),
+        "all" => {
+            for f in ["3", "4", "5", "15", "16", "17", "18", "19"] {
+                let mut raw = vec!["figure".to_string(), f.to_string()];
+                for (k, v) in &args.options {
+                    raw.push(format!("--{k}={v}"));
+                }
+                for fl in &args.flags {
+                    raw.push(format!("--{fl}"));
+                }
+                run(&Args::parse(raw, &["quick", "pres", "no-prefetch", "verbose"])?)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown figure '{other}'"),
+    }
+}
+
+fn trial_seeds(lab: &Lab) -> Vec<u64> {
+    (1..=lab.trials as u64).collect()
+}
+
+/// Fig. 3: small temporal batches hurt — gradient variance (Theorem 1).
+/// AP of the three baselines (STANDARD mode) across the small-batch regime.
+fn fig3(lab: &Lab, args: &Args) -> Result<()> {
+    println!("\n=== Figure 3: baseline AP in the small-batch regime ===");
+    let dataset = args.get_or("dataset", "wiki");
+    let mut rows = Vec::new();
+    let mut plot: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for model in ["tgn", "jodie", "apan"] {
+        let batches: &[usize] = if model == "tgn" {
+            &[5, 10, 25, 50, 100, 200]
+        } else {
+            &[25, 50, 100, 200]
+        };
+        let mut series = Vec::new();
+        for &b in batches {
+            let cfg = lab.config(dataset, model, b, false);
+            let aps: Vec<f64> = trial_seeds(lab)
+                .iter()
+                .map(|&t| lab.final_val_ap(&cfg, t).map(|(ap, _)| ap))
+                .collect::<Result<_>>()?;
+            println!(
+                "  {model:<6} b={b:<5} AP = {}",
+                stats::fmt_mean_std(&aps, 4)
+            );
+            rows.push(format!(
+                "{model},{b},{:.4},{:.4}",
+                stats::mean(&aps),
+                stats::std_dev(&aps)
+            ));
+            series.push((b as f64, stats::mean(&aps)));
+        }
+        plot.push((model.to_string(), series));
+    }
+    let view: Vec<(&str, &[(f64, f64)])> = plot
+        .iter()
+        .map(|(n, s)| (n.as_str(), s.as_slice()))
+        .collect();
+    ascii_plot("Fig 3: AP vs (small) batch size", "batch size", &view);
+    write_csv("fig3_small_batch", "model,batch,ap_mean,ap_std", &rows)
+}
+
+/// Fig. 4 (+ 9-13 per dataset): AP vs batch size, STANDARD vs PRES.
+fn fig4(lab: &Lab, args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    println!("\n=== Figure 4: AP vs batch size w/wo PRES ({model} on {dataset}) ===");
+    let batches = [100usize, 200, 400, 800, 1600];
+    let mut rows = Vec::new();
+    let mut std_series = Vec::new();
+    let mut pres_series = Vec::new();
+    for &b in &batches {
+        let mut means = [0.0f64; 2];
+        for (mi, pres) in [false, true].into_iter().enumerate() {
+            let mut cfg = lab.config(dataset, model, b, pres);
+            cfg.beta = if pres { 0.1 } else { 0.0 };
+            let aps: Vec<f64> = trial_seeds(lab)
+                .iter()
+                .map(|&t| lab.final_val_ap(&cfg, t).map(|(ap, _)| ap))
+                .collect::<Result<_>>()?;
+            means[mi] = stats::mean(&aps);
+            rows.push(format!(
+                "{model},{b},{},{:.4},{:.4}",
+                if pres { "pres" } else { "std" },
+                stats::mean(&aps),
+                stats::std_dev(&aps)
+            ));
+        }
+        println!(
+            "  b={b:<5} STANDARD {:.4}   PRES {:.4}   (delta {:+.4})",
+            means[0],
+            means[1],
+            means[1] - means[0]
+        );
+        std_series.push((b as f64, means[0]));
+        pres_series.push((b as f64, means[1]));
+    }
+    ascii_plot(
+        &format!("Fig 4: AP vs batch ({model}, {dataset})"),
+        "batch size",
+        &[("STANDARD", &std_series), ("PRES", &pres_series)],
+    );
+    write_csv(
+        &format!("fig4_batch_sweep_{dataset}_{model}"),
+        "model,batch,mode,ap_mean,ap_std",
+        &rows,
+    )
+}
+
+/// Fig. 5/14: statistical efficiency — val AP vs training epoch at a large
+/// batch, STANDARD vs PRES (with the smoothing objective).
+fn fig5(lab: &Lab, args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    let b = args.usize_or("batch", 800)?;
+    println!("\n=== Figure 5: statistical efficiency at b={b} ({model} on {dataset}) ===");
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for pres in [false, true] {
+        let mut cfg = lab.config(dataset, model, b, pres);
+        cfg.epochs = (lab.epochs * 2).max(8);
+        let mut acc: Vec<Vec<f64>> = Vec::new();
+        for t in trial_seeds(lab) {
+            acc.push(lab.val_curve(&cfg, t)?);
+        }
+        let curve: Vec<(f64, f64)> = (0..cfg.epochs)
+            .map(|e| {
+                let vals: Vec<f64> = acc.iter().map(|c| c[e]).collect();
+                (e as f64 + 1.0, stats::mean(&vals))
+            })
+            .collect();
+        for (e, ap) in &curve {
+            rows.push(format!(
+                "{},{e},{ap:.4}",
+                if pres { "pres" } else { "std" }
+            ));
+        }
+        println!(
+            "  {}: {}",
+            if pres { "PRES    " } else { "STANDARD" },
+            curve
+                .iter()
+                .map(|(_, ap)| format!("{ap:.3}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        curves.push((if pres { "PRES" } else { "STANDARD" }, curve));
+    }
+    let view: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, c)| (*n, c.as_slice())).collect();
+    ascii_plot("Fig 5: val AP vs epoch", "epoch", &view);
+    write_csv(
+        &format!("fig5_efficiency_{dataset}_{model}_b{b}"),
+        "mode,epoch,val_ap",
+        &rows,
+    )
+}
+
+/// Fig. 15: speed-vs-accuracy trade-off scatter against other-domain
+/// efficiency methods (literature constants, as in the paper) + our point.
+fn fig15(lab: &Lab, args: &Args) -> Result<()> {
+    println!("\n=== Figure 15: relative speedup vs accuracy impact ===");
+    // literature-reported points, as the paper's App. F.4 collects them
+    let literature = [
+        ("PipeGCN", 1.7, 0.4),
+        ("SAPipe", 1.6, 0.3),
+        ("Sancus", 2.0, 1.5),
+        ("AdaQP", 1.8, 0.4),
+        ("FastGCN", 2.0, 1.5),
+    ];
+    // our PRES point: measured on the fly (dataset scaled for speed)
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    let (b_std, b_pres) = (25usize, 100usize);
+    let cfg_std = lab.config(dataset, model, b_std, false);
+    let cfg_pres = lab.config(dataset, model, b_pres, true);
+    let (ap_std, s_std) = lab.final_val_ap(&cfg_std, 1)?;
+    let (ap_pres, s_pres) = lab.final_val_ap(&cfg_pres, 1)?;
+    let speedup = s_std / s_pres.max(1e-9);
+    let acc_drop = ((ap_std - ap_pres) * 100.0).max(0.0);
+    let mut rows: Vec<String> = literature
+        .iter()
+        .map(|(n, s, d)| format!("{n},{s},{d},literature"))
+        .collect();
+    rows.push(format!("PRES(ours),{speedup:.2},{acc_drop:.2},measured"));
+    println!("  {:<12} {:>9} {:>10}", "method", "speedup", "acc drop%");
+    for r in &rows {
+        let parts: Vec<&str> = r.split(',').collect();
+        println!("  {:<12} {:>8}x {:>9}%", parts[0], parts[1], parts[2]);
+    }
+    write_csv("fig15_tradeoff", "method,speedup,acc_drop_pct,source", &rows)
+}
+
+/// Fig. 16: extended training sessions — the PRES-vs-STANDARD gap narrows
+/// with more epochs.
+fn fig16(lab: &Lab, args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    let b = args.usize_or("batch", 800)?;
+    let epochs = args.usize_or("long-epochs", lab.epochs * 4)?;
+    println!("\n=== Figure 16: extended training ({epochs} epochs, b={b}, {dataset}) ===");
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for pres in [false, true] {
+        let mut cfg = lab.config(dataset, model, b, pres);
+        cfg.epochs = epochs;
+        let curve = lab.val_curve(&cfg, 1)?;
+        for (e, ap) in curve.iter().enumerate() {
+            rows.push(format!("{},{e},{ap:.4}", if pres { "pres" } else { "std" }));
+        }
+        curves.push((
+            if pres { "PRES" } else { "STANDARD" },
+            curve
+                .iter()
+                .enumerate()
+                .map(|(e, &ap)| (e as f64 + 1.0, ap))
+                .collect::<Vec<_>>(),
+        ));
+    }
+    let gap_first = curves[1].1[0].1 - curves[0].1[0].1;
+    let gap_last = curves[1].1.last().unwrap().1 - curves[0].1.last().unwrap().1;
+    println!("  AP gap (PRES - STANDARD): first epoch {gap_first:+.4}, last epoch {gap_last:+.4}");
+    let view: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, c)| (*n, c.as_slice())).collect();
+    ascii_plot("Fig 16: extended training", "epoch", &view);
+    write_csv(
+        &format!("fig16_extended_{dataset}_{model}_b{b}"),
+        "mode,epoch,val_ap",
+        &rows,
+    )
+}
+
+/// Fig. 17: ablation — smoothing-only (PRES-S), correction-only (PRES-V),
+/// both (PRES), neither (STANDARD).
+fn fig17(lab: &Lab, args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    let b = args.usize_or("batch", 800)?;
+    println!("\n=== Figure 17: PRES ablation at b={b} ({model} on {dataset}) ===");
+    let variants: [(&str, bool, f32); 4] = [
+        ("STANDARD", false, 0.0),
+        ("PRES-S", false, 0.1), // memory-coherence smoothing only
+        ("PRES-V", true, 0.0),  // prediction-correction only
+        ("PRES", true, 0.1),
+    ];
+    let mut rows = Vec::new();
+    let mut curves = Vec::new();
+    for (name, pres, beta) in variants {
+        let mut cfg = lab.config(dataset, model, b, pres);
+        cfg.beta = beta;
+        cfg.epochs = (lab.epochs * 2).max(8);
+        let curve = lab.val_curve(&cfg, 1)?;
+        println!(
+            "  {name:<9} final AP {:.4}  curve {}",
+            curve.last().unwrap(),
+            curve
+                .iter()
+                .map(|ap| format!("{ap:.3}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        for (e, ap) in curve.iter().enumerate() {
+            rows.push(format!("{name},{e},{ap:.4}"));
+        }
+        curves.push((
+            name,
+            curve
+                .iter()
+                .enumerate()
+                .map(|(e, &ap)| (e as f64 + 1.0, ap))
+                .collect::<Vec<_>>(),
+        ));
+    }
+    let view: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, c)| (*n, c.as_slice())).collect();
+    ascii_plot("Fig 17: ablation", "epoch", &view);
+    write_csv(
+        &format!("fig17_ablation_{dataset}_{model}_b{b}"),
+        "variant,epoch,val_ap",
+        &rows,
+    )
+}
+
+/// Fig. 18: beta sensitivity — convergence speed vs final accuracy.
+fn fig18(lab: &Lab, args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    let b = args.usize_or("batch", 800)?;
+    println!("\n=== Figure 18: beta ablation at b={b} ({model} on {dataset}) ===");
+    let betas = [0.0f32, 0.01, 0.05, 0.1, 0.3, 1.0];
+    let mut rows = Vec::new();
+    for beta in betas {
+        let mut cfg = lab.config(dataset, model, b, true);
+        cfg.beta = beta;
+        cfg.epochs = (lab.epochs * 2).max(8);
+        let curve = lab.val_curve(&cfg, 1)?;
+        // "epochs to reach 95% of final AP" as the convergence-speed proxy
+        let last = *curve.last().unwrap();
+        let thresh = last * 0.95;
+        let conv = curve.iter().position(|&ap| ap >= thresh).unwrap_or(0) + 1;
+        println!("  beta={beta:<5} final AP {last:.4}  reaches 95% at epoch {conv}");
+        for (e, ap) in curve.iter().enumerate() {
+            rows.push(format!("{beta},{e},{ap:.4}"));
+        }
+    }
+    write_csv(
+        &format!("fig18_beta_{dataset}_{model}_b{b}"),
+        "beta,epoch,val_ap",
+        &rows,
+    )
+}
+
+/// Fig. 19: coordinator memory vs batch size, STANDARD vs PRES — PRES's
+/// tracker overhead is O(|V|), independent of batch size.
+fn fig19(lab: &Lab, args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "wiki");
+    let model = args.get_or("model", "tgn");
+    println!("\n=== Figure 19: coordinator memory vs batch size ({dataset}) ===");
+    let mut rows = Vec::new();
+    println!(
+        "  {:>7} {:>14} {:>14} {:>16}",
+        "batch", "STANDARD MB", "PRES MB", "PRES overhead MB"
+    );
+    for b in [100usize, 200, 400, 800, 1600] {
+        let mut bytes = [0usize; 2];
+        for (i, pres) in [false, true].into_iter().enumerate() {
+            let mut cfg = lab.config(dataset, model, b, pres);
+            cfg.anchor_fraction = if pres { 1.0 } else { 0.0 };
+            let tr = lab.trainer(&cfg)?;
+            bytes[i] = tr.memory_bytes() + host_batch_bytes(&cfg, &lab.engine.manifest().dims);
+        }
+        println!(
+            "  {:>7} {:>14.2} {:>14.2} {:>16.2}",
+            b,
+            bytes[0] as f64 / 1e6,
+            bytes[1] as f64 / 1e6,
+            (bytes[1] - bytes[0]) as f64 / 1e6
+        );
+        rows.push(format!(
+            "{b},{:.3},{:.3}",
+            bytes[0] as f64 / 1e6,
+            bytes[1] as f64 / 1e6
+        ));
+    }
+    println!("  (PRES tracker overhead is constant in b — the paper's scalability point)");
+    write_csv(
+        &format!("fig19_memory_{dataset}_{model}"),
+        "batch,std_mb,pres_mb",
+        &rows,
+    )
+}
+
+/// Approximate per-step staging bytes (scales with b; part of Fig. 19).
+fn host_batch_bytes(cfg: &ExperimentConfig, dims: &crate::runtime::Dims) -> usize {
+    let b = cfg.batch_size;
+    let u = 2 * b;
+    let (d, de, k) = (dims.d_mem, dims.d_edge, dims.k_nbr);
+    // update rows + current rows + neighbor tensors (3 roles)
+    (u * (3 * d + de + 2) + 3 * b * (d + 2) + 3 * b * k * (d + de + 2)) * 4
+}

@@ -1,0 +1,125 @@
+//! Dataset = event log + chronological split (paper App. A.1: the stream
+//! is partitioned into [0, T_train], (T_train, T_val], (T_val, T_test]).
+
+use crate::graph::events::{EventLog, NO_LABEL};
+
+/// Chronological split boundaries as event indices into the log.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Split {
+    pub train_end: usize,
+    pub val_end: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub log: EventLog,
+    pub split: Split,
+}
+
+/// Table 3-style dataset statistics.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub name: String,
+    pub num_nodes: u32,
+    pub num_events: usize,
+    pub d_edge: usize,
+    pub timespan: f32,
+    pub repeat_ratio: f64,
+    pub labeled_events: usize,
+    pub label_positive_rate: f64,
+}
+
+impl Dataset {
+    /// Chronological 70/15/15 split (the TGL/TGN convention).
+    pub fn with_chrono_split(name: &str, log: EventLog) -> Dataset {
+        let n = log.len();
+        Dataset {
+            name: name.to_string(),
+            log,
+            split: Split {
+                train_end: n * 70 / 100,
+                val_end: n * 85 / 100,
+            },
+        }
+    }
+
+    pub fn train_range(&self) -> std::ops::Range<usize> {
+        0..self.split.train_end
+    }
+
+    pub fn val_range(&self) -> std::ops::Range<usize> {
+        self.split.train_end..self.split.val_end
+    }
+
+    pub fn test_range(&self) -> std::ops::Range<usize> {
+        self.split.val_end..self.log.len()
+    }
+
+    pub fn stats(&self) -> DatasetStats {
+        let labeled: Vec<i8> = self
+            .log
+            .events
+            .iter()
+            .map(|e| e.label)
+            .filter(|&l| l != NO_LABEL)
+            .collect();
+        let pos = labeled.iter().filter(|&&l| l == 1).count();
+        DatasetStats {
+            name: self.name.clone(),
+            num_nodes: self.log.num_nodes,
+            num_events: self.log.len(),
+            d_edge: self.log.d_edge,
+            timespan: self.log.timespan(),
+            repeat_ratio: self.log.repeat_ratio(),
+            labeled_events: labeled.len(),
+            label_positive_rate: if labeled.is_empty() {
+                0.0
+            } else {
+                pos as f64 / labeled.len() as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::events::Event;
+
+    fn make_log(n: usize) -> EventLog {
+        let mut log = EventLog::new(10, 5, 0);
+        for i in 0..n {
+            log.push(
+                Event {
+                    src: (i % 5) as u32,
+                    dst: 5 + (i % 5) as u32,
+                    t: i as f32,
+                    label: if i % 3 == 0 { 1 } else { NO_LABEL },
+                },
+                &[],
+            )
+            .unwrap();
+        }
+        log
+    }
+
+    #[test]
+    fn chrono_split_covers_everything_in_order() {
+        let d = Dataset::with_chrono_split("t", make_log(100));
+        assert_eq!(d.train_range(), 0..70);
+        assert_eq!(d.val_range(), 70..85);
+        assert_eq!(d.test_range(), 85..100);
+        let total = d.train_range().len() + d.val_range().len() + d.test_range().len();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn stats_count_labels() {
+        let d = Dataset::with_chrono_split("t", make_log(9));
+        let s = d.stats();
+        assert_eq!(s.num_events, 9);
+        assert_eq!(s.labeled_events, 3);
+        assert_eq!(s.label_positive_rate, 1.0);
+    }
+}

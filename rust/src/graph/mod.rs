@@ -1,0 +1,8 @@
+//! Temporal graph substrate: event-based dynamic graph representation
+//! (paper §3), chronological splits, and dataset statistics (Table 3).
+
+pub mod dataset;
+pub mod events;
+
+pub use dataset::{Dataset, DatasetStats, Split};
+pub use events::{Event, EventLog, NO_LABEL};

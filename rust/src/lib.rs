@@ -1,0 +1,49 @@
+//! # PRES — scalable memory-based dynamic graph neural network training
+//!
+//! Rust reproduction of *PRES: Toward Scalable Memory-Based Dynamic Graph
+//! Neural Networks* (Su, Zou & Wu, ICLR 2024). This crate is the L3
+//! coordinator of a three-layer stack (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — temporal-batch scheduling, pending-set analysis,
+//!   the vertex memory store, the PRES GMM prediction filter, samplers,
+//!   metrics, and the training orchestrator driving AOT-compiled XLA
+//!   executables through PJRT.
+//! * **L2 (python/compile/model.py)** — MDGNN encoders (TGN/JODIE/APAN)
+//!   with the PRES correction + memory-coherence objective, lowered once
+//!   to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the step's hot
+//!   spots, lowered inside the L2 graphs.
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! python invocation; everything else is this crate.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pres::config::ExperimentConfig;
+//! use pres::training::Trainer;
+//!
+//! let cfg = ExperimentConfig::default_with("wiki", "tgn", 200, true);
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("val AP = {:.4}", report.best_val_ap);
+//! ```
+
+pub mod batching;
+pub mod config;
+pub mod datagen;
+pub mod eval;
+pub mod figures;
+pub mod graph;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod tables;
+pub mod training;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only error dependency available
+/// in the offline registry snapshot).
+pub type Result<T> = anyhow::Result<T>;

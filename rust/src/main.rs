@@ -1,0 +1,224 @@
+//! `pres-train` — the PRES training framework launcher.
+//!
+//! Subcommands:
+//!   train    train one configuration and print the epoch log
+//!   datagen  generate a synthetic dataset and print Table-3 stats
+//!   pending  pending-set statistics vs batch size (paper Def. 2)
+//!   figure   regenerate a paper figure (3, 4, 5, 15, 16, 17, 18, 19, all)
+//!   table    regenerate a paper table (1, 2, 3, all)
+//!   inspect  list compiled artifacts and their ABIs
+//!
+//! Examples:
+//!   pres-train train --dataset wiki --model tgn --batch 200 --pres
+//!   pres-train figure 4 --dataset wiki --trials 3
+//!   pres-train table 1 --quick
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use pres::config::ExperimentConfig;
+use pres::runtime::Engine;
+use pres::training::Trainer;
+use pres::util::cli::Args;
+use pres::{datagen, figures, tables};
+
+const FLAGS: &[&str] = &["pres", "quick", "no-prefetch", "verbose"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: pres-train <train|datagen|pending|figure|table|inspect> [options]\n\
+         see README.md for the full option list"
+    );
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, FLAGS)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or_default();
+    match cmd {
+        "train" => cmd_train(&args),
+        "datagen" => cmd_datagen(&args),
+        "pending" => cmd_pending(&args),
+        "figure" => figures::run(&args),
+        "table" => tables::run(&args),
+        "inspect" => cmd_inspect(&args),
+        other => bail!("unknown command '{other}'"),
+    }
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default_with(
+        args.get_or("dataset", "wiki"),
+        args.get_or("model", "tgn"),
+        args.usize_or("batch", 200)?,
+        args.flag("pres"),
+    );
+    cfg.beta = args.f32_or("beta", cfg.beta)?;
+    cfg.epochs = args.usize_or("epochs", 10)?;
+    cfg.lr = args.f32_or("lr", 1e-3)?;
+    cfg.seed = args.u64_or("seed", 0)?;
+    cfg.anchor_fraction = args.f32_or("anchor", 1.0)?;
+    cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    cfg.eval_every = args.usize_or("eval-every", 1)?;
+    cfg.prefetch = !args.flag("no-prefetch");
+    cfg.data_scale = args.f32_or("data-scale", 1.0)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "# train: dataset={} model={} b={} mode={} beta={} epochs={} seed={}",
+        cfg.dataset,
+        cfg.model,
+        cfg.batch_size,
+        if cfg.pres { "PRES" } else { "STANDARD" },
+        cfg.beta,
+        cfg.epochs,
+        cfg.seed
+    );
+    let mut trainer = Trainer::from_config(&cfg).context("building trainer")?;
+    let (pend_frac, pend_pairs) = trainer.pending_summary();
+    println!(
+        "# pending: {:.1}% of events pend, {pend_pairs:.2} pairs/event",
+        pend_frac * 100.0
+    );
+    println!(
+        "{:>5} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8} {:>9} {:>7}",
+        "epoch", "loss", "bce", "trainAP", "valAP", "coher", "gamma", "ev/s", "secs"
+    );
+    let mut best = f64::NEG_INFINITY;
+    for e in 0..cfg.epochs {
+        let mut r = trainer.train_epoch(e)?;
+        if cfg.eval_every > 0 && (e + 1) % cfg.eval_every == 0 || e + 1 == cfg.epochs {
+            r.val_ap = trainer.eval_val()?;
+            best = best.max(r.val_ap);
+        }
+        println!(
+            "{:>5} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>8.3} {:>9.0} {:>7.2}",
+            r.epoch, r.train_loss, r.train_bce, r.train_ap, r.val_ap, r.coherence,
+            r.gamma, r.events_per_sec, r.epoch_secs
+        );
+    }
+    let (test_ap, rows) = trainer.eval_test(true)?;
+    let auc = pres::eval::nodeclf::train_and_auc(&trainer.engine, &rows, cfg.seed)?;
+    println!("# best val AP = {best:.4}  test AP = {test_ap:.4}  node-clf AUC = {auc:.4}");
+    println!(
+        "# coordinator memory: {:.2} MB",
+        trainer.memory_bytes() as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "all");
+    let seed = args.u64_or("seed", 0)?;
+    let profiles = if name == "all" {
+        datagen::profiles()
+    } else {
+        vec![datagen::profile(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?]
+    };
+    println!(
+        "{:<8} {:>9} {:>9} {:>6} {:>10} {:>8} {:>9} {:>7}",
+        "dataset", "vertices", "events", "efeat", "timespan", "repeat%", "labeled", "pos%"
+    );
+    for p in profiles {
+        let ds = datagen::generate(&p, seed);
+        let s = ds.stats();
+        println!(
+            "{:<8} {:>9} {:>9} {:>6} {:>10.0} {:>7.1}% {:>9} {:>6.1}%",
+            s.name,
+            s.num_nodes,
+            s.num_events,
+            s.d_edge,
+            s.timespan,
+            s.repeat_ratio * 100.0,
+            s.labeled_events,
+            s.label_positive_rate * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pending(args: &Args) -> Result<()> {
+    use pres::batching::{partition, BatchPlan};
+    let cfg = config_from(args)?;
+    let ds = Trainer::make_dataset(&cfg)?;
+    println!("# pending-set statistics for '{}' (Def. 2)", cfg.dataset);
+    println!(
+        "{:>7} {:>12} {:>12} {:>12}",
+        "batch", "pend-events%", "pairs/event", "collided%"
+    );
+    for b in [10, 25, 50, 100, 200, 400, 800, 1600] {
+        let parts = partition(0..ds.log.len(), b);
+        if parts.is_empty() {
+            continue;
+        }
+        let mut ev = 0.0;
+        let mut pairs = 0.0;
+        let mut coll = 0.0;
+        for r in &parts {
+            let plan = BatchPlan::build(&ds.log, r.clone());
+            ev += plan.stats.pending_events as f64;
+            pairs += plan.stats.pending_pairs as f64;
+            coll += plan.stats.collided_vertices as f64 / plan.stats.distinct_vertices as f64;
+        }
+        let n_ev = (parts.len() * b) as f64;
+        println!(
+            "{:>7} {:>11.1}% {:>12.2} {:>11.1}%",
+            b,
+            ev / n_ev * 100.0,
+            pairs / n_ev,
+            coll / parts.len() as f64 * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let engine = Rc::new(Engine::new(Path::new(dir))?);
+    let m = engine.manifest();
+    println!(
+        "# dims: d_mem={} d_msg={} d_edge={} d_time={} K={} heads={} d_emb={}",
+        m.dims.d_mem,
+        m.dims.d_msg,
+        m.dims.d_edge,
+        m.dims.d_time,
+        m.dims.k_nbr,
+        m.dims.heads,
+        m.dims.d_emb
+    );
+    println!(
+        "{:<22} {:>7} {:>8} {:>9}",
+        "artifact", "batch", "inputs", "outputs"
+    );
+    for a in &m.artifacts {
+        println!(
+            "{:<22} {:>7} {:>8} {:>9}",
+            a.name,
+            a.batch,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,326 @@
+//! PRES prediction model: per-vertex Gaussian mixture over memory-state
+//! transition rates (paper §5.1, Eq. 7 & 9).
+//!
+//! The paper models the change delta_s of each vertex's memory with a
+//! 2-component GMM and predicts s_hat(t2) = s(t1) + (t2 - t1) * delta_s.
+//! Applying MLE naively would need the full history; Eq. 9's trackers
+//! (n, xi, psi) reduce it to running sums:  mu = xi / n,
+//! Sigma = psi / n - mu^2 (diagonal).
+//!
+//! Component assignment: the two mixture components correspond to the two
+//! event *roles* a vertex's update can arrive from — source-side vs
+//! destination-side (in the paper's temporal-link-prediction framing these
+//! are its "positive event types"; in bipartite streams they are genuinely
+//! different populations with different drift statistics). Prediction uses
+//! the component of the role being updated; the mixture weights alpha_j
+//! follow from the counts.
+//!
+//! Storage is O(|V| * 2 * d) for the full tracker set; the *anchor set*
+//! heuristic (paper §5.3) tracks only a hash-selected fraction of vertices
+//! and falls back to a zero-drift prediction (s_hat = s(t1)) elsewhere.
+
+use crate::util::rng::splitmix64;
+
+/// Update-role of a memory transition (the GMM component selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Src = 0,
+    Dst = 1,
+}
+
+#[derive(Clone, Debug)]
+pub struct GmmTrackers {
+    d: usize,
+    /// vertex -> tracked slot, u32::MAX when outside the anchor set.
+    slot: Vec<u32>,
+    /// [slots * 2] event counts n_i^(j).
+    n: Vec<u32>,
+    /// [slots * 2] accumulated elapsed time per component.
+    tau: Vec<f32>,
+    /// [slots * 2 * d] running sums xi_i^(j) of state deltas.
+    xi: Vec<f32>,
+    /// [slots * 2 * d] running square sums psi_i^(j) of per-time rates.
+    psi: Vec<f32>,
+}
+
+impl GmmTrackers {
+    /// `anchor_fraction` = 1.0 tracks every vertex; < 1.0 tracks a stable
+    /// hash-selected subset (the anchor set).
+    pub fn new(num_nodes: u32, d: usize, anchor_fraction: f32, seed: u64) -> Self {
+        let mut slot = vec![u32::MAX; num_nodes as usize];
+        let threshold = (anchor_fraction.clamp(0.0, 1.0) as f64 * u32::MAX as f64) as u64;
+        let mut next = 0u32;
+        for (v, s) in slot.iter_mut().enumerate() {
+            let mut h = seed ^ (v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let hash = splitmix64(&mut h) as u32 as u64;
+            if hash <= threshold {
+                *s = next;
+                next += 1;
+            }
+        }
+        GmmTrackers {
+            d,
+            slot,
+            n: vec![0; next as usize * 2],
+            tau: vec![0.0; next as usize * 2],
+            xi: vec![0.0; next as usize * 2 * d],
+            psi: vec![0.0; next as usize * 2 * d],
+        }
+    }
+
+    pub fn tracked_vertices(&self) -> usize {
+        self.n.len() / 2
+    }
+
+    pub fn is_tracked(&self, v: u32) -> bool {
+        self.slot[v as usize] != u32::MAX
+    }
+
+    #[inline]
+    fn base(&self, v: u32, role: Role) -> Option<usize> {
+        let s = self.slot[v as usize];
+        if s == u32::MAX {
+            None
+        } else {
+            Some((s as usize * 2 + role as usize) * self.d)
+        }
+    }
+
+    /// Predict s_hat(t2) = s(t1) + dt * mu (Eq. 7) into `out`, where the
+    /// rate mu is the time-weighted MLE mu = (sum of deltas) / (sum of dt).
+    /// The ratio-of-sums estimator is robust to near-zero per-event dt
+    /// (a mean of per-event rates explodes on bursty vertices). Untracked
+    /// or unseen vertices predict zero drift (s_hat = s(t1)), making the
+    /// correction a no-op for them regardless of gamma.
+    pub fn predict_into(&self, v: u32, role: Role, s_t1: &[f32], dt: f32, out: &mut [f32]) {
+        debug_assert_eq!(s_t1.len(), self.d);
+        match self.base(v, role) {
+            Some(base) => {
+                let k = base / self.d;
+                if self.n[k] == 0 || self.tau[k] <= 1e-9 {
+                    out.copy_from_slice(s_t1);
+                    return;
+                }
+                let inv_tau = 1.0 / self.tau[k];
+                for i in 0..self.d {
+                    let mu = self.xi[base + i] * inv_tau;
+                    out[i] = s_t1[i] + dt * mu;
+                }
+            }
+            None => out.copy_from_slice(s_t1),
+        }
+    }
+
+    /// Fold one observed transition delta = s_bar(t2) - s(t1) over elapsed
+    /// time dt into the trackers (Eq. 9).
+    pub fn observe(&mut self, v: u32, role: Role, s_t1: &[f32], s_bar: &[f32], dt: f32) {
+        let Some(base) = self.base(v, role) else { return };
+        let k = base / self.d;
+        self.n[k] += 1;
+        self.tau[k] += dt.max(0.0);
+        let inv_dt = 1.0 / dt.max(1e-3);
+        for i in 0..self.d {
+            let delta = s_bar[i] - s_t1[i];
+            self.xi[base + i] += delta;
+            let r = delta * inv_dt;
+            self.psi[base + i] += r * r;
+        }
+    }
+
+    /// Component mean rate mu_i^(j) (Eq. 9); None when untracked/unseen.
+    pub fn mean(&self, v: u32, role: Role) -> Option<Vec<f32>> {
+        let base = self.base(v, role)?;
+        let k = base / self.d;
+        if self.n[k] == 0 || self.tau[k] <= 1e-9 {
+            return None;
+        }
+        let inv_tau = 1.0 / self.tau[k];
+        Some((0..self.d).map(|i| self.xi[base + i] * inv_tau).collect())
+    }
+
+    /// Diagonal variance of per-time rates, Sigma_i^(j) = psi/n - mu^2
+    /// (Eq. 9), with mu the time-weighted rate.
+    pub fn variance(&self, v: u32, role: Role) -> Option<Vec<f32>> {
+        let base = self.base(v, role)?;
+        let k = base / self.d;
+        let count = self.n[k];
+        if count == 0 || self.tau[k] <= 1e-9 {
+            return None;
+        }
+        let inv = 1.0 / count as f32;
+        let inv_tau = 1.0 / self.tau[k];
+        Some(
+            (0..self.d)
+                .map(|i| {
+                    let mu = self.xi[base + i] * inv_tau;
+                    (self.psi[base + i] * inv - mu * mu).max(0.0)
+                })
+                .collect(),
+        )
+    }
+
+    /// Observation count n_i^(j) (0 when untracked).
+    pub fn count(&self, v: u32, role: Role) -> u32 {
+        match self.base(v, role) {
+            Some(base) => self.n[base / self.d],
+            None => 0,
+        }
+    }
+
+    /// Mixture weights alpha_j = n_j / (n_0 + n_1) for vertex `v`.
+    pub fn alpha(&self, v: u32) -> Option<[f32; 2]> {
+        let s = self.slot[v as usize];
+        if s == u32::MAX {
+            return None;
+        }
+        let n0 = self.n[s as usize * 2] as f32;
+        let n1 = self.n[s as usize * 2 + 1] as f32;
+        let total = n0 + n1;
+        if total == 0.0 {
+            return None;
+        }
+        Some([n0 / total, n1 / total])
+    }
+
+    /// Reset all trackers (epoch boundary, Algorithm 2's xi,psi,n <- 0).
+    pub fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.tau.iter_mut().for_each(|x| *x = 0.0);
+        self.xi.iter_mut().for_each(|x| *x = 0.0);
+        self.psi.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Live bytes (Fig. 19 accounting; O(anchor_fraction * |V| * d)).
+    pub fn bytes(&self) -> usize {
+        self.slot.len() * 4
+            + (self.n.len() + self.tau.len()) * 4
+            + (self.xi.len() + self.psi.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn predict_before_any_observation_is_identity() {
+        let g = GmmTrackers::new(4, 3, 1.0, 0);
+        let s = [1.0, 2.0, 3.0];
+        let mut out = [0.0; 3];
+        g.predict_into(1, Role::Src, &s, 10.0, &mut out);
+        assert_eq!(out, s);
+    }
+
+    #[test]
+    fn tracker_learns_constant_rate() {
+        let mut g = GmmTrackers::new(2, 2, 1.0, 0);
+        // transitions with rate exactly [0.5, -1.0]
+        let mut s = vec![0.0f32, 0.0];
+        for step in 0..10 {
+            let dt = 1.0 + (step % 3) as f32;
+            let s2 = vec![s[0] + 0.5 * dt, s[1] - 1.0 * dt];
+            g.observe(0, Role::Src, &s, &s2, dt);
+            s = s2;
+        }
+        let mu = g.mean(0, Role::Src).unwrap();
+        assert!((mu[0] - 0.5).abs() < 1e-5);
+        assert!((mu[1] + 1.0).abs() < 1e-5);
+        let var = g.variance(0, Role::Src).unwrap();
+        assert!(var[0] < 1e-6 && var[1] < 1e-6);
+        // prediction extrapolates the rate
+        let mut out = [0.0; 2];
+        g.predict_into(0, Role::Src, &[2.0, 2.0], 4.0, &mut out);
+        assert!((out[0] - 4.0).abs() < 1e-5);
+        assert!((out[1] + 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn roles_are_independent_components() {
+        let mut g = GmmTrackers::new(1, 1, 1.0, 0);
+        g.observe(0, Role::Src, &[0.0], &[1.0], 1.0);
+        g.observe(0, Role::Dst, &[0.0], &[-1.0], 1.0);
+        assert_eq!(g.mean(0, Role::Src).unwrap()[0], 1.0);
+        assert_eq!(g.mean(0, Role::Dst).unwrap()[0], -1.0);
+        assert_eq!(g.alpha(0).unwrap(), [0.5, 0.5]);
+    }
+
+    #[test]
+    fn anchor_fraction_limits_tracking() {
+        let g_full = GmmTrackers::new(1000, 2, 1.0, 7);
+        assert_eq!(g_full.tracked_vertices(), 1000);
+        let g_half = GmmTrackers::new(1000, 2, 0.5, 7);
+        let frac = g_half.tracked_vertices() as f64 / 1000.0;
+        assert!((0.4..0.6).contains(&frac), "{frac}");
+        assert!(g_half.bytes() < g_full.bytes());
+        // untracked vertices predict zero drift
+        let v = (0..1000u32).find(|&v| !g_half.is_tracked(v)).unwrap();
+        let mut out = [0.0; 2];
+        g_half.predict_into(v, Role::Src, &[3.0, 4.0], 5.0, &mut out);
+        assert_eq!(out, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut g = GmmTrackers::new(2, 1, 1.0, 0);
+        g.observe(0, Role::Src, &[0.0], &[1.0], 1.0);
+        g.reset();
+        assert!(g.mean(0, Role::Src).is_none());
+    }
+
+    #[test]
+    fn property_tracker_matches_naive_mle() {
+        // running sums == batch MLE over the full history (Eq. 9's claim)
+        prop::check_msg(
+            "gmm trackers == naive MLE",
+            5,
+            100,
+            |rng: &mut Pcg32| {
+                let n = 1 + rng.below(20) as usize;
+                (0..n)
+                    .map(|_| {
+                        let dt = 0.1 + rng.f32() * 3.0;
+                        let s1: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+                        let s2: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+                        (s1, s2, dt)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |transitions| {
+                let mut g = GmmTrackers::new(1, 2, 1.0, 0);
+                let mut deltas: Vec<Vec<f64>> = Vec::new();
+                let mut rates: Vec<Vec<f64>> = Vec::new();
+                let mut total_dt = 0.0f64;
+                for (s1, s2, dt) in transitions {
+                    g.observe(0, Role::Src, s1, s2, *dt);
+                    deltas.push(s1.iter().zip(s2).map(|(a, b)| (b - a) as f64).collect());
+                    rates.push(
+                        s1.iter()
+                            .zip(s2)
+                            .map(|(a, b)| ((b - a) / dt.max(1e-3)) as f64)
+                            .collect(),
+                    );
+                    total_dt += *dt as f64;
+                }
+                let mu = g.mean(0, Role::Src).unwrap();
+                let var = g.variance(0, Role::Src).unwrap();
+                let n = transitions.len() as f64;
+                for i in 0..2 {
+                    // time-weighted rate: sum(delta) / sum(dt)
+                    let m: f64 = deltas.iter().map(|d| d[i]).sum::<f64>() / total_dt;
+                    // rate second moment minus mu^2
+                    let v: f64 =
+                        rates.iter().map(|r| r[i] * r[i]).sum::<f64>() / n - m * m;
+                    if (mu[i] as f64 - m).abs() > 1e-3 * (1.0 + m.abs()) {
+                        return Err(format!("mean[{i}] {} != {m}", mu[i]));
+                    }
+                    if (var[i] as f64 - v.max(0.0)).abs() > 1e-2 * (1.0 + v.abs()) {
+                        return Err(format!("var[{i}] {} != {v}", var[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

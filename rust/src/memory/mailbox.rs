@@ -1,0 +1,98 @@
+//! APAN mailbox: per-vertex ring buffer of the K most recent incoming
+//! message ("mail") vectors (Wang et al. 2021). The coordinator delivers
+//! the step's output messages to both endpoints' mailboxes; the APAN
+//! embedding attends over the mailbox instead of sampled neighbors.
+
+/// Ring buffer of [K, d_msg] mail vectors + their timestamps per vertex.
+#[derive(Clone, Debug)]
+pub struct Mailbox {
+    k: usize,
+    d: usize,
+    mails: Vec<f32>,   // [num_nodes * k * d]
+    times: Vec<f32>,   // [num_nodes * k]
+    heads: Vec<(u16, u16)>,
+}
+
+impl Mailbox {
+    pub fn new(num_nodes: u32, k: usize, d: usize) -> Self {
+        Mailbox {
+            k,
+            d,
+            mails: vec![0.0; num_nodes as usize * k * d],
+            times: vec![0.0; num_nodes as usize * k],
+            heads: vec![(0, 0); num_nodes as usize],
+        }
+    }
+
+    /// Deliver one mail vector to vertex `v`.
+    pub fn deliver(&mut self, v: u32, mail: &[f32], t: f32) {
+        debug_assert_eq!(mail.len(), self.d);
+        let (head, len) = &mut self.heads[v as usize];
+        let slot = v as usize * self.k + *head as usize;
+        self.mails[slot * self.d..(slot + 1) * self.d].copy_from_slice(mail);
+        self.times[slot] = t;
+        *head = ((*head as usize + 1) % self.k) as u16;
+        *len = (*len + 1).min(self.k as u16);
+    }
+
+    /// Gather the up-to-K most recent mails of `v`, newest first.
+    /// `mails_out` is [K * d], `times_out` is [K]. Returns the valid count.
+    pub fn gather(&self, v: u32, mails_out: &mut [f32], times_out: &mut [f32]) -> usize {
+        let (head, len) = self.heads[v as usize];
+        let len = len as usize;
+        for i in 0..len {
+            let pos = (head as usize + self.k - 1 - i) % self.k;
+            let slot = v as usize * self.k + pos;
+            mails_out[i * self.d..(i + 1) * self.d]
+                .copy_from_slice(&self.mails[slot * self.d..(slot + 1) * self.d]);
+            times_out[i] = self.times[slot];
+        }
+        len
+    }
+
+    pub fn clear(&mut self) {
+        self.heads.iter_mut().for_each(|h| *h = (0, 0));
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.mails.len() * 4 + self.times.len() * 4 + self.heads.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deliver_and_gather_newest_first() {
+        let mut mb = Mailbox::new(3, 2, 2);
+        mb.deliver(1, &[1.0, 1.0], 0.5);
+        mb.deliver(1, &[2.0, 2.0], 1.5);
+        let mut mails = [0.0; 4];
+        let mut times = [0.0; 2];
+        let n = mb.gather(1, &mut mails, &mut times);
+        assert_eq!(n, 2);
+        assert_eq!(&mails, &[2.0, 2.0, 1.0, 1.0]);
+        assert_eq!(&times, &[1.5, 0.5]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut mb = Mailbox::new(2, 2, 1);
+        for i in 0..4 {
+            mb.deliver(0, &[i as f32], i as f32);
+        }
+        let mut mails = [0.0; 2];
+        let mut times = [0.0; 2];
+        assert_eq!(mb.gather(0, &mut mails, &mut times), 2);
+        assert_eq!(&mails, &[3.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_mailbox_gathers_zero() {
+        let mb = Mailbox::new(2, 3, 2);
+        let mut mails = [9.0; 6];
+        let mut times = [9.0; 3];
+        assert_eq!(mb.gather(1, &mut mails, &mut times), 0);
+    }
+}

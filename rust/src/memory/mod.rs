@@ -1,0 +1,10 @@
+//! Vertex memory state: the MDGNN's stateful substrate, owned by the
+//! coordinator (the executables only ever see gathered rows; DESIGN.md §1).
+
+pub mod gmm;
+pub mod mailbox;
+pub mod store;
+
+pub use gmm::GmmTrackers;
+pub use mailbox::Mailbox;
+pub use store::MemoryStore;

@@ -1,0 +1,130 @@
+//! Per-vertex memory state s_i(t) + last-update clocks.
+//!
+//! Row-major [num_nodes, d] f32 storage with O(d) gather/scatter per row.
+//! The trainer resets it at epoch boundaries (S_0 <- 0, Algorithm 1) and
+//! snapshots it between the train and val/test phases so evaluation
+//! continues from the trained state without contaminating it.
+
+/// Memory matrix + last-update timestamps.
+#[derive(Clone, Debug)]
+pub struct MemoryStore {
+    d: usize,
+    data: Vec<f32>,
+    last_update: Vec<f32>,
+}
+
+impl MemoryStore {
+    pub fn new(num_nodes: u32, d: usize) -> Self {
+        MemoryStore {
+            d,
+            data: vec![0.0; num_nodes as usize * d],
+            last_update: vec![0.0; num_nodes as usize],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.last_update.len()
+    }
+
+    /// Zero all state (epoch boundary; Algorithm 1's S_0 <- 0).
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+        self.last_update.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    #[inline]
+    pub fn row(&self, v: u32) -> &[f32] {
+        let base = v as usize * self.d;
+        &self.data[base..base + self.d]
+    }
+
+    /// Copy vertex `v`'s state into `out`.
+    #[inline]
+    pub fn gather_into(&self, v: u32, out: &mut [f32]) {
+        out.copy_from_slice(self.row(v));
+    }
+
+    /// Overwrite vertex `v`'s state.
+    #[inline]
+    pub fn scatter(&mut self, v: u32, values: &[f32], t: f32) {
+        debug_assert_eq!(values.len(), self.d);
+        let base = v as usize * self.d;
+        self.data[base..base + self.d].copy_from_slice(values);
+        self.last_update[v as usize] = t;
+    }
+
+    #[inline]
+    pub fn last_update(&self, v: u32) -> f32 {
+        self.last_update[v as usize]
+    }
+
+    /// Elapsed time since v's last update (clamped at 0 for same-time events).
+    #[inline]
+    pub fn dt(&self, v: u32, now: f32) -> f32 {
+        (now - self.last_update[v as usize]).max(0.0)
+    }
+
+    /// Snapshot for train -> eval handoff.
+    pub fn snapshot(&self) -> MemorySnapshot {
+        MemorySnapshot {
+            data: self.data.clone(),
+            last_update: self.last_update.clone(),
+        }
+    }
+
+    pub fn restore(&mut self, snap: &MemorySnapshot) {
+        self.data.copy_from_slice(&snap.data);
+        self.last_update.copy_from_slice(&snap.last_update);
+    }
+
+    /// Live bytes (Fig. 19 accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4 + self.last_update.len() * 4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MemorySnapshot {
+    data: Vec<f32>,
+    last_update: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut m = MemoryStore::new(4, 3);
+        m.scatter(2, &[1.0, 2.0, 3.0], 5.0);
+        assert_eq!(m.row(2), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.last_update(2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 0.0]);
+        assert_eq!(m.dt(2, 7.5), 2.5);
+        assert_eq!(m.dt(2, 4.0), 0.0); // clamped
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut m = MemoryStore::new(2, 2);
+        m.scatter(0, &[1.0, 1.0], 3.0);
+        m.reset();
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.last_update(0), 0.0);
+    }
+
+    #[test]
+    fn snapshot_restore() {
+        let mut m = MemoryStore::new(2, 2);
+        m.scatter(1, &[4.0, 5.0], 1.0);
+        let snap = m.snapshot();
+        m.scatter(1, &[9.0, 9.0], 2.0);
+        m.restore(&snap);
+        assert_eq!(m.row(1), &[4.0, 5.0]);
+        assert_eq!(m.last_update(1), 1.0);
+    }
+}

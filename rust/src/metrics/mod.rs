@@ -1,0 +1,8 @@
+//! Evaluation metrics: average precision (the paper's headline metric),
+//! ROC-AUC (Table 2), and run timing/throughput accounting.
+
+pub mod ranking;
+pub mod timing;
+
+pub use ranking::{average_precision, roc_auc};
+pub use timing::EpochTimer;

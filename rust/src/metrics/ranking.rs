@@ -1,0 +1,172 @@
+//! Ranking metrics over (score, label) pairs.
+//!
+//! `average_precision` matches sklearn's `average_precision_score`
+//! (step-wise precision-recall integral, ties broken by stable descending
+//! sort); `roc_auc` is the Mann-Whitney U statistic with tie correction.
+
+/// Average precision: sum over positive hits of precision-at-that-rank
+/// weighted by recall increments. Scores descending; `labels[i]` in {0,1}.
+pub fn average_precision(scores: &[f32], labels: &[bool]) -> f64 {
+    debug_assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    if n_pos == 0 || n_pos == labels.len() {
+        return if n_pos == 0 { 0.0 } else { 1.0 };
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let mut tp = 0usize;
+    let mut ap = 0.0f64;
+    for (rank, &i) in order.iter().enumerate() {
+        if labels[i] {
+            tp += 1;
+            ap += tp as f64 / (rank + 1) as f64;
+        }
+    }
+    ap / n_pos as f64
+}
+
+/// ROC-AUC via rank statistics (tie-corrected midranks).
+pub fn roc_auc(scores: &[f32], labels: &[bool]) -> f64 {
+    debug_assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // midranks for ties
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &order[i..=j] {
+            if labels[k] {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// AP for the link-prediction protocol: positive logits vs negative logits.
+pub fn link_ap(pos_logits: &[f32], neg_logits: &[f32]) -> f64 {
+    let scores: Vec<f32> = pos_logits.iter().chain(neg_logits).copied().collect();
+    let labels: Vec<bool> = std::iter::repeat(true)
+        .take(pos_logits.len())
+        .chain(std::iter::repeat(false).take(neg_logits.len()))
+        .collect();
+    average_precision(&scores, &labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn perfect_ranking() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [true, true, false, false];
+        assert_eq!(average_precision(&scores, &labels), 1.0);
+        assert_eq!(roc_auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn inverted_ranking() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [true, true, false, false];
+        assert!(average_precision(&scores, &labels) < 0.6);
+        assert_eq!(roc_auc(&scores, &labels), 0.0);
+    }
+
+    #[test]
+    fn known_ap_value() {
+        // ranks of positives: 1 and 3 -> AP = (1/1 + 2/3) / 2 = 5/6
+        let scores = [0.9, 0.8, 0.7, 0.1];
+        let labels = [true, false, true, false];
+        assert!((average_precision(&scores, &labels) - 5.0 / 6.0).abs() < 1e-12);
+        // AUC: pairs (pos > neg): (0.9>0.8, 0.9>0.1, 0.7>0.1) of 4 pairs
+        assert!((roc_auc(&scores, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_get_midrank_auc() {
+        let scores = [0.5, 0.5];
+        let labels = [true, false];
+        assert_eq!(roc_auc(&scores, &labels), 0.5);
+    }
+
+    #[test]
+    fn degenerate_labels() {
+        assert_eq!(average_precision(&[0.5], &[true]), 1.0);
+        assert_eq!(average_precision(&[0.5], &[false]), 0.0);
+        assert_eq!(roc_auc(&[0.5, 0.4], &[true, true]), 0.5);
+    }
+
+    #[test]
+    fn random_scores_near_half() {
+        let mut rng = Pcg32::new(1);
+        let n = 20_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.below(2) == 0).collect();
+        let auc = roc_auc(&scores, &labels);
+        assert!((auc - 0.5).abs() < 0.02, "{auc}");
+        let ap = average_precision(&scores, &labels);
+        let base = labels.iter().filter(|&&l| l).count() as f64 / n as f64;
+        assert!((ap - base).abs() < 0.03, "ap {ap} base {base}");
+    }
+
+    #[test]
+    fn property_auc_matches_naive_pair_count() {
+        prop::check_msg(
+            "auc == pair statistic",
+            13,
+            100,
+            |rng: &mut Pcg32| {
+                let n = 2 + rng.below(30) as usize;
+                let scores: Vec<f32> = (0..n).map(|_| (rng.below(8) as f32) / 8.0).collect();
+                let labels: Vec<bool> = (0..n).map(|_| rng.below(2) == 0).collect();
+                (scores, labels)
+            },
+            |(scores, labels)| {
+                let n_pos = labels.iter().filter(|&&l| l).count();
+                let n_neg = labels.len() - n_pos;
+                if n_pos == 0 || n_neg == 0 {
+                    return Ok(());
+                }
+                let mut wins = 0.0f64;
+                for i in 0..scores.len() {
+                    for j in 0..scores.len() {
+                        if labels[i] && !labels[j] {
+                            if scores[i] > scores[j] {
+                                wins += 1.0;
+                            } else if scores[i] == scores[j] {
+                                wins += 0.5;
+                            }
+                        }
+                    }
+                }
+                let naive = wins / (n_pos as f64 * n_neg as f64);
+                let fast = roc_auc(scores, labels);
+                if (fast - naive).abs() > 1e-9 {
+                    return Err(format!("fast {fast} != naive {naive}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn link_ap_concat_order() {
+        let ap = link_ap(&[2.0, 1.5], &[0.5, 0.1]);
+        assert_eq!(ap, 1.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Wall-clock accounting for epochs and phases (assembly vs PJRT dispatch
+//! vs write-back) — the numbers behind Table 1's speedup column and the
+//! §Perf iteration log.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug, Default)]
+pub struct EpochTimer {
+    pub assemble: Duration,
+    pub execute: Duration,
+    pub writeback: Duration,
+    pub other: Duration,
+    epoch_start: Option<Instant>,
+    pub total: Duration,
+    pub steps: usize,
+}
+
+impl EpochTimer {
+    pub fn start_epoch(&mut self) {
+        *self = EpochTimer::default();
+        self.epoch_start = Some(Instant::now());
+    }
+
+    pub fn finish_epoch(&mut self) {
+        if let Some(t0) = self.epoch_start.take() {
+            self.total = t0.elapsed();
+            let tracked = self.assemble + self.execute + self.writeback;
+            self.other = self.total.saturating_sub(tracked);
+        }
+    }
+
+    pub fn time<T>(bucket: &mut Duration, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *bucket += t0.elapsed();
+        out
+    }
+
+    pub fn events_per_sec(&self, events: usize) -> f64 {
+        if self.total.is_zero() {
+            return 0.0;
+        }
+        events as f64 / self.total.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "total {:.3}s (assemble {:.3}s | execute {:.3}s | writeback {:.3}s | other {:.3}s) over {} steps",
+            self.total.as_secs_f64(),
+            self.assemble.as_secs_f64(),
+            self.execute.as_secs_f64(),
+            self.writeback.as_secs_f64(),
+            self.other.as_secs_f64(),
+            self.steps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_accumulate() {
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        EpochTimer::time(&mut t.execute, || std::thread::sleep(Duration::from_millis(5)));
+        t.steps = 1;
+        t.finish_epoch();
+        assert!(t.execute >= Duration::from_millis(5));
+        assert!(t.total >= t.execute);
+        assert!(t.events_per_sec(100) > 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Host-side model state: parameter initialization from the manifest's
+//! init specs and the device-resident parameter/optimizer buffers.
+
+pub mod params;
+
+pub use params::ModelState;

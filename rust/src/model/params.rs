@@ -1,0 +1,151 @@
+//! Parameter initialization + step-to-step state threading.
+//!
+//! The manifest (produced by python/compile/aot.py) declares every
+//! parameter's shape and init scheme; rust initializes with its own seeded
+//! RNG. Parameters and Adam moments are kept as XLA literals that thread
+//! from one train step's outputs into the next step's inputs — the PJRT
+//! CPU client returns tupled results, so this host residency is the
+//! canonical path (see runtime::engine module docs).
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::engine::{fetch_f32, lit_f32};
+use crate::runtime::{Engine, InitSpec, ParamSpec};
+use crate::util::rng::Pcg32;
+
+/// Parameters + Adam state for one model, as ready-to-execute literals.
+pub struct ModelState {
+    pub names: Vec<String>,
+    pub params: Vec<Literal>,
+    pub adam_m: Vec<Literal>,
+    pub adam_v: Vec<Literal>,
+    /// Adam step counter (bias-correction input `step_t`).
+    pub step: u64,
+    shapes: Vec<Vec<usize>>,
+}
+
+/// Initialize one parameter host-side per its init spec.
+pub fn init_host(spec: &ParamSpec, rng: &mut Pcg32) -> Vec<f32> {
+    match &spec.init {
+        InitSpec::Zeros => vec![0.0; spec.elems()],
+        InitSpec::Const(values) => {
+            assert_eq!(values.len(), spec.elems(), "const init size mismatch");
+            values.clone()
+        }
+        InitSpec::GlorotUniform { fan_in, fan_out } => {
+            let limit = (6.0 / (*fan_in as f32 + *fan_out as f32)).sqrt();
+            (0..spec.elems())
+                .map(|_| rng.range_f32(-limit, limit))
+                .collect()
+        }
+    }
+}
+
+impl ModelState {
+    /// Initialize all parameters + zeroed Adam moments for `model`
+    /// ("tgn" | "jodie" | "apan" | "clf").
+    pub fn init(engine: &Engine, model: &str, seed: u64) -> Result<ModelState> {
+        let specs = engine.manifest().param_specs(model)?.to_vec();
+        let mut rng = Pcg32::new(seed ^ 0x9A7A);
+        let mut names = Vec::new();
+        let mut params = Vec::new();
+        let mut adam_m = Vec::new();
+        let mut adam_v = Vec::new();
+        let mut shapes = Vec::new();
+        for spec in &specs {
+            let host = init_host(spec, &mut rng);
+            params.push(lit_f32(&host, &spec.shape)?);
+            let zeros = vec![0.0f32; spec.elems()];
+            adam_m.push(lit_f32(&zeros, &spec.shape)?);
+            adam_v.push(lit_f32(&zeros, &spec.shape)?);
+            names.push(spec.name.clone());
+            shapes.push(spec.shape.clone());
+        }
+        Ok(ModelState {
+            names,
+            params,
+            adam_m,
+            adam_v,
+            step: 0,
+            shapes,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Consume a train step's leading output literals as the new state
+    /// (ABI: [params..., m..., v..., step outputs...]). After the call,
+    /// `outputs` holds only the step outputs.
+    pub fn absorb_outputs(&mut self, outputs: &mut Vec<Literal>) {
+        let n = self.params.len();
+        debug_assert!(outputs.len() >= 3 * n);
+        let mut rest = outputs.split_off(3 * n);
+        let mut v = outputs.split_off(2 * n);
+        let mut m = outputs.split_off(n);
+        std::mem::swap(&mut self.params, outputs);
+        std::mem::swap(&mut self.adam_m, &mut m);
+        std::mem::swap(&mut self.adam_v, &mut v);
+        std::mem::swap(outputs, &mut rest);
+        self.step += 1;
+    }
+
+    /// Download one parameter (diagnostics; e.g. reading learned gamma).
+    pub fn fetch(&self, name: &str) -> Result<Vec<f32>> {
+        let idx = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow::anyhow!("no param '{name}'"))?;
+        let elems: usize = self.shapes[idx].iter().product();
+        let mut out = vec![0.0f32; elems];
+        fetch_f32(&self.params[idx], &mut out)?;
+        Ok(out)
+    }
+
+    /// The learned PRES fusion weight gamma = sigmoid(gamma_raw) (Eq. 8).
+    pub fn gamma(&self) -> Result<f32> {
+        let raw = self.fetch("gamma_raw")?;
+        Ok(1.0 / (1.0 + (-raw[0]).exp()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::InitSpec;
+
+    #[test]
+    fn glorot_respects_limit_and_seed() {
+        let spec = ParamSpec {
+            name: "w".into(),
+            shape: vec![32, 16],
+            init: InitSpec::GlorotUniform { fan_in: 32, fan_out: 16 },
+        };
+        let a = init_host(&spec, &mut Pcg32::new(1));
+        let b = init_host(&spec, &mut Pcg32::new(1));
+        assert_eq!(a, b);
+        let limit = (6.0f32 / 48.0).sqrt();
+        assert!(a.iter().all(|x| x.abs() <= limit));
+        // not degenerate
+        assert!(a.iter().any(|x| x.abs() > limit * 0.5));
+    }
+
+    #[test]
+    fn zeros_and_const() {
+        let z = ParamSpec { name: "b".into(), shape: vec![4], init: InitSpec::Zeros };
+        assert_eq!(init_host(&z, &mut Pcg32::new(0)), vec![0.0; 4]);
+        let c = ParamSpec {
+            name: "c".into(),
+            shape: vec![2],
+            init: InitSpec::Const(vec![1.5, -2.0]),
+        };
+        assert_eq!(init_host(&c, &mut Pcg32::new(0)), vec![1.5, -2.0]);
+    }
+}

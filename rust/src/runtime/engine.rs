@@ -1,0 +1,224 @@
+//! PJRT client wrapper: HLO-text loading, compile caching, typed execution.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Result handling
+//!
+//! The bundled PJRT CPU client executes with `untuple_result = false`, so a
+//! multi-output step comes back as ONE tuple buffer. `Step::run` therefore
+//! syncs it to a host literal and decomposes it — parameters round-trip
+//! through the host every step by necessity. The engine keeps this cheap:
+//! inputs are built with `Literal::create_from_shape_and_untyped_data`
+//! straight from the assembler's reused host buffers (no intermediate
+//! copies), and the decomposed output literals are *moved* into the next
+//! step's input slots. Measured cost is ~0.2 ms per step at b = 200 vs
+//! ~10 ms of step compute (EXPERIMENTS.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Process-wide runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Step>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory (needs manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile (cached) the step for (model, batch, kind).
+    pub fn step(&self, model: &str, batch: usize, kind: &str) -> Result<Rc<Step>> {
+        let spec = self.manifest.artifact(model, batch, kind)?.clone();
+        if let Some(step) = self.cache.borrow().get(&spec.name) {
+            return Ok(step.clone());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {}", spec.name))?;
+        let step = Rc::new(Step {
+            spec,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(step.spec.name.clone(), step.clone());
+        Ok(step)
+    }
+
+    /// Number of executables compiled so far (perf accounting).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ----------------------------------------------------------- literal helpers
+
+/// Build an f32 literal directly from host data (single copy).
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal directly from host data.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+pub fn lit_scalar(value: f32) -> Result<Literal> {
+    lit_f32(&[value], &[])
+}
+
+/// Copy a literal's f32 payload into `out`.
+pub fn fetch_f32(lit: &Literal, out: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to(out)?;
+    Ok(())
+}
+
+pub fn fetch_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Build a literal for `spec` from the matching host slice.
+pub fn lit_for(spec: &TensorSpec, f32s: &[f32], i32s: &[i32]) -> Result<Literal> {
+    match spec.dtype {
+        DType::F32 => {
+            check_len(spec, f32s.len())?;
+            lit_f32(f32s, &spec.shape)
+        }
+        DType::I32 => {
+            check_len(spec, i32s.len())?;
+            lit_i32(i32s, &spec.shape)
+        }
+    }
+}
+
+/// Validate that a host slice matches a tensor spec.
+pub fn check_len(spec: &TensorSpec, len: usize) -> Result<()> {
+    if spec.elems() != len {
+        bail!(
+            "tensor '{}': host length {len} != spec {:?} ({} elems)",
+            spec.name,
+            spec.shape,
+            spec.elems()
+        );
+    }
+    Ok(())
+}
+
+/// One compiled executable + its ABI.
+pub struct Step {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+    client: PjRtClient,
+}
+
+impl Step {
+    /// Execute with host literals (owned or borrowed); returns one literal
+    /// per manifest output (the PJRT tuple result is synced and decomposed —
+    /// see module docs).
+    ///
+    /// Inputs are staged to device buffers here and executed via
+    /// `execute_b` so the rust `PjRtBuffer` wrappers free them on drop.
+    /// The crate's literal-based `execute` leaks every input device buffer
+    /// (the C shim `release()`s them and never frees) — at ~3 MB/step that
+    /// OOM-killed long sweeps before this workaround.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "step {}: got {} args, ABI expects {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let buffers: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit.borrow()))
+            .collect::<std::result::Result<_, _>>()?;
+        let mut results = self.exe.execute_b(&buffers)?;
+        let replica = results
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("no replica outputs"))?;
+        let outputs = if replica.len() == 1 && self.spec.outputs.len() > 1 {
+            let mut lit = replica[0].to_literal_sync()?;
+            lit.decompose_tuple()?
+        } else {
+            replica
+                .iter()
+                .map(|b| Ok(b.to_literal_sync()?))
+                .collect::<Result<Vec<_>>>()?
+        };
+        // single-output artifacts still arrive as a 1-tuple (return_tuple=True)
+        let outputs = if outputs.len() == 1 && self.spec.outputs.len() == 1 {
+            let mut lit = outputs;
+            match lit[0].shape()? {
+                xla::Shape::Tuple(_) => lit.remove(0).decompose_tuple()?,
+                _ => lit,
+            }
+        } else {
+            outputs
+        };
+        if outputs.len() != self.spec.outputs.len() {
+            bail!(
+                "step {}: output arity {} != manifest {}",
+                self.spec.name,
+                outputs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outputs)
+    }
+
+    pub fn input_spec(&self, name: &str) -> Result<&TensorSpec> {
+        Ok(&self.spec.inputs[self.spec.input_index(name)?])
+    }
+
+    pub fn output_spec(&self, name: &str) -> Result<&TensorSpec> {
+        Ok(&self.spec.outputs[self.spec.output_index(name)?])
+    }
+}

@@ -1,0 +1,276 @@
+//! artifacts/manifest.json: the ABI contract between python/compile (which
+//! lowered the steps) and this crate (which packs positional inputs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j.get("shape")?.as_shape()?,
+            dtype: match j.get("dtype")?.as_str()? {
+                "f32" => DType::F32,
+                "i32" => DType::I32,
+                other => bail!("unsupported dtype '{other}'"),
+            },
+        })
+    }
+}
+
+/// Parameter initialization schemes (mirrors model.py's spec kinds).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Const(Vec<f32>),
+    GlorotUniform { fan_in: usize, fan_out: usize },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitSpec,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<ParamSpec> {
+        let init = j.get("init")?;
+        let kind = init.get("kind")?.as_str()?;
+        let init = match kind {
+            "zeros" => InitSpec::Zeros,
+            "const" => InitSpec::Const(
+                init.get("values")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f32())
+                    .collect::<Result<_>>()?,
+            ),
+            "glorot_uniform" => InitSpec::GlorotUniform {
+                fan_in: init.get("fan_in")?.as_usize()?,
+                fan_out: init.get("fan_out")?.as_usize()?,
+            },
+            other => bail!("unsupported init kind '{other}'"),
+        };
+        Ok(ParamSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j.get("shape")?.as_shape()?,
+            init,
+        })
+    }
+}
+
+/// One compiled step: (model, batch, kind) -> HLO file + positional ABI.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub kind: String,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input '{name}'", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output '{name}'", self.name))
+    }
+}
+
+/// Model dimension conventions (DESIGN.md §3), read from the manifest so
+/// rust and python can never drift apart.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub d_mem: usize,
+    pub d_msg: usize,
+    pub d_edge: usize,
+    pub d_time: usize,
+    pub k_nbr: usize,
+    pub heads: usize,
+    pub d_emb: usize,
+    pub clf_batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: Dims,
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    pub clf_params: Vec<ParamSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts`?)")?;
+        let d = j.get("dims")?;
+        let dims = Dims {
+            d_mem: d.get("d_mem")?.as_usize()?,
+            d_msg: d.get("d_msg")?.as_usize()?,
+            d_edge: d.get("d_edge")?.as_usize()?,
+            d_time: d.get("d_time")?.as_usize()?,
+            k_nbr: d.get("k_nbr")?.as_usize()?,
+            heads: d.get("heads")?.as_usize()?,
+            d_emb: d.get("d_emb")?.as_usize()?,
+            clf_batch: d.get("clf_batch")?.as_usize()?,
+        };
+        let mut params = BTreeMap::new();
+        for (model, specs) in j.get("params")?.as_obj()? {
+            let list: Vec<ParamSpec> = specs
+                .as_arr()?
+                .iter()
+                .map(ParamSpec::from_json)
+                .collect::<Result<_>>()?;
+            params.insert(model.clone(), list);
+        }
+        let clf_params = j
+            .get("clf_params")?
+            .as_arr()?
+            .iter()
+            .map(ParamSpec::from_json)
+            .collect::<Result<_>>()?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                file: a.get("file")?.as_str()?.to_string(),
+                model: a.get("model")?.as_str()?.to_string(),
+                kind: a.get("kind")?.as_str()?.to_string(),
+                batch: a.get("batch")?.as_usize()?,
+                inputs: a
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dims,
+            params,
+            clf_params,
+            artifacts,
+        })
+    }
+
+    /// Find the artifact for (model, batch, kind).
+    pub fn artifact(&self, model: &str, batch: usize, kind: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.batch == batch && a.kind == kind)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for model={model} batch={batch} kind={kind}; \
+                     compiled batch sizes: {:?}",
+                    self.batches_for(model)
+                )
+            })
+    }
+
+    /// Compiled batch sizes available for a model.
+    pub fn batches_for(&self, model: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == "train")
+            .map(|a| a.batch)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    pub fn param_specs(&self, model: &str) -> Result<&[ParamSpec]> {
+        if model == "clf" {
+            return Ok(&self.clf_params);
+        }
+        self.params
+            .get(model)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("no param specs for model '{model}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root; `make artifacts` must have run
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&manifest_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.dims.d_mem, 64);
+        assert!(m.params.contains_key("tgn"));
+        assert!(!m.clf_params.is_empty());
+        let a = m.artifact("tgn", 100, "train").unwrap();
+        assert_eq!(a.inputs[0].name, "time_omega");
+        // train outputs start with updated params, in spec order
+        assert_eq!(a.outputs[0].name, "time_omega");
+        assert!(m.batches_for("tgn").contains(&200));
+    }
+
+    #[test]
+    fn abi_positions_are_stable() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let a = m.artifact("jodie", 100, "eval").unwrap();
+        let n_params = m.param_specs("jodie").unwrap().len();
+        // eval ABI: params then data; first data input is u_self_mem
+        assert_eq!(a.inputs[n_params].name, "u_self_mem");
+        assert_eq!(a.output_index("pos_logit").unwrap() + 1, a.output_index("neg_logit").unwrap());
+    }
+
+    #[test]
+    fn missing_artifact_is_informative() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let err = m.artifact("tgn", 12345, "train").unwrap_err().to_string();
+        assert!(err.contains("compiled batch sizes"));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `make artifacts`, compiles them once per process on the CPU PJRT
+//! client, and exposes a typed step interface to the trainer.
+//!
+//! Performance notes (EXPERIMENTS.md §Perf): parameters and optimizer state
+//! stay resident as device buffers across steps — only batch data crosses
+//! the host boundary per step, and outputs the trainer doesn't consume are
+//! never copied back.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Step};
+pub use manifest::{ArtifactSpec, DType, Dims, InitSpec, Manifest, ParamSpec, TensorSpec};

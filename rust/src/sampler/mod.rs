@@ -1,0 +1,7 @@
+//! Samplers feeding the embedding module and the self-supervised loss.
+
+pub mod negative;
+pub mod neighbor;
+
+pub use negative::NegativeSampler;
+pub use neighbor::{NeighborEntry, NeighborIndex};

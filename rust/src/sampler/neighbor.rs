@@ -1,0 +1,183 @@
+//! Most-recent-K temporal neighbor index.
+//!
+//! The EMB module attends over each vertex's K most recent interactions
+//! (TGN's "recent" sampling strategy, the TGL default). The index is a
+//! per-vertex ring buffer updated incrementally as batches are committed,
+//! so insertion is O(1) and a batch gather is O(b * K) — this sits on the
+//! hot path and is benched in rust/benches/substrates.rs.
+
+/// One stored neighbor interaction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NeighborEntry {
+    pub nbr: u32,
+    pub t: f32,
+    /// Event index into the log (for edge feature lookup).
+    pub event: u32,
+}
+
+/// Fixed-capacity ring buffer per vertex, newest-first gather order.
+#[derive(Clone, Debug)]
+pub struct NeighborIndex {
+    k: usize,
+    /// [num_nodes * k] flat ring storage.
+    entries: Vec<NeighborEntry>,
+    /// Per-vertex (head, len): head = next write slot.
+    heads: Vec<(u16, u16)>,
+}
+
+impl NeighborIndex {
+    pub fn new(num_nodes: u32, k: usize) -> Self {
+        assert!(k > 0 && k < u16::MAX as usize);
+        NeighborIndex {
+            k,
+            entries: vec![NeighborEntry::default(); num_nodes as usize * k],
+            heads: vec![(0, 0); num_nodes as usize],
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Record an interaction on vertex `v`.
+    #[inline]
+    pub fn insert(&mut self, v: u32, entry: NeighborEntry) {
+        let (head, len) = &mut self.heads[v as usize];
+        let base = v as usize * self.k;
+        self.entries[base + *head as usize] = entry;
+        *head = ((*head as usize + 1) % self.k) as u16;
+        *len = (*len + 1).min(self.k as u16);
+    }
+
+    /// Record both endpoints of an event.
+    #[inline]
+    pub fn insert_event(&mut self, src: u32, dst: u32, t: f32, event: u32) {
+        self.insert(src, NeighborEntry { nbr: dst, t, event });
+        self.insert(dst, NeighborEntry { nbr: src, t, event });
+    }
+
+    /// Gather the up-to-K most recent neighbors of `v`, newest first.
+    /// Returns the number of valid entries written into `out`.
+    #[inline]
+    pub fn gather(&self, v: u32, out: &mut [NeighborEntry]) -> usize {
+        let (head, len) = self.heads[v as usize];
+        let len = len as usize;
+        let base = v as usize * self.k;
+        for (i, slot) in out.iter_mut().enumerate().take(len) {
+            // newest = head-1, going backwards
+            let pos = (head as usize + self.k - 1 - i) % self.k;
+            *slot = self.entries[base + pos];
+        }
+        len
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.heads[v as usize].1 as usize
+    }
+
+    /// Reset all state (epoch boundary).
+    pub fn clear(&mut self) {
+        self.heads.iter_mut().for_each(|h| *h = (0, 0));
+    }
+
+    /// Bytes of live storage (Fig. 19 memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<NeighborEntry>()
+            + self.heads.len() * std::mem::size_of::<(u16, u16)>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn e(nbr: u32, t: f32) -> NeighborEntry {
+        NeighborEntry { nbr, t, event: t as u32 }
+    }
+
+    #[test]
+    fn newest_first_order() {
+        let mut idx = NeighborIndex::new(4, 3);
+        idx.insert(0, e(10, 1.0));
+        idx.insert(0, e(11, 2.0));
+        let mut out = [NeighborEntry::default(); 3];
+        let n = idx.gather(0, &mut out);
+        assert_eq!(n, 2);
+        assert_eq!(out[0], e(11, 2.0));
+        assert_eq!(out[1], e(10, 1.0));
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut idx = NeighborIndex::new(2, 3);
+        for t in 0..5 {
+            idx.insert(1, e(100 + t, t as f32));
+        }
+        let mut out = [NeighborEntry::default(); 3];
+        let n = idx.gather(1, &mut out);
+        assert_eq!(n, 3);
+        assert_eq!(out.iter().map(|x| x.nbr).collect::<Vec<_>>(), vec![104, 103, 102]);
+    }
+
+    #[test]
+    fn insert_event_updates_both_sides() {
+        let mut idx = NeighborIndex::new(4, 2);
+        idx.insert_event(0, 3, 5.0, 7);
+        assert_eq!(idx.degree(0), 1);
+        assert_eq!(idx.degree(3), 1);
+        let mut out = [NeighborEntry::default(); 2];
+        idx.gather(3, &mut out);
+        assert_eq!(out[0].nbr, 0);
+        assert_eq!(out[0].event, 7);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut idx = NeighborIndex::new(2, 2);
+        idx.insert(0, e(1, 1.0));
+        idx.clear();
+        assert_eq!(idx.degree(0), 0);
+    }
+
+    #[test]
+    fn property_matches_naive_reference() {
+        // ring buffer == "keep last K of an append-only list"
+        prop::check_msg(
+            "neighbor-ring vs naive",
+            42,
+            200,
+            |rng| {
+                let k = 1 + rng.below(6) as usize;
+                let n_ops = rng.below(40) as usize;
+                let ops: Vec<(u32, u32, u32)> = (0..n_ops)
+                    .map(|i| (rng.below(5), rng.below(100), i as u32))
+                    .collect();
+                (k, ops)
+            },
+            |(k, ops)| {
+                let mut idx = NeighborIndex::new(5, *k);
+                let mut naive: Vec<Vec<NeighborEntry>> = vec![Vec::new(); 5];
+                for &(v, nbr, i) in ops {
+                    let entry = NeighborEntry { nbr, t: i as f32, event: i };
+                    idx.insert(v, entry);
+                    naive[v as usize].push(entry);
+                }
+                for v in 0..5u32 {
+                    let mut out = vec![NeighborEntry::default(); *k];
+                    let n = idx.gather(v, &mut out);
+                    let expect: Vec<NeighborEntry> = naive[v as usize]
+                        .iter()
+                        .rev()
+                        .take(*k)
+                        .copied()
+                        .collect();
+                    if n != expect.len() || out[..n] != expect[..] {
+                        return Err(format!("v={v}: got {:?} want {:?}", &out[..n], expect));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

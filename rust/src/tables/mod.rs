@@ -1,0 +1,206 @@
+//! Table harnesses: regenerate Tables 1-3 of the paper on the synthetic
+//! testbed.
+//!
+//! ```text
+//!     pres-train table <1|2|3|all> [--quick] [--trials N] [--epochs N]
+//! ```
+//!
+//! Table 1: link-prediction AP + training speedup from PRES's 4x larger
+//!          temporal batches, per model x dataset.
+//! Table 2: dynamic node-classification ROC-AUC w/wo PRES.
+//! Table 3: dataset statistics.
+
+use anyhow::{bail, Result};
+
+use crate::datagen;
+use crate::figures::common::{write_csv, Lab};
+use crate::util::cli::Args;
+use crate::util::stats;
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    match which {
+        "1" => table1(&Lab::from_args(args)?, args),
+        "2" => table2(&Lab::from_args(args)?, args),
+        "3" => table3(args),
+        "all" => {
+            table3(args)?;
+            let lab = Lab::from_args(args)?;
+            table1(&lab, args)?;
+            table2(&lab, args)
+        }
+        other => bail!("unknown table '{other}'"),
+    }
+}
+
+/// The datasets included in a sweep (--dataset to restrict; --quick keeps
+/// the two fastest).
+fn datasets(args: &Args, quick_set: &[&'static str]) -> Vec<&'static str> {
+    if let Some(d) = args.get("dataset") {
+        return datagen::profiles()
+            .iter()
+            .map(|p| p.name)
+            .filter(|n| *n == d)
+            .collect();
+    }
+    if args.flag("quick") {
+        quick_set.to_vec()
+    } else {
+        datagen::profiles().iter().map(|p| p.name).collect()
+    }
+}
+
+/// Table 1: AP + speedup. STANDARD trains at the base batch (the largest
+/// size with near-peak accuracy in the small-batch regime); PRES at 4x.
+/// Speedup = STANDARD epoch time / PRES epoch time, the paper's metric.
+fn table1(lab: &Lab, args: &Args) -> Result<()> {
+    println!("\n=== Table 1: AP & speedup, STANDARD(b0) vs PRES(4*b0) ===");
+    let b0 = args.usize_or("base-batch", 50)?;
+    let b1 = 4 * b0;
+    let mut rows = Vec::new();
+    println!(
+        "{:<8} {:<12} {:>16} {:>16} {:>9}",
+        "dataset", "model", "AP (STANDARD)", "AP (PRES 4x)", "speedup"
+    );
+    for ds in datasets(args, &["wiki", "mooc"]) {
+        for model in ["tgn", "jodie", "apan"] {
+            let cfg_std = lab.config(ds, model, b0, false);
+            let cfg_pres = lab.config(ds, model, b1, true);
+            let mut ap_std = Vec::new();
+            let mut ap_pres = Vec::new();
+            let mut t_std = Vec::new();
+            let mut t_pres = Vec::new();
+            for t in 1..=lab.trials as u64 {
+                let (ap, secs) = lab.final_val_ap(&cfg_std, t)?;
+                ap_std.push(ap);
+                t_std.push(secs);
+                let (ap, secs) = lab.final_val_ap(&cfg_pres, t)?;
+                ap_pres.push(ap);
+                t_pres.push(secs);
+            }
+            let speedup = stats::mean(&t_std) / stats::mean(&t_pres).max(1e-9);
+            println!(
+                "{:<8} {:<12} {:>16} {:>16} {:>8.2}x",
+                ds,
+                format!("{model}/-PRES"),
+                stats::fmt_mean_std(&ap_std, 3),
+                stats::fmt_mean_std(&ap_pres, 3),
+                speedup
+            );
+            rows.push(format!(
+                "{ds},{model},{:.4},{:.4},{:.4},{:.4},{:.3},{:.3},{speedup:.2}",
+                stats::mean(&ap_std),
+                stats::std_dev(&ap_std),
+                stats::mean(&ap_pres),
+                stats::std_dev(&ap_pres),
+                stats::mean(&t_std),
+                stats::mean(&t_pres),
+            ));
+        }
+    }
+    write_csv(
+        "table1_ap_speedup",
+        "dataset,model,ap_std,ap_std_sd,ap_pres,ap_pres_sd,std_epoch_s,pres_epoch_s,speedup",
+        &rows,
+    )
+}
+
+/// Table 2: node classification ROC-AUC w/wo PRES (REDDIT/WIKI/MOOC in the
+/// paper; same trio here).
+fn table2(lab: &Lab, args: &Args) -> Result<()> {
+    println!("\n=== Table 2: node classification ROC-AUC ===");
+    let b0 = args.usize_or("base-batch", 50)?;
+    let mut rows = Vec::new();
+    println!(
+        "{:<8} {:<12} {:>14} {:>14}",
+        "dataset", "model", "AUC (STD)", "AUC (PRES)"
+    );
+    let all = datasets(args, &["wiki", "mooc"]);
+    let trio: Vec<&str> = all
+        .into_iter()
+        .filter(|d| ["reddit", "wiki", "mooc"].contains(d))
+        .collect();
+    for ds in trio {
+        for model in ["tgn", "jodie", "apan"] {
+            let mut auc = [Vec::new(), Vec::new()];
+            for (i, pres) in [false, true].into_iter().enumerate() {
+                let mut cfg = lab.config(ds, model, if pres { 4 * b0 } else { b0 }, pres);
+                cfg.seed = 0;
+                for t in 1..=lab.trials as u64 {
+                    let mut run_cfg = cfg.clone();
+                    run_cfg.seed = t * 1000;
+                    let ds_rc = lab.dataset(&cfg)?;
+                    let mut tr = crate::training::Trainer::with_shared(
+                        &run_cfg,
+                        lab.engine.clone(),
+                        ds_rc,
+                    )?;
+                    for e in 0..cfg.epochs {
+                        tr.train_epoch(e)?;
+                    }
+                    let (_, emb_rows) = tr.eval_test(true)?;
+                    let a = crate::eval::nodeclf::train_and_auc(&lab.engine, &emb_rows, t)?;
+                    if a.is_finite() {
+                        auc[i].push(a);
+                    }
+                }
+            }
+            println!(
+                "{:<8} {:<12} {:>14} {:>14}",
+                ds,
+                format!("{model}/-PRES"),
+                stats::fmt_mean_std(&auc[0], 3),
+                stats::fmt_mean_std(&auc[1], 3)
+            );
+            rows.push(format!(
+                "{ds},{model},{:.4},{:.4},{:.4},{:.4}",
+                stats::mean(&auc[0]),
+                stats::std_dev(&auc[0]),
+                stats::mean(&auc[1]),
+                stats::std_dev(&auc[1])
+            ));
+        }
+    }
+    write_csv(
+        "table2_nodeclf_auc",
+        "dataset,model,auc_std,auc_std_sd,auc_pres,auc_pres_sd",
+        &rows,
+    )
+}
+
+/// Table 3: dataset statistics (generator outputs vs the profiles).
+fn table3(args: &Args) -> Result<()> {
+    println!("\n=== Table 3: dataset statistics ===");
+    let seed = args.u64_or("seed", 0)?;
+    let mut rows = Vec::new();
+    println!(
+        "{:<8} {:>9} {:>9} {:>8} {:>9} {:>9}",
+        "dataset", "vertices", "events", "efeat", "repeat%", "labeled"
+    );
+    for p in datagen::profiles() {
+        let ds = datagen::generate(&p, seed);
+        let s = ds.stats();
+        println!(
+            "{:<8} {:>9} {:>9} {:>8} {:>8.1}% {:>9}",
+            s.name,
+            s.num_nodes,
+            s.num_events,
+            s.d_edge,
+            s.repeat_ratio * 100.0,
+            s.labeled_events
+        );
+        rows.push(format!(
+            "{},{},{},{},{:.4},{}",
+            s.name, s.num_nodes, s.num_events, s.d_edge, s.repeat_ratio, s.labeled_events
+        ));
+    }
+    write_csv(
+        "table3_datasets",
+        "dataset,vertices,events,edge_feat_dim,repeat_ratio,labeled_events",
+        &rows,
+    )
+}

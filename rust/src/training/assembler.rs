@@ -1,0 +1,504 @@
+//! Batch assembly: gathers memory rows, neighbor tensors, PRES predictions
+//! and lag-one match indices into reusable host buffers, then packs them as
+//! step inputs in manifest ABI order.
+//!
+//! This is the L3 hot path: every buffer is allocated once per trainer and
+//! reused across steps (§Perf: zero per-step allocation in the assembler).
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::batching::BatchPlan;
+use crate::graph::EventLog;
+use crate::memory::gmm::Role;
+use crate::memory::{GmmTrackers, Mailbox, MemoryStore};
+use crate::runtime::engine::{lit_f32, lit_i32};
+use crate::runtime::{ArtifactSpec, Dims, TensorSpec};
+use crate::sampler::{NeighborEntry, NeighborIndex};
+
+/// Reusable host-side staging for one step's data inputs.
+pub struct HostBatch {
+    pub b: usize,
+    pub model: String,
+    dims: Dims,
+    // update rows (U = 2b)
+    pub u_self_mem: Vec<f32>,
+    pub u_other_mem: Vec<f32>,
+    pub u_efeat: Vec<f32>,
+    pub u_dt: Vec<f32>,
+    pub u_pred: Vec<f32>,
+    pub u_wmask: Vec<f32>,
+    pub u_cmask: Vec<f32>,
+    // current batch
+    pub c_mem: [Vec<f32>; 3],   // src, dst, neg
+    pub c_match: [Vec<i32>; 3],
+    pub c_dt: [Vec<f32>; 3],
+    // neighbors (tgn: mem+efeat; apan: mail) per role
+    pub n_key: [Vec<f32>; 3],   // tgn: n_mem [b*K*d]; apan: n_mail [b*K*dm]
+    pub n_efeat: [Vec<f32>; 3], // tgn only
+    pub n_dt: [Vec<f32>; 3],
+    pub n_mask: [Vec<f32>; 3],
+    // scalars
+    pub beta: f32,
+    pub pres_on: f32,
+    // scratch
+    nbr_scratch: Vec<NeighborEntry>,
+}
+
+const ROLES: [&str; 3] = ["src", "dst", "neg"];
+
+impl HostBatch {
+    pub fn new(model: &str, b: usize, dims: Dims) -> HostBatch {
+        let u = 2 * b;
+        let (d, de, dm, k) = (dims.d_mem, dims.d_edge, dims.d_msg, dims.k_nbr);
+        let key_w = if model == "apan" { dm } else { d };
+        HostBatch {
+            b,
+            model: model.to_string(),
+            dims,
+            u_self_mem: vec![0.0; u * d],
+            u_other_mem: vec![0.0; u * d],
+            u_efeat: vec![0.0; u * de],
+            u_dt: vec![0.0; u],
+            u_pred: vec![0.0; u * d],
+            u_wmask: vec![0.0; u],
+            u_cmask: vec![0.0; u],
+            c_mem: std::array::from_fn(|_| vec![0.0; b * d]),
+            c_match: std::array::from_fn(|_| vec![-1; b]),
+            c_dt: std::array::from_fn(|_| vec![0.0; b]),
+            n_key: std::array::from_fn(|_| vec![0.0; b * k * key_w]),
+            n_efeat: std::array::from_fn(|_| vec![0.0; b * k * de]),
+            n_dt: std::array::from_fn(|_| vec![0.0; b * k]),
+            n_mask: std::array::from_fn(|_| vec![0.0; b * k]),
+            beta: 0.0,
+            pres_on: 0.0,
+            nbr_scratch: vec![NeighborEntry::default(); k],
+        }
+    }
+
+    /// Produce the literal for one manifest data input by name.
+    pub fn literal_for(&self, spec: &TensorSpec) -> Result<Literal> {
+        let name = spec.name.as_str();
+        if let Some(role_field) = name.strip_prefix("n_") {
+            // n_{role}_{field}
+            let (role, field) = role_field
+                .split_once('_')
+                .ok_or_else(|| anyhow::anyhow!("bad neighbor input '{name}'"))?;
+            let ri = ROLES
+                .iter()
+                .position(|r| *r == role)
+                .ok_or_else(|| anyhow::anyhow!("bad role in '{name}'"))?;
+            let data = match field {
+                "mem" | "mail" => &self.n_key[ri],
+                "efeat" => &self.n_efeat[ri],
+                "dt" => &self.n_dt[ri],
+                "mask" => &self.n_mask[ri],
+                _ => bail!("unknown neighbor field '{field}'"),
+            };
+            return lit_f32(data, &spec.shape);
+        }
+        if let Some(rest) = name.strip_prefix("c_") {
+            let (role, field) = rest
+                .split_once('_')
+                .ok_or_else(|| anyhow::anyhow!("bad current input '{name}'"))?;
+            let ri = ROLES
+                .iter()
+                .position(|r| *r == role)
+                .ok_or_else(|| anyhow::anyhow!("bad role in '{name}'"))?;
+            return match field {
+                "mem" => lit_f32(&self.c_mem[ri], &spec.shape),
+                "match" => lit_i32(&self.c_match[ri], &spec.shape),
+                "dt" => lit_f32(&self.c_dt[ri], &spec.shape),
+                _ => bail!("unknown current field '{field}'"),
+            };
+        }
+        match name {
+            "u_self_mem" => lit_f32(&self.u_self_mem, &spec.shape),
+            "u_other_mem" => lit_f32(&self.u_other_mem, &spec.shape),
+            "u_efeat" => lit_f32(&self.u_efeat, &spec.shape),
+            "u_dt" => lit_f32(&self.u_dt, &spec.shape),
+            "u_pred" => lit_f32(&self.u_pred, &spec.shape),
+            "u_wmask" => lit_f32(&self.u_wmask, &spec.shape),
+            "u_cmask" => lit_f32(&self.u_cmask, &spec.shape),
+            "beta" => lit_f32(&[self.beta], &[]),
+            "pres_on" => lit_f32(&[self.pres_on], &[]),
+            _ => bail!("unknown data input '{name}'"),
+        }
+    }
+
+    /// Pack all data inputs of `spec` (after `skip` leading param/opt slots,
+    /// before any trailing scalars the caller appends) in ABI order.
+    pub fn pack(&self, spec: &ArtifactSpec, skip: usize, trailing: usize) -> Result<Vec<Literal>> {
+        let end = spec.inputs.len() - trailing;
+        spec.inputs[skip..end]
+            .iter()
+            .map(|t| self.literal_for(t))
+            .collect()
+    }
+}
+
+/// Stateless assembly logic binding the substrates together.
+pub struct Assembler {
+    pub dims: Dims,
+}
+
+impl Assembler {
+    pub fn new(dims: Dims) -> Assembler {
+        Assembler { dims }
+    }
+
+    /// Fill `host` for one iteration: `prev` is the batch whose events
+    /// update memory in-graph; `cur` + `negatives` is the predicted batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill(
+        &self,
+        host: &mut HostBatch,
+        log: &EventLog,
+        prev: &BatchPlan,
+        cur: &BatchPlan,
+        negatives: &[u32],
+        store: &MemoryStore,
+        nbr: &NeighborIndex,
+        mailbox: Option<&Mailbox>,
+        gmm: &GmmTrackers,
+        pres_on: bool,
+        beta: f32,
+    ) {
+        let d = self.dims.d_mem;
+        let de = self.dims.d_edge;
+        let b = host.b;
+        debug_assert_eq!(prev.batch_size(), b);
+        debug_assert_eq!(cur.batch_size(), b);
+        debug_assert_eq!(negatives.len(), b);
+
+        host.pres_on = if pres_on { 1.0 } else { 0.0 };
+        host.beta = beta;
+
+        // ---- update rows from the previous batch
+        for r in 0..prev.rows() {
+            let v = prev.upd_vertex[r];
+            let ev = log.events[prev.upd_event[r] as usize];
+            let other = if r < b { ev.dst } else { ev.src };
+            let dt = store.dt(v, ev.t);
+            host.u_self_mem[r * d..(r + 1) * d].copy_from_slice(store.row(v));
+            host.u_other_mem[r * d..(r + 1) * d].copy_from_slice(store.row(other));
+            if de > 0 {
+                let feat = log.feat(prev.upd_event[r] as usize);
+                if feat.is_empty() {
+                    host.u_efeat[r * de..(r + 1) * de].fill(0.0);
+                } else {
+                    host.u_efeat[r * de..(r + 1) * de].copy_from_slice(feat);
+                }
+            }
+            host.u_dt[r] = dt;
+            let pred_row = &mut host.u_pred[r * d..(r + 1) * d];
+            if pres_on {
+                let role = if r < b { Role::Src } else { Role::Dst };
+                gmm.predict_into(v, role, store.row(v), dt, pred_row);
+            } else {
+                pred_row.fill(0.0);
+            }
+        }
+        host.u_wmask.copy_from_slice(&prev.wmask);
+        // correct only rows that (a) suffer temporal discontinuity and
+        // (b) have a prediction backed by enough clean observations —
+        // an uninformed prediction would inject noise instead of removing it
+        const MIN_OBS: u32 = 3;
+        for r in 0..prev.rows() {
+            let role = if r < b { Role::Src } else { Role::Dst };
+            host.u_cmask[r] = if prev.collided[r] == 1.0
+                && gmm.count(prev.upd_vertex[r], role) >= MIN_OBS
+            {
+                1.0
+            } else {
+                0.0
+            };
+        }
+
+        // ---- current batch rows
+        for (j, i) in cur.range.clone().enumerate() {
+            let ev = log.events[i];
+            let vertices = [ev.src, ev.dst, negatives[j]];
+            for (ri, &v) in vertices.iter().enumerate() {
+                host.c_mem[ri][j * d..(j + 1) * d].copy_from_slice(store.row(v));
+                // dt vs the vertex's true latest update: if the previous
+                // batch updated it, that event's time is fresher than the
+                // store clock (write-back happens after this call)
+                let last = match prev.last_row_of(v) {
+                    Some(r) => log.events[prev.upd_event[r as usize] as usize]
+                        .t
+                        .max(store.last_update(v)),
+                    None => store.last_update(v),
+                };
+                host.c_dt[ri][j] = (ev.t - last).max(0.0);
+            }
+            // match indices (the in-graph lag-one splice)
+            for (ri, &v) in vertices.iter().enumerate() {
+                host.c_match[ri][j] = prev.last_row_of(v).map_or(-1, |r| r as i32);
+            }
+            // neighbor / mailbox tensors
+            self.fill_context(host, log, store, nbr, mailbox, j, ev.t, &vertices);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fill_context(
+        &self,
+        host: &mut HostBatch,
+        log: &EventLog,
+        store: &MemoryStore,
+        nbr: &NeighborIndex,
+        mailbox: Option<&Mailbox>,
+        j: usize,
+        t_now: f32,
+        vertices: &[u32; 3],
+    ) {
+        let k = self.dims.k_nbr;
+        let d = self.dims.d_mem;
+        let de = self.dims.d_edge;
+        let dm = self.dims.d_msg;
+        match host.model.as_str() {
+            "jodie" => {}
+            "apan" => {
+                let mb = mailbox.expect("apan requires a mailbox");
+                for (ri, &v) in vertices.iter().enumerate() {
+                    let mails = &mut host.n_key[ri][j * k * dm..(j + 1) * k * dm];
+                    let times = &mut host.n_dt[ri][j * k..(j + 1) * k];
+                    let n = mb.gather(v, mails, times);
+                    for slot in 0..k {
+                        host.n_mask[ri][j * k + slot] = (slot < n) as u8 as f32;
+                    }
+                    for time in times.iter_mut().take(n) {
+                        *time = (t_now - *time).max(0.0);
+                    }
+                }
+            }
+            _ => {
+                // tgn: most-recent-K temporal neighbors
+                for (ri, &v) in vertices.iter().enumerate() {
+                    let scratch = &mut host.nbr_scratch;
+                    let n = nbr.gather(v, scratch);
+                    for slot in 0..k {
+                        let base_m = (j * k + slot) * d;
+                        let base_e = (j * k + slot) * de;
+                        if slot < n {
+                            let e = scratch[slot];
+                            host.n_key[ri][base_m..base_m + d]
+                                .copy_from_slice(store.row(e.nbr));
+                            if de > 0 {
+                                let feat = log.feat(e.event as usize);
+                                if feat.is_empty() {
+                                    host.n_efeat[ri][base_e..base_e + de].fill(0.0);
+                                } else {
+                                    host.n_efeat[ri][base_e..base_e + de]
+                                        .copy_from_slice(feat);
+                                }
+                            }
+                            host.n_dt[ri][j * k + slot] = (t_now - e.t).max(0.0);
+                            host.n_mask[ri][j * k + slot] = 1.0;
+                        } else {
+                            host.n_key[ri][base_m..base_m + d].fill(0.0);
+                            if de > 0 {
+                                host.n_efeat[ri][base_e..base_e + de].fill(0.0);
+                            }
+                            host.n_dt[ri][j * k + slot] = 0.0;
+                            host.n_mask[ri][j * k + slot] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Commit a finished step: write corrected states back for the winning
+    /// rows, feed the GMM trackers, register the batch's events in the
+    /// neighbor index, and (APAN) deliver mails.
+    #[allow(clippy::too_many_arguments)]
+    pub fn commit(
+        &self,
+        host: &HostBatch,
+        log: &EventLog,
+        prev: &BatchPlan,
+        u_sbar: &[f32],
+        u_msg: Option<&[f32]>,
+        store: &mut MemoryStore,
+        nbr: &mut NeighborIndex,
+        mailbox: Option<&mut Mailbox>,
+        gmm: &mut GmmTrackers,
+        pres_on: bool,
+    ) {
+        let d = self.dims.d_mem;
+        let b = prev.batch_size();
+        for r in 0..prev.rows() {
+            if prev.wmask[r] != 1.0 {
+                continue;
+            }
+            let v = prev.upd_vertex[r];
+            let t = log.events[prev.upd_event[r] as usize].t;
+            let row = &u_sbar[r * d..(r + 1) * d];
+            if pres_on && prev.collided[r] == 0.0 {
+                // clean transitions only: rows without pending events are
+                // exact per-event updates, the filter's "good measurements";
+                // collided rows are the noisy ones being corrected.
+                let role = if r < b { Role::Src } else { Role::Dst };
+                let s_t1 = &host.u_self_mem[r * d..(r + 1) * d];
+                gmm.observe(v, role, s_t1, row, host.u_dt[r]);
+            }
+            store.scatter(v, row, t);
+        }
+        for (r, i) in prev.range.clone().enumerate() {
+            let ev = log.events[i];
+            nbr.insert_event(ev.src, ev.dst, ev.t, i as u32);
+            let _ = r;
+        }
+        if let (Some(mb), Some(msgs)) = (mailbox, u_msg) {
+            let dm = self.dims.d_msg;
+            for r in 0..prev.rows() {
+                let v = prev.upd_vertex[r];
+                let t = log.events[prev.upd_event[r] as usize].t;
+                mb.deliver(v, &msgs[r * dm..(r + 1) * dm], t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Dataset, Event, NO_LABEL};
+
+    fn dims() -> Dims {
+        Dims {
+            d_mem: 4,
+            d_msg: 4,
+            d_edge: 2,
+            d_time: 2,
+            k_nbr: 3,
+            heads: 1,
+            d_emb: 4,
+            clf_batch: 8,
+        }
+    }
+
+    fn toy_dataset() -> Dataset {
+        let mut log = EventLog::new(8, 4, 2);
+        let evs = [(0u32, 4u32), (1, 5), (0, 5), (2, 6), (1, 4), (3, 7)];
+        for (i, &(s, dst)) in evs.iter().enumerate() {
+            log.push(
+                Event { src: s, dst, t: i as f32 + 1.0, label: NO_LABEL },
+                &[i as f32, -(i as f32)],
+            )
+            .unwrap();
+        }
+        Dataset::with_chrono_split("toy", log)
+    }
+
+    #[test]
+    fn fill_gathers_memory_and_matches() {
+        let ds = toy_dataset();
+        let dims = dims();
+        let mut store = MemoryStore::new(8, dims.d_mem);
+        store.scatter(0, &[1.0, 2.0, 3.0, 4.0], 0.5);
+        let nbr = NeighborIndex::new(8, dims.k_nbr);
+        let gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let prev = BatchPlan::build(&ds.log, 0..2); // events (0,4), (1,5)
+        let cur = BatchPlan::build(&ds.log, 2..4); // events (0,5), (2,6)
+        let asm = Assembler::new(dims);
+        let mut host = HostBatch::new("tgn", 2, dims);
+        asm.fill(
+            &mut host, &ds.log, &prev, &cur, &[6, 7], &store, &nbr, None, &gmm, false, 0.0,
+        );
+        // row 0 = src side of event 0 = vertex 0, whose memory we planted
+        assert_eq!(&host.u_self_mem[0..4], &[1.0, 2.0, 3.0, 4.0]);
+        // u_dt = t_event - last_update = 1.0 - 0.5
+        assert_eq!(host.u_dt[0], 0.5);
+        // current event 2 is (0, 5): src 0 matched to prev row 0, dst 5 to row 3
+        assert_eq!(host.c_match[0][0], 0);
+        assert_eq!(host.c_match[1][0], 3);
+        // negative 6 is not in prev batch
+        assert_eq!(host.c_match[2][0], -1);
+        // std mode: predictions zeroed
+        assert!(host.u_pred.iter().all(|&x| x == 0.0));
+        // edge features flow through
+        assert_eq!(&host.u_efeat[0..2], &[0.0, -0.0]);
+    }
+
+    #[test]
+    fn commit_writes_back_winners_and_indexes_events() {
+        let ds = toy_dataset();
+        let dims = dims();
+        let mut store = MemoryStore::new(8, dims.d_mem);
+        let mut nbr = NeighborIndex::new(8, dims.k_nbr);
+        let mut gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let prev = BatchPlan::build(&ds.log, 0..2);
+        let asm = Assembler::new(dims);
+        let host = HostBatch::new("tgn", 2, dims);
+        let u_sbar: Vec<f32> = (0..prev.rows() * dims.d_mem).map(|x| x as f32).collect();
+        asm.commit(
+            &host, &ds.log, &prev, &u_sbar, None, &mut store, &mut nbr, None, &mut gmm, false,
+        );
+        // all four vertices were winners (no collision in batch 0..2)
+        assert_eq!(store.row(0), &u_sbar[0..4]);
+        assert_eq!(store.last_update(0), 1.0);
+        assert_eq!(store.row(5), &u_sbar[12..16]);
+        // events are now visible as neighbors
+        assert_eq!(nbr.degree(0), 1);
+        assert_eq!(nbr.degree(5), 1);
+    }
+
+    #[test]
+    fn collided_vertex_keeps_only_last_row() {
+        // batch 2..5 contains (0,5), (2,6), (1,4): no collision; use 0..3
+        // instead: (0,4), (1,5), (0,5): vertex 0 rows 0 and 2; vertex 5 rows
+        // 4 and 5
+        let ds = toy_dataset();
+        let dims = dims();
+        let mut store = MemoryStore::new(8, dims.d_mem);
+        let mut nbr = NeighborIndex::new(8, dims.k_nbr);
+        let mut gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let prev = BatchPlan::build(&ds.log, 0..3);
+        let asm = Assembler::new(dims);
+        let host = HostBatch::new("tgn", 3, dims);
+        let u_sbar: Vec<f32> = (0..prev.rows() * dims.d_mem).map(|x| x as f32).collect();
+        asm.commit(
+            &host, &ds.log, &prev, &u_sbar, None, &mut store, &mut nbr, None, &mut gmm, false,
+        );
+        // vertex 0's state comes from row 2 (its last occurrence)
+        let d = dims.d_mem;
+        assert_eq!(store.row(0), &u_sbar[2 * d..3 * d]);
+        // vertex 5 last occurs at dst row 3 + 2 = 5
+        assert_eq!(store.row(5), &u_sbar[5 * d..6 * d]);
+    }
+
+    #[test]
+    fn apan_fills_mail_and_delivers() {
+        let ds = toy_dataset();
+        let dims = dims();
+        let mut store = MemoryStore::new(8, dims.d_mem);
+        let mut nbr = NeighborIndex::new(8, dims.k_nbr);
+        let mut gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let mut mb = Mailbox::new(8, dims.k_nbr, dims.d_msg);
+        let prev = BatchPlan::build(&ds.log, 0..2);
+        let cur = BatchPlan::build(&ds.log, 2..4);
+        let asm = Assembler::new(dims);
+        let mut host = HostBatch::new("apan", 2, dims);
+        // no mail yet -> masks all zero
+        asm.fill(
+            &mut host, &ds.log, &prev, &cur, &[6, 7], &store, &nbr, Some(&mb), &gmm, true, 0.1,
+        );
+        assert!(host.n_mask.iter().all(|m| m.iter().all(|&x| x == 0.0)));
+        // deliver messages via commit, then refill: src of event 2 is vertex
+        // 0, which received mail in batch 0
+        let u_sbar = vec![0.0f32; prev.rows() * dims.d_mem];
+        let u_msg: Vec<f32> = (0..prev.rows() * dims.d_msg).map(|x| x as f32 + 1.0).collect();
+        asm.commit(
+            &host, &ds.log, &prev, &u_sbar, Some(&u_msg), &mut store, &mut nbr,
+            Some(&mut mb), &mut gmm, true,
+        );
+        asm.fill(
+            &mut host, &ds.log, &prev, &cur, &[6, 7], &store, &nbr, Some(&mb), &gmm, true, 0.1,
+        );
+        assert_eq!(host.n_mask[0][0], 1.0); // src role, slot 0
+        assert_eq!(&host.n_key[0][0..4], &[1.0, 2.0, 3.0, 4.0]); // mail row 0
+    }
+}

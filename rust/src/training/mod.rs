@@ -1,0 +1,14 @@
+//! The training orchestrator: Algorithm 1 (STANDARD) / Algorithm 2 (PRES)
+//! from the paper, driving the AOT-compiled step executables.
+//!
+//! One iteration = one PJRT call: the previous temporal batch's events
+//! update (and PRES-correct) the memory of their vertices in-graph, the
+//! current batch is predicted through the lag-one splice, and Adam updates
+//! the parameters — see python/compile/model.py for the fused step and
+//! DESIGN.md §1 for the dataflow diagram.
+
+pub mod assembler;
+pub mod trainer;
+
+pub use assembler::{Assembler, HostBatch};
+pub use trainer::{EpochReport, RunReport, Trainer};

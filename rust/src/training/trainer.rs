@@ -1,0 +1,506 @@
+//! The epoch/batch loop (paper Algorithm 1 & 2) + evaluation.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::batching::{partition, BatchPlan};
+use crate::config::ExperimentConfig;
+use crate::datagen;
+use crate::graph::Dataset;
+use crate::memory::{GmmTrackers, Mailbox, MemoryStore};
+use crate::metrics::ranking::link_ap;
+use crate::metrics::EpochTimer;
+use crate::model::ModelState;
+use crate::runtime::engine::{fetch_f32, fetch_scalar, lit_scalar};
+use crate::runtime::{Engine, Step};
+use crate::sampler::{NegativeSampler, NeighborIndex};
+use crate::training::{Assembler, HostBatch};
+use crate::util::rng::Pcg32;
+
+/// Per-epoch record (drives Fig. 5/14/16/17 and Table 1 timing).
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_bce: f64,
+    pub train_ap: f64,
+    pub coherence: f64,
+    pub val_ap: f64,
+    pub epoch_secs: f64,
+    pub assemble_secs: f64,
+    pub execute_secs: f64,
+    pub writeback_secs: f64,
+    pub events_per_sec: f64,
+    pub gamma: f32,
+}
+
+/// Whole-run summary.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub config: ExperimentConfig,
+    pub epochs: Vec<EpochReport>,
+    pub best_val_ap: f64,
+    pub test_ap: f64,
+    pub test_auc: f64,
+    pub total_train_secs: f64,
+    pub mean_epoch_secs: f64,
+    /// (iteration, train batch AP) samples for statistical-efficiency plots.
+    pub iteration_ap: Vec<(usize, f64)>,
+    /// Coordinator-side live bytes (Fig. 19).
+    pub coordinator_bytes: usize,
+}
+
+/// The training coordinator for one (dataset, model, batch, mode) run.
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub engine: Rc<Engine>,
+    pub dataset: Rc<Dataset>,
+    state: ModelState,
+    store: MemoryStore,
+    nbr: NeighborIndex,
+    mailbox: Option<Mailbox>,
+    gmm: GmmTrackers,
+    assembler: Assembler,
+    host: HostBatch,
+    train_step: Rc<Step>,
+    eval_step: Rc<Step>,
+    plans: Vec<BatchPlan>,
+    neg_sampler: NegativeSampler,
+    rng: Pcg32,
+    // reusable output scratch
+    sbar_scratch: Vec<f32>,
+    msg_scratch: Vec<f32>,
+    logit_scratch: [Vec<f32>; 2],
+    pub iteration_ap: Vec<(usize, f64)>,
+    iterations: usize,
+}
+
+impl Trainer {
+    /// Build everything from a config: dataset (generated deterministically
+    /// from the seed), engine, compiled steps, substrates.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
+        let engine = Rc::new(Engine::new(Path::new(&cfg.artifacts_dir))?);
+        let dataset = Rc::new(Self::make_dataset(cfg)?);
+        Self::with_shared(cfg, engine, dataset)
+    }
+
+    /// Variant sharing an engine + dataset across runs (sweeps, figures).
+    pub fn with_shared(
+        cfg: &ExperimentConfig,
+        engine: Rc<Engine>,
+        dataset: Rc<Dataset>,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        let dims = engine.manifest().dims;
+        let b = cfg.batch_size;
+        let train_step = engine
+            .step(&cfg.model, b, "train")
+            .context("loading train step")?;
+        let eval_step = engine.step(&cfg.model, b, "eval")?;
+        let state = ModelState::init(&engine, &cfg.model, cfg.seed)?;
+        let n_nodes = dataset.log.num_nodes;
+        let mailbox = (cfg.model == "apan").then(|| Mailbox::new(n_nodes, dims.k_nbr, dims.d_msg));
+        // plans are pure functions of (log, b): compute once, reuse across
+        // epochs (cfg.prefetch=false rebuilds per epoch for the ablation)
+        let plans = Self::build_plans(&dataset, b);
+        let neg_sampler = NegativeSampler::new(&dataset.log);
+        let u = 2 * b;
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            state,
+            store: MemoryStore::new(n_nodes, dims.d_mem),
+            nbr: NeighborIndex::new(n_nodes, dims.k_nbr),
+            mailbox,
+            gmm: GmmTrackers::new(n_nodes, dims.d_mem, cfg.anchor_fraction, cfg.seed),
+            assembler: Assembler::new(dims),
+            host: HostBatch::new(&cfg.model, b, dims),
+            train_step,
+            eval_step,
+            plans,
+            neg_sampler,
+            rng: Pcg32::new(cfg.seed ^ 0x7E57),
+            sbar_scratch: vec![0.0; u * dims.d_mem],
+            msg_scratch: vec![0.0; u * dims.d_msg],
+            logit_scratch: [vec![0.0; b], vec![0.0; b]],
+            iteration_ap: Vec::new(),
+            iterations: 0,
+            engine,
+            dataset,
+        })
+    }
+
+    pub fn make_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
+        let mut profile = if cfg.dataset == "tiny" {
+            datagen::tiny_profile()
+        } else {
+            datagen::profile(&cfg.dataset)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?
+        };
+        profile.n_events = ((profile.n_events as f32 * cfg.data_scale) as usize).max(64);
+        Ok(datagen::generate(&profile, cfg.seed))
+    }
+
+    fn build_plans(dataset: &Dataset, b: usize) -> Vec<BatchPlan> {
+        partition(0..dataset.log.len(), b)
+            .into_iter()
+            .map(|r| BatchPlan::build(&dataset.log, r))
+            .collect()
+    }
+
+    /// Plans whose *predicted* batch lies inside the training split.
+    fn train_plan_count(&self) -> usize {
+        self.plans
+            .iter()
+            .filter(|p| p.range.end <= self.dataset.split.train_end)
+            .count()
+    }
+
+    fn reset_epoch_state(&mut self) {
+        self.store.reset();
+        self.nbr.clear();
+        if let Some(mb) = &mut self.mailbox {
+            mb.clear();
+        }
+        self.gmm.reset();
+        if !self.cfg.prefetch {
+            // ablation: rebuild plans every epoch instead of reusing
+            self.plans = Self::build_plans(&self.dataset, self.cfg.batch_size);
+        }
+    }
+
+    /// One training epoch (Algorithm 2 body). Returns the epoch report with
+    /// val_ap = NaN (the caller decides whether to evaluate).
+    pub fn train_epoch(&mut self, epoch: usize) -> Result<EpochReport> {
+        self.reset_epoch_state();
+        let n_train = self.train_plan_count();
+        let mut timer = EpochTimer::default();
+        timer.start_epoch();
+        let mut losses = Vec::with_capacity(n_train);
+        let mut bces = Vec::with_capacity(n_train);
+        let mut cohs = Vec::with_capacity(n_train);
+        let mut aps = Vec::with_capacity(n_train);
+
+        for i in 1..n_train {
+            let (loss, bce, coh, ap) = self.run_train_iteration(i, epoch, &mut timer)?;
+            losses.push(loss);
+            bces.push(bce);
+            cohs.push(coh);
+            aps.push(ap);
+            self.iterations += 1;
+            self.iteration_ap.push((self.iterations, ap));
+        }
+        timer.steps = n_train.saturating_sub(1);
+        timer.finish_epoch();
+
+        Ok(EpochReport {
+            epoch,
+            train_loss: crate::util::stats::mean(&losses),
+            train_bce: crate::util::stats::mean(&bces),
+            train_ap: crate::util::stats::mean(&aps),
+            coherence: crate::util::stats::mean(&cohs),
+            val_ap: f64::NAN,
+            epoch_secs: timer.total.as_secs_f64(),
+            assemble_secs: timer.assemble.as_secs_f64(),
+            execute_secs: timer.execute.as_secs_f64(),
+            writeback_secs: timer.writeback.as_secs_f64(),
+            events_per_sec: timer.events_per_sec(n_train.saturating_sub(1) * self.cfg.batch_size),
+            gamma: self.state.gamma().unwrap_or(f32::NAN),
+        })
+    }
+
+    fn run_train_iteration(
+        &mut self,
+        i: usize,
+        epoch: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<(f64, f64, f64, f64)> {
+        let b = self.cfg.batch_size;
+        let spec = self.train_step.spec.clone();
+        let n_params = self.state.len();
+
+        // -------- assemble
+        let t0 = std::time::Instant::now();
+        let mut negatives = vec![0u32; b];
+        let mut neg_rng = self.rng.split((epoch * 1_000_003 + i) as u64);
+        self.neg_sampler.sample_batch(
+            &self.dataset.log,
+            self.plans[i].range.clone(),
+            &mut neg_rng,
+            &mut negatives,
+        );
+        let (prev, cur) = (&self.plans[i - 1], &self.plans[i]);
+        self.assembler.fill(
+            &mut self.host,
+            &self.dataset.log,
+            prev,
+            cur,
+            &negatives,
+            &self.store,
+            &self.nbr,
+            self.mailbox.as_ref(),
+            &self.gmm,
+            self.cfg.pres,
+            self.cfg.beta, // smoothing and correction are independent (Fig. 17)
+        );
+        let data_lits = self.host.pack(&spec, 3 * n_params, 2)?;
+        let lr_lit = lit_scalar(self.cfg.lr)?;
+        let t_lit = lit_scalar((self.state.step + 1) as f32)?;
+        let args: Vec<&Literal> = self
+            .state
+            .params
+            .iter()
+            .chain(self.state.adam_m.iter())
+            .chain(self.state.adam_v.iter())
+            .chain(data_lits.iter())
+            .chain([&lr_lit, &t_lit])
+            .collect();
+        timer.assemble += t0.elapsed();
+
+        // -------- execute
+        let t1 = std::time::Instant::now();
+        let mut outputs = self.train_step.run(&args)?;
+        timer.execute += t1.elapsed();
+
+        // -------- write-back + metrics
+        let t2 = std::time::Instant::now();
+        self.state.absorb_outputs(&mut outputs);
+        let (loss, bce, coh, ap) = self.consume_step_outputs(&spec, &outputs, i, true)?;
+        timer.writeback += t2.elapsed();
+        Ok((loss, bce, coh, ap))
+    }
+
+    /// Shared post-step handling: write-back, trackers, metrics.
+    fn consume_step_outputs(
+        &mut self,
+        spec: &crate::runtime::ArtifactSpec,
+        outputs: &[Literal],
+        i: usize,
+        train: bool,
+    ) -> Result<(f64, f64, f64, f64)> {
+        // output indices are relative to the *step* outputs (train outputs
+        // had params/m/v stripped by absorb_outputs)
+        let off = if train { 3 * self.state.len() } else { 0 };
+        let idx = |name: &str| -> Result<usize> { Ok(spec.output_index(name)? - off) };
+
+        fetch_f32(&outputs[idx("u_sbar")?], &mut self.sbar_scratch)?;
+        let u_msg = if self.mailbox.is_some() {
+            fetch_f32(&outputs[idx("u_msg")?], &mut self.msg_scratch)?;
+            Some(self.msg_scratch.as_slice())
+        } else {
+            None
+        };
+        let prev = &self.plans[i - 1];
+        self.assembler.commit(
+            &self.host,
+            &self.dataset.log,
+            prev,
+            &self.sbar_scratch,
+            u_msg,
+            &mut self.store,
+            &mut self.nbr,
+            self.mailbox.as_mut(),
+            &mut self.gmm,
+            self.cfg.pres,
+        );
+
+        fetch_f32(&outputs[idx("pos_logit")?], &mut self.logit_scratch[0])?;
+        fetch_f32(&outputs[idx("neg_logit")?], &mut self.logit_scratch[1])?;
+        let ap = link_ap(&self.logit_scratch[0], &self.logit_scratch[1]);
+        let loss = fetch_scalar(&outputs[idx("loss")?])? as f64;
+        let bce = fetch_scalar(&outputs[idx("bce")?])? as f64;
+        let coh = fetch_scalar(&outputs[idx("coherence")?])? as f64;
+        Ok((loss, bce, coh, ap))
+    }
+
+    /// Evaluate the span [lo, hi) of event indices in one pass. Memory
+    /// keeps evolving (the standard TGN protocol). Returns per-event
+    /// (event index, pos logit, neg logit) plus collected (h_src, label)
+    /// rows for node classification.
+    fn eval_range(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        collect_embeddings: bool,
+    ) -> Result<(Vec<(usize, f32, f32)>, Vec<(Vec<f32>, f32)>)> {
+        let spec = self.eval_step.spec.clone();
+        let b = self.cfg.batch_size;
+        let d_emb = self.assembler.dims.d_emb;
+        let mut logits = Vec::new();
+        let mut rows = Vec::new();
+        let mut h_scratch = vec![0.0f32; b * d_emb];
+
+        // any plan overlapping [lo, hi) participates; per-event logits are
+        // filtered below so only in-range events are scored (at large b a
+        // small split may not contain a single fully-enclosed batch)
+        let indices: Vec<usize> = (1..self.plans.len())
+            .filter(|&i| self.plans[i].range.end > lo && self.plans[i].range.start < hi)
+            .collect();
+        for i in indices {
+            let mut negatives = vec![0u32; b];
+            // fixed eval seed: comparable across runs/configs
+            let mut neg_rng = Pcg32::new(0xE7A1_5EED ^ i as u64);
+            self.neg_sampler.sample_batch(
+                &self.dataset.log,
+                self.plans[i].range.clone(),
+                &mut neg_rng,
+                &mut negatives,
+            );
+            let (prev, cur) = (&self.plans[i - 1], &self.plans[i]);
+            self.assembler.fill(
+                &mut self.host,
+                &self.dataset.log,
+                prev,
+                cur,
+                &negatives,
+                &self.store,
+                &self.nbr,
+                self.mailbox.as_ref(),
+                &self.gmm,
+                self.cfg.pres,
+                0.0, // no loss at eval time
+            );
+            let data_lits = self.host.pack(&spec, self.state.len(), 0)?;
+            let args: Vec<&Literal> =
+                self.state.params.iter().chain(data_lits.iter()).collect();
+            let outputs = self.eval_step.run(&args)?;
+            let (_, _, _, _) = self.consume_step_outputs(&spec, &outputs, i, false)?;
+            for (j, ev_i) in self.plans[i].range.clone().enumerate() {
+                if ev_i >= lo && ev_i < hi {
+                    logits.push((ev_i, self.logit_scratch[0][j], self.logit_scratch[1][j]));
+                }
+            }
+
+            if collect_embeddings {
+                fetch_f32(&outputs[spec.output_index("h_src")?], &mut h_scratch)?;
+                for (j, ev_i) in self.plans[i].range.clone().enumerate() {
+                    let label = self.dataset.log.events[ev_i].label;
+                    if label >= 0 && ev_i >= lo && ev_i < hi {
+                        rows.push((
+                            h_scratch[j * d_emb..(j + 1) * d_emb].to_vec(),
+                            label as f32,
+                        ));
+                    }
+                }
+            }
+        }
+        Ok((logits, rows))
+    }
+
+    fn ap_of(logits: &[(usize, f32, f32)], lo: usize, hi: usize) -> f64 {
+        let pos: Vec<f32> = logits
+            .iter()
+            .filter(|(i, _, _)| *i >= lo && *i < hi)
+            .map(|(_, p, _)| *p)
+            .collect();
+        let neg: Vec<f32> = logits
+            .iter()
+            .filter(|(i, _, _)| *i >= lo && *i < hi)
+            .map(|(_, _, n)| *n)
+            .collect();
+        link_ap(&pos, &neg)
+    }
+
+    /// Validation AP (continues memory from the training state; restores it
+    /// afterwards so training can proceed).
+    pub fn eval_val(&mut self) -> Result<f64> {
+        let snap = self.store.snapshot();
+        let nbr_snap = self.nbr.clone();
+        let mb_snap = self.mailbox.clone();
+        let (lo, hi) = (self.dataset.split.train_end, self.dataset.split.val_end);
+        let (logits, _) = self.eval_range(lo, hi, false)?;
+        self.store.restore(&snap);
+        self.nbr = nbr_snap;
+        self.mailbox = mb_snap;
+        Ok(Self::ap_of(&logits, lo, hi))
+    }
+
+    /// Test AP + collected (embedding, label) rows for node classification.
+    /// Single pass over val + test so memory is warm at the test boundary
+    /// and no boundary-straddling batch is processed twice.
+    pub fn eval_test(&mut self, collect: bool) -> Result<(f64, Vec<(Vec<f32>, f32)>)> {
+        let (logits, rows) =
+            self.eval_range(self.dataset.split.train_end, self.dataset.log.len(), collect)?;
+        let ap = Self::ap_of(&logits, self.dataset.split.val_end, self.dataset.log.len());
+        Ok((ap, rows))
+    }
+
+    /// Full run: epochs of training (+ periodic val), final val/test eval,
+    /// node-classification AUC.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let mut epochs = Vec::new();
+        let mut best_val = f64::NEG_INFINITY;
+        let t0 = std::time::Instant::now();
+        for e in 0..self.cfg.epochs {
+            let mut report = self.train_epoch(e)?;
+            let evaluate = self.cfg.eval_every > 0 && (e + 1) % self.cfg.eval_every == 0;
+            if evaluate || e + 1 == self.cfg.epochs {
+                report.val_ap = self.eval_val()?;
+                best_val = best_val.max(report.val_ap);
+            }
+            epochs.push(report);
+        }
+        let total_train_secs = t0.elapsed().as_secs_f64();
+        let (test_ap, rows) = self.eval_test(true)?;
+        let test_auc = crate::eval::nodeclf::train_and_auc(&self.engine, &rows, self.cfg.seed)?;
+        let mean_epoch_secs =
+            crate::util::stats::mean(&epochs.iter().map(|e| e.epoch_secs).collect::<Vec<_>>());
+        Ok(RunReport {
+            config: self.cfg.clone(),
+            best_val_ap: best_val.max(epochs.last().map(|e| e.val_ap).unwrap_or(0.0)),
+            test_ap,
+            test_auc,
+            epochs,
+            total_train_secs,
+            mean_epoch_secs,
+            iteration_ap: self.iteration_ap.clone(),
+            coordinator_bytes: self.memory_bytes(),
+        })
+    }
+
+    /// Coordinator-side live bytes (Fig. 19 accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.store.bytes()
+            + self.nbr.bytes()
+            + self.gmm.bytes()
+            + self.mailbox.as_ref().map_or(0, |m| m.bytes())
+    }
+
+    /// Mean pending-event statistics across training batches (Def. 2).
+    pub fn pending_summary(&self) -> (f64, f64) {
+        let n = self.train_plan_count().max(1);
+        let mut frac = 0.0;
+        let mut pairs = 0.0;
+        for p in self.plans.iter().take(n) {
+            frac += p.stats.pending_events as f64 / p.batch_size() as f64;
+            pairs += p.stats.pending_pairs as f64 / p.batch_size() as f64;
+        }
+        (frac / n as f64, pairs / n as f64)
+    }
+
+    pub fn gamma(&self) -> f32 {
+        self.state.gamma().unwrap_or(f32::NAN)
+    }
+}
+
+/// Deep-copy a literal (the xla crate exposes no Clone).
+pub fn clone_literal(lit: &Literal) -> Result<Literal> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let n = lit.element_count();
+    match lit.ty()? {
+        xla::ElementType::F32 => {
+            let mut host = vec![0.0f32; n];
+            lit.copy_raw_to(&mut host)?;
+            crate::runtime::engine::lit_f32(&host, &dims)
+        }
+        xla::ElementType::S32 => {
+            let mut host = vec![0i32; n];
+            lit.copy_raw_to(&mut host)?;
+            crate::runtime::engine::lit_i32(&host, &dims)
+        }
+        other => anyhow::bail!("clone_literal: unsupported type {other:?}"),
+    }
+}

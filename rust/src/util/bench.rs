@@ -1,0 +1,155 @@
+//! Microbench harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a plain binary (`harness = false`) that
+//! builds a [`Bench`] runner: warmup, timed iterations, and a report with
+//! mean / std / p50 / p95 per case, printed in a stable aligned format and
+//! optionally appended to `results/bench/*.csv`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target_time: Duration,
+    rows: Vec<Row>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub case: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // honor `cargo bench -- --quick` style knobs through env to keep the
+        // CLI surface minimal
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("PRES_BENCH_QUICK").is_ok();
+        Bench {
+            name: name.to_string(),
+            warmup_iters: if quick { 1 } else { 3 },
+            min_iters: if quick { 3 } else { 10 },
+            max_iters: if quick { 10 } else { 200 },
+            target_time: Duration::from_millis(if quick { 200 } else { 1000 }),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    /// Time `f` and record a row under `case`.
+    pub fn run<F: FnMut()>(&mut self, case: &str, mut f: F) -> &Row {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.target_time && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let row = Row {
+            case: case.to_string(),
+            iters: samples.len(),
+            mean_ns: stats::mean(&samples),
+            std_ns: stats::std_dev(&samples),
+            p50_ns: stats::quantile(&samples, 0.5),
+            p95_ns: stats::quantile(&samples, 0.95),
+        };
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>6}",
+            format!("{}/{}", self.name, case),
+            fmt_ns(row.mean_ns),
+            fmt_ns(row.p50_ns),
+            fmt_ns(row.p95_ns),
+            row.iters,
+        );
+        self.rows.push(row);
+        self.rows.last().unwrap()
+    }
+
+    pub fn header(&self) {
+        println!(
+            "\n=== bench: {} ===\n{:<44} {:>10} {:>12} {:>12} {:>6}",
+            self.name, "case", "mean", "p50", "p95", "iters"
+        );
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    /// Append rows to `results/bench/<name>.csv` for EXPERIMENTS.md.
+    pub fn write_csv(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("results/bench")?;
+        let path = format!("results/bench/{}.csv", self.name);
+        let mut out = String::from("case,iters,mean_ns,std_ns,p50_ns,p95_ns\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{:.0},{:.0},{:.0},{:.0}\n",
+                r.case, r.iters, r.mean_ns, r.std_ns, r.p50_ns, r.p95_ns
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (std::hint's
+/// black_box is stable since 1.66; thin wrapper for readability).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        std::env::set_var("PRES_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        b.run("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.rows().len(), 1);
+        assert!(b.rows()[0].iters >= 3);
+        assert!(b.rows()[0].mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00 s");
+    }
+}

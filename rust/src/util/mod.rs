@@ -1,0 +1,15 @@
+//! From-scratch infrastructure: the offline registry snapshot only ships
+//! the `xla` crate closure + `anyhow`, so RNG, JSON, CLI parsing, statistics,
+//! a microbench harness and a mini property-testing helper live here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock helper used across benches/metrics.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,165 @@
+//! Integration: load real artifacts, compile on PJRT, execute, and verify
+//! the ABI end-to-end (output arity, finite numerics, STANDARD-mode
+//! semantics reproduced through the compiled path).
+
+use pres::model::ModelState;
+use pres::runtime::engine::{fetch_f32, fetch_scalar, lit_f32, lit_i32, lit_scalar};
+use pres::runtime::{DType, Engine};
+use pres::util::rng::Pcg32;
+use xla::Literal;
+
+fn engine() -> Engine {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(&dir).expect("run `make artifacts` first")
+}
+
+/// Build zero-ish but well-formed data inputs for a step (everything after
+/// the first `skip` ABI slots).
+fn data_literals(
+    spec: &pres::runtime::ArtifactSpec,
+    skip: usize,
+    pres_on: f32,
+    seed: u64,
+) -> Vec<Literal> {
+    let mut rng = Pcg32::new(seed);
+    spec.inputs[skip..]
+        .iter()
+        .map(|t| match t.dtype {
+            DType::I32 => lit_i32(&vec![-1i32; t.elems()], &t.shape).unwrap(),
+            DType::F32 => {
+                let host: Vec<f32> = if t.name == "pres_on" {
+                    vec![pres_on]
+                } else if t.name == "beta" || t.name == "lr" {
+                    vec![0.01]
+                } else if t.name == "step_t" {
+                    vec![1.0]
+                } else if t.name.ends_with("_mask") || t.name == "u_wmask" {
+                    (0..t.elems()).map(|_| (rng.below(2)) as f32).collect()
+                } else if t.name.ends_with("_dt") {
+                    (0..t.elems()).map(|_| rng.f32() * 3.0).collect()
+                } else {
+                    (0..t.elems()).map(|_| rng.normal() * 0.3).collect()
+                };
+                lit_f32(&host, &t.shape).unwrap()
+            }
+        })
+        .collect()
+}
+
+fn clone_lits(lits: &[Literal]) -> Vec<Literal> {
+    // Literal has no Clone; round-trip through raw parts
+    lits.iter()
+        .map(|l| {
+            let n = l.element_count();
+            let mut host = vec![0.0f32; n];
+            l.copy_raw_to(&mut host).unwrap();
+            let shape = l.array_shape().unwrap();
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            lit_f32(&host, &dims).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn eval_step_runs_with_correct_arity_and_standard_semantics() {
+    let engine = engine();
+    let step = engine.step("tgn", 25, "eval").unwrap();
+    let state = ModelState::init(&engine, "tgn", 0).unwrap();
+
+    // STANDARD mode (pres_on = 0): delta must be zero, outputs finite
+    let mut args = clone_lits(&state.params);
+    args.extend(data_literals(&step.spec, state.len(), 0.0, 1));
+    let outputs = step.run(&args).expect("execute");
+    assert_eq!(outputs.len(), step.spec.outputs.len());
+
+    for (lit, spec) in outputs.iter().zip(&step.spec.outputs) {
+        if spec.dtype == DType::F32 {
+            let mut host = vec![0.0f32; spec.elems()];
+            fetch_f32(lit, &mut host).unwrap();
+            assert!(
+                host.iter().all(|x| x.is_finite()),
+                "output {} has non-finite values",
+                spec.name
+            );
+        }
+    }
+
+    let delta_idx = step.spec.output_index("u_delta").unwrap();
+    let mut delta = vec![1.0f32; step.spec.outputs[delta_idx].elems()];
+    fetch_f32(&outputs[delta_idx], &mut delta).unwrap();
+    assert!(delta.iter().all(|&x| x == 0.0), "STANDARD mode delta != 0");
+}
+
+#[test]
+fn train_step_updates_params_and_reports_loss() {
+    let engine = engine();
+    let step = engine.step("tgn", 25, "train").unwrap();
+    let mut state = ModelState::init(&engine, "tgn", 0).unwrap();
+    let n = state.len();
+    let before = state.fetch("msg_w1").unwrap();
+
+    let mut args = clone_lits(&state.params);
+    args.extend(clone_lits(&state.adam_m));
+    args.extend(clone_lits(&state.adam_v));
+    args.extend(data_literals(&step.spec, 3 * n, 1.0, 2));
+    assert_eq!(args.len(), step.spec.inputs.len());
+    let mut outputs = step.run(&args).expect("train execute");
+    assert_eq!(outputs.len(), step.spec.outputs.len());
+
+    let loss_idx = step.spec.output_index("loss").unwrap();
+    let loss = fetch_scalar(&outputs[loss_idx]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+
+    state.absorb_outputs(&mut outputs);
+    assert_eq!(outputs.len(), step.spec.outputs.len() - 3 * n);
+    let after = state.fetch("msg_w1").unwrap();
+    assert_ne!(before, after, "Adam step must move parameters");
+    assert_eq!(state.step, 1);
+}
+
+#[test]
+fn pres_mode_produces_innovation() {
+    let engine = engine();
+    let step = engine.step("tgn", 25, "eval").unwrap();
+    let state = ModelState::init(&engine, "tgn", 0).unwrap();
+    let mut args = clone_lits(&state.params);
+    args.extend(data_literals(&step.spec, state.len(), 1.0, 3));
+    let outputs = step.run(&args).unwrap();
+    let delta_idx = step.spec.output_index("u_delta").unwrap();
+    let mut delta = vec![0.0f32; step.spec.outputs[delta_idx].elems()];
+    fetch_f32(&outputs[delta_idx], &mut delta).unwrap();
+    assert!(
+        delta.iter().any(|&x| x.abs() > 1e-6),
+        "PRES mode should produce non-zero innovation"
+    );
+}
+
+#[test]
+fn all_models_compile_and_run_eval() {
+    let engine = engine();
+    for model in ["tgn", "jodie", "apan"] {
+        let step = engine.step(model, 25, "eval").unwrap();
+        let state = ModelState::init(&engine, model, 0).unwrap();
+        let mut args = clone_lits(&state.params);
+        args.extend(data_literals(&step.spec, state.len(), 0.0, 4));
+        let outputs = step.run(&args).unwrap_or_else(|e| panic!("{model}: {e}"));
+        let loss_idx = step.spec.output_index("loss").unwrap();
+        let loss = fetch_scalar(&outputs[loss_idx]).unwrap();
+        assert!(loss.is_finite(), "{model} loss {loss}");
+    }
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let engine = engine();
+    let a = engine.step("jodie", 25, "eval").unwrap();
+    let b = engine.step("jodie", 25, "eval").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert_eq!(engine.compiled_count(), 1);
+}
+
+#[test]
+fn scalar_literal_roundtrip() {
+    let lit = lit_scalar(3.25).unwrap();
+    assert_eq!(fetch_scalar(&lit).unwrap(), 3.25);
+}
