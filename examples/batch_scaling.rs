@@ -7,6 +7,7 @@
 //!     cargo run --release --example batch_scaling [-- --dataset wiki --model tgn]
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use pres::config::ExperimentConfig;
 use pres::runtime::Engine;
@@ -21,7 +22,7 @@ fn main() -> anyhow::Result<()> {
 
     let engine = Rc::new(Engine::new(std::path::Path::new("artifacts"))?);
     let base_cfg = ExperimentConfig::default_with(dataset, model, 100, false);
-    let ds = Rc::new(Trainer::make_dataset(&base_cfg)?);
+    let ds = Arc::new(Trainer::make_dataset(&base_cfg)?);
 
     println!(
         "{:>7} {:>14} {:>14} {:>12} {:>12}",

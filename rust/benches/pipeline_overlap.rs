@@ -1,0 +1,103 @@
+//! Sequential vs pipelined training throughput: how much host assembly the
+//! PREP thread hides behind device execution, per (model, batch).
+//!
+//!     cargo bench --bench pipeline_overlap [-- --quick]
+//!
+//! Reports events/sec, device-idle fraction, assemble-hidden seconds and
+//! prep-stall seconds per configuration, and writes the whole sweep to
+//! `BENCH_pipeline.json` for EXPERIMENTS.md / CI tracking.
+
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::training::Trainer;
+use pres::util::bench::Bench;
+use pres::util::json::Json;
+
+struct Case {
+    label: String,
+    depth: usize,
+    staleness: usize,
+    events_per_sec: f64,
+    epoch_secs: f64,
+    device_idle_frac: f64,
+    assemble_hidden_secs: f64,
+    prep_stall_secs: f64,
+}
+
+fn case_json(c: &Case) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&c.label)),
+        ("pipeline_depth", Json::num(c.depth as f64)),
+        ("bounded_staleness", Json::num(c.staleness as f64)),
+        ("events_per_sec", Json::num(c.events_per_sec)),
+        ("epoch_secs", Json::num(c.epoch_secs)),
+        ("device_idle_frac", Json::num(c.device_idle_frac)),
+        ("assemble_hidden_secs", Json::num(c.assemble_hidden_secs)),
+        ("prep_stall_secs", Json::num(c.prep_stall_secs)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("pipeline_overlap").with_iters(2, if quick { 3 } else { 8 });
+    bench.header();
+
+    // (depth, staleness) sweep: sequential baseline, the bit-identical
+    // default, deeper lookahead, and lookahead + one batch of staleness
+    let modes = [
+        ("seq", 0usize, 0usize),
+        ("depth1", 1, 0),
+        ("depth2", 2, 0),
+        ("depth2_stale1", 2, 1),
+    ];
+    let mut cases: Vec<Case> = Vec::new();
+
+    for model in ["tgn", "jodie"] {
+        for batch in [200usize, 800] {
+            let mut cfg = ExperimentConfig::default_with("wiki", model, batch, true);
+            cfg.epochs = 1;
+            cfg.data_scale = if quick { 0.25 } else { 1.0 };
+            let mut tr = match Trainer::from_config(&cfg) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("skip {model} b={batch}: {e}");
+                    continue;
+                }
+            };
+            // one warm epoch primes the XLA executable + caches
+            tr.train_epoch(0).unwrap();
+            for (name, depth, staleness) in modes {
+                tr.cfg.pipeline = PipelineConfig { depth, bounded_staleness: staleness };
+                let label = format!("{model}_b{batch}_{name}");
+                bench.run(&label, || {
+                    tr.train_epoch(1).unwrap();
+                });
+                let r = tr.train_epoch(2).unwrap();
+                println!(
+                    "    {label}: {:.0} ev/s | idle {:.1}% | hidden {:.3}s | stall {:.3}s",
+                    r.events_per_sec,
+                    r.device_idle_frac * 100.0,
+                    r.assemble_hidden_secs,
+                    r.prep_stall_secs,
+                );
+                cases.push(Case {
+                    label,
+                    depth,
+                    staleness,
+                    events_per_sec: r.events_per_sec,
+                    epoch_secs: r.epoch_secs,
+                    device_idle_frac: r.device_idle_frac,
+                    assemble_hidden_secs: r.assemble_hidden_secs,
+                    prep_stall_secs: r.prep_stall_secs,
+                });
+            }
+        }
+    }
+
+    bench.write_csv().unwrap();
+    let report = Json::obj(vec![
+        ("bench", Json::str("pipeline_overlap")),
+        ("cases", Json::arr(cases.iter().map(case_json))),
+    ]);
+    std::fs::write("BENCH_pipeline.json", report.to_string_pretty()).unwrap();
+    println!("-> wrote BENCH_pipeline.json ({} cases)", cases.len());
+}

@@ -62,7 +62,13 @@ impl BatchPlan {
         let mut wmask = vec![0.0f32; u];
         let mut collided = vec![0.0f32; u];
         let mut last_row: HashMap<u32, u32> = HashMap::with_capacity(u);
+        // per-vertex update-ROW count (a self-loop contributes two rows):
+        // drives collided marking, i.e. "this vertex's intermediate state is
+        // lost under batch processing"
         let mut occurrences: HashMap<u32, u32> = HashMap::with_capacity(u);
+        // per-vertex prior-EVENT count (a self-loop counts once): drives the
+        // pending math, which reasons about event pairs sharing a vertex
+        let mut event_occ: HashMap<u32, u32> = HashMap::with_capacity(u);
         // prior events per normalized endpoint pair: corrects the double
         // count when a prior event shares BOTH endpoints with this one
         let mut pair_counts: HashMap<(u32, u32), u32> = HashMap::with_capacity(u);
@@ -71,18 +77,28 @@ impl BatchPlan {
 
         for (r, i) in range.clone().enumerate() {
             let ev = log.events[i];
-            // |P(e, B)| = prior events sharing src + sharing dst - sharing both
-            let prior_src = occurrences.get(&ev.src).copied().unwrap_or(0);
-            let prior_dst = occurrences.get(&ev.dst).copied().unwrap_or(0);
+            // |P(e, B)| = prior events sharing src + sharing dst - sharing
+            // both (inclusion-exclusion; a self-loop event has one distinct
+            // endpoint, so only the src term applies)
+            let prior_src = event_occ.get(&ev.src).copied().unwrap_or(0);
             let key = (ev.src.min(ev.dst), ev.src.max(ev.dst));
-            let prior_both = pair_counts.get(&key).copied().unwrap_or(0);
-            let pending = (prior_src + prior_dst - prior_both) as usize;
+            let pending = if ev.src == ev.dst {
+                prior_src as usize
+            } else {
+                let prior_dst = event_occ.get(&ev.dst).copied().unwrap_or(0);
+                let prior_both = pair_counts.get(&key).copied().unwrap_or(0);
+                (prior_src + prior_dst - prior_both) as usize
+            };
             if pending > 0 {
                 pending_events += 1;
                 pending_pairs += pending;
             }
             *occurrences.entry(ev.src).or_insert(0) += 1;
             *occurrences.entry(ev.dst).or_insert(0) += 1;
+            *event_occ.entry(ev.src).or_insert(0) += 1;
+            if ev.src != ev.dst {
+                *event_occ.entry(ev.dst).or_insert(0) += 1;
+            }
             *pair_counts.entry(key).or_insert(0) += 1;
 
             upd_vertex[r] = ev.src;
@@ -220,6 +236,81 @@ mod tests {
         assert_eq!(plan.stats.pending_events, 0);
         assert_eq!(plan.stats.collided_vertices, 0);
         assert!(plan.wmask.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn self_loop_counts_each_prior_event_once() {
+        // (5,5) then (5,9): the self-loop shares exactly one vertex with
+        // the later event -> one pending pair, not the two a row-level
+        // count would claim
+        let log = log_with(&[(5, 5), (5, 9)]);
+        let plan = BatchPlan::build(&log, 0..2);
+        assert_eq!(plan.stats.pending_events, 1);
+        assert_eq!(plan.stats.pending_pairs, 1);
+        assert_eq!(pending_pairs_naive(&log, 0..2), 1);
+        // vertex 5 occupies three update rows (both self-loop sides + the
+        // src side of event 1) -> collided; vertex 9 appears once
+        assert_eq!(plan.stats.collided_vertices, 1);
+        assert_eq!(plan.collided, vec![1.0, 1.0, 1.0, 0.0]);
+        // the chronologically-last update of vertex 5 is event 1's src side
+        assert_eq!(plan.last_row_of(5), Some(1));
+        assert_eq!(plan.wmask, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn single_self_loop_is_collided_but_not_pending() {
+        let log = log_with(&[(4, 4)]);
+        let plan = BatchPlan::build(&log, 0..1);
+        // no earlier event -> nothing pending (src/dst sides are simultaneous)
+        assert_eq!(plan.stats.pending_events, 0);
+        assert_eq!(plan.stats.pending_pairs, 0);
+        assert_eq!(pending_pairs_naive(&log, 0..1), 0);
+        // but batch processing applies only one of its two updates: the
+        // vertex is operationally collided and the dst-side row (index 1)
+        // is the write-back winner
+        assert_eq!(plan.stats.collided_vertices, 1);
+        assert_eq!(plan.stats.distinct_vertices, 1);
+        assert_eq!(plan.collided, vec![1.0, 1.0]);
+        assert_eq!(plan.wmask, vec![0.0, 1.0]);
+        assert_eq!(plan.last_row_of(4), Some(1));
+    }
+
+    #[test]
+    fn repeated_endpoint_pair_not_double_counted() {
+        // (0,8) three times: event k pends on the k prior events exactly
+        // once each despite sharing BOTH endpoints
+        let log = log_with(&[(0, 8), (0, 8), (0, 8)]);
+        let plan = BatchPlan::build(&log, 0..3);
+        assert_eq!(plan.stats.pending_events, 2);
+        assert_eq!(plan.stats.pending_pairs, 1 + 2);
+        assert_eq!(pending_pairs_naive(&log, 0..3), 3);
+        assert_eq!(plan.stats.collided_vertices, 2);
+        assert_eq!(plan.stats.distinct_vertices, 2);
+        // winners: the last event's rows
+        assert_eq!(plan.last_row_of(0), Some(2));
+        assert_eq!(plan.last_row_of(8), Some(5));
+        assert_eq!(plan.wmask, vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn batch_of_size_one_has_trivial_plan() {
+        let log = log_with(&[(2, 9)]);
+        let plan = BatchPlan::build(&log, 0..1);
+        assert_eq!(plan.batch_size(), 1);
+        assert_eq!(plan.rows(), 2);
+        assert_eq!(
+            plan.stats,
+            PendingStats {
+                pending_events: 0,
+                pending_pairs: 0,
+                collided_vertices: 0,
+                distinct_vertices: 2,
+            }
+        );
+        assert_eq!(plan.wmask, vec![1.0, 1.0]);
+        assert_eq!(plan.collided, vec![0.0, 0.0]);
+        assert_eq!(plan.last_row_of(2), Some(0));
+        assert_eq!(plan.last_row_of(9), Some(1));
     }
 
     #[test]

@@ -7,6 +7,32 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Staged-pipeline knobs (see `pipeline/` for the stage diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// How many batches ahead the background PREP thread may run.
+    /// 0 = fully sequential legacy loop (PREP inline on the coordinator);
+    /// 1 (default) overlaps PREP with execution and stays bit-identical to
+    /// the sequential path.
+    pub depth: usize,
+    /// MSPipe-style bounded staleness for SPLICE: how many commits the
+    /// memory view a splice reads may lag behind. 0 (default) keeps every
+    /// splice exact — and results bit-identical to sequential training;
+    /// k > 0 lets the coordinator pre-splice up to k future batches before
+    /// the in-flight write-back lands. NOTE: with today's synchronous
+    /// single-stream EXEC this is perf-neutral vs raising `depth` (it only
+    /// reorders coordinator work); it becomes a real overlap lever with
+    /// multi-stream execution (ROADMAP) — leave at 0 unless studying
+    /// staleness effects on quality.
+    pub bounded_staleness: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { depth: 1, bounded_staleness: 0 }
+    }
+}
+
 /// Everything needed to reproduce one training run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -30,8 +56,11 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     /// Evaluate on val split every n epochs (0 = only at the end).
     pub eval_every: usize,
-    /// Overlap next-batch assembly with the current PJRT call.
+    /// Reuse batch plans across epochs (false rebuilds per epoch — the
+    /// plan-prefetch ablation; unrelated to the pipeline's PREP thread).
     pub prefetch: bool,
+    /// Staged-pipeline knobs: PREP lookahead depth + bounded staleness.
+    pub pipeline: PipelineConfig,
     /// Scale events generated (1.0 = profile default; figures use < 1 for
     /// quick sweeps).
     pub data_scale: f32,
@@ -52,6 +81,7 @@ impl ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             eval_every: 0,
             prefetch: true,
+            pipeline: PipelineConfig::default(),
             data_scale: 1.0,
         }
     }
@@ -92,6 +122,12 @@ impl ExperimentConfig {
         if let Some(v) = j.opt("prefetch") {
             cfg.prefetch = v.as_bool()?;
         }
+        if let Some(v) = j.opt("pipeline_depth") {
+            cfg.pipeline.depth = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("bounded_staleness") {
+            cfg.pipeline.bounded_staleness = v.as_usize()?;
+        }
         if let Some(v) = j.opt("data_scale") {
             cfg.data_scale = v.as_f32()?;
         }
@@ -115,6 +151,9 @@ impl ExperimentConfig {
         if !(self.data_scale > 0.0) {
             bail!("data_scale must be positive");
         }
+        if self.pipeline.bounded_staleness > 0 && self.pipeline.depth == 0 {
+            bail!("bounded_staleness > 0 requires pipeline depth >= 1");
+        }
         Ok(())
     }
 
@@ -132,6 +171,11 @@ impl ExperimentConfig {
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("prefetch", Json::Bool(self.prefetch)),
+            ("pipeline_depth", Json::num(self.pipeline.depth as f64)),
+            (
+                "bounded_staleness",
+                Json::num(self.pipeline.bounded_staleness as f64),
+            ),
             ("data_scale", Json::num(self.data_scale as f64)),
         ])
     }
@@ -160,6 +204,21 @@ mod tests {
         let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
         cfg.anchor_fraction = 1.5;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_knobs_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert_eq!(cfg.pipeline, PipelineConfig { depth: 1, bounded_staleness: 0 });
+        cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 2 };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.pipeline.depth, 3);
+        assert_eq!(back.pipeline.bounded_staleness, 2);
+        // staleness without a prefetch thread is meaningless
+        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 1 };
+        assert!(cfg.validate().is_err());
+        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

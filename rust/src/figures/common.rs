@@ -6,6 +6,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -19,7 +20,9 @@ use crate::util::cli::Args;
 /// per (name, seed, scale) shared by every trainer in a sweep.
 pub struct Lab {
     pub engine: Rc<Engine>,
-    datasets: RefCell<HashMap<(String, u64, u32), Rc<Dataset>>>,
+    /// `Arc` (not `Rc`): trainers hand the dataset to their background
+    /// PREP worker (see `pipeline/`), so the handle must be Send.
+    datasets: RefCell<HashMap<(String, u64, u32), Arc<Dataset>>>,
     /// Effort knobs (CLI-overridable; --quick shrinks everything).
     pub trials: usize,
     pub epochs: usize,
@@ -38,7 +41,7 @@ impl Lab {
         })
     }
 
-    pub fn dataset(&self, cfg: &ExperimentConfig) -> Result<Rc<Dataset>> {
+    pub fn dataset(&self, cfg: &ExperimentConfig) -> Result<Arc<Dataset>> {
         let key = (
             cfg.dataset.clone(),
             cfg.seed,
@@ -47,7 +50,7 @@ impl Lab {
         if let Some(ds) = self.datasets.borrow().get(&key) {
             return Ok(ds.clone());
         }
-        let ds = Rc::new(Trainer::make_dataset(cfg)?);
+        let ds = Arc::new(Trainer::make_dataset(cfg)?);
         self.datasets.borrow_mut().insert(key, ds.clone());
         Ok(ds)
     }

@@ -7,7 +7,12 @@
 //! * **L3 (this crate)** — temporal-batch scheduling, pending-set analysis,
 //!   the vertex memory store, the PRES GMM prediction filter, samplers,
 //!   metrics, and the training orchestrator driving AOT-compiled XLA
-//!   executables through PJRT.
+//!   executables through PJRT. Training runs as a staged pipeline
+//!   (`pipeline/`): a background thread PREPs future batches (sampling +
+//!   pure tensor assembly) while the coordinator thread SPLICEs memory
+//!   rows, EXECs the XLA step, and WRITEs memory back — hiding host
+//!   assembly behind device execution (MSPipe/DistTGL-style overlap, which
+//!   compounds with PRES's larger temporal batches).
 //! * **L2 (python/compile/model.py)** — MDGNN encoders (TGN/JODIE/APAN)
 //!   with the PRES correction + memory-coherence objective, lowered once
 //!   to `artifacts/*.hlo.txt`.
@@ -38,6 +43,7 @@ pub mod graph;
 pub mod memory;
 pub mod metrics;
 pub mod model;
+pub mod pipeline;
 pub mod runtime;
 pub mod sampler;
 pub mod tables;

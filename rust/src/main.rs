@@ -77,6 +77,12 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     cfg.eval_every = args.usize_or("eval-every", 1)?;
     cfg.prefetch = !args.flag("no-prefetch");
+    if let Some(depth) = args.usize_opt("pipeline-depth")? {
+        cfg.pipeline.depth = depth;
+    }
+    if let Some(k) = args.usize_opt("staleness")? {
+        cfg.pipeline.bounded_staleness = k;
+    }
     cfg.data_scale = args.f32_or("data-scale", 1.0)?;
     cfg.validate()?;
     Ok(cfg)
@@ -101,10 +107,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         pend_frac * 100.0
     );
     println!(
+        "# pipeline: depth={} staleness={}{}",
+        cfg.pipeline.depth,
+        cfg.pipeline.bounded_staleness,
+        if cfg.pipeline.depth == 0 { " (sequential)" } else { "" }
+    );
+    println!(
         "{:>5} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8} {:>9} {:>7}",
         "epoch", "loss", "bce", "trainAP", "valAP", "coher", "gamma", "ev/s", "secs"
     );
     let mut best = f64::NEG_INFINITY;
+    let mut overlap = (0.0f64, 0.0f64, 0.0f64); // (hidden, stall, idle frac)
     for e in 0..cfg.epochs {
         let mut r = trainer.train_epoch(e)?;
         if cfg.eval_every > 0 && (e + 1) % cfg.eval_every == 0 || e + 1 == cfg.epochs {
@@ -115,6 +128,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             "{:>5} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>8.3} {:>9.0} {:>7.2}",
             r.epoch, r.train_loss, r.train_bce, r.train_ap, r.val_ap, r.coherence,
             r.gamma, r.events_per_sec, r.epoch_secs
+        );
+        overlap = (r.assemble_hidden_secs, r.prep_stall_secs, r.device_idle_frac);
+    }
+    if cfg.pipeline.depth > 0 {
+        println!(
+            "# overlap (last epoch): assemble hidden {:.3}s, prep stall {:.3}s, device idle {:.1}%",
+            overlap.0,
+            overlap.1,
+            overlap.2 * 100.0
         );
     }
     let (test_ap, rows) = trainer.eval_test(true)?;

@@ -31,9 +31,11 @@ impl MemoryStore {
     }
 
     /// Zero all state (epoch boundary; Algorithm 1's S_0 <- 0).
+    /// `fill` lowers to memset — the element-wise loop this replaces was
+    /// measurable at gdelt scale (|V| * d floats every epoch).
     pub fn reset(&mut self) {
-        self.data.iter_mut().for_each(|x| *x = 0.0);
-        self.last_update.iter_mut().for_each(|x| *x = 0.0);
+        self.data.fill(0.0);
+        self.last_update.fill(0.0);
     }
 
     #[inline]
@@ -55,6 +57,39 @@ impl MemoryStore {
         let base = v as usize * self.d;
         self.data[base..base + self.d].copy_from_slice(values);
         self.last_update[v as usize] = t;
+    }
+
+    /// Batched gather: `out[i*d..(i+1)*d] = row(vs[i])`. The SPLICE stage's
+    /// workhorse — one call per tensor instead of one `row()` per vertex.
+    pub fn gather_rows_into(&self, vs: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), vs.len() * self.d);
+        for (slot, &v) in out.chunks_exact_mut(self.d).zip(vs) {
+            let base = v as usize * self.d;
+            slot.copy_from_slice(&self.data[base..base + self.d]);
+        }
+    }
+
+    /// Batched scatter used by the WRITEBACK stage: for every row `r` with
+    /// `mask[r] == 1.0` (or every row when `mask` is `None`), overwrite
+    /// vertex `vs[r]`'s state with `rows[r*d..]` and stamp its clock with
+    /// `ts[r]`. Rows targeting the same vertex apply in order, so the
+    /// caller's last masked row wins — matching the batch-plan dedup.
+    pub fn scatter_rows(&mut self, vs: &[u32], rows: &[f32], ts: &[f32], mask: Option<&[f32]>) {
+        debug_assert_eq!(rows.len(), vs.len() * self.d);
+        debug_assert_eq!(ts.len(), vs.len());
+        if let Some(m) = mask {
+            debug_assert_eq!(m.len(), vs.len());
+        }
+        for (r, (&v, row)) in vs.iter().zip(rows.chunks_exact(self.d)).enumerate() {
+            if let Some(m) = mask {
+                if m[r] != 1.0 {
+                    continue;
+                }
+            }
+            let base = v as usize * self.d;
+            self.data[base..base + self.d].copy_from_slice(row);
+            self.last_update[v as usize] = ts[r];
+        }
     }
 
     #[inline]
@@ -115,6 +150,35 @@ mod tests {
         m.reset();
         assert_eq!(m.row(0), &[0.0, 0.0]);
         assert_eq!(m.last_update(0), 0.0);
+    }
+
+    #[test]
+    fn gather_rows_matches_single_row_gather() {
+        let mut m = MemoryStore::new(5, 2);
+        m.scatter(1, &[1.0, 2.0], 1.0);
+        m.scatter(4, &[7.0, 8.0], 2.0);
+        let mut out = vec![0.0; 6];
+        m.gather_rows_into(&[4, 1, 4], &mut out);
+        assert_eq!(out, vec![7.0, 8.0, 1.0, 2.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn scatter_rows_respects_mask_and_last_write_wins() {
+        let mut m = MemoryStore::new(4, 2);
+        let vs = [0u32, 2, 0];
+        let rows = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let ts = [1.0, 2.0, 3.0];
+        m.scatter_rows(&vs, &rows, &ts, Some(&[1.0, 0.0, 1.0]));
+        // vertex 0: both rows masked in -> last one wins
+        assert_eq!(m.row(0), &[3.0, 3.0]);
+        assert_eq!(m.last_update(0), 3.0);
+        // vertex 2: masked out -> untouched
+        assert_eq!(m.row(2), &[0.0, 0.0]);
+        assert_eq!(m.last_update(2), 0.0);
+        // no mask -> every row lands
+        m.scatter_rows(&vs, &rows, &ts, None);
+        assert_eq!(m.row(2), &[2.0, 2.0]);
+        assert_eq!(m.last_update(2), 2.0);
     }
 
     #[test]

@@ -1,6 +1,14 @@
 //! Wall-clock accounting for epochs and phases (assembly vs PJRT dispatch
 //! vs write-back) — the numbers behind Table 1's speedup column and the
 //! §Perf iteration log.
+//!
+//! Pipeline-era buckets: coordinator-side phases (`assemble` = splice +
+//! pack, `execute`, `writeback`) plus two overlap counters — `prep_busy`
+//! (time the background PREP worker spent filling batches) and
+//! `prep_stall` (time the coordinator spent blocked waiting for one).
+//! Their difference is the assembly work actually hidden behind device
+//! execution; in the sequential loop PREP runs inline inside `assemble`
+//! and both counters stay zero.
 
 use std::time::{Duration, Instant};
 
@@ -9,6 +17,10 @@ pub struct EpochTimer {
     pub assemble: Duration,
     pub execute: Duration,
     pub writeback: Duration,
+    /// Background PREP worker busy time (off-thread; overlaps the rest).
+    pub prep_busy: Duration,
+    /// Coordinator blocked on the PREP channel (pipeline bubble).
+    pub prep_stall: Duration,
     pub other: Duration,
     epoch_start: Option<Instant>,
     pub total: Duration,
@@ -24,7 +36,9 @@ impl EpochTimer {
     pub fn finish_epoch(&mut self) {
         if let Some(t0) = self.epoch_start.take() {
             self.total = t0.elapsed();
-            let tracked = self.assemble + self.execute + self.writeback;
+            // prep_busy is NOT part of the coordinator wall clock (it ran on
+            // the worker thread); prep_stall is.
+            let tracked = self.assemble + self.execute + self.writeback + self.prep_stall;
             self.other = self.total.saturating_sub(tracked);
         }
     }
@@ -36,6 +50,23 @@ impl EpochTimer {
         out
     }
 
+    /// PREP work hidden behind device execution: worker busy time minus the
+    /// part the coordinator ended up waiting for anyway. Zero in the
+    /// sequential loop (both counters stay zero there).
+    pub fn assemble_hidden(&self) -> Duration {
+        self.prep_busy.saturating_sub(self.prep_stall)
+    }
+
+    /// Fraction of the epoch wall clock the device spent idle (no step
+    /// executing). The pipeline exists to push this toward the true
+    /// host-bound floor.
+    pub fn device_idle_fraction(&self) -> f64 {
+        if self.total.is_zero() {
+            return 0.0;
+        }
+        (1.0 - self.execute.as_secs_f64() / self.total.as_secs_f64()).clamp(0.0, 1.0)
+    }
+
     pub fn events_per_sec(&self, events: usize) -> f64 {
         if self.total.is_zero() {
             return 0.0;
@@ -45,12 +76,15 @@ impl EpochTimer {
 
     pub fn summary(&self) -> String {
         format!(
-            "total {:.3}s (assemble {:.3}s | execute {:.3}s | writeback {:.3}s | other {:.3}s) over {} steps",
+            "total {:.3}s (assemble {:.3}s | execute {:.3}s | writeback {:.3}s | stall {:.3}s | other {:.3}s; prep hidden {:.3}s, device idle {:.1}%) over {} steps",
             self.total.as_secs_f64(),
             self.assemble.as_secs_f64(),
             self.execute.as_secs_f64(),
             self.writeback.as_secs_f64(),
+            self.prep_stall.as_secs_f64(),
             self.other.as_secs_f64(),
+            self.assemble_hidden().as_secs_f64(),
+            self.device_idle_fraction() * 100.0,
             self.steps,
         )
     }
@@ -70,5 +104,35 @@ mod tests {
         assert!(t.execute >= Duration::from_millis(5));
         assert!(t.total >= t.execute);
         assert!(t.events_per_sec(100) > 0.0);
+    }
+
+    #[test]
+    fn overlap_accounting() {
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        // real wall time must dominate the synthetic phase durations below,
+        // otherwise `other` saturates to zero and proves nothing
+        std::thread::sleep(Duration::from_millis(20));
+        t.prep_busy = Duration::from_millis(12);
+        t.prep_stall = Duration::from_millis(2);
+        t.execute = Duration::from_millis(5);
+        t.finish_epoch();
+        assert_eq!(t.assemble_hidden(), Duration::from_millis(10));
+        assert!(t.total >= Duration::from_millis(20));
+        // stall counts toward coordinator wall time, busy does not: the
+        // untracked remainder is total minus (execute + stall) exactly
+        assert_eq!(t.other, t.total - Duration::from_millis(7));
+        let idle = t.device_idle_fraction();
+        assert!(idle > 0.0 && idle < 1.0, "idle {idle}");
+    }
+
+    #[test]
+    fn hidden_clamps_at_zero_when_stalled_throughout() {
+        let t = EpochTimer {
+            prep_busy: Duration::from_millis(5),
+            prep_stall: Duration::from_millis(9),
+            ..EpochTimer::default()
+        };
+        assert_eq!(t.assemble_hidden(), Duration::ZERO);
     }
 }

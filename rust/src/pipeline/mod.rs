@@ -1,0 +1,60 @@
+//! Staged training pipeline: overlap host batch assembly with device
+//! execution.
+//!
+//! One training iteration decomposes into four stages with very different
+//! dependency structure:
+//!
+//! ```text
+//!   PREP      negative sampling, edge features, lag-one match indices,
+//!             update-row times — pure in (dataset, plans, seed); reads NO
+//!             mutable substrate. Runs on the background worker thread.
+//!   SPLICE    memory-row gathers (store / neighbor index / mailbox / GMM
+//!             predictions) — the only stage that depends on the previous
+//!             batch's WRITEBACK. Coordinator thread.
+//!   EXEC      the AOT-compiled XLA step (PJRT call). Coordinator thread.
+//!   WRITEBACK corrected memory states, GMM observations, neighbor-index
+//!             and mailbox updates. Coordinator thread.
+//! ```
+//!
+//! Steady-state timeline at `depth = 1` (the default; bit-identical to the
+//! sequential loop because PREP is pure and the negative stream is derived
+//! per `(seed, epoch, batch)` rather than drawn from a mutating RNG):
+//!
+//! ```text
+//!   worker:       PREP t+1 | PREP t+2    | PREP t+3    | ...
+//!   coordinator:  SPLICE t | EXEC t | WB t | SPLICE t+1 | EXEC t+1 | ...
+//! ```
+//!
+//! The worker runs up to `depth` batches ahead over a bounded channel
+//! ([`runner::Prefetcher`]); `PrepBatch` scratch is recycled through a free
+//! list, so the steady state allocates nothing.
+//!
+//! ## Bounded staleness (MSPipe-style, off by default)
+//!
+//! With `bounded_staleness = k > 0` the coordinator may additionally run
+//! SPLICE for batches `t+1..t+k` *before* batch `t`'s WRITEBACK lands, so
+//! the memory view a splice reads can lag at most `k` commits. The lag-one
+//! in-graph splice (`c_match`) still patches the single freshest state per
+//! vertex, which is why a small `k` barely moves the loss. `k = 0` keeps
+//! every splice exact and the whole pipeline bit-identical to the
+//! sequential path.
+//!
+//! **Honest caveat:** today EXEC is a *synchronous* PJRT call on the
+//! coordinator thread, so pre-splicing only reorders coordinator work —
+//! it cannot yet overlap anything and is roughly perf-neutral versus
+//! simply raising `depth` (which costs no exactness). The knob is the
+//! semantic seam for the planned multi-stream / async EXEC (see ROADMAP
+//! "Open items"), where splicing batch `t+1` *while* batch `t` runs on a
+//! second stream is exactly what bounded staleness licenses. Until then,
+//! prefer `depth >= 1, staleness = 0`.
+//!
+//! Knobs live in [`crate::config::PipelineConfig`] (`--pipeline-depth` /
+//! `--staleness` on the CLI); overlap metrics (assemble-hidden seconds,
+//! device-idle fraction) land in `EpochReport` and
+//! `rust/benches/pipeline_overlap.rs`.
+
+pub mod prep;
+pub mod runner;
+
+pub use prep::{fill_prep, fill_prep_from, negative_stream, PrepBatch};
+pub use runner::{PrepContext, Prefetcher};

@@ -1,0 +1,224 @@
+//! PREP — the pure stage of the training pipeline.
+//!
+//! Everything a training iteration needs that does **not** read the memory
+//! substrates (store / neighbor index / mailbox / GMM trackers) is computed
+//! here: negative sampling, update-row event features and times, the
+//! lag-one match indices, and the per-role vertex lists the SPLICE stage
+//! gathers memory rows for. Because all of it is a pure function of the
+//! immutable `(EventLog, BatchPlan, seed)` triple, PREP for batches
+//! `t+1..t+depth` can run on a background thread while batch `t` executes
+//! on the device — see [`crate::pipeline`] for the stage diagram.
+
+use std::time::Instant;
+
+use crate::batching::BatchPlan;
+use crate::graph::EventLog;
+use crate::sampler::NegativeSampler;
+use crate::util::rng::{splitmix64, Pcg32};
+
+/// The Send-able half of a host batch: every tensor the step consumes that
+/// is independent of the mutable memory substrates. One `PrepBatch` covers
+/// one iteration `i`: update rows come from the *previous* plan (whose
+/// events are committed in-graph this step), current rows from plan `i`.
+#[derive(Clone, Debug)]
+pub struct PrepBatch {
+    /// Plan index this batch was prepped for (ordering check).
+    pub index: usize,
+    /// Epoch the negative stream was seeded with.
+    pub epoch: usize,
+    /// Sampled negative destination per current event. [b]
+    pub negatives: Vec<u32>,
+    /// Other endpoint per update row (dst for src rows, src for dst rows),
+    /// so SPLICE can batch-gather `u_other_mem`. [2b]
+    pub u_other: Vec<u32>,
+    /// Event time per update row (write-back timestamps + dt baseline). [2b]
+    pub u_t: Vec<f32>,
+    /// Edge features per update row. [2b * d_edge]
+    pub u_efeat: Vec<f32>,
+    /// Write-back mask (copy of the plan's last-occurrence mask). [2b]
+    pub u_wmask: Vec<f32>,
+    /// Vertex ids per role (src/dst/neg) of the current batch. [3][b]
+    pub c_vertex: [Vec<u32>; 3],
+    /// Lag-one match row into the previous batch, -1 when absent. [3][b]
+    pub c_match: [Vec<i32>; 3],
+    /// Event time of the previous-batch row matched above, or -inf when
+    /// there is none (SPLICE takes max with the store clock). [3][b]
+    pub c_prev_t: [Vec<f32>; 3],
+    /// Event time of each current event. [b]
+    pub c_t: Vec<f32>,
+    /// Wall-clock nanoseconds spent filling this batch (overlap metrics).
+    pub prep_ns: u64,
+}
+
+impl PrepBatch {
+    pub fn new(b: usize, d_edge: usize) -> PrepBatch {
+        let u = 2 * b;
+        PrepBatch {
+            index: 0,
+            epoch: 0,
+            negatives: vec![0; b],
+            u_other: vec![0; u],
+            u_t: vec![0.0; u],
+            u_efeat: vec![0.0; u * d_edge],
+            u_wmask: vec![0.0; u],
+            c_vertex: std::array::from_fn(|_| vec![0; b]),
+            c_match: std::array::from_fn(|_| vec![-1; b]),
+            c_prev_t: std::array::from_fn(|_| vec![f32::NEG_INFINITY; b]),
+            c_t: vec![0.0; b],
+            prep_ns: 0,
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.c_t.len()
+    }
+
+    /// Update-row count (2b).
+    pub fn rows(&self) -> usize {
+        self.u_t.len()
+    }
+}
+
+/// Derive the negative-sampling stream for `(seed, epoch, batch)` as a pure
+/// function — NOT from a mutating trainer RNG. This is what lets PREP run
+/// out of order / off-thread and still reproduce the sequential loop
+/// bit-for-bit (the pipeline-vs-sequential equivalence guarantee).
+pub fn negative_stream(seed: u64, epoch: usize, batch: usize) -> Pcg32 {
+    let mut h = seed
+        ^ 0x5EED_FACE_CAFE_F00Du64
+        ^ ((epoch as u64) << 32 | batch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Pcg32::new(splitmix64(&mut h))
+}
+
+/// Fill `prep` for one iteration: sample negatives from `rng`, then build
+/// every pure tensor. `prev`/`cur` must be consecutive plans of `log`.
+/// `prep_ns` covers the whole call — sampling included — so the overlap
+/// metrics see the worker's true busy time.
+pub fn fill_prep(
+    prep: &mut PrepBatch,
+    log: &EventLog,
+    prev: &BatchPlan,
+    cur: &BatchPlan,
+    sampler: &NegativeSampler,
+    rng: &mut Pcg32,
+) {
+    let t0 = Instant::now();
+    sampler.sample_batch(log, cur.range.clone(), rng, &mut prep.negatives);
+    fill_prep_from(prep, log, prev, cur);
+    prep.prep_ns = t0.elapsed().as_nanos() as u64;
+}
+
+/// Like [`fill_prep`] but with `prep.negatives` already populated by the
+/// caller (the eval path samples from its own fixed-seed stream).
+pub fn fill_prep_from(prep: &mut PrepBatch, log: &EventLog, prev: &BatchPlan, cur: &BatchPlan) {
+    let t0 = Instant::now();
+    let b = prev.batch_size();
+    debug_assert_eq!(cur.batch_size(), b);
+    debug_assert_eq!(prep.batch_size(), b);
+    let de = prep.u_efeat.len() / prep.rows().max(1);
+
+    // ---- update rows (the previous batch, committed in-graph this step)
+    for r in 0..prev.rows() {
+        let ev = log.events[prev.upd_event[r] as usize];
+        prep.u_other[r] = if r < b { ev.dst } else { ev.src };
+        prep.u_t[r] = ev.t;
+        if de > 0 {
+            let feat = log.feat(prev.upd_event[r] as usize);
+            if feat.is_empty() {
+                prep.u_efeat[r * de..(r + 1) * de].fill(0.0);
+            } else {
+                prep.u_efeat[r * de..(r + 1) * de].copy_from_slice(feat);
+            }
+        }
+    }
+    prep.u_wmask.copy_from_slice(&prev.wmask);
+
+    // ---- current batch: vertices, lag-one matches, event times
+    for (j, i) in cur.range.clone().enumerate() {
+        let ev = log.events[i];
+        let vertices = [ev.src, ev.dst, prep.negatives[j]];
+        prep.c_t[j] = ev.t;
+        for (ri, &v) in vertices.iter().enumerate() {
+            prep.c_vertex[ri][j] = v;
+            match prev.last_row_of(v) {
+                Some(r) => {
+                    prep.c_match[ri][j] = r as i32;
+                    prep.c_prev_t[ri][j] = log.events[prev.upd_event[r as usize] as usize].t;
+                }
+                None => {
+                    prep.c_match[ri][j] = -1;
+                    prep.c_prev_t[ri][j] = f32::NEG_INFINITY;
+                }
+            }
+        }
+    }
+    prep.prep_ns = t0.elapsed().as_nanos() as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Event, EventLog, NO_LABEL};
+
+    fn log_with(pairs: &[(u32, u32)], d_edge: usize) -> EventLog {
+        let mut log = EventLog::new(16, 8, d_edge);
+        for (i, &(s, d)) in pairs.iter().enumerate() {
+            let feat: Vec<f32> = (0..d_edge).map(|k| (i * 10 + k) as f32).collect();
+            log.push(Event { src: s, dst: d, t: i as f32 + 1.0, label: NO_LABEL }, &feat)
+                .unwrap();
+        }
+        log
+    }
+
+    #[test]
+    fn negative_stream_is_pure_and_decorrelated() {
+        let mut a = negative_stream(7, 2, 13);
+        let mut b = negative_stream(7, 2, 13);
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = negative_stream(7, 2, 14);
+        let same = (0..64).filter(|_| a.next_u32() == c.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn prep_builds_pure_tensors() {
+        let log = log_with(&[(0, 8), (1, 9), (0, 9), (2, 10)], 2);
+        let prev = BatchPlan::build(&log, 0..2);
+        let cur = BatchPlan::build(&log, 2..4);
+        let mut prep = PrepBatch::new(2, 2);
+        prep.negatives.copy_from_slice(&[11, 12]);
+        fill_prep_from(&mut prep, &log, &prev, &cur);
+        // update rows: src sides then dst sides of events 0..2
+        assert_eq!(prep.u_other, vec![8, 9, 0, 1]);
+        assert_eq!(prep.u_t, vec![1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(&prep.u_efeat[0..2], &[0.0, 1.0]);
+        assert_eq!(prep.u_wmask, prev.wmask);
+        // current event 2 = (0, 9): src 0 matched to prev row 0 (event t=1),
+        // dst 9 to prev row 3 (event t=2), negative 11 unmatched
+        assert_eq!(prep.c_vertex[0][0], 0);
+        assert_eq!(prep.c_match[0][0], 0);
+        assert_eq!(prep.c_prev_t[0][0], 1.0);
+        assert_eq!(prep.c_match[1][0], 3);
+        assert_eq!(prep.c_prev_t[1][0], 2.0);
+        assert_eq!(prep.c_vertex[2][0], 11);
+        assert_eq!(prep.c_match[2][0], -1);
+        assert_eq!(prep.c_prev_t[2][0], f32::NEG_INFINITY);
+        assert_eq!(prep.c_t, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn prep_is_deterministic_per_stream() {
+        let log = log_with(&[(0, 8), (1, 9), (2, 10), (3, 11)], 0);
+        let prev = BatchPlan::build(&log, 0..2);
+        let cur = BatchPlan::build(&log, 2..4);
+        let sampler = NegativeSampler::new(&log);
+        let mut a = PrepBatch::new(2, 0);
+        let mut b = PrepBatch::new(2, 0);
+        fill_prep(&mut a, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5));
+        fill_prep(&mut b, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5));
+        assert_eq!(a.negatives, b.negatives);
+        assert_eq!(a.c_prev_t, b.c_prev_t);
+    }
+}

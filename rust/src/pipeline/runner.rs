@@ -1,0 +1,226 @@
+//! The background PREP prefetcher: a worker thread running the pure stage
+//! for plan indices `t+1..t+depth` ahead of the coordinator, over bounded
+//! channels with recycled `PrepBatch` scratch.
+//!
+//! Channel topology (all std::sync::mpsc):
+//!
+//! ```text
+//!   coordinator ── free (unbounded, recycled PrepBatch) ──▶ worker
+//!   worker ────── data (sync_channel(depth), filled)  ────▶ coordinator
+//! ```
+//!
+//! The data channel's bound IS the lookahead window: once the worker is
+//! `depth` batches ahead it blocks in `send` until the coordinator consumes
+//! one. Dropping the [`Prefetcher`] drops the receiver, which errors that
+//! blocked `send` and lets the worker exit; `Drop` then joins it, so an
+//! early coordinator error can never leak the thread or deadlock.
+//!
+//! Everything crossing the channel is plain host data — device handles
+//! (`Engine`/`Step`, `Rc` + PJRT) never leave the coordinator thread (the
+//! Send boundary; see `runtime/mod.rs`).
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::batching::BatchPlan;
+use crate::graph::Dataset;
+use crate::pipeline::prep::{fill_prep, negative_stream, PrepBatch};
+use crate::sampler::NegativeSampler;
+
+/// Everything the PREP worker needs — immutable shared state plus the
+/// epoch's seeding. Deliberately contains no substrate or device state.
+#[derive(Clone)]
+pub struct PrepContext {
+    pub dataset: Arc<Dataset>,
+    pub plans: Arc<Vec<BatchPlan>>,
+    pub sampler: NegativeSampler,
+    pub seed: u64,
+    pub epoch: usize,
+    pub batch_size: usize,
+    pub d_edge: usize,
+}
+
+/// Handle to one epoch's PREP worker. Yields `PrepBatch`es for plan
+/// indices `range` strictly in order.
+pub struct Prefetcher {
+    rx: Option<Receiver<PrepBatch>>,
+    free_tx: Option<Sender<PrepBatch>>,
+    handle: Option<JoinHandle<()>>,
+    /// Batches the worker still owes us — distinguishes a normally drained
+    /// range from a worker that died mid-stream.
+    outstanding: usize,
+}
+
+impl Prefetcher {
+    /// Spawn the worker prepping plan indices `range` (each index `i` pairs
+    /// plans `i-1`/`i`), at most `depth` batches ahead of consumption.
+    pub fn spawn(ctx: PrepContext, range: Range<usize>, depth: usize) -> Result<Prefetcher> {
+        assert!(depth > 0, "Prefetcher requires depth >= 1");
+        assert!(range.start >= 1, "plan index 0 has no predecessor");
+        let outstanding = range.len();
+        let (data_tx, data_rx): (SyncSender<PrepBatch>, _) = sync_channel(depth);
+        let (free_tx, free_rx): (Sender<PrepBatch>, Receiver<PrepBatch>) = channel();
+        let handle = std::thread::Builder::new()
+            .name("pres-prep".into())
+            .spawn(move || {
+                for i in range {
+                    let mut buf = free_rx
+                        .try_recv()
+                        .unwrap_or_else(|_| PrepBatch::new(ctx.batch_size, ctx.d_edge));
+                    let mut rng = negative_stream(ctx.seed, ctx.epoch, i);
+                    fill_prep(
+                        &mut buf,
+                        &ctx.dataset.log,
+                        &ctx.plans[i - 1],
+                        &ctx.plans[i],
+                        &ctx.sampler,
+                        &mut rng,
+                    );
+                    buf.index = i;
+                    buf.epoch = ctx.epoch;
+                    if data_tx.send(buf).is_err() {
+                        return; // coordinator gone (early exit / error path)
+                    }
+                }
+            })
+            .context("spawning PREP worker thread")?;
+        Ok(Prefetcher {
+            rx: Some(data_rx),
+            free_tx: Some(free_tx),
+            handle: Some(handle),
+            outstanding,
+        })
+    }
+
+    /// Block until the next prepped batch arrives (in plan-index order).
+    pub fn recv(&mut self) -> Result<PrepBatch> {
+        match self.rx.as_ref().expect("prefetcher already shut down").recv() {
+            Ok(b) => {
+                self.outstanding -= 1;
+                Ok(b)
+            }
+            Err(_) => bail!(
+                "PREP worker died with {} batch(es) outstanding",
+                self.outstanding
+            ),
+        }
+    }
+
+    /// Non-blocking: the next prepped batch if it is already waiting.
+    /// `Ok(None)` means "nothing ready yet" or "range cleanly drained";
+    /// a worker that died mid-stream is an error, not a quiet None.
+    pub fn try_recv(&mut self) -> Result<Option<PrepBatch>> {
+        match self.rx.as_ref().expect("prefetcher already shut down").try_recv() {
+            Ok(b) => {
+                self.outstanding -= 1;
+                Ok(Some(b))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) if self.outstanding == 0 => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!(
+                "PREP worker died with {} batch(es) outstanding",
+                self.outstanding
+            ),
+        }
+    }
+
+    /// Return a consumed batch's buffers to the worker for reuse (the
+    /// double-buffering half of the design: steady state allocates nothing).
+    pub fn recycle(&self, buf: PrepBatch) {
+        if let Some(tx) = &self.free_tx {
+            let _ = tx.send(buf); // worker done -> buffer is simply dropped
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Receiver first: unblocks a worker stuck in send, making join safe.
+        drop(self.rx.take());
+        drop(self.free_tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::partition;
+    use crate::datagen;
+
+    fn tiny_setup() -> (Arc<Dataset>, Arc<Vec<BatchPlan>>, NegativeSampler) {
+        let ds = Arc::new(datagen::generate(&datagen::tiny_profile(), 3));
+        let plans: Vec<BatchPlan> = partition(0..ds.log.len(), 25)
+            .into_iter()
+            .map(|r| BatchPlan::build(&ds.log, r))
+            .collect();
+        let sampler = NegativeSampler::new(&ds.log);
+        (ds, Arc::new(plans), sampler)
+    }
+
+    #[test]
+    fn prefetched_batches_match_inline_prep_exactly() {
+        let (ds, plans, sampler) = tiny_setup();
+        let n = plans.len().min(8);
+        let ctx = PrepContext {
+            dataset: ds.clone(),
+            plans: plans.clone(),
+            sampler: sampler.clone(),
+            seed: 42,
+            epoch: 1,
+            batch_size: 25,
+            d_edge: ds.log.d_edge,
+        };
+        let mut pf = Prefetcher::spawn(ctx, 1..n, 2).unwrap();
+        for i in 1..n {
+            let got = pf.recv().unwrap();
+            assert_eq!(got.index, i, "batches must arrive in order");
+            let mut want = PrepBatch::new(25, ds.log.d_edge);
+            fill_prep(
+                &mut want,
+                &ds.log,
+                &plans[i - 1],
+                &plans[i],
+                &sampler,
+                &mut negative_stream(42, 1, i),
+            );
+            assert_eq!(got.negatives, want.negatives, "batch {i}");
+            assert_eq!(got.u_other, want.u_other, "batch {i}");
+            assert_eq!(got.u_t, want.u_t, "batch {i}");
+            assert_eq!(got.u_efeat, want.u_efeat, "batch {i}");
+            assert_eq!(got.u_wmask, want.u_wmask, "batch {i}");
+            assert_eq!(got.c_vertex, want.c_vertex, "batch {i}");
+            assert_eq!(got.c_match, want.c_match, "batch {i}");
+            assert_eq!(got.c_prev_t, want.c_prev_t, "batch {i}");
+            assert_eq!(got.c_t, want.c_t, "batch {i}");
+            pf.recycle(got);
+        }
+        assert!(pf.try_recv().unwrap().is_none(), "range must be drained");
+    }
+
+    #[test]
+    fn dropping_early_joins_worker_without_deadlock() {
+        let (ds, plans, sampler) = tiny_setup();
+        let d_edge = ds.log.d_edge;
+        let n = plans.len();
+        let ctx = PrepContext {
+            dataset: ds,
+            plans,
+            sampler,
+            seed: 0,
+            epoch: 0,
+            batch_size: 25,
+            d_edge,
+        };
+        let mut pf = Prefetcher::spawn(ctx, 1..n, 1).unwrap();
+        // consume one, then drop with the worker mid-stream
+        let _ = pf.recv().unwrap();
+        drop(pf); // must not hang
+    }
+}

@@ -6,6 +6,25 @@
 //! stay resident as device buffers across steps — only batch data crosses
 //! the host boundary per step, and outputs the trainer doesn't consume are
 //! never copied back.
+//!
+//! ## The Send boundary
+//!
+//! `Engine` and `Step` are deliberately **not** `Send`/`Sync`: they hold
+//! `Rc`s, a `RefCell` compile cache, and raw PJRT client/executable
+//! handles whose thread affinity the C API does not guarantee. The
+//! pipelined training runtime (`pipeline/`) is designed around that fact
+//! rather than against it:
+//!
+//! * every device handle stays on the **coordinator thread** — SPLICE,
+//!   EXEC and WRITEBACK all run there;
+//! * the background PREP worker receives only plain host data
+//!   (`Arc<Dataset>`, `Arc<Vec<BatchPlan>>`, a cloned `NegativeSampler`)
+//!   and sends back plain `PrepBatch` buffers over mpsc channels;
+//! * nothing in this module is ever captured by a spawned closure, which
+//!   the compiler enforces (`Rc` in `Engine`/`Step` makes them `!Send`).
+//!
+//! Keep it that way: if a future stage needs device access off-thread
+//! (multi-stream exec), give it its own client, don't smuggle this one.
 
 pub mod engine;
 pub mod manifest;

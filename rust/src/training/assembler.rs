@@ -4,6 +4,21 @@
 //!
 //! This is the L3 hot path: every buffer is allocated once per trainer and
 //! reused across steps (§Perf: zero per-step allocation in the assembler).
+//!
+//! Since the pipelined runtime (see [`crate::pipeline`]) the assembly is
+//! split along the Send boundary:
+//!
+//! * the **PREP half** ([`PrepBatch`], owned as `HostBatch::prep`) holds
+//!   every tensor that is pure in `(dataset, plans, seed)` — it can be
+//!   filled by the background prefetch thread and swapped in wholesale via
+//!   [`HostBatch::install_prep`];
+//! * the **SPLICE half** (the remaining `HostBatch` fields) holds every
+//!   tensor gathered from the mutable substrates (memory store, neighbor
+//!   index, mailbox, GMM) and is filled by [`Assembler::splice`] on the
+//!   coordinator thread.
+//!
+//! [`Assembler::fill`] = PREP + SPLICE in place, the sequential
+//! convenience used by the eval path and the `depth = 0` trainer loop.
 
 use anyhow::{bail, Result};
 use xla::Literal;
@@ -12,6 +27,7 @@ use crate::batching::BatchPlan;
 use crate::graph::EventLog;
 use crate::memory::gmm::Role;
 use crate::memory::{GmmTrackers, Mailbox, MemoryStore};
+use crate::pipeline::prep::{fill_prep_from, PrepBatch};
 use crate::runtime::engine::{lit_f32, lit_i32};
 use crate::runtime::{ArtifactSpec, Dims, TensorSpec};
 use crate::sampler::{NeighborEntry, NeighborIndex};
@@ -21,19 +37,19 @@ pub struct HostBatch {
     pub b: usize,
     pub model: String,
     dims: Dims,
-    // update rows (U = 2b)
+    /// The Send-able pure half (negatives, edge features, match indices,
+    /// event times). Swappable with prefetched batches.
+    pub prep: PrepBatch,
+    // ---- splice half: update rows (U = 2b), substrate-dependent
     pub u_self_mem: Vec<f32>,
     pub u_other_mem: Vec<f32>,
-    pub u_efeat: Vec<f32>,
     pub u_dt: Vec<f32>,
     pub u_pred: Vec<f32>,
-    pub u_wmask: Vec<f32>,
     pub u_cmask: Vec<f32>,
-    // current batch
-    pub c_mem: [Vec<f32>; 3],   // src, dst, neg
-    pub c_match: [Vec<i32>; 3],
+    // ---- splice half: current batch
+    pub c_mem: [Vec<f32>; 3], // src, dst, neg
     pub c_dt: [Vec<f32>; 3],
-    // neighbors (tgn: mem+efeat; apan: mail) per role
+    // ---- splice half: neighbors (tgn: mem+efeat; apan: mail) per role
     pub n_key: [Vec<f32>; 3],   // tgn: n_mem [b*K*d]; apan: n_mail [b*K*dm]
     pub n_efeat: [Vec<f32>; 3], // tgn only
     pub n_dt: [Vec<f32>; 3],
@@ -56,15 +72,13 @@ impl HostBatch {
             b,
             model: model.to_string(),
             dims,
+            prep: PrepBatch::new(b, de),
             u_self_mem: vec![0.0; u * d],
             u_other_mem: vec![0.0; u * d],
-            u_efeat: vec![0.0; u * de],
             u_dt: vec![0.0; u],
             u_pred: vec![0.0; u * d],
-            u_wmask: vec![0.0; u],
             u_cmask: vec![0.0; u],
             c_mem: std::array::from_fn(|_| vec![0.0; b * d]),
-            c_match: std::array::from_fn(|_| vec![-1; b]),
             c_dt: std::array::from_fn(|_| vec![0.0; b]),
             n_key: std::array::from_fn(|_| vec![0.0; b * k * key_w]),
             n_efeat: std::array::from_fn(|_| vec![0.0; b * k * de]),
@@ -74,6 +88,13 @@ impl HostBatch {
             pres_on: 0.0,
             nbr_scratch: vec![NeighborEntry::default(); k],
         }
+    }
+
+    /// Swap in a (prefetched) PREP half, returning the old one so the
+    /// caller can recycle its buffers back to the worker.
+    pub fn install_prep(&mut self, prep: PrepBatch) -> PrepBatch {
+        debug_assert_eq!(prep.batch_size(), self.b);
+        std::mem::replace(&mut self.prep, prep)
     }
 
     /// Produce the literal for one manifest data input by name.
@@ -107,7 +128,7 @@ impl HostBatch {
                 .ok_or_else(|| anyhow::anyhow!("bad role in '{name}'"))?;
             return match field {
                 "mem" => lit_f32(&self.c_mem[ri], &spec.shape),
-                "match" => lit_i32(&self.c_match[ri], &spec.shape),
+                "match" => lit_i32(&self.prep.c_match[ri], &spec.shape),
                 "dt" => lit_f32(&self.c_dt[ri], &spec.shape),
                 _ => bail!("unknown current field '{field}'"),
             };
@@ -115,10 +136,10 @@ impl HostBatch {
         match name {
             "u_self_mem" => lit_f32(&self.u_self_mem, &spec.shape),
             "u_other_mem" => lit_f32(&self.u_other_mem, &spec.shape),
-            "u_efeat" => lit_f32(&self.u_efeat, &spec.shape),
+            "u_efeat" => lit_f32(&self.prep.u_efeat, &spec.shape),
             "u_dt" => lit_f32(&self.u_dt, &spec.shape),
             "u_pred" => lit_f32(&self.u_pred, &spec.shape),
-            "u_wmask" => lit_f32(&self.u_wmask, &spec.shape),
+            "u_wmask" => lit_f32(&self.prep.u_wmask, &spec.shape),
             "u_cmask" => lit_f32(&self.u_cmask, &spec.shape),
             "beta" => lit_f32(&[self.beta], &[]),
             "pres_on" => lit_f32(&[self.pres_on], &[]),
@@ -147,8 +168,10 @@ impl Assembler {
         Assembler { dims }
     }
 
-    /// Fill `host` for one iteration: `prev` is the batch whose events
-    /// update memory in-graph; `cur` + `negatives` is the predicted batch.
+    /// Fill `host` for one iteration in place (PREP + SPLICE): `prev` is
+    /// the batch whose events update memory in-graph; `cur` + `negatives`
+    /// is the predicted batch. Sequential convenience — the pipelined loop
+    /// installs a prefetched PREP half and calls [`Assembler::splice`].
     #[allow(clippy::too_many_arguments)]
     pub fn fill(
         &self,
@@ -164,80 +187,83 @@ impl Assembler {
         pres_on: bool,
         beta: f32,
     ) {
+        debug_assert_eq!(negatives.len(), host.b);
+        host.prep.negatives.copy_from_slice(negatives);
+        fill_prep_from(&mut host.prep, log, prev, cur);
+        self.splice(host, log, prev, store, nbr, mailbox, gmm, pres_on, beta);
+    }
+
+    /// SPLICE: fill every substrate-dependent tensor from `host.prep` plus
+    /// the current memory view. The ONLY stage that must observe the
+    /// previous batch's write-back — under bounded staleness it may run
+    /// against a view lagging at most `k` commits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn splice(
+        &self,
+        host: &mut HostBatch,
+        log: &EventLog,
+        prev: &BatchPlan,
+        store: &MemoryStore,
+        nbr: &NeighborIndex,
+        mailbox: Option<&Mailbox>,
+        gmm: &GmmTrackers,
+        pres_on: bool,
+        beta: f32,
+    ) {
         let d = self.dims.d_mem;
-        let de = self.dims.d_edge;
         let b = host.b;
         debug_assert_eq!(prev.batch_size(), b);
-        debug_assert_eq!(cur.batch_size(), b);
-        debug_assert_eq!(negatives.len(), b);
+        debug_assert_eq!(host.prep.rows(), prev.rows());
 
         host.pres_on = if pres_on { 1.0 } else { 0.0 };
         host.beta = beta;
 
-        // ---- update rows from the previous batch
-        for r in 0..prev.rows() {
-            let v = prev.upd_vertex[r];
-            let ev = log.events[prev.upd_event[r] as usize];
-            let other = if r < b { ev.dst } else { ev.src };
-            let dt = store.dt(v, ev.t);
-            host.u_self_mem[r * d..(r + 1) * d].copy_from_slice(store.row(v));
-            host.u_other_mem[r * d..(r + 1) * d].copy_from_slice(store.row(other));
-            if de > 0 {
-                let feat = log.feat(prev.upd_event[r] as usize);
-                if feat.is_empty() {
-                    host.u_efeat[r * de..(r + 1) * de].fill(0.0);
-                } else {
-                    host.u_efeat[r * de..(r + 1) * de].copy_from_slice(feat);
-                }
-            }
-            host.u_dt[r] = dt;
-            let pred_row = &mut host.u_pred[r * d..(r + 1) * d];
-            if pres_on {
-                let role = if r < b { Role::Src } else { Role::Dst };
-                gmm.predict_into(v, role, store.row(v), dt, pred_row);
-            } else {
-                pred_row.fill(0.0);
-            }
-        }
-        host.u_wmask.copy_from_slice(&prev.wmask);
+        // ---- update rows: batched gathers, then the per-row scalar pass
+        store.gather_rows_into(&prev.upd_vertex, &mut host.u_self_mem);
+        store.gather_rows_into(&host.prep.u_other, &mut host.u_other_mem);
         // correct only rows that (a) suffer temporal discontinuity and
         // (b) have a prediction backed by enough clean observations —
         // an uninformed prediction would inject noise instead of removing it
         const MIN_OBS: u32 = 3;
         for r in 0..prev.rows() {
+            let v = prev.upd_vertex[r];
             let role = if r < b { Role::Src } else { Role::Dst };
-            host.u_cmask[r] = if prev.collided[r] == 1.0
-                && gmm.count(prev.upd_vertex[r], role) >= MIN_OBS
-            {
-                1.0
+            let dt = (host.prep.u_t[r] - store.last_update(v)).max(0.0);
+            host.u_dt[r] = dt;
+            let pred_row = &mut host.u_pred[r * d..(r + 1) * d];
+            if pres_on {
+                gmm.predict_into(v, role, store.row(v), dt, pred_row);
             } else {
-                0.0
-            };
+                pred_row.fill(0.0);
+            }
+            host.u_cmask[r] =
+                if prev.collided[r] == 1.0 && gmm.count(v, role) >= MIN_OBS {
+                    1.0
+                } else {
+                    0.0
+                };
         }
 
         // ---- current batch rows
-        for (j, i) in cur.range.clone().enumerate() {
-            let ev = log.events[i];
-            let vertices = [ev.src, ev.dst, negatives[j]];
+        for ri in 0..3 {
+            store.gather_rows_into(&host.prep.c_vertex[ri], &mut host.c_mem[ri]);
+        }
+        for j in 0..b {
+            let t_now = host.prep.c_t[j];
+            let vertices = [
+                host.prep.c_vertex[0][j],
+                host.prep.c_vertex[1][j],
+                host.prep.c_vertex[2][j],
+            ];
             for (ri, &v) in vertices.iter().enumerate() {
-                host.c_mem[ri][j * d..(j + 1) * d].copy_from_slice(store.row(v));
                 // dt vs the vertex's true latest update: if the previous
                 // batch updated it, that event's time is fresher than the
                 // store clock (write-back happens after this call)
-                let last = match prev.last_row_of(v) {
-                    Some(r) => log.events[prev.upd_event[r as usize] as usize]
-                        .t
-                        .max(store.last_update(v)),
-                    None => store.last_update(v),
-                };
-                host.c_dt[ri][j] = (ev.t - last).max(0.0);
-            }
-            // match indices (the in-graph lag-one splice)
-            for (ri, &v) in vertices.iter().enumerate() {
-                host.c_match[ri][j] = prev.last_row_of(v).map_or(-1, |r| r as i32);
+                let last = host.prep.c_prev_t[ri][j].max(store.last_update(v));
+                host.c_dt[ri][j] = (t_now - last).max(0.0);
             }
             // neighbor / mailbox tensors
-            self.fill_context(host, log, store, nbr, mailbox, j, ev.t, &vertices);
+            self.fill_context(host, log, store, nbr, mailbox, j, t_now, &vertices);
         }
     }
 
@@ -310,9 +336,12 @@ impl Assembler {
         }
     }
 
-    /// Commit a finished step: write corrected states back for the winning
-    /// rows, feed the GMM trackers, register the batch's events in the
-    /// neighbor index, and (APAN) deliver mails.
+    /// WRITEBACK: commit a finished step — feed the GMM trackers, scatter
+    /// corrected states back for the winning rows, register the batch's
+    /// events in the neighbor index, and (APAN) deliver mails. `host` must
+    /// be the staging the step ran from (its PREP half carries the
+    /// write-back timestamps, its SPLICE half the pre-step states the
+    /// trackers observe transitions against).
     #[allow(clippy::too_many_arguments)]
     pub fn commit(
         &self,
@@ -329,34 +358,31 @@ impl Assembler {
     ) {
         let d = self.dims.d_mem;
         let b = prev.batch_size();
-        for r in 0..prev.rows() {
-            if prev.wmask[r] != 1.0 {
-                continue;
-            }
-            let v = prev.upd_vertex[r];
-            let t = log.events[prev.upd_event[r] as usize].t;
-            let row = &u_sbar[r * d..(r + 1) * d];
-            if pres_on && prev.collided[r] == 0.0 {
+        debug_assert_eq!(host.prep.rows(), prev.rows());
+        if pres_on {
+            for r in 0..prev.rows() {
                 // clean transitions only: rows without pending events are
                 // exact per-event updates, the filter's "good measurements";
                 // collided rows are the noisy ones being corrected.
+                if prev.wmask[r] != 1.0 || prev.collided[r] != 0.0 {
+                    continue;
+                }
                 let role = if r < b { Role::Src } else { Role::Dst };
                 let s_t1 = &host.u_self_mem[r * d..(r + 1) * d];
-                gmm.observe(v, role, s_t1, row, host.u_dt[r]);
+                let row = &u_sbar[r * d..(r + 1) * d];
+                gmm.observe(prev.upd_vertex[r], role, s_t1, row, host.u_dt[r]);
             }
-            store.scatter(v, row, t);
         }
-        for (r, i) in prev.range.clone().enumerate() {
+        store.scatter_rows(&prev.upd_vertex, u_sbar, &host.prep.u_t, Some(&prev.wmask));
+        for i in prev.range.clone() {
             let ev = log.events[i];
             nbr.insert_event(ev.src, ev.dst, ev.t, i as u32);
-            let _ = r;
         }
         if let (Some(mb), Some(msgs)) = (mailbox, u_msg) {
             let dm = self.dims.d_msg;
             for r in 0..prev.rows() {
                 let v = prev.upd_vertex[r];
-                let t = log.events[prev.upd_event[r] as usize].t;
-                mb.deliver(v, &msgs[r * dm..(r + 1) * dm], t);
+                mb.deliver(v, &msgs[r * dm..(r + 1) * dm], host.prep.u_t[r]);
             }
         }
     }
@@ -393,6 +419,14 @@ mod tests {
         Dataset::with_chrono_split("toy", log)
     }
 
+    /// Populate the PREP half the way the real flow does before a commit
+    /// (the write-back needs the update-row timestamps).
+    fn prep_times(host: &mut HostBatch, ds: &Dataset, prev: &BatchPlan) {
+        for r in 0..prev.rows() {
+            host.prep.u_t[r] = ds.log.events[prev.upd_event[r] as usize].t;
+        }
+    }
+
     #[test]
     fn fill_gathers_memory_and_matches() {
         let ds = toy_dataset();
@@ -413,14 +447,59 @@ mod tests {
         // u_dt = t_event - last_update = 1.0 - 0.5
         assert_eq!(host.u_dt[0], 0.5);
         // current event 2 is (0, 5): src 0 matched to prev row 0, dst 5 to row 3
-        assert_eq!(host.c_match[0][0], 0);
-        assert_eq!(host.c_match[1][0], 3);
+        assert_eq!(host.prep.c_match[0][0], 0);
+        assert_eq!(host.prep.c_match[1][0], 3);
         // negative 6 is not in prev batch
-        assert_eq!(host.c_match[2][0], -1);
+        assert_eq!(host.prep.c_match[2][0], -1);
         // std mode: predictions zeroed
         assert!(host.u_pred.iter().all(|&x| x == 0.0));
         // edge features flow through
-        assert_eq!(&host.u_efeat[0..2], &[0.0, -0.0]);
+        assert_eq!(&host.prep.u_efeat[0..2], &[0.0, -0.0]);
+    }
+
+    #[test]
+    fn split_prep_plus_splice_equals_fill() {
+        // the pipeline-vs-sequential equivalence at the host-buffer level:
+        // installing a separately-prepped half and splicing must reproduce
+        // the one-shot fill exactly, field for field.
+        let ds = toy_dataset();
+        let dims = dims();
+        let mut store = MemoryStore::new(8, dims.d_mem);
+        store.scatter(0, &[1.0, 2.0, 3.0, 4.0], 0.5);
+        store.scatter(5, &[-1.0, -2.0, -3.0, -4.0], 0.25);
+        let mut nbr = NeighborIndex::new(8, dims.k_nbr);
+        nbr.insert_event(0, 4, 0.5, 0);
+        let gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let prev = BatchPlan::build(&ds.log, 0..2);
+        let cur = BatchPlan::build(&ds.log, 2..4);
+        let asm = Assembler::new(dims);
+
+        let mut a = HostBatch::new("tgn", 2, dims);
+        asm.fill(
+            &mut a, &ds.log, &prev, &cur, &[6, 7], &store, &nbr, None, &gmm, true, 0.1,
+        );
+
+        let mut detached = crate::pipeline::PrepBatch::new(2, dims.d_edge);
+        detached.negatives.copy_from_slice(&[6, 7]);
+        crate::pipeline::fill_prep_from(&mut detached, &ds.log, &prev, &cur);
+        let mut b = HostBatch::new("tgn", 2, dims);
+        let _old = b.install_prep(detached);
+        asm.splice(&mut b, &ds.log, &prev, &store, &nbr, None, &gmm, true, 0.1);
+
+        assert_eq!(a.u_self_mem, b.u_self_mem);
+        assert_eq!(a.u_other_mem, b.u_other_mem);
+        assert_eq!(a.u_dt, b.u_dt);
+        assert_eq!(a.u_pred, b.u_pred);
+        assert_eq!(a.u_cmask, b.u_cmask);
+        assert_eq!(a.c_mem, b.c_mem);
+        assert_eq!(a.c_dt, b.c_dt);
+        assert_eq!(a.n_key, b.n_key);
+        assert_eq!(a.n_efeat, b.n_efeat);
+        assert_eq!(a.n_dt, b.n_dt);
+        assert_eq!(a.n_mask, b.n_mask);
+        assert_eq!(a.prep.c_match, b.prep.c_match);
+        assert_eq!(a.prep.u_wmask, b.prep.u_wmask);
+        assert_eq!(a.prep.u_efeat, b.prep.u_efeat);
     }
 
     #[test]
@@ -432,7 +511,8 @@ mod tests {
         let mut gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
         let prev = BatchPlan::build(&ds.log, 0..2);
         let asm = Assembler::new(dims);
-        let host = HostBatch::new("tgn", 2, dims);
+        let mut host = HostBatch::new("tgn", 2, dims);
+        prep_times(&mut host, &ds, &prev);
         let u_sbar: Vec<f32> = (0..prev.rows() * dims.d_mem).map(|x| x as f32).collect();
         asm.commit(
             &host, &ds.log, &prev, &u_sbar, None, &mut store, &mut nbr, None, &mut gmm, false,
@@ -458,7 +538,8 @@ mod tests {
         let mut gmm = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
         let prev = BatchPlan::build(&ds.log, 0..3);
         let asm = Assembler::new(dims);
-        let host = HostBatch::new("tgn", 3, dims);
+        let mut host = HostBatch::new("tgn", 3, dims);
+        prep_times(&mut host, &ds, &prev);
         let u_sbar: Vec<f32> = (0..prev.rows() * dims.d_mem).map(|x| x as f32).collect();
         asm.commit(
             &host, &ds.log, &prev, &u_sbar, None, &mut store, &mut nbr, None, &mut gmm, false,

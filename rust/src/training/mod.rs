@@ -6,6 +6,11 @@
 //! current batch is predicted through the lag-one splice, and Adam updates
 //! the parameters — see python/compile/model.py for the fused step and
 //! DESIGN.md §1 for the dataflow diagram.
+//!
+//! Iterations are staged as PREP / SPLICE / EXEC / WRITEBACK and, by
+//! default, pipelined: a background thread preps batch `t+1..t+depth`
+//! while batch `t` executes (see [`crate::pipeline`] for the stage
+//! diagram, staleness semantics, and the equivalence guarantee).
 
 pub mod assembler;
 pub mod trainer;

@@ -1,7 +1,18 @@
-//! The epoch/batch loop (paper Algorithm 1 & 2) + evaluation.
+//! The epoch/batch loop (paper Algorithm 1 & 2) + evaluation, staged as a
+//! PREP / SPLICE / EXEC / WRITEBACK pipeline (see [`crate::pipeline`]).
+//!
+//! With `pipeline.depth > 0` (default 1) the pure PREP stage runs on a
+//! background thread up to `depth` batches ahead; the coordinator thread
+//! keeps the device handles and runs SPLICE → EXEC → WRITEBACK. At
+//! `depth = 1, bounded_staleness = 0` the pipelined loop is bit-identical
+//! to the sequential `depth = 0` path (same pure negative streams, same
+//! stage order) — only the thread PREP runs on differs.
 
+use std::collections::VecDeque;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 use xla::Literal;
@@ -14,8 +25,9 @@ use crate::memory::{GmmTrackers, Mailbox, MemoryStore};
 use crate::metrics::ranking::link_ap;
 use crate::metrics::EpochTimer;
 use crate::model::ModelState;
+use crate::pipeline::{fill_prep, negative_stream, PrepBatch, PrepContext, Prefetcher};
 use crate::runtime::engine::{fetch_f32, fetch_scalar, lit_scalar};
-use crate::runtime::{Engine, Step};
+use crate::runtime::{ArtifactSpec, Engine, Step};
 use crate::sampler::{NegativeSampler, NeighborIndex};
 use crate::training::{Assembler, HostBatch};
 use crate::util::rng::Pcg32;
@@ -33,6 +45,15 @@ pub struct EpochReport {
     pub assemble_secs: f64,
     pub execute_secs: f64,
     pub writeback_secs: f64,
+    /// Background PREP busy time (0 when running sequentially).
+    pub prep_secs: f64,
+    /// Coordinator time blocked waiting on the PREP worker.
+    pub prep_stall_secs: f64,
+    /// Host assembly work hidden behind device execution:
+    /// `prep_secs - prep_stall_secs`, clamped at 0.
+    pub assemble_hidden_secs: f64,
+    /// Fraction of the epoch the device spent NOT executing a step.
+    pub device_idle_frac: f64,
     pub events_per_sec: f64,
     pub gamma: f32,
 }
@@ -54,22 +75,30 @@ pub struct RunReport {
 }
 
 /// The training coordinator for one (dataset, model, batch, mode) run.
+///
+/// Owns the device handles (`Rc<Engine>` / `Rc<Step>` — deliberately NOT
+/// Send, see `runtime/mod.rs` on the Send boundary) and the mutable
+/// substrates. Only plain prepped host data ever crosses to/from the
+/// background PREP thread.
 pub struct Trainer {
     pub cfg: ExperimentConfig,
     pub engine: Rc<Engine>,
-    pub dataset: Rc<Dataset>,
+    pub dataset: Arc<Dataset>,
     state: ModelState,
     store: MemoryStore,
     nbr: NeighborIndex,
     mailbox: Option<Mailbox>,
     gmm: GmmTrackers,
     assembler: Assembler,
-    host: HostBatch,
+    /// Rotating host staging slots: slot `i % hosts.len()` stages batch
+    /// `i`. One slot suffices at `bounded_staleness = 0`; staleness `k`
+    /// keeps `k + 1` slots alive so pre-spliced batches don't clobber the
+    /// one in flight.
+    hosts: Vec<HostBatch>,
     train_step: Rc<Step>,
     eval_step: Rc<Step>,
-    plans: Vec<BatchPlan>,
+    plans: Arc<Vec<BatchPlan>>,
     neg_sampler: NegativeSampler,
-    rng: Pcg32,
     // reusable output scratch
     sbar_scratch: Vec<f32>,
     msg_scratch: Vec<f32>,
@@ -83,7 +112,7 @@ impl Trainer {
     /// from the seed), engine, compiled steps, substrates.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
         let engine = Rc::new(Engine::new(Path::new(&cfg.artifacts_dir))?);
-        let dataset = Rc::new(Self::make_dataset(cfg)?);
+        let dataset = Arc::new(Self::make_dataset(cfg)?);
         Self::with_shared(cfg, engine, dataset)
     }
 
@@ -91,7 +120,7 @@ impl Trainer {
     pub fn with_shared(
         cfg: &ExperimentConfig,
         engine: Rc<Engine>,
-        dataset: Rc<Dataset>,
+        dataset: Arc<Dataset>,
     ) -> Result<Trainer> {
         cfg.validate()?;
         let dims = engine.manifest().dims;
@@ -105,9 +134,12 @@ impl Trainer {
         let mailbox = (cfg.model == "apan").then(|| Mailbox::new(n_nodes, dims.k_nbr, dims.d_msg));
         // plans are pure functions of (log, b): compute once, reuse across
         // epochs (cfg.prefetch=false rebuilds per epoch for the ablation)
-        let plans = Self::build_plans(&dataset, b);
+        let plans = Arc::new(Self::build_plans(&dataset, b));
         let neg_sampler = NegativeSampler::new(&dataset.log);
         let u = 2 * b;
+        let hosts = (0..cfg.pipeline.bounded_staleness + 1)
+            .map(|_| HostBatch::new(&cfg.model, b, dims))
+            .collect();
         Ok(Trainer {
             cfg: cfg.clone(),
             state,
@@ -116,12 +148,11 @@ impl Trainer {
             mailbox,
             gmm: GmmTrackers::new(n_nodes, dims.d_mem, cfg.anchor_fraction, cfg.seed),
             assembler: Assembler::new(dims),
-            host: HostBatch::new(&cfg.model, b, dims),
+            hosts,
             train_step,
             eval_step,
             plans,
             neg_sampler,
-            rng: Pcg32::new(cfg.seed ^ 0x7E57),
             sbar_scratch: vec![0.0; u * dims.d_mem],
             msg_scratch: vec![0.0; u * dims.d_msg],
             logit_scratch: [vec![0.0; b], vec![0.0; b]],
@@ -167,24 +198,41 @@ impl Trainer {
         self.gmm.reset();
         if !self.cfg.prefetch {
             // ablation: rebuild plans every epoch instead of reusing
-            self.plans = Self::build_plans(&self.dataset, self.cfg.batch_size);
+            self.plans = Arc::new(Self::build_plans(&self.dataset, self.cfg.batch_size));
+        }
+        // cfg.pipeline may have been tightened after construction (benches
+        // sweep depth/staleness on one trainer): grow the slot pool to fit
+        let slots = self.cfg.pipeline.bounded_staleness + 1;
+        while self.hosts.len() < slots {
+            self.hosts
+                .push(HostBatch::new(&self.cfg.model, self.cfg.batch_size, self.assembler.dims));
         }
     }
 
-    /// One training epoch (Algorithm 2 body). Returns the epoch report with
+    /// One training epoch (Algorithm 2 body), pipelined when
+    /// `cfg.pipeline.depth > 0`. Returns the epoch report with
     /// val_ap = NaN (the caller decides whether to evaluate).
     pub fn train_epoch(&mut self, epoch: usize) -> Result<EpochReport> {
         self.reset_epoch_state();
         let n_train = self.train_plan_count();
         let mut timer = EpochTimer::default();
         timer.start_epoch();
-        let mut losses = Vec::with_capacity(n_train);
-        let mut bces = Vec::with_capacity(n_train);
-        let mut cohs = Vec::with_capacity(n_train);
-        let mut aps = Vec::with_capacity(n_train);
 
-        for i in 1..n_train {
-            let (loss, bce, coh, ap) = self.run_train_iteration(i, epoch, &mut timer)?;
+        let results = if self.cfg.pipeline.depth > 0 && n_train > 1 {
+            self.run_pipelined_epoch(epoch, n_train, &mut timer)?
+        } else {
+            let mut out = Vec::with_capacity(n_train.saturating_sub(1));
+            for i in 1..n_train {
+                out.push(self.run_train_iteration(i, epoch, &mut timer)?);
+            }
+            out
+        };
+
+        let mut losses = Vec::with_capacity(results.len());
+        let mut bces = Vec::with_capacity(results.len());
+        let mut cohs = Vec::with_capacity(results.len());
+        let mut aps = Vec::with_capacity(results.len());
+        for (loss, bce, coh, ap) in results {
             losses.push(loss);
             bces.push(bce);
             cohs.push(coh);
@@ -206,38 +254,145 @@ impl Trainer {
             assemble_secs: timer.assemble.as_secs_f64(),
             execute_secs: timer.execute.as_secs_f64(),
             writeback_secs: timer.writeback.as_secs_f64(),
+            prep_secs: timer.prep_busy.as_secs_f64(),
+            prep_stall_secs: timer.prep_stall.as_secs_f64(),
+            assemble_hidden_secs: timer.assemble_hidden().as_secs_f64(),
+            device_idle_frac: timer.device_idle_fraction(),
             events_per_sec: timer.events_per_sec(n_train.saturating_sub(1) * self.cfg.batch_size),
             gamma: self.state.gamma().unwrap_or(f32::NAN),
         })
     }
 
+    /// The pipelined epoch body: a background PREP worker feeds the
+    /// coordinator's SPLICE → EXEC → WRITEBACK loop over bounded channels.
+    /// With `bounded_staleness = k > 0` up to `k` future batches are
+    /// spliced before the in-flight write-back lands (their memory view
+    /// lags at most `k` commits).
+    fn run_pipelined_epoch(
+        &mut self,
+        epoch: usize,
+        n_train: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<Vec<(f64, f64, f64, f64)>> {
+        let stale = self.cfg.pipeline.bounded_staleness;
+        let slots = self.hosts.len();
+        let ctx = PrepContext {
+            dataset: self.dataset.clone(),
+            plans: self.plans.clone(),
+            sampler: self.neg_sampler.clone(),
+            seed: self.cfg.seed,
+            epoch,
+            batch_size: self.cfg.batch_size,
+            d_edge: self.assembler.dims.d_edge,
+        };
+        let mut pf = Prefetcher::spawn(ctx, 1..n_train, self.cfg.pipeline.depth)?;
+        let mut presliced: VecDeque<usize> = VecDeque::new();
+        let mut results = Vec::with_capacity(n_train.saturating_sub(1));
+
+        for i in 1..n_train {
+            // ---- SPLICE (unless already pre-spliced under staleness)
+            if presliced.front() == Some(&i) {
+                presliced.pop_front();
+            } else {
+                let t0 = Instant::now();
+                let prep = pf.recv()?;
+                timer.prep_stall += t0.elapsed();
+                self.install_and_splice(prep, i, &pf, timer)?;
+            }
+
+            // ---- EXEC
+            let (spec, mut outputs) = self.exec_train_slot(i % slots, timer)?;
+
+            // ---- pre-SPLICE the staleness window before this write-back
+            while stale > 0 && presliced.len() < stale {
+                let next = i + presliced.len() + 1;
+                if next >= n_train {
+                    break;
+                }
+                let Some(prep) = pf.try_recv()? else { break };
+                self.install_and_splice(prep, next, &pf, timer)?;
+                presliced.push_back(next);
+            }
+
+            // ---- WRITEBACK
+            let t2 = Instant::now();
+            self.state.absorb_outputs(&mut outputs);
+            let metrics = self.consume_step_outputs(&spec, &outputs, i % slots, i, true)?;
+            timer.writeback += t2.elapsed();
+            results.push(metrics);
+        }
+        Ok(results)
+    }
+
+    /// One sequential iteration (`pipeline.depth = 0`): PREP runs inline on
+    /// the coordinator, inside the classic assemble phase.
     fn run_train_iteration(
         &mut self,
         i: usize,
         epoch: usize,
         timer: &mut EpochTimer,
     ) -> Result<(f64, f64, f64, f64)> {
-        let b = self.cfg.batch_size;
-        let spec = self.train_step.spec.clone();
-        let n_params = self.state.len();
+        // -------- PREP + SPLICE (assemble)
+        let t0 = Instant::now();
+        {
+            let prev = &self.plans[i - 1];
+            let cur = &self.plans[i];
+            let host = &mut self.hosts[0];
+            let mut rng = negative_stream(self.cfg.seed, epoch, i);
+            fill_prep(&mut host.prep, &self.dataset.log, prev, cur, &self.neg_sampler, &mut rng);
+            host.prep.index = i;
+            host.prep.epoch = epoch;
+        }
+        self.splice_slot(0, i);
+        timer.assemble += t0.elapsed();
 
-        // -------- assemble
-        let t0 = std::time::Instant::now();
-        let mut negatives = vec![0u32; b];
-        let mut neg_rng = self.rng.split((epoch * 1_000_003 + i) as u64);
-        self.neg_sampler.sample_batch(
-            &self.dataset.log,
-            self.plans[i].range.clone(),
-            &mut neg_rng,
-            &mut negatives,
+        // -------- EXEC
+        let (spec, mut outputs) = self.exec_train_slot(0, timer)?;
+
+        // -------- WRITEBACK + metrics
+        let t2 = Instant::now();
+        self.state.absorb_outputs(&mut outputs);
+        let metrics = self.consume_step_outputs(&spec, &outputs, 0, i, true)?;
+        timer.writeback += t2.elapsed();
+        Ok(metrics)
+    }
+
+    /// Shared receive-side handling for a prepped batch: order check,
+    /// overlap accounting, install into its rotating slot (recycling the
+    /// displaced scratch to the worker), and SPLICE against the current
+    /// memory view.
+    fn install_and_splice(
+        &mut self,
+        prep: PrepBatch,
+        idx: usize,
+        pf: &Prefetcher,
+        timer: &mut EpochTimer,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            prep.index == idx,
+            "pipeline out of order: got prep for batch {}, expected {}",
+            prep.index,
+            idx
         );
-        let (prev, cur) = (&self.plans[i - 1], &self.plans[i]);
-        self.assembler.fill(
-            &mut self.host,
+        timer.prep_busy += Duration::from_nanos(prep.prep_ns);
+        let t = Instant::now();
+        let slot = idx % self.hosts.len();
+        let old = self.hosts[slot].install_prep(prep);
+        pf.recycle(old);
+        self.splice_slot(slot, idx);
+        timer.assemble += t.elapsed();
+        Ok(())
+    }
+
+    /// SPLICE host slot `slot` for plan index `i` against the current
+    /// memory view.
+    fn splice_slot(&mut self, slot: usize, i: usize) {
+        let prev = &self.plans[i - 1];
+        let host = &mut self.hosts[slot];
+        self.assembler.splice(
+            host,
             &self.dataset.log,
             prev,
-            cur,
-            &negatives,
             &self.store,
             &self.nbr,
             self.mailbox.as_ref(),
@@ -245,7 +400,19 @@ impl Trainer {
             self.cfg.pres,
             self.cfg.beta, // smoothing and correction are independent (Fig. 17)
         );
-        let data_lits = self.host.pack(&spec, 3 * n_params, 2)?;
+    }
+
+    /// Pack host slot `slot` and run the train step (pack time lands in the
+    /// assemble bucket, the PJRT call in execute).
+    fn exec_train_slot(
+        &mut self,
+        slot: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<(ArtifactSpec, Vec<Literal>)> {
+        let spec = self.train_step.spec.clone();
+        let n_params = self.state.len();
+        let t0 = Instant::now();
+        let data_lits = self.hosts[slot].pack(&spec, 3 * n_params, 2)?;
         let lr_lit = lit_scalar(self.cfg.lr)?;
         let t_lit = lit_scalar((self.state.step + 1) as f32)?;
         let args: Vec<&Literal> = self
@@ -258,25 +425,19 @@ impl Trainer {
             .chain([&lr_lit, &t_lit])
             .collect();
         timer.assemble += t0.elapsed();
-
-        // -------- execute
-        let t1 = std::time::Instant::now();
-        let mut outputs = self.train_step.run(&args)?;
+        let t1 = Instant::now();
+        let outputs = self.train_step.run(&args)?;
         timer.execute += t1.elapsed();
-
-        // -------- write-back + metrics
-        let t2 = std::time::Instant::now();
-        self.state.absorb_outputs(&mut outputs);
-        let (loss, bce, coh, ap) = self.consume_step_outputs(&spec, &outputs, i, true)?;
-        timer.writeback += t2.elapsed();
-        Ok((loss, bce, coh, ap))
+        Ok((spec, outputs))
     }
 
-    /// Shared post-step handling: write-back, trackers, metrics.
+    /// Shared post-step handling: write-back, trackers, metrics. `slot` is
+    /// the host staging the step ran from.
     fn consume_step_outputs(
         &mut self,
-        spec: &crate::runtime::ArtifactSpec,
+        spec: &ArtifactSpec,
         outputs: &[Literal],
+        slot: usize,
         i: usize,
         train: bool,
     ) -> Result<(f64, f64, f64, f64)> {
@@ -293,8 +454,9 @@ impl Trainer {
             None
         };
         let prev = &self.plans[i - 1];
+        let host = &self.hosts[slot];
         self.assembler.commit(
-            &self.host,
+            host,
             &self.dataset.log,
             prev,
             &self.sbar_scratch,
@@ -318,7 +480,8 @@ impl Trainer {
     /// Evaluate the span [lo, hi) of event indices in one pass. Memory
     /// keeps evolving (the standard TGN protocol). Returns per-event
     /// (event index, pos logit, neg logit) plus collected (h_src, label)
-    /// rows for node classification.
+    /// rows for node classification. Always sequential: eval is not on the
+    /// throughput-critical path and reuses host slot 0.
     fn eval_range(
         &mut self,
         lo: usize,
@@ -348,25 +511,27 @@ impl Trainer {
                 &mut neg_rng,
                 &mut negatives,
             );
-            let (prev, cur) = (&self.plans[i - 1], &self.plans[i]);
-            self.assembler.fill(
-                &mut self.host,
-                &self.dataset.log,
-                prev,
-                cur,
-                &negatives,
-                &self.store,
-                &self.nbr,
-                self.mailbox.as_ref(),
-                &self.gmm,
-                self.cfg.pres,
-                0.0, // no loss at eval time
-            );
-            let data_lits = self.host.pack(&spec, self.state.len(), 0)?;
+            {
+                let (prev, cur) = (&self.plans[i - 1], &self.plans[i]);
+                self.assembler.fill(
+                    &mut self.hosts[0],
+                    &self.dataset.log,
+                    prev,
+                    cur,
+                    &negatives,
+                    &self.store,
+                    &self.nbr,
+                    self.mailbox.as_ref(),
+                    &self.gmm,
+                    self.cfg.pres,
+                    0.0, // no loss at eval time
+                );
+            }
+            let data_lits = self.hosts[0].pack(&spec, self.state.len(), 0)?;
             let args: Vec<&Literal> =
                 self.state.params.iter().chain(data_lits.iter()).collect();
             let outputs = self.eval_step.run(&args)?;
-            let (_, _, _, _) = self.consume_step_outputs(&spec, &outputs, i, false)?;
+            let (_, _, _, _) = self.consume_step_outputs(&spec, &outputs, 0, i, false)?;
             for (j, ev_i) in self.plans[i].range.clone().enumerate() {
                 if ev_i >= lo && ev_i < hi {
                     logits.push((ev_i, self.logit_scratch[0][j], self.logit_scratch[1][j]));

@@ -58,6 +58,15 @@ impl Args {
         }
     }
 
+    /// Present-or-absent variant for options whose default lives elsewhere
+    /// (e.g. `--pipeline-depth` overriding `PipelineConfig::default()`).
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            Some(v) => Ok(Some(v.parse()?)),
+            None => Ok(None),
+        }
+    }
+
     pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
         match self.get(name) {
             Some(v) => Ok(v.parse()?),
@@ -103,5 +112,14 @@ mod tests {
         let a = parse(&[], &[]);
         assert_eq!(a.get_or("dataset", "wiki"), "wiki");
         assert_eq!(a.f32_or("beta", 0.1).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn usize_opt_distinguishes_absent_from_set() {
+        let a = parse(&["--pipeline-depth", "2"], &[]);
+        assert_eq!(a.usize_opt("pipeline-depth").unwrap(), Some(2));
+        assert_eq!(a.usize_opt("staleness").unwrap(), None);
+        let bad = parse(&["--pipeline-depth", "two"], &[]);
+        assert!(bad.usize_opt("pipeline-depth").is_err());
     }
 }

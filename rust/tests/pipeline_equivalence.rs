@@ -1,0 +1,121 @@
+//! Pipeline-vs-sequential equivalence: the acceptance gate for the staged
+//! training runtime. With `depth = 1, bounded_staleness = 0` the pipelined
+//! loop must reproduce the sequential loop bit-for-bit — same losses, same
+//! APs, same GMM trajectory — because PREP is pure and negative streams
+//! are derived per `(seed, epoch, batch)`.
+//!
+//! These tests need the compiled artifacts (like the other integration
+//! suites); they skip with a notice when `artifacts/` is absent so the
+//! pure-host equivalence coverage in `training::assembler` and
+//! `pipeline::runner` unit tests remains the floor.
+
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::training::Trainer;
+
+fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with("tiny", model, batch, pres);
+    c.epochs = 2;
+    c.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists();
+    if !ok {
+        eprintln!("skipping pipeline equivalence test: no compiled artifacts");
+    }
+    ok
+}
+
+#[test]
+fn depth1_staleness0_is_bit_identical_to_sequential() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut seq_cfg = cfg("tgn", true, 50);
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    let mut pipe_cfg = cfg("tgn", true, 50);
+    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0 };
+
+    let mut seq = Trainer::from_config(&seq_cfg).unwrap();
+    let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
+    for e in 0..2 {
+        let rs = seq.train_epoch(e).unwrap();
+        let rp = pipe.train_epoch(e).unwrap();
+        assert_eq!(
+            rs.train_loss, rp.train_loss,
+            "epoch {e}: pipelined loss diverged from sequential"
+        );
+        assert_eq!(rs.train_bce, rp.train_bce, "epoch {e}: bce diverged");
+        assert_eq!(rs.train_ap, rp.train_ap, "epoch {e}: train AP diverged");
+        assert_eq!(rs.coherence, rp.coherence, "epoch {e}: coherence diverged");
+        assert_eq!(rs.gamma, rp.gamma, "epoch {e}: gamma diverged");
+    }
+    // and the evaluation state machines stayed in lockstep too
+    assert_eq!(seq.eval_val().unwrap(), pipe.eval_val().unwrap());
+}
+
+#[test]
+fn deeper_lookahead_stays_bit_identical_without_staleness() {
+    // PREP never reads memory, so ANY depth with staleness 0 is exact —
+    // lookahead only changes when prep work happens, not what it computes.
+    if !artifacts_available() {
+        return;
+    }
+    let mut a_cfg = cfg("jodie", false, 50);
+    a_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0 };
+    let mut b_cfg = cfg("jodie", false, 50);
+    b_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0 };
+    let mut a = Trainer::from_config(&a_cfg).unwrap();
+    let mut b = Trainer::from_config(&b_cfg).unwrap();
+    for e in 0..2 {
+        let ra = a.train_epoch(e).unwrap();
+        let rb = b.train_epoch(e).unwrap();
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {e}");
+    }
+}
+
+#[test]
+fn bounded_staleness_trains_to_finite_loss() {
+    // staleness > 0 is allowed to change results (it reads lagged memory)
+    // but must stay numerically sane and produce a working model
+    if !artifacts_available() {
+        return;
+    }
+    let mut c = cfg("tgn", true, 50);
+    c.epochs = 3;
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1 };
+    let mut tr = Trainer::from_config(&c).unwrap();
+    for e in 0..3 {
+        let r = tr.train_epoch(e).unwrap();
+        assert!(r.train_loss.is_finite(), "epoch {e} loss {}", r.train_loss);
+    }
+    let ap = tr.eval_val().unwrap();
+    assert!(ap > 0.5, "staleness-1 val AP collapsed: {ap}");
+}
+
+#[test]
+fn overlap_metrics_are_reported_when_pipelined() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut c = cfg("tgn", false, 50);
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0 };
+    let mut tr = Trainer::from_config(&c).unwrap();
+    tr.train_epoch(0).unwrap(); // warm the executable cache
+    let r = tr.train_epoch(1).unwrap();
+    assert!(r.prep_secs > 0.0, "background PREP time must be recorded");
+    assert!(
+        r.assemble_hidden_secs >= 0.0 && r.assemble_hidden_secs <= r.prep_secs,
+        "hidden ({}) must be within [0, prep busy ({})]",
+        r.assemble_hidden_secs,
+        r.prep_secs
+    );
+    assert!((0.0..=1.0).contains(&r.device_idle_frac));
+    // sequential epochs report no overlap
+    tr.cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    let r = tr.train_epoch(2).unwrap();
+    assert_eq!(r.prep_secs, 0.0);
+    assert_eq!(r.assemble_hidden_secs, 0.0);
+}
