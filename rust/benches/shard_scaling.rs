@@ -1,0 +1,143 @@
+//! SPLICE/WRITEBACK wall-time vs memory-shard count, at wiki/gdelt-like
+//! `|V| * d` scales — the sharded store's acceptance benchmark.
+//!
+//!     cargo bench --bench shard_scaling [-- --quick]
+//!
+//! Per (scale, shards) case this times the two store-side stage bodies the
+//! trainer actually runs:
+//!
+//! * **splice**: the five routed batched gathers of one iteration
+//!   (u_self, u_other, src/dst/neg), with routes precomputed PREP-style;
+//! * **writeback**: the masked routed scatter of the update rows.
+//!
+//! Results go to `BENCH_shard.json` (plus the usual results/bench CSV) for
+//! EXPERIMENTS.md / CI tracking. Shard counts sweep {1, 2, 4, 8}; 1 is the
+//! flat legacy store via `make_backend`, so the speedup column is honest
+//! end-to-end (trait dispatch included).
+
+use pres::memory::{make_backend, MemoryBackend, RowRoute};
+use pres::util::bench::{black_box, Bench};
+use pres::util::json::Json;
+use pres::util::prop::{f32_vec, vertex_vec};
+use pres::util::rng::Pcg32;
+
+struct Scale {
+    label: &'static str,
+    num_nodes: u32,
+    d: usize,
+    batch: usize,
+}
+
+struct Case {
+    label: String,
+    shards: usize,
+    num_nodes: u32,
+    d: usize,
+    rows: usize,
+    splice_ns: f64,
+    writeback_ns: f64,
+}
+
+fn case_json(c: &Case) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&c.label)),
+        ("shards", Json::num(c.shards as f64)),
+        ("num_nodes", Json::num(c.num_nodes as f64)),
+        ("d_mem", Json::num(c.d as f64)),
+        ("update_rows", Json::num(c.rows as f64)),
+        ("splice_ns", Json::num(c.splice_ns)),
+        ("writeback_ns", Json::num(c.writeback_ns)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("shard_scaling").with_iters(3, if quick { 8 } else { 40 });
+    bench.header();
+
+    // wiki-scale exercises the small-batch regime; the gdelt-like scale is
+    // the one PRES targets (large |V| * d, large temporal batches)
+    let scales = [
+        Scale { label: "wiki_like", num_nodes: 10_000, d: 100, batch: 600 },
+        Scale {
+            label: "gdelt_like",
+            num_nodes: if quick { 16_384 } else { 65_536 },
+            d: 128,
+            batch: 4_000,
+        },
+    ];
+    let mut cases: Vec<Case> = Vec::new();
+
+    for s in &scales {
+        let rows = 2 * s.batch; // update rows per iteration (src + dst)
+        let mut rng = Pcg32::new(0x5A4D ^ s.num_nodes as u64);
+        // five gather lists (u_self, u_other, src, dst, neg) + the masked
+        // write-back of the update rows, like one trainer iteration
+        let u_self = vertex_vec(&mut rng, s.num_nodes, rows);
+        let u_other = vertex_vec(&mut rng, s.num_nodes, rows);
+        let c_lists: Vec<Vec<u32>> =
+            (0..3).map(|_| vertex_vec(&mut rng, s.num_nodes, s.batch)).collect();
+        let wb_rows = f32_vec(&mut rng, rows * s.d);
+        let wb_ts: Vec<f32> = (0..rows).map(|_| rng.f32() * 100.0).collect();
+        let wb_mask: Vec<f32> =
+            (0..rows).map(|_| if rng.below(8) == 0 { 0.0 } else { 1.0 }).collect();
+        let mut u_self_out = vec![0.0f32; rows * s.d];
+        let mut u_other_out = vec![0.0f32; rows * s.d];
+        let mut c_out = vec![0.0f32; s.batch * s.d];
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut store = make_backend(s.num_nodes, s.d, shards);
+            // warm state so gathers copy non-trivial rows
+            store.scatter_rows(&u_self, &wb_rows, &wb_ts, None);
+            let router = store.router();
+            let route = |vs: &[u32]| -> Vec<RowRoute> {
+                let mut r = Vec::new();
+                router.fill_routes(vs, &mut r);
+                r
+            };
+            let (r_self, r_other) = (route(&u_self), route(&u_other));
+            let r_c: Vec<Vec<RowRoute>> = c_lists.iter().map(|vs| route(vs)).collect();
+            let n = router.n_shards;
+
+            let label = format!("{}_s{shards}", s.label);
+            let splice_ns = bench
+                .run(&format!("{label}_splice"), || {
+                    store.gather_rows_routed(&u_self, &r_self, n, &mut u_self_out);
+                    store.gather_rows_routed(&u_other, &r_other, n, &mut u_other_out);
+                    for (vs, r) in c_lists.iter().zip(&r_c) {
+                        store.gather_rows_routed(vs, r, n, &mut c_out);
+                    }
+                    black_box(c_out.first().copied());
+                })
+                .mean_ns;
+            let writeback_ns = bench
+                .run(&format!("{label}_writeback"), || {
+                    store.scatter_rows_routed(&u_self, &wb_rows, &wb_ts, Some(&wb_mask), &r_self, n);
+                })
+                .mean_ns;
+            println!(
+                "    {label}: splice {:.2} ms | writeback {:.2} ms",
+                splice_ns / 1e6,
+                writeback_ns / 1e6
+            );
+            cases.push(Case {
+                label,
+                shards,
+                num_nodes: s.num_nodes,
+                d: s.d,
+                rows,
+                splice_ns,
+                writeback_ns,
+            });
+        }
+    }
+
+    bench.write_csv().unwrap();
+    let report = Json::obj(vec![
+        ("bench", Json::str("shard_scaling")),
+        ("shard_counts", Json::arr([1.0, 2.0, 4.0, 8.0].iter().map(|&s| Json::num(s)))),
+        ("cases", Json::arr(cases.iter().map(case_json))),
+    ]);
+    std::fs::write("BENCH_shard.json", report.to_string_pretty()).unwrap();
+    println!("-> wrote BENCH_shard.json ({} cases)", cases.len());
+}

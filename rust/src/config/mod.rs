@@ -61,6 +61,11 @@ pub struct ExperimentConfig {
     pub prefetch: bool,
     /// Staged-pipeline knobs: PREP lookahead depth + bounded staleness.
     pub pipeline: PipelineConfig,
+    /// Memory-store shard count. 1 (default) keeps the flat legacy
+    /// `MemoryStore`; N > 1 partitions rows across N owned shards so
+    /// SPLICE/WRITEBACK parallelize. Any value is bit-identical in results
+    /// (at bounded_staleness = 0) — routing changes layout, not values.
+    pub memory_shards: usize,
     /// Scale events generated (1.0 = profile default; figures use < 1 for
     /// quick sweeps).
     pub data_scale: f32,
@@ -82,6 +87,7 @@ impl ExperimentConfig {
             eval_every: 0,
             prefetch: true,
             pipeline: PipelineConfig::default(),
+            memory_shards: 1,
             data_scale: 1.0,
         }
     }
@@ -128,6 +134,9 @@ impl ExperimentConfig {
         if let Some(v) = j.opt("bounded_staleness") {
             cfg.pipeline.bounded_staleness = v.as_usize()?;
         }
+        if let Some(v) = j.opt("memory_shards") {
+            cfg.memory_shards = v.as_usize()?;
+        }
         if let Some(v) = j.opt("data_scale") {
             cfg.data_scale = v.as_f32()?;
         }
@@ -154,6 +163,9 @@ impl ExperimentConfig {
         if self.pipeline.bounded_staleness > 0 && self.pipeline.depth == 0 {
             bail!("bounded_staleness > 0 requires pipeline depth >= 1");
         }
+        if self.memory_shards == 0 {
+            bail!("memory_shards must be >= 1 (1 = flat legacy store)");
+        }
         Ok(())
     }
 
@@ -176,6 +188,7 @@ impl ExperimentConfig {
                 "bounded_staleness",
                 Json::num(self.pipeline.bounded_staleness as f64),
             ),
+            ("memory_shards", Json::num(self.memory_shards as f64)),
             ("data_scale", Json::num(self.data_scale as f64)),
         ])
     }
@@ -219,6 +232,17 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn memory_shards_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert_eq!(cfg.memory_shards, 1); // default = flat legacy layout
+        cfg.memory_shards = 8;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.memory_shards, 8);
+        cfg.memory_shards = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

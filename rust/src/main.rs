@@ -83,6 +83,7 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(k) = args.usize_opt("staleness")? {
         cfg.pipeline.bounded_staleness = k;
     }
+    cfg.memory_shards = args.usize_or("memory-shards", cfg.memory_shards)?;
     cfg.data_scale = args.f32_or("data-scale", 1.0)?;
     cfg.validate()?;
     Ok(cfg)
@@ -107,10 +108,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         pend_frac * 100.0
     );
     println!(
-        "# pipeline: depth={} staleness={}{}",
+        "# pipeline: depth={} staleness={}{} | memory shards={}{}",
         cfg.pipeline.depth,
         cfg.pipeline.bounded_staleness,
-        if cfg.pipeline.depth == 0 { " (sequential)" } else { "" }
+        if cfg.pipeline.depth == 0 { " (sequential)" } else { "" },
+        cfg.memory_shards,
+        if cfg.memory_shards == 1 { " (flat)" } else { "" }
     );
     println!(
         "{:>5} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8} {:>9} {:>7}",

@@ -270,6 +270,52 @@ mod tests {
     }
 
     #[test]
+    fn reset_is_equivalent_to_fresh_trackers() {
+        // Algorithm 2 zeroes (n, tau, xi, psi) at each epoch start; a
+        // reset tracker must be indistinguishable from a fresh one — same
+        // anchor set, same fallbacks, and identical statistics after the
+        // next epoch's observations.
+        let mut g = GmmTrackers::new(64, 2, 0.5, 3);
+        let fresh = GmmTrackers::new(64, 2, 0.5, 3);
+        let v = (0..64u32).find(|&v| g.is_tracked(v)).unwrap_or(0);
+        g.observe(v, Role::Src, &[0.0, 0.0], &[1.0, -1.0], 2.0);
+        g.observe(v, Role::Dst, &[1.0, 1.0], &[0.0, 3.0], 1.0);
+        g.reset();
+        assert_eq!(g.count(v, Role::Src), 0);
+        assert_eq!(g.count(v, Role::Dst), 0);
+        assert!(g.mean(v, Role::Src).is_none());
+        assert!(g.variance(v, Role::Dst).is_none());
+        assert!(g.alpha(v).is_none());
+        // the anchor set survives the reset (it is seed-derived, not state)
+        assert_eq!(g.tracked_vertices(), fresh.tracked_vertices());
+        assert_eq!(g.bytes(), fresh.bytes());
+        // next-epoch observations replay identically on reset vs fresh
+        let mut f = fresh.clone();
+        g.observe(v, Role::Src, &[0.5, 0.5], &[1.5, 2.5], 4.0);
+        f.observe(v, Role::Src, &[0.5, 0.5], &[1.5, 2.5], 4.0);
+        assert_eq!(g.mean(v, Role::Src), f.mean(v, Role::Src));
+        assert_eq!(g.variance(v, Role::Src), f.variance(v, Role::Src));
+        assert_eq!(g.alpha(v), f.alpha(v));
+    }
+
+    #[test]
+    fn clone_snapshot_is_independent_of_the_original() {
+        // the epoch machinery may clone trackers for a side computation;
+        // observations on the original must not bleed into the snapshot.
+        let mut g = GmmTrackers::new(2, 1, 1.0, 0);
+        g.observe(0, Role::Src, &[0.0], &[2.0], 1.0);
+        let snap = g.clone();
+        g.observe(0, Role::Src, &[2.0], &[6.0], 1.0);
+        assert_eq!(snap.count(0, Role::Src), 1);
+        assert_eq!(snap.mean(0, Role::Src).unwrap()[0], 2.0);
+        assert_eq!(g.count(0, Role::Src), 2);
+        assert_eq!(g.mean(0, Role::Src).unwrap()[0], 3.0);
+        // restoring by assignment rewinds the trajectory
+        g = snap;
+        assert_eq!(g.count(0, Role::Src), 1);
+    }
+
+    #[test]
     fn property_tracker_matches_naive_mle() {
         // running sums == batch MLE over the full history (Eq. 9's claim)
         prop::check_msg(

@@ -95,4 +95,50 @@ mod tests {
         let mut times = [9.0; 3];
         assert_eq!(mb.gather(1, &mut mails, &mut times), 0);
     }
+
+    #[test]
+    fn clear_is_an_epoch_boundary_reset() {
+        // the trainer calls clear() at each epoch start: old mail must be
+        // unobservable and the ring must restart from slot 0, exactly as
+        // if the mailbox were freshly constructed.
+        let mut mb = Mailbox::new(2, 2, 1);
+        mb.deliver(0, &[1.0], 1.0);
+        mb.deliver(0, &[2.0], 2.0);
+        mb.deliver(1, &[3.0], 3.0);
+        mb.clear();
+        let mut mails = [9.0; 2];
+        let mut times = [9.0; 2];
+        assert_eq!(mb.gather(0, &mut mails, &mut times), 0);
+        assert_eq!(mb.gather(1, &mut mails, &mut times), 0);
+        // post-clear deliveries behave like a fresh mailbox (the stale
+        // buffer contents behind the reset heads never resurface)
+        mb.deliver(0, &[7.0], 7.0);
+        let mut fresh = Mailbox::new(2, 2, 1);
+        fresh.deliver(0, &[7.0], 7.0);
+        let (mut a, mut at) = ([0.0; 2], [0.0; 2]);
+        let (mut b, mut bt) = ([0.0; 2], [0.0; 2]);
+        assert_eq!(mb.gather(0, &mut a, &mut at), fresh.gather(0, &mut b, &mut bt));
+        assert_eq!(a[0], b[0]);
+        assert_eq!(at[0], bt[0]);
+        // clear() keeps capacity: bytes accounting is unchanged
+        assert_eq!(mb.bytes(), fresh.bytes());
+    }
+
+    #[test]
+    fn clone_snapshot_restores_across_eval() {
+        // eval_val snapshots the mailbox by clone and restores by
+        // assignment; deliveries in between must not leak through.
+        let mut mb = Mailbox::new(3, 2, 2);
+        mb.deliver(2, &[1.0, 2.0], 1.0);
+        let snap = mb.clone();
+        mb.deliver(2, &[8.0, 8.0], 5.0);
+        mb.deliver(0, &[9.0, 9.0], 6.0);
+        mb = snap;
+        let mut mails = [0.0; 4];
+        let mut times = [0.0; 2];
+        assert_eq!(mb.gather(2, &mut mails, &mut times), 1);
+        assert_eq!(&mails[0..2], &[1.0, 2.0]);
+        assert_eq!(times[0], 1.0);
+        assert_eq!(mb.gather(0, &mut mails, &mut times), 0);
+    }
 }

@@ -1,10 +1,125 @@
 //! Vertex memory state: the MDGNN's stateful substrate, owned by the
 //! coordinator (the executables only ever see gathered rows; DESIGN.md §1).
+//!
+//! The memory matrix itself lives behind [`MemoryBackend`]: the flat
+//! single-buffer [`MemoryStore`] (the `--memory-shards 1` legacy layout)
+//! or the [`ShardedMemoryStore`], which partitions rows across owned
+//! shards so SPLICE/WRITEBACK fan out across cores (see `shard.rs` for the
+//! routing policy and the no-lock ownership story). Both are bit-identical
+//! in values — sharding changes layout, never results.
 
 pub mod gmm;
 pub mod mailbox;
+pub mod shard;
 pub mod store;
 
 pub use gmm::GmmTrackers;
 pub use mailbox::Mailbox;
-pub use store::MemoryStore;
+pub use shard::{RowRoute, ShardRouter, ShardRoutes, ShardedMemoryStore};
+pub use store::{MemorySnapshot, MemoryStore};
+
+/// Common interface over the flat and sharded memory stores: everything the
+/// assembler's SPLICE/WRITEBACK stages and the trainer's epoch machinery
+/// touch. Object-safe so the trainer can hold `Box<dyn MemoryBackend>` and
+/// pick the layout from `--memory-shards` at runtime.
+///
+/// The `*_routed` methods accept per-row [`RowRoute`]s precomputed by the
+/// PREP stage (off the coordinator thread); the default impls ignore them —
+/// only the sharded backend overrides, and it falls back to inline routing
+/// whenever the routes were computed for a different shard count.
+pub trait MemoryBackend {
+    /// Memory dimension `d`.
+    fn dim(&self) -> usize;
+    /// Logical vertex count (across all shards).
+    fn num_nodes(&self) -> usize;
+    /// The backend's routing policy, for PREP-side route precomputation.
+    fn router(&self) -> ShardRouter;
+    /// Zero all state (epoch boundary; Algorithm 1's S_0 <- 0).
+    fn reset(&mut self);
+    /// Vertex `v`'s state row (contiguous in every backend).
+    fn row(&self, v: u32) -> &[f32];
+    /// Vertex `v`'s last-update clock.
+    fn last_update(&self, v: u32) -> f32;
+    /// Overwrite one vertex's state + clock.
+    fn scatter(&mut self, v: u32, values: &[f32], t: f32);
+    /// Batched gather: `out[i*d..(i+1)*d] = row(vs[i])` (SPLICE workhorse).
+    fn gather_rows_into(&self, vs: &[u32], out: &mut [f32]);
+    /// [`MemoryBackend::gather_rows_into`] with routes precomputed for
+    /// `routes_shards` shards; ignored unless they match this backend.
+    fn gather_rows_routed(
+        &self,
+        vs: &[u32],
+        routes: &[RowRoute],
+        routes_shards: u32,
+        out: &mut [f32],
+    ) {
+        let _ = (routes, routes_shards);
+        self.gather_rows_into(vs, out);
+    }
+    /// Batched scatter (WRITEBACK): masked rows land in order, so the last
+    /// masked row targeting a vertex wins — matching the batch-plan dedup.
+    fn scatter_rows(&mut self, vs: &[u32], rows: &[f32], ts: &[f32], mask: Option<&[f32]>);
+    /// [`MemoryBackend::scatter_rows`] with precomputed routes (same
+    /// contract as [`MemoryBackend::gather_rows_routed`]).
+    fn scatter_rows_routed(
+        &mut self,
+        vs: &[u32],
+        rows: &[f32],
+        ts: &[f32],
+        mask: Option<&[f32]>,
+        routes: &[RowRoute],
+        routes_shards: u32,
+    ) {
+        let _ = (routes, routes_shards);
+        self.scatter_rows(vs, rows, ts, mask);
+    }
+    /// Snapshot in logical row order (train -> eval handoff; comparable
+    /// across backends).
+    fn snapshot(&self) -> MemorySnapshot;
+    fn restore(&mut self, snap: &MemorySnapshot);
+    /// Live bytes (Fig. 19 accounting).
+    fn bytes(&self) -> usize;
+}
+
+/// Build the memory backend for a shard count: `shards <= 1` returns the
+/// flat legacy [`MemoryStore`] itself (exact `--memory-shards 1`
+/// compatibility by construction), anything larger a [`ShardedMemoryStore`].
+pub fn make_backend(num_nodes: u32, d: usize, shards: usize) -> Box<dyn MemoryBackend> {
+    if shards <= 1 {
+        Box::new(MemoryStore::new(num_nodes, d))
+    } else {
+        Box::new(ShardedMemoryStore::new(num_nodes, d, shards))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_backend_picks_layout_by_shard_count() {
+        let flat = make_backend(10, 4, 1);
+        assert_eq!(flat.router(), ShardRouter::flat());
+        assert_eq!(flat.num_nodes(), 10);
+        let sharded = make_backend(10, 4, 4);
+        assert_eq!(sharded.router().n_shards, 4);
+        assert_eq!(sharded.num_nodes(), 10);
+        assert_eq!(sharded.dim(), flat.dim());
+        // zero shards degrades to flat rather than panicking
+        assert_eq!(make_backend(10, 4, 0).router(), ShardRouter::flat());
+    }
+
+    #[test]
+    fn backends_agree_through_the_trait_surface() {
+        let mut a = make_backend(9, 3, 1);
+        let mut b = make_backend(9, 3, 3);
+        for (v, t) in [(0u32, 1.0f32), (8, 2.0), (4, 3.0)] {
+            let row: Vec<f32> = (0..3).map(|i| v as f32 + i as f32 + t).collect();
+            a.scatter(v, &row, t);
+            b.scatter(v, &row, t);
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(a.row(8), b.row(8));
+        assert_eq!(a.last_update(4), b.last_update(4));
+    }
+}

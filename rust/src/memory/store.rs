@@ -4,6 +4,13 @@
 //! The trainer resets it at epoch boundaries (S_0 <- 0, Algorithm 1) and
 //! snapshots it between the train and val/test phases so evaluation
 //! continues from the trained state without contaminating it.
+//!
+//! This flat store is the `--memory-shards 1` backend and doubles as the
+//! building block of the sharded backend (`shard.rs`), which owns one
+//! `MemoryStore` per shard.
+
+use crate::memory::shard::ShardRouter;
+use crate::memory::MemoryBackend;
 
 /// Memory matrix + last-update timestamps.
 #[derive(Clone, Debug)]
@@ -122,10 +129,79 @@ impl MemoryStore {
     }
 }
 
-#[derive(Clone, Debug)]
+/// The flat store IS the single-shard layout, so the trait impl forwards
+/// to the inherent methods and reports the identity routing. Keeping the
+/// legacy type as the `--memory-shards 1` backend (rather than a 1-shard
+/// [`crate::memory::ShardedMemoryStore`]) makes "N = 1 is exactly today's
+/// store" true by construction.
+impl MemoryBackend for MemoryStore {
+    fn dim(&self) -> usize {
+        MemoryStore::dim(self)
+    }
+
+    fn num_nodes(&self) -> usize {
+        MemoryStore::num_nodes(self)
+    }
+
+    fn router(&self) -> ShardRouter {
+        ShardRouter::flat()
+    }
+
+    fn reset(&mut self) {
+        MemoryStore::reset(self)
+    }
+
+    fn row(&self, v: u32) -> &[f32] {
+        MemoryStore::row(self, v)
+    }
+
+    fn last_update(&self, v: u32) -> f32 {
+        MemoryStore::last_update(self, v)
+    }
+
+    fn scatter(&mut self, v: u32, values: &[f32], t: f32) {
+        MemoryStore::scatter(self, v, values, t)
+    }
+
+    fn gather_rows_into(&self, vs: &[u32], out: &mut [f32]) {
+        MemoryStore::gather_rows_into(self, vs, out)
+    }
+
+    fn scatter_rows(&mut self, vs: &[u32], rows: &[f32], ts: &[f32], mask: Option<&[f32]>) {
+        MemoryStore::scatter_rows(self, vs, rows, ts, mask)
+    }
+
+    fn snapshot(&self) -> MemorySnapshot {
+        MemoryStore::snapshot(self)
+    }
+
+    fn restore(&mut self, snap: &MemorySnapshot) {
+        MemoryStore::restore(self, snap)
+    }
+
+    fn bytes(&self) -> usize {
+        MemoryStore::bytes(self)
+    }
+}
+
+/// Memory state in *logical* (flat, vertex-major) row order, whatever the
+/// backend's physical layout — snapshots of a flat and a sharded store
+/// holding the same state compare equal (`PartialEq` is the equivalence
+/// harness's bit-exactness check).
+#[derive(Clone, Debug, PartialEq)]
 pub struct MemorySnapshot {
     data: Vec<f32>,
     last_update: Vec<f32>,
+}
+
+impl MemorySnapshot {
+    pub(crate) fn from_parts(data: Vec<f32>, last_update: Vec<f32>) -> MemorySnapshot {
+        MemorySnapshot { data, last_update }
+    }
+
+    pub(crate) fn parts(&self) -> (&[f32], &[f32]) {
+        (&self.data, &self.last_update)
+    }
 }
 
 #[cfg(test)]

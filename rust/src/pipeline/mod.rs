@@ -29,6 +29,18 @@
 //! ([`runner::Prefetcher`]); `PrepBatch` scratch is recycled through a free
 //! list, so the steady state allocates nothing.
 //!
+//! ## Sharded memory (PR 2)
+//!
+//! With `--memory-shards N > 1` the store behind SPLICE/WRITEBACK is a
+//! [`crate::memory::ShardedMemoryStore`]: the batched gathers and the
+//! masked write-back scatter fan out across N scoped shard threads while
+//! EXEC's non-Send PJRT handles stay on the coordinator. Routing
+//! (`shard = v mod N`) is pure data, so PREP precomputes per-row
+//! [`crate::memory::RowRoute`]s into `PrepBatch::routes` and the
+//! coordinator-side SPLICE degrades to a straight parallel copy. Any shard
+//! count is bit-identical to the flat store at `staleness = 0` — sharding
+//! changes layout, never values (`tests/shard_equivalence.rs`).
+//!
 //! ## Bounded staleness (MSPipe-style, off by default)
 //!
 //! With `bounded_staleness = k > 0` the coordinator may additionally run

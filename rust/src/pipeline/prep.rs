@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use crate::batching::BatchPlan;
 use crate::graph::EventLog;
+use crate::memory::{ShardRouter, ShardRoutes};
 use crate::sampler::NegativeSampler;
 use crate::util::rng::{splitmix64, Pcg32};
 
@@ -46,6 +47,10 @@ pub struct PrepBatch {
     pub c_prev_t: [Vec<f32>; 3],
     /// Event time of each current event. [b]
     pub c_t: Vec<f32>,
+    /// Per-row shard routes for every gather/scatter list above, computed
+    /// for the trainer's memory backend so SPLICE/WRITEBACK skip routing
+    /// math on the coordinator thread (empty under flat routing).
+    pub routes: ShardRoutes,
     /// Wall-clock nanoseconds spent filling this batch (overlap metrics).
     pub prep_ns: u64,
 }
@@ -65,6 +70,7 @@ impl PrepBatch {
             c_match: std::array::from_fn(|_| vec![-1; b]),
             c_prev_t: std::array::from_fn(|_| vec![f32::NEG_INFINITY; b]),
             c_t: vec![0.0; b],
+            routes: ShardRoutes::default(),
             prep_ns: 0,
         }
     }
@@ -91,7 +97,9 @@ pub fn negative_stream(seed: u64, epoch: usize, batch: usize) -> Pcg32 {
 }
 
 /// Fill `prep` for one iteration: sample negatives from `rng`, then build
-/// every pure tensor. `prev`/`cur` must be consecutive plans of `log`.
+/// every pure tensor. `prev`/`cur` must be consecutive plans of `log`;
+/// `router` is the memory backend's routing policy (shard routes are part
+/// of the pure PREP output — routing is a function of vertex id alone).
 /// `prep_ns` covers the whole call — sampling included — so the overlap
 /// metrics see the worker's true busy time.
 pub fn fill_prep(
@@ -101,16 +109,23 @@ pub fn fill_prep(
     cur: &BatchPlan,
     sampler: &NegativeSampler,
     rng: &mut Pcg32,
+    router: ShardRouter,
 ) {
     let t0 = Instant::now();
     sampler.sample_batch(log, cur.range.clone(), rng, &mut prep.negatives);
-    fill_prep_from(prep, log, prev, cur);
+    fill_prep_from(prep, log, prev, cur, router);
     prep.prep_ns = t0.elapsed().as_nanos() as u64;
 }
 
 /// Like [`fill_prep`] but with `prep.negatives` already populated by the
 /// caller (the eval path samples from its own fixed-seed stream).
-pub fn fill_prep_from(prep: &mut PrepBatch, log: &EventLog, prev: &BatchPlan, cur: &BatchPlan) {
+pub fn fill_prep_from(
+    prep: &mut PrepBatch,
+    log: &EventLog,
+    prev: &BatchPlan,
+    cur: &BatchPlan,
+    router: ShardRouter,
+) {
     let t0 = Instant::now();
     let b = prev.batch_size();
     debug_assert_eq!(cur.batch_size(), b);
@@ -152,6 +167,9 @@ pub fn fill_prep_from(prep: &mut PrepBatch, log: &EventLog, prev: &BatchPlan, cu
             }
         }
     }
+
+    // ---- shard routes for every list SPLICE gathers / WRITEBACK scatters
+    ShardRoutes::compute(&mut prep.routes, router, &prev.upd_vertex, &prep.u_other, &prep.c_vertex);
     prep.prep_ns = t0.elapsed().as_nanos() as u64;
 }
 
@@ -189,7 +207,7 @@ mod tests {
         let cur = BatchPlan::build(&log, 2..4);
         let mut prep = PrepBatch::new(2, 2);
         prep.negatives.copy_from_slice(&[11, 12]);
-        fill_prep_from(&mut prep, &log, &prev, &cur);
+        fill_prep_from(&mut prep, &log, &prev, &cur, ShardRouter::flat());
         // update rows: src sides then dst sides of events 0..2
         assert_eq!(prep.u_other, vec![8, 9, 0, 1]);
         assert_eq!(prep.u_t, vec![1.0, 2.0, 1.0, 2.0]);
@@ -216,9 +234,41 @@ mod tests {
         let sampler = NegativeSampler::new(&log);
         let mut a = PrepBatch::new(2, 0);
         let mut b = PrepBatch::new(2, 0);
-        fill_prep(&mut a, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5));
-        fill_prep(&mut b, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5));
+        fill_prep(
+            &mut a, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5),
+            ShardRouter::flat(),
+        );
+        fill_prep(
+            &mut b, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5),
+            ShardRouter::flat(),
+        );
         assert_eq!(a.negatives, b.negatives);
         assert_eq!(a.c_prev_t, b.c_prev_t);
+    }
+
+    #[test]
+    fn prep_precomputes_shard_routes_for_sharded_routers() {
+        let log = log_with(&[(0, 8), (1, 9), (0, 9), (2, 10)], 0);
+        let prev = BatchPlan::build(&log, 0..2);
+        let cur = BatchPlan::build(&log, 2..4);
+        let mut prep = PrepBatch::new(2, 0);
+        prep.negatives.copy_from_slice(&[11, 12]);
+        let router = ShardRouter { n_shards: 3 };
+        fill_prep_from(&mut prep, &log, &prev, &cur, router);
+        assert_eq!(prep.routes.n_shards, 3);
+        assert_eq!(prep.routes.u_self.len(), prev.rows());
+        assert_eq!(prep.routes.u_other.len(), prep.u_other.len());
+        for ri in 0..3 {
+            for (r, &v) in prep.routes.c_vertex[ri].iter().zip(&prep.c_vertex[ri]) {
+                assert_eq!(*r, router.route(v));
+            }
+        }
+        for (r, &v) in prep.routes.u_self.iter().zip(&prev.upd_vertex) {
+            assert_eq!(*r, router.route(v));
+        }
+        // refilled under flat routing, the routes clear again
+        fill_prep_from(&mut prep, &log, &prev, &cur, ShardRouter::flat());
+        assert_eq!(prep.routes.n_shards, 1);
+        assert!(prep.routes.u_self.is_empty());
     }
 }

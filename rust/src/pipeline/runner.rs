@@ -28,11 +28,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::batching::BatchPlan;
 use crate::graph::Dataset;
+use crate::memory::ShardRouter;
 use crate::pipeline::prep::{fill_prep, negative_stream, PrepBatch};
 use crate::sampler::NegativeSampler;
 
 /// Everything the PREP worker needs — immutable shared state plus the
-/// epoch's seeding. Deliberately contains no substrate or device state.
+/// epoch's seeding. Deliberately contains no substrate or device state
+/// (the memory backend's *routing policy* is pure data, so the worker can
+/// precompute shard routes without ever touching the store).
 #[derive(Clone)]
 pub struct PrepContext {
     pub dataset: Arc<Dataset>,
@@ -42,6 +45,8 @@ pub struct PrepContext {
     pub epoch: usize,
     pub batch_size: usize,
     pub d_edge: usize,
+    /// Routing policy of the trainer's memory backend (flat = no routes).
+    pub router: ShardRouter,
 }
 
 /// Handle to one epoch's PREP worker. Yields `PrepBatch`es for plan
@@ -79,6 +84,7 @@ impl Prefetcher {
                         &ctx.plans[i],
                         &ctx.sampler,
                         &mut rng,
+                        ctx.router,
                     );
                     buf.index = i;
                     buf.epoch = ctx.epoch;
@@ -168,6 +174,7 @@ mod tests {
     fn prefetched_batches_match_inline_prep_exactly() {
         let (ds, plans, sampler) = tiny_setup();
         let n = plans.len().min(8);
+        let router = ShardRouter { n_shards: 2 }; // sharded: routes prepped too
         let ctx = PrepContext {
             dataset: ds.clone(),
             plans: plans.clone(),
@@ -176,6 +183,7 @@ mod tests {
             epoch: 1,
             batch_size: 25,
             d_edge: ds.log.d_edge,
+            router,
         };
         let mut pf = Prefetcher::spawn(ctx, 1..n, 2).unwrap();
         for i in 1..n {
@@ -189,6 +197,7 @@ mod tests {
                 &plans[i],
                 &sampler,
                 &mut negative_stream(42, 1, i),
+                router,
             );
             assert_eq!(got.negatives, want.negatives, "batch {i}");
             assert_eq!(got.u_other, want.u_other, "batch {i}");
@@ -199,6 +208,10 @@ mod tests {
             assert_eq!(got.c_match, want.c_match, "batch {i}");
             assert_eq!(got.c_prev_t, want.c_prev_t, "batch {i}");
             assert_eq!(got.c_t, want.c_t, "batch {i}");
+            assert_eq!(got.routes.n_shards, want.routes.n_shards, "batch {i}");
+            assert_eq!(got.routes.u_self, want.routes.u_self, "batch {i}");
+            assert_eq!(got.routes.u_other, want.routes.u_other, "batch {i}");
+            assert_eq!(got.routes.c_vertex, want.routes.c_vertex, "batch {i}");
             pf.recycle(got);
         }
         assert!(pf.try_recv().unwrap().is_none(), "range must be drained");
@@ -217,6 +230,7 @@ mod tests {
             epoch: 0,
             batch_size: 25,
             d_edge,
+            router: ShardRouter::flat(),
         };
         let mut pf = Prefetcher::spawn(ctx, 1..n, 1).unwrap();
         // consume one, then drop with the worker mid-stream

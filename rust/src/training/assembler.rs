@@ -26,7 +26,7 @@ use xla::Literal;
 use crate::batching::BatchPlan;
 use crate::graph::EventLog;
 use crate::memory::gmm::Role;
-use crate::memory::{GmmTrackers, Mailbox, MemoryStore};
+use crate::memory::{GmmTrackers, Mailbox, MemoryBackend};
 use crate::pipeline::prep::{fill_prep_from, PrepBatch};
 use crate::runtime::engine::{lit_f32, lit_i32};
 use crate::runtime::{ArtifactSpec, Dims, TensorSpec};
@@ -180,7 +180,7 @@ impl Assembler {
         prev: &BatchPlan,
         cur: &BatchPlan,
         negatives: &[u32],
-        store: &MemoryStore,
+        store: &dyn MemoryBackend,
         nbr: &NeighborIndex,
         mailbox: Option<&Mailbox>,
         gmm: &GmmTrackers,
@@ -189,21 +189,23 @@ impl Assembler {
     ) {
         debug_assert_eq!(negatives.len(), host.b);
         host.prep.negatives.copy_from_slice(negatives);
-        fill_prep_from(&mut host.prep, log, prev, cur);
+        fill_prep_from(&mut host.prep, log, prev, cur, store.router());
         self.splice(host, log, prev, store, nbr, mailbox, gmm, pres_on, beta);
     }
 
     /// SPLICE: fill every substrate-dependent tensor from `host.prep` plus
     /// the current memory view. The ONLY stage that must observe the
     /// previous batch's write-back — under bounded staleness it may run
-    /// against a view lagging at most `k` commits.
+    /// against a view lagging at most `k` commits. On a sharded backend
+    /// the batched gathers fan out across shard threads, steered by the
+    /// routes PREP precomputed into `host.prep.routes`.
     #[allow(clippy::too_many_arguments)]
     pub fn splice(
         &self,
         host: &mut HostBatch,
         log: &EventLog,
         prev: &BatchPlan,
-        store: &MemoryStore,
+        store: &dyn MemoryBackend,
         nbr: &NeighborIndex,
         mailbox: Option<&Mailbox>,
         gmm: &GmmTrackers,
@@ -219,8 +221,19 @@ impl Assembler {
         host.beta = beta;
 
         // ---- update rows: batched gathers, then the per-row scalar pass
-        store.gather_rows_into(&prev.upd_vertex, &mut host.u_self_mem);
-        store.gather_rows_into(&host.prep.u_other, &mut host.u_other_mem);
+        let rshards = host.prep.routes.n_shards;
+        store.gather_rows_routed(
+            &prev.upd_vertex,
+            &host.prep.routes.u_self,
+            rshards,
+            &mut host.u_self_mem,
+        );
+        store.gather_rows_routed(
+            &host.prep.u_other,
+            &host.prep.routes.u_other,
+            rshards,
+            &mut host.u_other_mem,
+        );
         // correct only rows that (a) suffer temporal discontinuity and
         // (b) have a prediction backed by enough clean observations —
         // an uninformed prediction would inject noise instead of removing it
@@ -246,7 +259,12 @@ impl Assembler {
 
         // ---- current batch rows
         for ri in 0..3 {
-            store.gather_rows_into(&host.prep.c_vertex[ri], &mut host.c_mem[ri]);
+            store.gather_rows_routed(
+                &host.prep.c_vertex[ri],
+                &host.prep.routes.c_vertex[ri],
+                rshards,
+                &mut host.c_mem[ri],
+            );
         }
         for j in 0..b {
             let t_now = host.prep.c_t[j];
@@ -272,7 +290,7 @@ impl Assembler {
         &self,
         host: &mut HostBatch,
         log: &EventLog,
-        store: &MemoryStore,
+        store: &dyn MemoryBackend,
         nbr: &NeighborIndex,
         mailbox: Option<&Mailbox>,
         j: usize,
@@ -350,7 +368,7 @@ impl Assembler {
         prev: &BatchPlan,
         u_sbar: &[f32],
         u_msg: Option<&[f32]>,
-        store: &mut MemoryStore,
+        store: &mut dyn MemoryBackend,
         nbr: &mut NeighborIndex,
         mailbox: Option<&mut Mailbox>,
         gmm: &mut GmmTrackers,
@@ -373,7 +391,16 @@ impl Assembler {
                 gmm.observe(prev.upd_vertex[r], role, s_t1, row, host.u_dt[r]);
             }
         }
-        store.scatter_rows(&prev.upd_vertex, u_sbar, &host.prep.u_t, Some(&prev.wmask));
+        // the update rows double as the write-back targets, so WRITEBACK
+        // reuses PREP's u_self routes to fan out across shards
+        store.scatter_rows_routed(
+            &prev.upd_vertex,
+            u_sbar,
+            &host.prep.u_t,
+            Some(&prev.wmask),
+            &host.prep.routes.u_self,
+            host.prep.routes.n_shards,
+        );
         for i in prev.range.clone() {
             let ev = log.events[i];
             nbr.insert_event(ev.src, ev.dst, ev.t, i as u32);
@@ -392,6 +419,7 @@ impl Assembler {
 mod tests {
     use super::*;
     use crate::graph::{Dataset, Event, NO_LABEL};
+    use crate::memory::{MemoryStore, ShardRouter, ShardedMemoryStore};
 
     fn dims() -> Dims {
         Dims {
@@ -481,7 +509,7 @@ mod tests {
 
         let mut detached = crate::pipeline::PrepBatch::new(2, dims.d_edge);
         detached.negatives.copy_from_slice(&[6, 7]);
-        crate::pipeline::fill_prep_from(&mut detached, &ds.log, &prev, &cur);
+        crate::pipeline::fill_prep_from(&mut detached, &ds.log, &prev, &cur, ShardRouter::flat());
         let mut b = HostBatch::new("tgn", 2, dims);
         let _old = b.install_prep(detached);
         asm.splice(&mut b, &ds.log, &prev, &store, &nbr, None, &gmm, true, 0.1);
@@ -500,6 +528,53 @@ mod tests {
         assert_eq!(a.prep.c_match, b.prep.c_match);
         assert_eq!(a.prep.u_wmask, b.prep.u_wmask);
         assert_eq!(a.prep.u_efeat, b.prep.u_efeat);
+    }
+
+    #[test]
+    fn sharded_splice_and_commit_match_flat_buffers_exactly() {
+        // the host-level half of the shard-equivalence gate: the same
+        // splice against a flat and a 3-shard backend (with PREP-computed
+        // routes) must fill identical buffers, and commits must leave both
+        // backends in the same logical state.
+        let ds = toy_dataset();
+        let dims = dims();
+        let mut flat = MemoryStore::new(8, dims.d_mem);
+        let mut sharded = ShardedMemoryStore::new(8, dims.d_mem, 3);
+        for (v, t) in [(0u32, 0.5f32), (5, 0.25), (6, 0.75)] {
+            let row: Vec<f32> = (0..dims.d_mem).map(|i| v as f32 + i as f32).collect();
+            flat.scatter(v, &row, t);
+            MemoryBackend::scatter(&mut sharded, v, &row, t);
+        }
+        let mut nbr = NeighborIndex::new(8, dims.k_nbr);
+        nbr.insert_event(0, 4, 0.5, 0);
+        let mut gmm_a = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let mut gmm_b = GmmTrackers::new(8, dims.d_mem, 1.0, 0);
+        let prev = BatchPlan::build(&ds.log, 0..2);
+        let cur = BatchPlan::build(&ds.log, 2..4);
+        let asm = Assembler::new(dims);
+
+        let mut a = HostBatch::new("tgn", 2, dims);
+        let mut b = HostBatch::new("tgn", 2, dims);
+        asm.fill(&mut a, &ds.log, &prev, &cur, &[6, 7], &flat, &nbr, None, &gmm_a, true, 0.1);
+        asm.fill(&mut b, &ds.log, &prev, &cur, &[6, 7], &sharded, &nbr, None, &gmm_b, true, 0.1);
+        assert_eq!(b.prep.routes.n_shards, 3, "fill must route for the sharded backend");
+        assert_eq!(a.u_self_mem, b.u_self_mem);
+        assert_eq!(a.u_other_mem, b.u_other_mem);
+        assert_eq!(a.u_dt, b.u_dt);
+        assert_eq!(a.u_pred, b.u_pred);
+        assert_eq!(a.c_mem, b.c_mem);
+        assert_eq!(a.c_dt, b.c_dt);
+        assert_eq!(a.n_key, b.n_key);
+
+        let u_sbar: Vec<f32> = (0..prev.rows() * dims.d_mem).map(|x| x as f32 * 0.5).collect();
+        let mut nbr_b = nbr.clone();
+        asm.commit(
+            &a, &ds.log, &prev, &u_sbar, None, &mut flat, &mut nbr, None, &mut gmm_a, true,
+        );
+        asm.commit(
+            &b, &ds.log, &prev, &u_sbar, None, &mut sharded, &mut nbr_b, None, &mut gmm_b, true,
+        );
+        assert_eq!(flat.snapshot(), MemoryBackend::snapshot(&sharded));
     }
 
     #[test]

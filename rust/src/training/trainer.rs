@@ -21,7 +21,7 @@ use crate::batching::{partition, BatchPlan};
 use crate::config::ExperimentConfig;
 use crate::datagen;
 use crate::graph::Dataset;
-use crate::memory::{GmmTrackers, Mailbox, MemoryStore};
+use crate::memory::{self, GmmTrackers, Mailbox, MemoryBackend};
 use crate::metrics::ranking::link_ap;
 use crate::metrics::EpochTimer;
 use crate::model::ModelState;
@@ -54,6 +54,10 @@ pub struct EpochReport {
     pub assemble_hidden_secs: f64,
     /// Fraction of the epoch the device spent NOT executing a step.
     pub device_idle_frac: f64,
+    /// Largest number of commits any SPLICE's memory view lagged behind
+    /// this epoch: 0 when exact (staleness 0 or sequential), bounded by
+    /// `pipeline.bounded_staleness` otherwise.
+    pub splice_lag_max: usize,
     pub events_per_sec: f64,
     pub gamma: f32,
 }
@@ -85,7 +89,11 @@ pub struct Trainer {
     pub engine: Rc<Engine>,
     pub dataset: Arc<Dataset>,
     state: ModelState,
-    store: MemoryStore,
+    /// Vertex memory behind the backend trait: flat at `memory_shards = 1`
+    /// (the exact legacy layout), sharded with parallel gather/scatter
+    /// above that. Routing is pure data, so PREP precomputes shard routes
+    /// off-thread while the backend itself never leaves the coordinator.
+    store: Box<dyn MemoryBackend>,
     nbr: NeighborIndex,
     mailbox: Option<Mailbox>,
     gmm: GmmTrackers,
@@ -143,7 +151,7 @@ impl Trainer {
         Ok(Trainer {
             cfg: cfg.clone(),
             state,
-            store: MemoryStore::new(n_nodes, dims.d_mem),
+            store: memory::make_backend(n_nodes, dims.d_mem, cfg.memory_shards),
             nbr: NeighborIndex::new(n_nodes, dims.k_nbr),
             mailbox,
             gmm: GmmTrackers::new(n_nodes, dims.d_mem, cfg.anchor_fraction, cfg.seed),
@@ -218,14 +226,14 @@ impl Trainer {
         let mut timer = EpochTimer::default();
         timer.start_epoch();
 
-        let results = if self.cfg.pipeline.depth > 0 && n_train > 1 {
+        let (results, splice_lag_max) = if self.cfg.pipeline.depth > 0 && n_train > 1 {
             self.run_pipelined_epoch(epoch, n_train, &mut timer)?
         } else {
             let mut out = Vec::with_capacity(n_train.saturating_sub(1));
             for i in 1..n_train {
                 out.push(self.run_train_iteration(i, epoch, &mut timer)?);
             }
-            out
+            (out, 0) // sequential splices are always exact
         };
 
         let mut losses = Vec::with_capacity(results.len());
@@ -258,6 +266,7 @@ impl Trainer {
             prep_stall_secs: timer.prep_stall.as_secs_f64(),
             assemble_hidden_secs: timer.assemble_hidden().as_secs_f64(),
             device_idle_frac: timer.device_idle_fraction(),
+            splice_lag_max,
             events_per_sec: timer.events_per_sec(n_train.saturating_sub(1) * self.cfg.batch_size),
             gamma: self.state.gamma().unwrap_or(f32::NAN),
         })
@@ -267,13 +276,14 @@ impl Trainer {
     /// coordinator's SPLICE → EXEC → WRITEBACK loop over bounded channels.
     /// With `bounded_staleness = k > 0` up to `k` future batches are
     /// spliced before the in-flight write-back lands (their memory view
-    /// lags at most `k` commits).
+    /// lags at most `k` commits). Returns the per-iteration metrics plus
+    /// the maximum observed splice lag (the staleness bound's witness).
     fn run_pipelined_epoch(
         &mut self,
         epoch: usize,
         n_train: usize,
         timer: &mut EpochTimer,
-    ) -> Result<Vec<(f64, f64, f64, f64)>> {
+    ) -> Result<(Vec<(f64, f64, f64, f64)>, usize)> {
         let stale = self.cfg.pipeline.bounded_staleness;
         let slots = self.hosts.len();
         let ctx = PrepContext {
@@ -284,10 +294,12 @@ impl Trainer {
             epoch,
             batch_size: self.cfg.batch_size,
             d_edge: self.assembler.dims.d_edge,
+            router: self.store.router(),
         };
         let mut pf = Prefetcher::spawn(ctx, 1..n_train, self.cfg.pipeline.depth)?;
         let mut presliced: VecDeque<usize> = VecDeque::new();
         let mut results = Vec::with_capacity(n_train.saturating_sub(1));
+        let mut splice_lag_max = 0usize;
 
         for i in 1..n_train {
             // ---- SPLICE (unless already pre-spliced under staleness)
@@ -311,6 +323,9 @@ impl Trainer {
                 }
                 let Some(prep) = pf.try_recv()? else { break };
                 self.install_and_splice(prep, next, &pf, timer)?;
+                // batch `next` should see commits up to `next - 1` but only
+                // `i - 1` have landed: its view lags `next - i` commits
+                splice_lag_max = splice_lag_max.max(next - i);
                 presliced.push_back(next);
             }
 
@@ -321,7 +336,7 @@ impl Trainer {
             timer.writeback += t2.elapsed();
             results.push(metrics);
         }
-        Ok(results)
+        Ok((results, splice_lag_max))
     }
 
     /// One sequential iteration (`pipeline.depth = 0`): PREP runs inline on
@@ -339,7 +354,15 @@ impl Trainer {
             let cur = &self.plans[i];
             let host = &mut self.hosts[0];
             let mut rng = negative_stream(self.cfg.seed, epoch, i);
-            fill_prep(&mut host.prep, &self.dataset.log, prev, cur, &self.neg_sampler, &mut rng);
+            fill_prep(
+                &mut host.prep,
+                &self.dataset.log,
+                prev,
+                cur,
+                &self.neg_sampler,
+                &mut rng,
+                self.store.router(),
+            );
             host.prep.index = i;
             host.prep.epoch = epoch;
         }
@@ -393,7 +416,7 @@ impl Trainer {
             host,
             &self.dataset.log,
             prev,
-            &self.store,
+            &*self.store,
             &self.nbr,
             self.mailbox.as_ref(),
             &self.gmm,
@@ -461,7 +484,7 @@ impl Trainer {
             prev,
             &self.sbar_scratch,
             u_msg,
-            &mut self.store,
+            &mut *self.store,
             &mut self.nbr,
             self.mailbox.as_mut(),
             &mut self.gmm,
@@ -519,7 +542,7 @@ impl Trainer {
                     prev,
                     cur,
                     &negatives,
-                    &self.store,
+                    &*self.store,
                     &self.nbr,
                     self.mailbox.as_ref(),
                     &self.gmm,

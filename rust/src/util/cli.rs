@@ -115,6 +115,18 @@ mod tests {
     }
 
     #[test]
+    fn memory_shards_option_parses_both_spellings() {
+        // the trainer's `--memory-shards N` knob: space and `=` forms both
+        // reach the same option, absent falls back to the flat default
+        let a = parse(&["train", "--memory-shards", "4"], &[]);
+        assert_eq!(a.usize_or("memory-shards", 1).unwrap(), 4);
+        let b = parse(&["train", "--memory-shards=8"], &[]);
+        assert_eq!(b.usize_or("memory-shards", 1).unwrap(), 8);
+        let c = parse(&["train"], &[]);
+        assert_eq!(c.usize_or("memory-shards", 1).unwrap(), 1);
+    }
+
+    #[test]
     fn usize_opt_distinguishes_absent_from_set() {
         let a = parse(&["--pipeline-depth", "2"], &[]);
         assert_eq!(a.usize_opt("pipeline-depth").unwrap(), Some(2));

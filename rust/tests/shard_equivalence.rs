@@ -1,0 +1,208 @@
+//! Sharded-vs-flat memory equivalence: the acceptance gate for the sharded
+//! memory store. Routing only changes the physical layout, and SPLICE /
+//! WRITEBACK are pure `f32` copies, so at `depth = 1, staleness = 0` every
+//! shard count must reproduce the flat store bit-for-bit — same epoch
+//! losses, same APs, same memory trajectory.
+//!
+//! Mirrors `tests/pipeline_equivalence.rs`: the trainer-level tests need
+//! the compiled artifacts and skip with a notice when `artifacts/` is
+//! absent; the host-level epoch harness below runs everywhere and drives
+//! the full PREP → SPLICE → (simulated) EXEC → WRITEBACK loop against both
+//! backends directly.
+
+use pres::batching::{partition, BatchPlan};
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::datagen;
+use pres::memory::{
+    make_backend, GmmTrackers, MemoryBackend, ShardRouter, ShardedMemoryStore,
+};
+use pres::pipeline::{fill_prep_from, negative_stream, PrepBatch};
+use pres::runtime::Dims;
+use pres::sampler::{NegativeSampler, NeighborIndex};
+use pres::training::{Assembler, HostBatch, Trainer};
+use pres::util::rng::Pcg32;
+
+fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with("tiny", model, batch, pres);
+    c.epochs = 2;
+    c.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists();
+    if !ok {
+        eprintln!("skipping shard equivalence test: no compiled artifacts");
+    }
+    ok
+}
+
+// ---------------------------------------------------------------- host level
+
+fn dims() -> Dims {
+    Dims {
+        d_mem: 4,
+        d_msg: 4,
+        d_edge: 2,
+        d_time: 2,
+        k_nbr: 3,
+        heads: 1,
+        d_emb: 4,
+        clf_batch: 8,
+    }
+}
+
+/// Drive a full epoch of PREP → SPLICE → simulated EXEC → WRITEBACK against
+/// one memory backend and return the final logical snapshot. The simulated
+/// step output is a pure function of the iteration, so two backends fed the
+/// same stream diverge only if gather/scatter/routing diverge.
+fn run_host_epoch(store: &mut dyn MemoryBackend, d: Dims, b: usize) -> pres::memory::MemorySnapshot {
+    let ds = datagen::generate(&datagen::tiny_profile(), 5);
+    let plans: Vec<BatchPlan> = partition(0..ds.log.len(), b)
+        .into_iter()
+        .map(|r| BatchPlan::build(&ds.log, r))
+        .collect();
+    let sampler = NegativeSampler::new(&ds.log);
+    let asm = Assembler::new(d);
+    let mut host = HostBatch::new("tgn", b, d);
+    let mut nbr = NeighborIndex::new(ds.log.num_nodes, d.k_nbr);
+    let mut gmm = GmmTrackers::new(ds.log.num_nodes, d.d_mem, 1.0, 0);
+    for i in 1..plans.len() {
+        let (prev, cur) = (&plans[i - 1], &plans[i]);
+        let mut rng = negative_stream(7, 0, i);
+        sampler.sample_batch(&ds.log, cur.range.clone(), &mut rng, &mut host.prep.negatives);
+        fill_prep_from(&mut host.prep, &ds.log, prev, cur, store.router());
+        asm.splice(&mut host, &ds.log, prev, &*store, &nbr, None, &gmm, true, 0.1);
+        // "EXEC": a deterministic stand-in for the step's corrected states
+        let mut step_rng = Pcg32::new(0xE0EC ^ i as u64);
+        let u_sbar: Vec<f32> =
+            (0..prev.rows() * d.d_mem).map(|_| step_rng.range_f32(-1.0, 1.0)).collect();
+        asm.commit(&host, &ds.log, prev, &u_sbar, None, &mut *store, &mut nbr, None, &mut gmm, true);
+    }
+    store.snapshot()
+}
+
+#[test]
+fn host_epoch_is_bit_identical_across_shard_counts() {
+    let d = dims();
+    let num_nodes = datagen::generate(&datagen::tiny_profile(), 5).log.num_nodes;
+    let mut flat = make_backend(num_nodes, d.d_mem, 1);
+    let baseline = run_host_epoch(&mut *flat, d, 25);
+    for shards in [2usize, 4, 7] {
+        let mut sharded = make_backend(num_nodes, d.d_mem, shards);
+        assert_eq!(sharded.router().n_shards, shards as u32);
+        let snap = run_host_epoch(&mut *sharded, d, 25);
+        assert_eq!(
+            snap, baseline,
+            "{shards}-shard epoch diverged from the flat store"
+        );
+    }
+}
+
+#[test]
+fn host_epoch_survives_forced_parallel_paths() {
+    // same harness, but with the serial/parallel crossover forced to 0 so
+    // every gather/scatter takes the scoped-thread path even at toy sizes
+    let d = dims();
+    let num_nodes = datagen::generate(&datagen::tiny_profile(), 5).log.num_nodes;
+    let mut flat = make_backend(num_nodes, d.d_mem, 1);
+    let baseline = run_host_epoch(&mut *flat, d, 25);
+    let mut forced = ShardedMemoryStore::new(num_nodes, d.d_mem, 4).with_par_threshold(0);
+    let snap = run_host_epoch(&mut forced, d, 25);
+    assert_eq!(snap, baseline, "parallel-path epoch diverged from the flat store");
+}
+
+#[test]
+fn prep_routes_match_backend_router_through_the_public_surface() {
+    // the routes a PREP fill computes for a backend's router must agree
+    // with the backend's own routing — the contract that lets SPLICE trust
+    // prefetched routes blindly
+    let ds = datagen::generate(&datagen::tiny_profile(), 5);
+    let plans: Vec<BatchPlan> = partition(0..ds.log.len(), 25)
+        .into_iter()
+        .map(|r| BatchPlan::build(&ds.log, r))
+        .collect();
+    let store = ShardedMemoryStore::new(ds.log.num_nodes, 4, 3);
+    let router: ShardRouter = store.router();
+    let mut prep = PrepBatch::new(25, ds.log.d_edge);
+    fill_prep_from(&mut prep, &ds.log, &plans[0], &plans[1], router);
+    assert_eq!(prep.routes.n_shards, 3);
+    for (r, &v) in prep.routes.u_other.iter().zip(&prep.u_other) {
+        assert_eq!(*r, router.route(v));
+    }
+}
+
+// ------------------------------------------------------------- trainer level
+
+#[test]
+fn sharded_training_is_bit_identical_to_flat() {
+    if !artifacts_available() {
+        return;
+    }
+    let flat_cfg = cfg("tgn", true, 50);
+    assert_eq!(flat_cfg.memory_shards, 1);
+    let mut flat = Trainer::from_config(&flat_cfg).unwrap();
+    let mut flat_epochs = Vec::new();
+    for e in 0..2 {
+        flat_epochs.push(flat.train_epoch(e).unwrap());
+    }
+    let flat_val = flat.eval_val().unwrap();
+
+    for shards in [2usize, 4] {
+        let mut c = cfg("tgn", true, 50);
+        c.memory_shards = shards;
+        let mut tr = Trainer::from_config(&c).unwrap();
+        for (e, flat_r) in flat_epochs.iter().enumerate() {
+            let r = tr.train_epoch(e).unwrap();
+            assert_eq!(
+                r.train_loss, flat_r.train_loss,
+                "epoch {e}: {shards}-shard loss diverged from flat"
+            );
+            assert_eq!(r.train_bce, flat_r.train_bce, "epoch {e} ({shards} shards): bce");
+            assert_eq!(r.train_ap, flat_r.train_ap, "epoch {e} ({shards} shards): train AP");
+            assert_eq!(r.coherence, flat_r.coherence, "epoch {e} ({shards} shards): coherence");
+            assert_eq!(r.gamma, flat_r.gamma, "epoch {e} ({shards} shards): gamma");
+        }
+        assert_eq!(tr.eval_val().unwrap(), flat_val, "{shards}-shard val AP diverged");
+    }
+}
+
+#[test]
+fn sharded_training_matches_flat_in_sequential_mode_too() {
+    // depth = 0 exercises the inline-PREP path's router plumbing
+    if !artifacts_available() {
+        return;
+    }
+    let mut a_cfg = cfg("jodie", false, 50);
+    a_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    let mut b_cfg = cfg("jodie", false, 50);
+    b_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    b_cfg.memory_shards = 4;
+    let mut a = Trainer::from_config(&a_cfg).unwrap();
+    let mut b = Trainer::from_config(&b_cfg).unwrap();
+    for e in 0..2 {
+        let ra = a.train_epoch(e).unwrap();
+        let rb = b.train_epoch(e).unwrap();
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {e}");
+        assert_eq!(ra.train_ap, rb.train_ap, "epoch {e}");
+    }
+}
+
+#[test]
+fn apan_mailbox_path_is_shard_agnostic() {
+    // APAN adds the mailbox substrate to SPLICE/WRITEBACK; sharding only
+    // touches the memory store, so results must stay bit-identical
+    if !artifacts_available() {
+        return;
+    }
+    let mut a = Trainer::from_config(&cfg("apan", true, 50)).unwrap();
+    let mut c = cfg("apan", true, 50);
+    c.memory_shards = 2;
+    let mut b = Trainer::from_config(&c).unwrap();
+    for e in 0..2 {
+        let ra = a.train_epoch(e).unwrap();
+        let rb = b.train_epoch(e).unwrap();
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {e}");
+    }
+}
