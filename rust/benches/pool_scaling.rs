@@ -1,0 +1,316 @@
+//! Persistent-pool acceptance bench: pooled SPLICE/WRITEBACK vs the old
+//! scoped-spawn design, the small-batch sweep around the recalibrated
+//! serial/parallel crossover, and PREP throughput vs `--pool-workers`.
+//!
+//!     cargo bench --bench pool_scaling [-- --quick]
+//!
+//! Three sections, all landing in `BENCH_pool.json`:
+//!
+//! * **store**: one trainer iteration's five routed gathers + masked
+//!   scatter on the pooled [`ShardedMemoryStore`] vs a faithful bench-local
+//!   reimplementation of the PR-2 scoped-spawn fan-out, at wiki/gdelt-like
+//!   scales for shards ∈ {2, 4, 8}. Acceptance: pooled ≤ scoped.
+//! * **crossover**: the same op pair at small batches (64 … 4000 rows),
+//!   pooled vs forced-serial, bracketing `PAR_MIN_ELEMS` — the effective
+//!   crossover is where pooled dips under serial, and with spawn overhead
+//!   gone it sits far below the old `1 << 15`.
+//! * **prep**: full `fill_prep_with` rows/s at `--pool-workers`
+//!   ∈ {1, 2, 4, 8} on a wiki-like event stream (sampling + features +
+//!   matches + routes).
+
+use std::sync::Arc;
+
+use pres::batching::BatchPlan;
+use pres::datagen;
+use pres::memory::{MemoryBackend, MemoryStore, RowRoute, ShardRouter, ShardedMemoryStore};
+use pres::pipeline::{fill_prep_with, negative_stream, PrepBatch};
+use pres::sampler::NegativeSampler;
+use pres::util::bench::{black_box, Bench};
+use pres::util::json::Json;
+use pres::util::pool::WorkerPool;
+use pres::util::prop::{f32_vec, vertex_vec};
+use pres::util::rng::Pcg32;
+
+// ---------------------------------------------------------------- baseline
+//
+// The PR-2 design, preserved verbatim as the comparison target: per-shard
+// work lists handed to `std::thread::scope` workers spawned per op.
+
+fn scoped_gather(
+    shards: &[MemoryStore],
+    router: ShardRouter,
+    d: usize,
+    vs: &[u32],
+    routes: &[RowRoute],
+    out: &mut [f32],
+) {
+    let mut work: Vec<Vec<(u32, &mut [f32])>> =
+        (0..shards.len()).map(|_| Vec::with_capacity(vs.len() / shards.len() + 1)).collect();
+    for (i, slot) in out.chunks_exact_mut(d).enumerate() {
+        let r = if routes.is_empty() { router.route(vs[i]) } else { routes[i] };
+        work[r.shard as usize].push((r.local, slot));
+    }
+    std::thread::scope(|scope| {
+        for (shard, items) in shards.iter().zip(work) {
+            if items.is_empty() {
+                continue;
+            }
+            scope.spawn(move || {
+                for (local, slot) in items {
+                    slot.copy_from_slice(shard.row(local));
+                }
+            });
+        }
+    });
+}
+
+fn scoped_scatter(
+    shards: &mut [MemoryStore],
+    router: ShardRouter,
+    d: usize,
+    vs: &[u32],
+    routes: &[RowRoute],
+    rows: &[f32],
+    ts: &[f32],
+    mask: &[f32],
+) {
+    let mut work: Vec<Vec<(u32, &[f32], f32)>> =
+        (0..shards.len()).map(|_| Vec::with_capacity(vs.len() / shards.len() + 1)).collect();
+    for (r, (&v, row)) in vs.iter().zip(rows.chunks_exact(d)).enumerate() {
+        if mask[r] != 1.0 {
+            continue;
+        }
+        let rt = if routes.is_empty() { router.route(v) } else { routes[r] };
+        work[rt.shard as usize].push((rt.local, row, ts[r]));
+    }
+    std::thread::scope(|scope| {
+        for (shard, items) in shards.iter_mut().zip(work) {
+            if items.is_empty() {
+                continue;
+            }
+            scope.spawn(move || {
+                for (local, row, t) in items {
+                    shard.scatter(local, row, t);
+                }
+            });
+        }
+    });
+}
+
+/// One iteration's gather/scatter lists, shared by both implementations.
+struct Workload {
+    u_self: Vec<u32>,
+    u_other: Vec<u32>,
+    c_lists: Vec<Vec<u32>>,
+    wb_rows: Vec<f32>,
+    wb_ts: Vec<f32>,
+    wb_mask: Vec<f32>,
+}
+
+fn workload(num_nodes: u32, d: usize, batch: usize, seed: u64) -> Workload {
+    let rows = 2 * batch;
+    let mut rng = Pcg32::new(seed ^ num_nodes as u64);
+    Workload {
+        u_self: vertex_vec(&mut rng, num_nodes, rows),
+        u_other: vertex_vec(&mut rng, num_nodes, rows),
+        c_lists: (0..3).map(|_| vertex_vec(&mut rng, num_nodes, batch)).collect(),
+        wb_rows: f32_vec(&mut rng, rows * d),
+        wb_ts: (0..rows).map(|_| rng.f32() * 100.0).collect(),
+        wb_mask: (0..rows).map(|_| if rng.below(8) == 0 { 0.0 } else { 1.0 }).collect(),
+    }
+}
+
+fn routes_for(router: ShardRouter, vs: &[u32]) -> Vec<RowRoute> {
+    let mut r = Vec::new();
+    router.fill_routes(vs, &mut r);
+    r
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("pool_scaling").with_iters(3, if quick { 8 } else { 40 });
+    bench.header();
+    let mut cases: Vec<Json> = Vec::new();
+
+    // ---- section 1: pooled vs scoped-spawn at acceptance scales --------
+    let scales: &[(&str, u32, usize, usize)] = &[
+        ("wiki_like", 10_000, 100, 600),
+        ("gdelt_like", if quick { 16_384 } else { 65_536 }, 128, 4_000),
+    ];
+    for &(label, num_nodes, d, batch) in scales {
+        let w = workload(num_nodes, d, batch, 0x900C);
+        let rows = 2 * batch;
+        let mut u_self_out = vec![0.0f32; rows * d];
+        let mut u_other_out = vec![0.0f32; rows * d];
+        let mut c_out = vec![0.0f32; batch * d];
+        for shards in [2usize, 4, 8] {
+            let pool = Arc::new(WorkerPool::auto());
+            let mut pooled =
+                ShardedMemoryStore::new(num_nodes, d, shards).with_pool(pool.clone());
+            pooled.scatter_rows(&w.u_self, &w.wb_rows, &w.wb_ts, None);
+            let router = pooled.router();
+            let n = router.n_shards;
+            let (r_self, r_other) = (routes_for(router, &w.u_self), routes_for(router, &w.u_other));
+            let r_c: Vec<Vec<RowRoute>> = w.c_lists.iter().map(|vs| routes_for(router, vs)).collect();
+
+            // the scoped baseline operates on a bare shard vector with the
+            // identical routing and warm state
+            let mut scoped: Vec<MemoryStore> = (0..n)
+                .map(|s| MemoryStore::new(router.shard_len(s, num_nodes), d))
+                .collect();
+            for (r, &v) in w.u_self.iter().enumerate() {
+                let rt = router.route(v);
+                scoped[rt.shard as usize].scatter(
+                    rt.local,
+                    &w.wb_rows[r * d..(r + 1) * d],
+                    w.wb_ts[r],
+                );
+            }
+
+            let tag = format!("{label}_s{shards}");
+            let pooled_splice = bench
+                .run(&format!("{tag}_splice_pooled"), || {
+                    pooled.gather_rows_routed(&w.u_self, &r_self, n, &mut u_self_out);
+                    pooled.gather_rows_routed(&w.u_other, &r_other, n, &mut u_other_out);
+                    for (vs, r) in w.c_lists.iter().zip(&r_c) {
+                        pooled.gather_rows_routed(vs, r, n, &mut c_out);
+                    }
+                    black_box(c_out.first().copied());
+                })
+                .mean_ns;
+            let scoped_splice = bench
+                .run(&format!("{tag}_splice_scoped"), || {
+                    scoped_gather(&scoped, router, d, &w.u_self, &r_self, &mut u_self_out);
+                    scoped_gather(&scoped, router, d, &w.u_other, &r_other, &mut u_other_out);
+                    for (vs, r) in w.c_lists.iter().zip(&r_c) {
+                        scoped_gather(&scoped, router, d, vs, r, &mut c_out);
+                    }
+                    black_box(c_out.first().copied());
+                })
+                .mean_ns;
+            let pooled_wb = bench
+                .run(&format!("{tag}_writeback_pooled"), || {
+                    pooled.scatter_rows_routed(
+                        &w.u_self, &w.wb_rows, &w.wb_ts, Some(&w.wb_mask), &r_self, n,
+                    );
+                })
+                .mean_ns;
+            let scoped_wb = bench
+                .run(&format!("{tag}_writeback_scoped"), || {
+                    scoped_scatter(
+                        &mut scoped, router, d, &w.u_self, &r_self, &w.wb_rows, &w.wb_ts,
+                        &w.wb_mask,
+                    );
+                })
+                .mean_ns;
+            println!(
+                "    {tag}: splice pooled {:.2} ms vs scoped {:.2} ms | \
+                 writeback pooled {:.2} ms vs scoped {:.2} ms",
+                pooled_splice / 1e6,
+                scoped_splice / 1e6,
+                pooled_wb / 1e6,
+                scoped_wb / 1e6
+            );
+            cases.push(Json::obj(vec![
+                ("section", Json::str("store")),
+                ("label", Json::str(&tag)),
+                ("shards", Json::num(shards as f64)),
+                ("pool_lanes", Json::num(pool.lanes() as f64)),
+                ("splice_pooled_ns", Json::num(pooled_splice)),
+                ("splice_scoped_ns", Json::num(scoped_splice)),
+                ("writeback_pooled_ns", Json::num(pooled_wb)),
+                ("writeback_scoped_ns", Json::num(scoped_wb)),
+            ]));
+        }
+    }
+
+    // ---- section 2: small-batch sweep around the crossover -------------
+    {
+        let (num_nodes, d, shards) = (10_000u32, 100usize, 4usize);
+        for batch in [64usize, 128, 256, 512, 1024, 4000] {
+            let w = workload(num_nodes, d, batch, 0xC705);
+            let rows = 2 * batch;
+            let mut out = vec![0.0f32; rows * d];
+            let pool = Arc::new(WorkerPool::auto());
+            let mut pooled =
+                ShardedMemoryStore::new(num_nodes, d, shards).with_pool(pool.clone());
+            // forced-serial twin: same layout, crossover pinned to infinity
+            let mut serial = ShardedMemoryStore::new(num_nodes, d, shards)
+                .with_par_threshold(usize::MAX);
+            pooled.scatter_rows(&w.u_self, &w.wb_rows, &w.wb_ts, None);
+            serial.scatter_rows(&w.u_self, &w.wb_rows, &w.wb_ts, None);
+            let router = pooled.router();
+            let n = router.n_shards;
+            let r_self = routes_for(router, &w.u_self);
+            let elems_per_shard = rows * d / shards;
+
+            let tag = format!("b{batch}");
+            let pooled_ns = bench
+                .run(&format!("crossover_{tag}_pooled"), || {
+                    pooled.gather_rows_routed(&w.u_self, &r_self, n, &mut out);
+                    pooled.scatter_rows_routed(
+                        &w.u_self, &w.wb_rows, &w.wb_ts, Some(&w.wb_mask), &r_self, n,
+                    );
+                })
+                .mean_ns;
+            let serial_ns = bench
+                .run(&format!("crossover_{tag}_serial"), || {
+                    serial.gather_rows_routed(&w.u_self, &r_self, n, &mut out);
+                    serial.scatter_rows_routed(
+                        &w.u_self, &w.wb_rows, &w.wb_ts, Some(&w.wb_mask), &r_self, n,
+                    );
+                })
+                .mean_ns;
+            cases.push(Json::obj(vec![
+                ("section", Json::str("crossover")),
+                ("label", Json::str(&tag)),
+                ("batch", Json::num(batch as f64)),
+                ("elems_per_shard", Json::num(elems_per_shard as f64)),
+                ("pooled_ns", Json::num(pooled_ns)),
+                ("serial_ns", Json::num(serial_ns)),
+            ]));
+        }
+    }
+
+    // ---- section 3: PREP rows/s vs --pool-workers ----------------------
+    {
+        let mut profile = datagen::profile("wiki").expect("wiki profile");
+        profile.n_events = if quick { 4_096 } else { 16_384 };
+        let ds = datagen::generate(&profile, 7);
+        let b = 2_000.min(ds.log.len() / 2);
+        let prev = BatchPlan::build(&ds.log, 0..b);
+        let cur = BatchPlan::build(&ds.log, b..2 * b);
+        let sampler = NegativeSampler::new(&ds.log);
+        let router = ShardRouter { n_shards: 4 };
+        let mut prep = PrepBatch::new(b, ds.log.d_edge);
+        for workers in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(workers);
+            let base = negative_stream(7, 0, 1);
+            let ns = bench
+                .run(&format!("prep_w{workers}"), || {
+                    fill_prep_with(&mut prep, &ds.log, &prev, &cur, &sampler, &base, router, &pool);
+                    black_box(prep.negatives.first().copied());
+                })
+                .mean_ns;
+            let rows_per_sec = (prev.rows() + b) as f64 / (ns / 1e9);
+            println!("    prep workers={workers}: {rows_per_sec:.0} rows/s");
+            cases.push(Json::obj(vec![
+                ("section", Json::str("prep")),
+                ("label", Json::str(&format!("prep_w{workers}"))),
+                ("pool_workers", Json::num(workers as f64)),
+                ("batch", Json::num(b as f64)),
+                ("fill_ns", Json::num(ns)),
+                ("rows_per_sec", Json::num(rows_per_sec)),
+            ]));
+        }
+    }
+
+    bench.write_csv().unwrap();
+    let report = Json::obj(vec![
+        ("bench", Json::str("pool_scaling")),
+        ("par_min_elems", Json::num(pres::memory::shard::PAR_MIN_ELEMS as f64)),
+        ("cases", Json::arr(cases.into_iter())),
+    ]);
+    std::fs::write("BENCH_pool.json", report.to_string_pretty()).unwrap();
+    println!("-> wrote BENCH_pool.json");
+}

@@ -13,7 +13,11 @@
 //! Results go to `BENCH_shard.json` (plus the usual results/bench CSV) for
 //! EXPERIMENTS.md / CI tracking. Shard counts sweep {1, 2, 4, 8}; 1 is the
 //! flat legacy store via `make_backend`, so the speedup column is honest
-//! end-to-end (trait dispatch included).
+//! end-to-end (enum dispatch included). Since the worker-pool PR the
+//! sharded cases fan out on the persistent process pool (spawn-free
+//! handoff, crossover at the recalibrated `PAR_MIN_ELEMS`);
+//! `benches/pool_scaling.rs` isolates pool-vs-scoped-spawn and the
+//! small-batch crossover → `BENCH_pool.json`.
 
 use pres::memory::{make_backend, MemoryBackend, RowRoute};
 use pres::util::bench::{black_box, Bench};

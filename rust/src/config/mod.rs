@@ -25,11 +25,18 @@ pub struct PipelineConfig {
     /// multi-stream execution (ROADMAP) — leave at 0 unless studying
     /// staleness effects on quality.
     pub bounded_staleness: usize,
+    /// Lanes in the trainer's persistent worker pool (sharded
+    /// gather/scatter fan-out + parallel PREP). 0 (default) shares the
+    /// auto-sized process pool (one lane per core); 1 runs every stage
+    /// fully serial with zero handoff; N >= 2 spawns a dedicated N-lane
+    /// pool at trainer construction. Results are bit-identical for every
+    /// value — the pool moves work across cores, never values.
+    pub pool_workers: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { depth: 1, bounded_staleness: 0 }
+        PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 }
     }
 }
 
@@ -134,6 +141,9 @@ impl ExperimentConfig {
         if let Some(v) = j.opt("bounded_staleness") {
             cfg.pipeline.bounded_staleness = v.as_usize()?;
         }
+        if let Some(v) = j.opt("pool_workers") {
+            cfg.pipeline.pool_workers = v.as_usize()?;
+        }
         if let Some(v) = j.opt("memory_shards") {
             cfg.memory_shards = v.as_usize()?;
         }
@@ -188,6 +198,7 @@ impl ExperimentConfig {
                 "bounded_staleness",
                 Json::num(self.pipeline.bounded_staleness as f64),
             ),
+            ("pool_workers", Json::num(self.pipeline.pool_workers as f64)),
             ("memory_shards", Json::num(self.memory_shards as f64)),
             ("data_scale", Json::num(self.data_scale as f64)),
         ])
@@ -222,15 +233,30 @@ mod tests {
     #[test]
     fn pipeline_knobs_roundtrip_and_validate() {
         let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
-        assert_eq!(cfg.pipeline, PipelineConfig { depth: 1, bounded_staleness: 0 });
-        cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 2 };
+        assert_eq!(
+            cfg.pipeline,
+            PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 }
+        );
+        cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 2, pool_workers: 0 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.pipeline.depth, 3);
         assert_eq!(back.pipeline.bounded_staleness, 2);
         // staleness without a prefetch thread is meaningless
-        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 1 };
+        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 1, pool_workers: 0 };
         assert!(cfg.validate().is_err());
-        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn pool_workers_roundtrip_and_default() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert_eq!(cfg.pipeline.pool_workers, 0); // 0 = auto (process pool)
+        cfg.pipeline.pool_workers = 8;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.pipeline.pool_workers, 8);
+        // 1 = fully serial; any value is valid (bit-identical results)
+        cfg.pipeline.pool_workers = 1;
         assert!(cfg.validate().is_ok());
     }
 

@@ -83,6 +83,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(k) = args.usize_opt("staleness")? {
         cfg.pipeline.bounded_staleness = k;
     }
+    if let Some(w) = args.usize_opt("pool-workers")? {
+        cfg.pipeline.pool_workers = w;
+    }
     cfg.memory_shards = args.usize_or("memory-shards", cfg.memory_shards)?;
     cfg.data_scale = args.f32_or("data-scale", 1.0)?;
     cfg.validate()?;
@@ -108,12 +111,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         pend_frac * 100.0
     );
     println!(
-        "# pipeline: depth={} staleness={}{} | memory shards={}{}",
+        "# pipeline: depth={} staleness={}{} | memory shards={}{} | pool workers={}{}",
         cfg.pipeline.depth,
         cfg.pipeline.bounded_staleness,
         if cfg.pipeline.depth == 0 { " (sequential)" } else { "" },
         cfg.memory_shards,
-        if cfg.memory_shards == 1 { " (flat)" } else { "" }
+        if cfg.memory_shards == 1 { " (flat)" } else { "" },
+        cfg.pipeline.pool_workers,
+        if cfg.pipeline.pool_workers == 0 { " (auto)" } else { "" }
     );
     println!(
         "{:>5} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8} {:>9} {:>7}",

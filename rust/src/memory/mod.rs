@@ -13,6 +13,10 @@ pub mod mailbox;
 pub mod shard;
 pub mod store;
 
+use std::sync::Arc;
+
+use crate::util::pool::WorkerPool;
+
 pub use gmm::GmmTrackers;
 pub use mailbox::Mailbox;
 pub use shard::{RowRoute, ShardRouter, ShardRoutes, ShardedMemoryStore};
@@ -20,8 +24,10 @@ pub use store::{MemorySnapshot, MemoryStore};
 
 /// Common interface over the flat and sharded memory stores: everything the
 /// assembler's SPLICE/WRITEBACK stages and the trainer's epoch machinery
-/// touch. Object-safe so the trainer can hold `Box<dyn MemoryBackend>` and
-/// pick the layout from `--memory-shards` at runtime.
+/// touch. The trainer holds the closed [`MemoryBackendKind`] enum (so the
+/// per-row scalar reads in the splice pass compile to a branch + direct
+/// call instead of a vtable hop), but the trait stays object-safe for
+/// callers that genuinely want `&dyn MemoryBackend`.
 ///
 /// The `*_routed` methods accept per-row [`RowRoute`]s precomputed by the
 /// PREP stage (off the coordinator thread); the default impls ignore them —
@@ -81,14 +87,122 @@ pub trait MemoryBackend {
     fn bytes(&self) -> usize;
 }
 
+/// The closed set of memory layouts, dispatched by `match` instead of
+/// vtable. The splice scalar passes (`training/assembler.rs`) read
+/// `row`/`last_update` once per update row; with the trainer monomorphized
+/// over this enum those reads devirtualize — the compiler sees both
+/// concrete bodies and the two-way branch next to them, instead of an
+/// opaque indirect call between every pair of batched copies.
+#[derive(Clone, Debug)]
+pub enum MemoryBackendKind {
+    /// The exact legacy flat layout (`--memory-shards 1`).
+    Flat(MemoryStore),
+    /// Row-interleaved shards with pooled parallel gather/scatter.
+    Sharded(ShardedMemoryStore),
+}
+
+macro_rules! dispatch {
+    ($self:ident, $s:ident => $body:expr) => {
+        match $self {
+            MemoryBackendKind::Flat($s) => $body,
+            MemoryBackendKind::Sharded($s) => $body,
+        }
+    };
+}
+
+impl MemoryBackend for MemoryBackendKind {
+    fn dim(&self) -> usize {
+        dispatch!(self, s => MemoryBackend::dim(s))
+    }
+
+    fn num_nodes(&self) -> usize {
+        dispatch!(self, s => MemoryBackend::num_nodes(s))
+    }
+
+    fn router(&self) -> ShardRouter {
+        dispatch!(self, s => s.router())
+    }
+
+    fn reset(&mut self) {
+        dispatch!(self, s => MemoryBackend::reset(s))
+    }
+
+    fn row(&self, v: u32) -> &[f32] {
+        dispatch!(self, s => MemoryBackend::row(s, v))
+    }
+
+    fn last_update(&self, v: u32) -> f32 {
+        dispatch!(self, s => MemoryBackend::last_update(s, v))
+    }
+
+    fn scatter(&mut self, v: u32, values: &[f32], t: f32) {
+        dispatch!(self, s => MemoryBackend::scatter(s, v, values, t))
+    }
+
+    fn gather_rows_into(&self, vs: &[u32], out: &mut [f32]) {
+        dispatch!(self, s => MemoryBackend::gather_rows_into(s, vs, out))
+    }
+
+    fn gather_rows_routed(
+        &self,
+        vs: &[u32],
+        routes: &[RowRoute],
+        routes_shards: u32,
+        out: &mut [f32],
+    ) {
+        dispatch!(self, s => s.gather_rows_routed(vs, routes, routes_shards, out))
+    }
+
+    fn scatter_rows(&mut self, vs: &[u32], rows: &[f32], ts: &[f32], mask: Option<&[f32]>) {
+        dispatch!(self, s => MemoryBackend::scatter_rows(s, vs, rows, ts, mask))
+    }
+
+    fn scatter_rows_routed(
+        &mut self,
+        vs: &[u32],
+        rows: &[f32],
+        ts: &[f32],
+        mask: Option<&[f32]>,
+        routes: &[RowRoute],
+        routes_shards: u32,
+    ) {
+        dispatch!(self, s => s.scatter_rows_routed(vs, rows, ts, mask, routes, routes_shards))
+    }
+
+    fn snapshot(&self) -> MemorySnapshot {
+        dispatch!(self, s => MemoryBackend::snapshot(s))
+    }
+
+    fn restore(&mut self, snap: &MemorySnapshot) {
+        dispatch!(self, s => MemoryBackend::restore(s, snap))
+    }
+
+    fn bytes(&self) -> usize {
+        dispatch!(self, s => MemoryBackend::bytes(s))
+    }
+}
+
 /// Build the memory backend for a shard count: `shards <= 1` returns the
 /// flat legacy [`MemoryStore`] itself (exact `--memory-shards 1`
-/// compatibility by construction), anything larger a [`ShardedMemoryStore`].
-pub fn make_backend(num_nodes: u32, d: usize, shards: usize) -> Box<dyn MemoryBackend> {
+/// compatibility by construction), anything larger a [`ShardedMemoryStore`]
+/// on the shared process pool.
+pub fn make_backend(num_nodes: u32, d: usize, shards: usize) -> MemoryBackendKind {
+    make_backend_pooled(num_nodes, d, shards, WorkerPool::global().clone())
+}
+
+/// [`make_backend`] with an explicit worker pool for the sharded layout's
+/// parallel gather/scatter (the trainer passes its `--pool-workers` pool;
+/// the flat layout has no parallel paths and ignores it).
+pub fn make_backend_pooled(
+    num_nodes: u32,
+    d: usize,
+    shards: usize,
+    pool: Arc<WorkerPool>,
+) -> MemoryBackendKind {
     if shards <= 1 {
-        Box::new(MemoryStore::new(num_nodes, d))
+        MemoryBackendKind::Flat(MemoryStore::new(num_nodes, d))
     } else {
-        Box::new(ShardedMemoryStore::new(num_nodes, d, shards))
+        MemoryBackendKind::Sharded(ShardedMemoryStore::new(num_nodes, d, shards).with_pool(pool))
     }
 }
 
@@ -107,6 +221,14 @@ mod tests {
         assert_eq!(sharded.dim(), flat.dim());
         // zero shards degrades to flat rather than panicking
         assert_eq!(make_backend(10, 4, 0).router(), ShardRouter::flat());
+    }
+
+    #[test]
+    fn backend_kind_picks_the_right_variant() {
+        assert!(matches!(make_backend(10, 4, 1), MemoryBackendKind::Flat(_)));
+        assert!(matches!(make_backend(10, 4, 3), MemoryBackendKind::Sharded(_)));
+        let pool = Arc::new(WorkerPool::new(2));
+        assert!(matches!(make_backend_pooled(10, 4, 0, pool), MemoryBackendKind::Flat(_)));
     }
 
     #[test]

@@ -20,32 +20,46 @@
 //! ## Lock granularity: none
 //!
 //! There are no locks. Each shard is an *owned* [`MemoryStore`]; parallel
-//! sections hand each scoped worker thread either disjoint `&mut` output
-//! slots (gather) or the `&mut` shard itself (scatter), so the borrow
-//! checker proves data-race freedom. Because every vertex routes to exactly
-//! one shard, per-shard work lists preserve the caller's row order and the
-//! flat store's "last masked row wins" semantics carry over unchanged.
+//! sections hand each pool lane either disjoint `&mut` output slots
+//! (gather) or the `&mut` shard itself (scatter) — one *task* per busy
+//! shard on the store's persistent [`WorkerPool`] — so the borrow checker
+//! proves data-race freedom. Because every vertex routes to exactly one
+//! shard, per-shard work lists preserve the caller's row order, a task runs
+//! its list sequentially on a single lane, and the flat store's "last
+//! masked row wins" semantics carry over unchanged.
 //!
 //! ## Why `N = 1` is the legacy layout
 //!
 //! With one shard, `local(v) = v` and the single shard's `[num_nodes, d]`
 //! row-major buffer is byte-for-byte the flat [`MemoryStore`] layout — and
-//! [`crate::memory::make_backend`] doesn't even wrap it, it returns the
-//! flat store itself. For `N > 1` the layout changes but the values cannot:
+//! [`crate::memory::make_backend`] doesn't even use this type there, it
+//! returns the legacy flat store (`MemoryBackendKind::Flat`). For `N > 1`
+//! the layout changes but the values cannot:
 //! gathers and scatters are pure `f32` copies with no arithmetic, so any
 //! shard count is bit-identical to the flat store (the property/equivalence
 //! harness in this module's tests and `tests/shard_equivalence.rs` pins
 //! this).
 
+use std::sync::Arc;
+
 use crate::memory::store::{MemorySnapshot, MemoryStore};
 use crate::memory::MemoryBackend;
+use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
 
 /// Elements (`rows * d`) of *per-shard* work below which gather/scatter
-/// stay serial: scoped threads cost ~tens of µs to spawn, which only pays
-/// off once the bytes each worker copies dwarf it (gdelt-scale batches
-/// clear this by orders of magnitude). Gating on per-shard rather than
-/// total work keeps high shard counts from fanning out tiny copies.
-pub const PAR_MIN_ELEMS: usize = 1 << 15;
+/// stay serial. The scoped-spawn design this store started with paid
+/// ~tens of µs of thread spawn per op and needed `1 << 15`; the persistent
+/// [`WorkerPool`] hands work off for ~1–2 µs, so the crossover drops an
+/// order of magnitude and wiki-scale batches (~1.2k rows × d=100 over 4
+/// shards) take the parallel path instead of only gdelt-scale ones
+/// (`benches/pool_scaling.rs` sweeps the small-batch regime around this
+/// value → `BENCH_pool.json`). Gating on per-shard rather than total work
+/// keeps high shard counts from fanning out tiny copies.
+pub const PAR_MIN_ELEMS: usize = 1 << 12;
+
+/// Rows below which route precomputation stays on one lane (pure `%`/`/`
+/// per row — memory-bandwidth trivial until batches are large).
+const ROUTE_PAR_MIN_ROWS: usize = 1 << 12;
 
 /// The deterministic routing policy: `shard = v % n`, `local = v / n`.
 /// `n_shards = 1` is the identity (flat) routing.
@@ -83,6 +97,28 @@ impl ShardRouter {
     pub fn fill_routes(&self, vs: &[u32], out: &mut Vec<RowRoute>) {
         out.clear();
         out.extend(vs.iter().map(|&v| self.route(v)));
+    }
+
+    /// [`ShardRouter::fill_routes`] fanned out across `pool` lanes (falls
+    /// back to one inline chunk below [`ROUTE_PAR_MIN_ROWS`]). Routing is a
+    /// pure per-row function, so chunking cannot change the result.
+    pub fn fill_routes_with(&self, vs: &[u32], out: &mut Vec<RowRoute>, pool: &WorkerPool) {
+        out.resize(vs.len(), RowRoute::default());
+        let chunk = chunk_for(vs.len(), pool.lanes(), ROUTE_PAR_MIN_ROWS);
+        let mut tasks: Vec<(&[u32], &mut [RowRoute])> = Vec::new();
+        let mut rest = out.as_mut_slice();
+        let mut done = 0;
+        while done < vs.len() {
+            let n = chunk.min(vs.len() - done);
+            tasks.push((&vs[done..done + n], take_chunk(&mut rest, n)));
+            done += n;
+        }
+        let router = *self;
+        pool.run(&mut tasks, |(vs, out)| {
+            for (slot, &v) in out.iter_mut().zip(vs.iter()) {
+                *slot = router.route(v);
+            }
+        });
     }
 }
 
@@ -124,6 +160,19 @@ impl ShardRoutes {
         u_other: &[u32],
         c_vertex: &[Vec<u32>; 3],
     ) {
+        self.compute_with(router, u_self, u_other, c_vertex, WorkerPool::global());
+    }
+
+    /// [`ShardRoutes::compute`] on an explicit pool (PREP's route
+    /// precomputation hot loop; the prefetch worker passes the trainer's).
+    pub fn compute_with(
+        &mut self,
+        router: ShardRouter,
+        u_self: &[u32],
+        u_other: &[u32],
+        c_vertex: &[Vec<u32>; 3],
+        pool: &WorkerPool,
+    ) {
         self.n_shards = router.n_shards.max(1);
         if self.n_shards <= 1 {
             self.u_self.clear();
@@ -133,17 +182,18 @@ impl ShardRoutes {
             }
             return;
         }
-        router.fill_routes(u_self, &mut self.u_self);
-        router.fill_routes(u_other, &mut self.u_other);
+        router.fill_routes_with(u_self, &mut self.u_self, pool);
+        router.fill_routes_with(u_other, &mut self.u_other, pool);
         for (out, vs) in self.c_vertex.iter_mut().zip(c_vertex) {
-            router.fill_routes(vs, out);
+            router.fill_routes_with(vs, out, pool);
         }
     }
 }
 
 /// `N` owned [`MemoryStore`] shards behind the [`MemoryBackend`] interface,
-/// with scoped-thread parallel batched gather/scatter (serial below
-/// [`PAR_MIN_ELEMS`] copied elements, where spawn overhead would dominate).
+/// with batched gather/scatter fanned out over a persistent [`WorkerPool`]
+/// (serial below [`PAR_MIN_ELEMS`] copied elements per shard, where even
+/// the pooled handoff would dominate).
 #[derive(Clone, Debug)]
 pub struct ShardedMemoryStore {
     router: ShardRouter,
@@ -151,6 +201,10 @@ pub struct ShardedMemoryStore {
     num_nodes: u32,
     d: usize,
     par_min_elems: usize,
+    /// Persistent lanes for the parallel paths. Defaults to the shared
+    /// process pool; the trainer injects its own via
+    /// [`ShardedMemoryStore::with_pool`] so `--pool-workers` governs it.
+    pool: Arc<WorkerPool>,
 }
 
 impl ShardedMemoryStore {
@@ -160,13 +214,26 @@ impl ShardedMemoryStore {
         let shards = (0..n_shards as u32)
             .map(|s| MemoryStore::new(router.shard_len(s, num_nodes), d))
             .collect();
-        ShardedMemoryStore { router, shards, num_nodes, d, par_min_elems: PAR_MIN_ELEMS }
+        ShardedMemoryStore {
+            router,
+            shards,
+            num_nodes,
+            d,
+            par_min_elems: PAR_MIN_ELEMS,
+            pool: WorkerPool::global().clone(),
+        }
     }
 
     /// Override the serial/parallel crossover (tests force both paths;
-    /// benches isolate spawn overhead).
+    /// benches isolate handoff overhead).
     pub fn with_par_threshold(mut self, elems: usize) -> ShardedMemoryStore {
         self.par_min_elems = elems;
+        self
+    }
+
+    /// Run the parallel paths on `pool` instead of the shared process pool.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> ShardedMemoryStore {
+        self.pool = pool;
         self
     }
 
@@ -183,14 +250,15 @@ impl ShardedMemoryStore {
         // saturating: the test harness pins the threshold to usize::MAX to
         // force the serial path
         self.shards.len() > 1
+            && self.pool.lanes() > 1
             && rows * self.d >= self.par_min_elems.saturating_mul(self.shards.len())
     }
 
     /// The one gather body behind both trait entry points: `routes` is
     /// `Some` on the division-free planned path (PREP precomputed it) and
     /// `None` when routing happens inline — everything else (work-list
-    /// distribution, the scoped-thread fan-out, the serial fallback) is
-    /// shared so the two paths cannot drift.
+    /// distribution, the pool fan-out, the serial fallback) is shared so
+    /// the two paths cannot drift.
     fn gather_impl(&self, vs: &[u32], routes: Option<&[RowRoute]>, out: &mut [f32]) {
         debug_assert_eq!(out.len(), vs.len() * self.d);
         if let Some(r) = routes {
@@ -211,16 +279,16 @@ impl ShardedMemoryStore {
                 let r = route_of(i, v);
                 work[r.shard as usize].push((r.local, slot));
             }
-            std::thread::scope(|scope| {
-                for (shard, items) in self.shards.iter().zip(work) {
-                    if items.is_empty() {
-                        continue; // don't pay a thread spawn for an idle shard
-                    }
-                    scope.spawn(move || {
-                        for (local, slot) in items {
-                            slot.copy_from_slice(shard.row(local));
-                        }
-                    });
+            // one pool task per busy shard; idle shards cost nothing
+            let mut tasks: Vec<(&MemoryStore, Vec<(u32, &mut [f32])>)> = self
+                .shards
+                .iter()
+                .zip(work)
+                .filter(|(_, items)| !items.is_empty())
+                .collect();
+            self.pool.run(&mut tasks, |(shard, items)| {
+                for (local, slot) in items.iter_mut() {
+                    slot.copy_from_slice(shard.row(*local));
                 }
             });
         } else {
@@ -329,16 +397,19 @@ impl MemoryBackend for ShardedMemoryStore {
                 let rt = route_of(r, v);
                 work[rt.shard as usize].push((rt.local, row, ts[r]));
             }
-            std::thread::scope(|scope| {
-                for (shard, items) in self.shards.iter_mut().zip(work) {
-                    if items.is_empty() {
-                        continue; // don't pay a thread spawn for an idle shard
-                    }
-                    scope.spawn(move || {
-                        for (local, row, t) in items {
-                            shard.scatter(local, row, t);
-                        }
-                    });
+            // each task owns its `&mut` shard plus that shard's work list,
+            // applied in caller row order on a single lane — last masked
+            // row targeting a vertex still wins
+            let pool = self.pool.clone();
+            let mut tasks: Vec<(&mut MemoryStore, Vec<(u32, &[f32], f32)>)> = self
+                .shards
+                .iter_mut()
+                .zip(work)
+                .filter(|(_, items)| !items.is_empty())
+                .collect();
+            pool.run(&mut tasks, |(shard, items)| {
+                for &(local, row, t) in items.iter() {
+                    shard.scatter(local, row, t);
                 }
             });
         } else {
@@ -418,9 +489,14 @@ mod tests {
     }
 
     fn run_case(c: &Case, par_threshold: usize) -> Result<(), String> {
+        run_case_on(c, par_threshold, WorkerPool::global().clone())
+    }
+
+    fn run_case_on(c: &Case, par_threshold: usize, pool: Arc<WorkerPool>) -> Result<(), String> {
         let mut flat = MemoryStore::new(c.num_nodes, c.d);
-        let mut sharded =
-            ShardedMemoryStore::new(c.num_nodes, c.d, c.n_shards).with_par_threshold(par_threshold);
+        let mut sharded = ShardedMemoryStore::new(c.num_nodes, c.d, c.n_shards)
+            .with_par_threshold(par_threshold)
+            .with_pool(pool);
         for (vs, rows, ts, mask) in &c.batches {
             MemoryBackend::scatter_rows(&mut flat, vs, rows, ts, mask.as_deref());
             sharded.scatter_rows(vs, rows, ts, mask.as_deref());
@@ -456,8 +532,55 @@ mod tests {
 
     #[test]
     fn property_sharded_roundtrip_equals_flat_parallel() {
-        // threshold 0 forces the scoped-thread path even on tiny cases
-        prop::check_msg("sharded == flat (parallel path)", 13, 60, gen_case, |c| run_case(c, 0));
+        // threshold 0 forces the pooled path even on tiny cases (a 4-lane
+        // pool guarantees real fan-out whatever the host's core count)
+        let pool = Arc::new(WorkerPool::new(4));
+        prop::check_msg("sharded == flat (parallel path)", 13, 60, gen_case, |c| {
+            run_case_on(c, 0, pool.clone())
+        });
+    }
+
+    #[test]
+    fn property_roundtrip_is_identical_for_every_worker_count() {
+        // the acceptance bit: results cannot depend on the pool's lane
+        // count — 1 lane (inline), 2, 3 and 8 lanes all reproduce the flat
+        // store on the forced-parallel path
+        let pools: Vec<Arc<WorkerPool>> =
+            [1usize, 2, 3, 8].into_iter().map(|l| Arc::new(WorkerPool::new(l))).collect();
+        prop::check_msg("sharded == flat for all worker counts", 29, 40, gen_case, |c| {
+            for pool in &pools {
+                run_case_on(c, 0, pool.clone())
+                    .map_err(|e| format!("lanes={}: {e}", pool.lanes()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_scatter_preserves_last_masked_row_wins_order() {
+        // regression (pool rewrite): many masked rows hitting the SAME
+        // vertex must apply in caller order inside the per-shard work list,
+        // so the last masked row wins — exactly like the flat store
+        let pool = Arc::new(WorkerPool::new(4));
+        let d = 3;
+        let mut flat = MemoryStore::new(9, d);
+        let mut sharded =
+            ShardedMemoryStore::new(9, d, 3).with_par_threshold(0).with_pool(pool);
+        // 12 rows: vertex 6 six times (mask pattern 1,0,1,1,0,1), vertex 2
+        // four times (all masked), vertex 4 twice (mask 0,1)
+        let vs = [6u32, 6, 6, 6, 6, 6, 2, 2, 2, 2, 4, 4];
+        let mask = [1.0f32, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0, 1.0];
+        let rows: Vec<f32> = (0..vs.len() * d).map(|x| x as f32).collect();
+        let ts: Vec<f32> = (0..vs.len()).map(|r| r as f32 + 1.0).collect();
+        flat.scatter_rows(&vs, &rows, &ts, Some(&mask));
+        sharded.scatter_rows(&vs, &rows, &ts, Some(&mask));
+        // vertex 6: last masked occurrence is row 5
+        assert_eq!(MemoryBackend::row(&sharded, 6), &rows[5 * d..6 * d]);
+        assert_eq!(MemoryBackend::last_update(&sharded, 6), ts[5]);
+        // vertex 2: last occurrence is row 9; vertex 4: row 11 (row 10 masked out)
+        assert_eq!(MemoryBackend::row(&sharded, 2), &rows[9 * d..10 * d]);
+        assert_eq!(MemoryBackend::row(&sharded, 4), &rows[11 * d..12 * d]);
+        assert_eq!(MemoryBackend::snapshot(&flat), sharded.snapshot());
     }
 
     #[test]
@@ -566,6 +689,23 @@ mod tests {
         // routes computed for 2 shards against a 4-shard store: ignored
         sharded.gather_rows_routed(&vs, &routes, wrong_router.n_shards, &mut out);
         assert_eq!(&out[0..2], &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn pooled_route_fill_matches_serial_for_any_lane_count() {
+        let router = ShardRouter { n_shards: 5 };
+        let mut rng = Pcg32::new(31);
+        // above ROUTE_PAR_MIN_ROWS so multi-lane pools actually fan out
+        let vs = prop::vertex_vec(&mut rng, 1000, 10_000);
+        let mut serial = Vec::new();
+        router.fill_routes(&vs, &mut serial);
+        for lanes in [1usize, 2, 4] {
+            let pool = WorkerPool::new(lanes);
+            // stale, wrongly-sized scratch must be fully overwritten
+            let mut pooled = vec![RowRoute { shard: 9, local: 9 }; 3];
+            router.fill_routes_with(&vs, &mut pooled, &pool);
+            assert_eq!(pooled, serial, "lanes={lanes}");
+        }
     }
 
     #[test]

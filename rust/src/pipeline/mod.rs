@@ -6,14 +6,18 @@
 //!
 //! ```text
 //!   PREP      negative sampling, edge features, lag-one match indices,
-//!             update-row times — pure in (dataset, plans, seed); reads NO
-//!             mutable substrate. Runs on the background worker thread.
+//!             update-row times, shard routes — pure in (dataset, plans,
+//!             seed); reads NO mutable substrate. Runs on the background
+//!             worker thread; its per-row hot loops fan out across the
+//!             trainer's persistent WorkerPool (`--pool-workers`).
 //!   SPLICE    memory-row gathers (store / neighbor index / mailbox / GMM
 //!             predictions) — the only stage that depends on the previous
-//!             batch's WRITEBACK. Coordinator thread.
+//!             batch's WRITEBACK. Coordinator thread; sharded gathers fan
+//!             out on the same pool.
 //!   EXEC      the AOT-compiled XLA step (PJRT call). Coordinator thread.
 //!   WRITEBACK corrected memory states, GMM observations, neighbor-index
-//!             and mailbox updates. Coordinator thread.
+//!             and mailbox updates. Coordinator thread; sharded scatters
+//!             fan out on the pool.
 //! ```
 //!
 //! Steady-state timeline at `depth = 1` (the default; bit-identical to the
@@ -29,17 +33,36 @@
 //! ([`runner::Prefetcher`]); `PrepBatch` scratch is recycled through a free
 //! list, so the steady state allocates nothing.
 //!
-//! ## Sharded memory (PR 2)
+//! ## Sharded memory (PR 2) on the persistent worker pool (PR 3)
 //!
 //! With `--memory-shards N > 1` the store behind SPLICE/WRITEBACK is a
 //! [`crate::memory::ShardedMemoryStore`]: the batched gathers and the
-//! masked write-back scatter fan out across N scoped shard threads while
-//! EXEC's non-Send PJRT handles stay on the coordinator. Routing
-//! (`shard = v mod N`) is pure data, so PREP precomputes per-row
+//! masked write-back scatter fan out across pool lanes (one task per busy
+//! shard) while EXEC's non-Send PJRT handles stay on the coordinator.
+//! Routing (`shard = v mod N`) is pure data, so PREP precomputes per-row
 //! [`crate::memory::RowRoute`]s into `PrepBatch::routes` and the
 //! coordinator-side SPLICE degrades to a straight parallel copy. Any shard
 //! count is bit-identical to the flat store at `staleness = 0` — sharding
 //! changes layout, never values (`tests/shard_equivalence.rs`).
+//!
+//! ## Worker pool (PR 3)
+//!
+//! All host-side parallelism shares one persistent
+//! [`crate::util::pool::WorkerPool`] (`--pool-workers`; 0 = auto-sized
+//! process pool): workers spawn once at trainer construction, and each op
+//! is a generation-barrier broadcast (~1–2 µs handoff vs tens of µs of
+//! scoped-thread spawn per op previously). That collapse of the per-op
+//! fixed cost is what pushed the sharded store's serial/parallel crossover
+//! from `1 << 15` down to `1 << 12` elements per shard
+//! (`benches/pool_scaling.rs` → `BENCH_pool.json`), and what makes
+//! parallel PREP worthwhile at all: the prefetch worker submits its per-row
+//! loops (negative sampling, feature copies, lag-one matches, routes) to
+//! the same pool, so deeper lookahead scales with cores instead of
+//! saturating one thread. Every pooled loop writes per-row disjoint slots,
+//! so results are bit-identical for every lane count — the pool moves
+//! work, never values. The trainer's memory backend is the closed
+//! [`crate::memory::MemoryBackendKind`] enum, so the splice scalar pass
+//! dispatches by branch, not vtable.
 //!
 //! ## Bounded staleness (MSPipe-style, off by default)
 //!
@@ -68,5 +91,7 @@
 pub mod prep;
 pub mod runner;
 
-pub use prep::{fill_prep, fill_prep_from, negative_stream, PrepBatch};
+pub use prep::{
+    fill_prep, fill_prep_from, fill_prep_from_with, fill_prep_with, negative_stream, PrepBatch,
+};
 pub use runner::{PrepContext, Prefetcher};

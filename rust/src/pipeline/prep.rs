@@ -8,6 +8,20 @@
 //! immutable `(EventLog, BatchPlan, seed)` triple, PREP for batches
 //! `t+1..t+depth` can run on a background thread while batch `t` executes
 //! on the device — see [`crate::pipeline`] for the stage diagram.
+//!
+//! ## Parallel PREP (worker-pool fan-out)
+//!
+//! Each hot loop is **per-row independent**, so the `*_with` entry points
+//! fan rows out across a persistent [`WorkerPool`] in fixed chunks:
+//! negative sampling draws row `j` from its own `base.split(j)` stream
+//! (see [`crate::sampler::NegativeSampler::sample_batch_rowwise`]), the
+//! update-row loop writes `(u_other, u_t, u_efeat)[r]`, the current-batch
+//! loop writes `(c_t, c_vertex, c_match, c_prev_t)[·][j]`, and route
+//! precomputation writes `routes[·][r]` — all to disjoint slots at fixed
+//! indices. Results are therefore bit-identical for every lane count
+//! (chunking changes *where* a row is computed, never *what*), which keeps
+//! the pipeline-vs-sequential equivalence intact while deep prefetch
+//! finally scales with cores instead of saturating one PREP thread.
 
 use std::time::Instant;
 
@@ -15,7 +29,13 @@ use crate::batching::BatchPlan;
 use crate::graph::EventLog;
 use crate::memory::{ShardRouter, ShardRoutes};
 use crate::sampler::NegativeSampler;
+use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
 use crate::util::rng::{splitmix64, Pcg32};
+
+/// Rows below which the PREP loops stay on one lane: a chunk handoff costs
+/// ~1–2 µs, which only pays once per-row work (event lookups, feature
+/// copies, lag-one matching) dwarfs it.
+const PREP_PAR_MIN_ROWS: usize = 256;
 
 /// The Send-able half of a host batch: every tensor the step consumes that
 /// is independent of the mutable memory substrates. One `PrepBatch` covers
@@ -96,24 +116,41 @@ pub fn negative_stream(seed: u64, epoch: usize, batch: usize) -> Pcg32 {
     Pcg32::new(splitmix64(&mut h))
 }
 
-/// Fill `prep` for one iteration: sample negatives from `rng`, then build
-/// every pure tensor. `prev`/`cur` must be consecutive plans of `log`;
-/// `router` is the memory backend's routing policy (shard routes are part
-/// of the pure PREP output — routing is a function of vertex id alone).
-/// `prep_ns` covers the whole call — sampling included — so the overlap
-/// metrics see the worker's true busy time.
+/// Fill `prep` for one iteration: sample negatives row-wise from `base`'s
+/// per-row split streams, then build every pure tensor. `prev`/`cur` must
+/// be consecutive plans of `log`; `router` is the memory backend's routing
+/// policy (shard routes are part of the pure PREP output — routing is a
+/// function of vertex id alone). Runs on the shared process pool; the
+/// trainer/prefetcher pass their own via [`fill_prep_with`]. `prep_ns`
+/// covers the whole call — sampling included — so the overlap metrics see
+/// the worker's true busy time.
 pub fn fill_prep(
     prep: &mut PrepBatch,
     log: &EventLog,
     prev: &BatchPlan,
     cur: &BatchPlan,
     sampler: &NegativeSampler,
-    rng: &mut Pcg32,
+    base: &Pcg32,
     router: ShardRouter,
 ) {
+    fill_prep_with(prep, log, prev, cur, sampler, base, router, WorkerPool::global());
+}
+
+/// [`fill_prep`] on an explicit worker pool.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_prep_with(
+    prep: &mut PrepBatch,
+    log: &EventLog,
+    prev: &BatchPlan,
+    cur: &BatchPlan,
+    sampler: &NegativeSampler,
+    base: &Pcg32,
+    router: ShardRouter,
+    pool: &WorkerPool,
+) {
     let t0 = Instant::now();
-    sampler.sample_batch(log, cur.range.clone(), rng, &mut prep.negatives);
-    fill_prep_from(prep, log, prev, cur, router);
+    sampler.sample_batch_rowwise(log, cur.range.clone(), base, &mut prep.negatives, pool);
+    fill_prep_from_with(prep, log, prev, cur, router, pool);
     prep.prep_ns = t0.elapsed().as_nanos() as u64;
 }
 
@@ -126,50 +163,128 @@ pub fn fill_prep_from(
     cur: &BatchPlan,
     router: ShardRouter,
 ) {
+    fill_prep_from_with(prep, log, prev, cur, router, WorkerPool::global());
+}
+
+/// [`fill_prep_from`] on an explicit worker pool. Every loop writes
+/// per-row disjoint slots, so the fan-out is bit-identical to the serial
+/// path for any lane count (see the module docs).
+pub fn fill_prep_from_with(
+    prep: &mut PrepBatch,
+    log: &EventLog,
+    prev: &BatchPlan,
+    cur: &BatchPlan,
+    router: ShardRouter,
+    pool: &WorkerPool,
+) {
     let t0 = Instant::now();
     let b = prev.batch_size();
     debug_assert_eq!(cur.batch_size(), b);
     debug_assert_eq!(prep.batch_size(), b);
+    let rows = prev.rows();
     let de = prep.u_efeat.len() / prep.rows().max(1);
 
     // ---- update rows (the previous batch, committed in-graph this step)
-    for r in 0..prev.rows() {
-        let ev = log.events[prev.upd_event[r] as usize];
-        prep.u_other[r] = if r < b { ev.dst } else { ev.src };
-        prep.u_t[r] = ev.t;
-        if de > 0 {
-            let feat = log.feat(prev.upd_event[r] as usize);
-            if feat.is_empty() {
-                prep.u_efeat[r * de..(r + 1) * de].fill(0.0);
-            } else {
-                prep.u_efeat[r * de..(r + 1) * de].copy_from_slice(feat);
-            }
+    {
+        struct UpdChunk<'a> {
+            r0: usize,
+            u_other: &'a mut [u32],
+            u_t: &'a mut [f32],
+            u_efeat: &'a mut [f32],
         }
+        let chunk = chunk_for(rows, pool.lanes(), PREP_PAR_MIN_ROWS);
+        let mut tasks: Vec<UpdChunk> = Vec::with_capacity(rows.div_ceil(chunk));
+        let mut uo = prep.u_other.as_mut_slice();
+        let mut ut = prep.u_t.as_mut_slice();
+        let mut ue = prep.u_efeat.as_mut_slice();
+        let mut r0 = 0;
+        while r0 < rows {
+            let n = chunk.min(rows - r0);
+            tasks.push(UpdChunk {
+                r0,
+                u_other: take_chunk(&mut uo, n),
+                u_t: take_chunk(&mut ut, n),
+                u_efeat: take_chunk(&mut ue, n * de),
+            });
+            r0 += n;
+        }
+        pool.run(&mut tasks, |c| {
+            for k in 0..c.u_other.len() {
+                let r = c.r0 + k;
+                let ev = log.events[prev.upd_event[r] as usize];
+                c.u_other[k] = if r < b { ev.dst } else { ev.src };
+                c.u_t[k] = ev.t;
+                if de > 0 {
+                    let feat = log.feat(prev.upd_event[r] as usize);
+                    let slot = &mut c.u_efeat[k * de..(k + 1) * de];
+                    if feat.is_empty() {
+                        slot.fill(0.0);
+                    } else {
+                        slot.copy_from_slice(feat);
+                    }
+                }
+            }
+        });
     }
     prep.u_wmask.copy_from_slice(&prev.wmask);
 
     // ---- current batch: vertices, lag-one matches, event times
-    for (j, i) in cur.range.clone().enumerate() {
-        let ev = log.events[i];
-        let vertices = [ev.src, ev.dst, prep.negatives[j]];
-        prep.c_t[j] = ev.t;
-        for (ri, &v) in vertices.iter().enumerate() {
-            prep.c_vertex[ri][j] = v;
-            match prev.last_row_of(v) {
-                Some(r) => {
-                    prep.c_match[ri][j] = r as i32;
-                    prep.c_prev_t[ri][j] = log.events[prev.upd_event[r as usize] as usize].t;
-                }
-                None => {
-                    prep.c_match[ri][j] = -1;
-                    prep.c_prev_t[ri][j] = f32::NEG_INFINITY;
+    {
+        struct CurChunk<'a> {
+            j0: usize,
+            c_t: &'a mut [f32],
+            c_vertex: [&'a mut [u32]; 3],
+            c_match: [&'a mut [i32]; 3],
+            c_prev_t: [&'a mut [f32]; 3],
+        }
+        let negatives = prep.negatives.as_slice();
+        let [cv0, cv1, cv2] = &mut prep.c_vertex;
+        let [cm0, cm1, cm2] = &mut prep.c_match;
+        let [cp0, cp1, cp2] = &mut prep.c_prev_t;
+        let mut cv = [cv0.as_mut_slice(), cv1.as_mut_slice(), cv2.as_mut_slice()];
+        let mut cm = [cm0.as_mut_slice(), cm1.as_mut_slice(), cm2.as_mut_slice()];
+        let mut cp = [cp0.as_mut_slice(), cp1.as_mut_slice(), cp2.as_mut_slice()];
+        let mut ct = prep.c_t.as_mut_slice();
+        let chunk = chunk_for(b, pool.lanes(), PREP_PAR_MIN_ROWS);
+        let mut tasks: Vec<CurChunk> = Vec::with_capacity(b.div_ceil(chunk.max(1)));
+        let mut j0 = 0;
+        while j0 < b {
+            let n = chunk.min(b - j0);
+            tasks.push(CurChunk {
+                j0,
+                c_t: take_chunk(&mut ct, n),
+                c_vertex: std::array::from_fn(|ri| take_chunk(&mut cv[ri], n)),
+                c_match: std::array::from_fn(|ri| take_chunk(&mut cm[ri], n)),
+                c_prev_t: std::array::from_fn(|ri| take_chunk(&mut cp[ri], n)),
+            });
+            j0 += n;
+        }
+        pool.run(&mut tasks, |c| {
+            for k in 0..c.c_t.len() {
+                let j = c.j0 + k;
+                let ev = log.events[cur.range.start + j];
+                let vertices = [ev.src, ev.dst, negatives[j]];
+                c.c_t[k] = ev.t;
+                for (ri, &v) in vertices.iter().enumerate() {
+                    c.c_vertex[ri][k] = v;
+                    match prev.last_row_of(v) {
+                        Some(r) => {
+                            c.c_match[ri][k] = r as i32;
+                            c.c_prev_t[ri][k] =
+                                log.events[prev.upd_event[r as usize] as usize].t;
+                        }
+                        None => {
+                            c.c_match[ri][k] = -1;
+                            c.c_prev_t[ri][k] = f32::NEG_INFINITY;
+                        }
+                    }
                 }
             }
-        }
+        });
     }
 
     // ---- shard routes for every list SPLICE gathers / WRITEBACK scatters
-    ShardRoutes::compute(&mut prep.routes, router, &prev.upd_vertex, &prep.u_other, &prep.c_vertex);
+    prep.routes.compute_with(router, &prev.upd_vertex, &prep.u_other, &prep.c_vertex, pool);
     prep.prep_ns = t0.elapsed().as_nanos() as u64;
 }
 
@@ -235,15 +350,60 @@ mod tests {
         let mut a = PrepBatch::new(2, 0);
         let mut b = PrepBatch::new(2, 0);
         fill_prep(
-            &mut a, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5),
+            &mut a, &log, &prev, &cur, &sampler, &negative_stream(3, 1, 5),
             ShardRouter::flat(),
         );
         fill_prep(
-            &mut b, &log, &prev, &cur, &sampler, &mut negative_stream(3, 1, 5),
+            &mut b, &log, &prev, &cur, &sampler, &negative_stream(3, 1, 5),
             ShardRouter::flat(),
         );
         assert_eq!(a.negatives, b.negatives);
         assert_eq!(a.c_prev_t, b.c_prev_t);
+    }
+
+    #[test]
+    fn pooled_prep_is_bit_identical_for_every_worker_count() {
+        // a batch large enough to clear PREP_PAR_MIN_ROWS so multi-lane
+        // pools genuinely fan out, against a sharded router so route
+        // precomputation is exercised too
+        let pairs: Vec<(u32, u32)> = (0..1200).map(|i| (i % 8, 8 + (i * 3) % 8)).collect();
+        let mut log = EventLog::new(32, 8, 2);
+        for (i, &(s, d)) in pairs.iter().enumerate() {
+            log.push(
+                Event { src: s, dst: d, t: i as f32 + 1.0, label: NO_LABEL },
+                &[i as f32, -(i as f32)],
+            )
+            .unwrap();
+        }
+        let b = 600;
+        let prev = BatchPlan::build(&log, 0..b);
+        let cur = BatchPlan::build(&log, b..2 * b);
+        let sampler = NegativeSampler::new(&log);
+        let router = ShardRouter { n_shards: 3 };
+        let base = negative_stream(11, 2, 7);
+
+        let mut want = PrepBatch::new(b, 2);
+        fill_prep_with(
+            &mut want, &log, &prev, &cur, &sampler, &base, router,
+            &crate::util::pool::WorkerPool::new(1),
+        );
+        for lanes in [2usize, 4, 8] {
+            let pool = crate::util::pool::WorkerPool::new(lanes);
+            let mut got = PrepBatch::new(b, 2);
+            fill_prep_with(&mut got, &log, &prev, &cur, &sampler, &base, router, &pool);
+            assert_eq!(got.negatives, want.negatives, "lanes={lanes}");
+            assert_eq!(got.u_other, want.u_other, "lanes={lanes}");
+            assert_eq!(got.u_t, want.u_t, "lanes={lanes}");
+            assert_eq!(got.u_efeat, want.u_efeat, "lanes={lanes}");
+            assert_eq!(got.u_wmask, want.u_wmask, "lanes={lanes}");
+            assert_eq!(got.c_vertex, want.c_vertex, "lanes={lanes}");
+            assert_eq!(got.c_match, want.c_match, "lanes={lanes}");
+            assert_eq!(got.c_prev_t, want.c_prev_t, "lanes={lanes}");
+            assert_eq!(got.c_t, want.c_t, "lanes={lanes}");
+            assert_eq!(got.routes.u_self, want.routes.u_self, "lanes={lanes}");
+            assert_eq!(got.routes.u_other, want.routes.u_other, "lanes={lanes}");
+            assert_eq!(got.routes.c_vertex, want.routes.c_vertex, "lanes={lanes}");
+        }
     }
 
     #[test]

@@ -29,8 +29,9 @@ use anyhow::{bail, Context, Result};
 use crate::batching::BatchPlan;
 use crate::graph::Dataset;
 use crate::memory::ShardRouter;
-use crate::pipeline::prep::{fill_prep, negative_stream, PrepBatch};
+use crate::pipeline::prep::{fill_prep_with, negative_stream, PrepBatch};
 use crate::sampler::NegativeSampler;
+use crate::util::pool::WorkerPool;
 
 /// Everything the PREP worker needs — immutable shared state plus the
 /// epoch's seeding. Deliberately contains no substrate or device state
@@ -47,6 +48,10 @@ pub struct PrepContext {
     pub d_edge: usize,
     /// Routing policy of the trainer's memory backend (flat = no routes).
     pub router: ShardRouter,
+    /// Worker pool the PREP hot loops fan out on (shared with the trainer;
+    /// submissions serialize on the pool's handoff lock, and the results
+    /// are lane-count-invariant, so sharing is safe).
+    pub pool: Arc<WorkerPool>,
 }
 
 /// Handle to one epoch's PREP worker. Yields `PrepBatch`es for plan
@@ -76,15 +81,16 @@ impl Prefetcher {
                     let mut buf = free_rx
                         .try_recv()
                         .unwrap_or_else(|_| PrepBatch::new(ctx.batch_size, ctx.d_edge));
-                    let mut rng = negative_stream(ctx.seed, ctx.epoch, i);
-                    fill_prep(
+                    let base = negative_stream(ctx.seed, ctx.epoch, i);
+                    fill_prep_with(
                         &mut buf,
                         &ctx.dataset.log,
                         &ctx.plans[i - 1],
                         &ctx.plans[i],
                         &ctx.sampler,
-                        &mut rng,
+                        &base,
                         ctx.router,
+                        &ctx.pool,
                     );
                     buf.index = i;
                     buf.epoch = ctx.epoch;
@@ -184,19 +190,22 @@ mod tests {
             batch_size: 25,
             d_edge: ds.log.d_edge,
             router,
+            pool: Arc::new(WorkerPool::new(3)),
         };
         let mut pf = Prefetcher::spawn(ctx, 1..n, 2).unwrap();
         for i in 1..n {
             let got = pf.recv().unwrap();
             assert_eq!(got.index, i, "batches must arrive in order");
             let mut want = PrepBatch::new(25, ds.log.d_edge);
-            fill_prep(
+            // inline fill on a different pool: prefetched results must be
+            // pool-independent, not just thread-independent
+            crate::pipeline::prep::fill_prep(
                 &mut want,
                 &ds.log,
                 &plans[i - 1],
                 &plans[i],
                 &sampler,
-                &mut negative_stream(42, 1, i),
+                &negative_stream(42, 1, i),
                 router,
             );
             assert_eq!(got.negatives, want.negatives, "batch {i}");
@@ -231,6 +240,7 @@ mod tests {
             batch_size: 25,
             d_edge,
             router: ShardRouter::flat(),
+            pool: WorkerPool::global().clone(),
         };
         let mut pf = Prefetcher::spawn(ctx, 1..n, 1).unwrap();
         // consume one, then drop with the worker mid-stream

@@ -7,8 +7,13 @@
 
 use std::collections::HashSet;
 
-use crate::graph::EventLog;
+use crate::graph::{Event, EventLog};
+use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
 use crate::util::rng::Pcg32;
+
+/// Rows below which row-wise sampling stays on one lane (HashSet probes +
+/// a handful of RNG draws per row — parallelism only pays on real batches).
+const SAMPLE_PAR_MIN_ROWS: usize = 256;
 
 #[derive(Clone, Debug)]
 pub struct NegativeSampler {
@@ -51,6 +56,58 @@ impl NegativeSampler {
             }
             *slot = dst;
         }
+    }
+
+    /// Row-wise variant for the parallel PREP stage: row `j` draws from its
+    /// own stream `base.split(j)` instead of consuming one shared serial
+    /// stream, which makes every row independent — so the batch fans out
+    /// across `pool` lanes and the result is a pure function of
+    /// `(base, events)` whatever the lane count (or the chunking). Same
+    /// rejection protocol per row as [`NegativeSampler::sample_batch`].
+    pub fn sample_batch_rowwise(
+        &self,
+        log: &EventLog,
+        events: std::ops::Range<usize>,
+        base: &Pcg32,
+        out: &mut [u32],
+        pool: &WorkerPool,
+    ) {
+        debug_assert_eq!(out.len(), events.len());
+        let pairs: HashSet<(u32, u32)> = log.events[events.clone()]
+            .iter()
+            .map(|e| (e.src, e.dst))
+            .collect();
+        let n_dst = self.dst_hi - self.dst_lo;
+        let evs = &log.events[events];
+
+        struct RowChunk<'a> {
+            j0: usize,
+            out: &'a mut [u32],
+            evs: &'a [Event],
+        }
+        let total = out.len();
+        let chunk = chunk_for(total, pool.lanes(), SAMPLE_PAR_MIN_ROWS);
+        let mut tasks: Vec<RowChunk> = Vec::with_capacity(total.div_ceil(chunk));
+        let mut rest = out;
+        let mut j0 = 0;
+        while j0 < total {
+            let n = chunk.min(total - j0);
+            tasks.push(RowChunk { j0, out: take_chunk(&mut rest, n), evs: &evs[j0..j0 + n] });
+            j0 += n;
+        }
+        pool.run(&mut tasks, |c| {
+            for (k, (slot, ev)) in c.out.iter_mut().zip(c.evs).enumerate() {
+                let mut rng = base.clone().split((c.j0 + k) as u64);
+                let mut dst = self.dst_lo + rng.below(n_dst);
+                for _ in 0..8 {
+                    if !pairs.contains(&(ev.src, dst)) {
+                        break;
+                    }
+                    dst = self.dst_lo + rng.below(n_dst);
+                }
+                *slot = dst;
+            }
+        });
     }
 }
 
@@ -105,6 +162,40 @@ mod tests {
         sampler.sample_batch(&log, 0..4, &mut Pcg32::new(9), &mut a_out);
         sampler.sample_batch(&log, 0..4, &mut Pcg32::new(9), &mut b_out);
         assert_eq!(a_out, b_out);
+    }
+
+    #[test]
+    fn rowwise_sampling_is_identical_for_every_worker_count() {
+        // the parallel-PREP guarantee: row-wise negatives are a pure
+        // function of (base stream, batch) — lane count and chunking can
+        // never change them
+        let pairs: Vec<(u32, u32)> = (0..600).map(|i| (i % 5, 5 + (i * 7) % 5)).collect();
+        let log = log_with(&pairs);
+        let sampler = NegativeSampler::new(&log);
+        let base = Pcg32::new(17);
+        let mut want = vec![0u32; pairs.len()];
+        sampler.sample_batch_rowwise(
+            &log, 0..pairs.len(), &base, &mut want, &WorkerPool::new(1),
+        );
+        for lanes in [2usize, 3, 8] {
+            let pool = WorkerPool::new(lanes);
+            let mut got = vec![0u32; pairs.len()];
+            sampler.sample_batch_rowwise(&log, 0..pairs.len(), &base, &mut got, &pool);
+            assert_eq!(got, want, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn rowwise_sampling_respects_range_and_in_batch_avoidance() {
+        // src 0 always pairs with dst 5: of 5 candidates the rejection loop
+        // should essentially never return 5
+        let log = log_with(&[(0, 5); 300]);
+        let sampler = NegativeSampler::new(&log);
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u32; 300];
+        sampler.sample_batch_rowwise(&log, 0..300, &Pcg32::new(3), &mut out, &pool);
+        assert!(out.iter().all(|&d| (5..10).contains(&d)));
+        assert!(out.iter().filter(|&&d| d == 5).count() <= 2);
     }
 
     #[test]

@@ -172,15 +172,22 @@ impl Assembler {
     /// the batch whose events update memory in-graph; `cur` + `negatives`
     /// is the predicted batch. Sequential convenience — the pipelined loop
     /// installs a prefetched PREP half and calls [`Assembler::splice`].
+    ///
+    /// Generic over the backend (like every store-touching method here) so
+    /// the trainer's calls monomorphize against
+    /// [`crate::memory::MemoryBackendKind`] — the per-row `row` and
+    /// `last_update` reads in the scalar passes dispatch by branch instead
+    /// of vtable. `?Sized` keeps plain `&dyn MemoryBackend` callers
+    /// compiling unchanged.
     #[allow(clippy::too_many_arguments)]
-    pub fn fill(
+    pub fn fill<S: MemoryBackend + ?Sized>(
         &self,
         host: &mut HostBatch,
         log: &EventLog,
         prev: &BatchPlan,
         cur: &BatchPlan,
         negatives: &[u32],
-        store: &dyn MemoryBackend,
+        store: &S,
         nbr: &NeighborIndex,
         mailbox: Option<&Mailbox>,
         gmm: &GmmTrackers,
@@ -197,15 +204,15 @@ impl Assembler {
     /// the current memory view. The ONLY stage that must observe the
     /// previous batch's write-back — under bounded staleness it may run
     /// against a view lagging at most `k` commits. On a sharded backend
-    /// the batched gathers fan out across shard threads, steered by the
+    /// the batched gathers fan out across pool lanes, steered by the
     /// routes PREP precomputed into `host.prep.routes`.
     #[allow(clippy::too_many_arguments)]
-    pub fn splice(
+    pub fn splice<S: MemoryBackend + ?Sized>(
         &self,
         host: &mut HostBatch,
         log: &EventLog,
         prev: &BatchPlan,
-        store: &dyn MemoryBackend,
+        store: &S,
         nbr: &NeighborIndex,
         mailbox: Option<&Mailbox>,
         gmm: &GmmTrackers,
@@ -286,11 +293,11 @@ impl Assembler {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn fill_context(
+    fn fill_context<S: MemoryBackend + ?Sized>(
         &self,
         host: &mut HostBatch,
         log: &EventLog,
-        store: &dyn MemoryBackend,
+        store: &S,
         nbr: &NeighborIndex,
         mailbox: Option<&Mailbox>,
         j: usize,
@@ -361,14 +368,14 @@ impl Assembler {
     /// write-back timestamps, its SPLICE half the pre-step states the
     /// trackers observe transitions against).
     #[allow(clippy::too_many_arguments)]
-    pub fn commit(
+    pub fn commit<S: MemoryBackend + ?Sized>(
         &self,
         host: &HostBatch,
         log: &EventLog,
         prev: &BatchPlan,
         u_sbar: &[f32],
         u_msg: Option<&[f32]>,
-        store: &mut dyn MemoryBackend,
+        store: &mut S,
         nbr: &mut NeighborIndex,
         mailbox: Option<&mut Mailbox>,
         gmm: &mut GmmTrackers,

@@ -21,15 +21,16 @@ use crate::batching::{partition, BatchPlan};
 use crate::config::ExperimentConfig;
 use crate::datagen;
 use crate::graph::Dataset;
-use crate::memory::{self, GmmTrackers, Mailbox, MemoryBackend};
+use crate::memory::{self, GmmTrackers, Mailbox, MemoryBackend, MemoryBackendKind};
 use crate::metrics::ranking::link_ap;
 use crate::metrics::EpochTimer;
 use crate::model::ModelState;
-use crate::pipeline::{fill_prep, negative_stream, PrepBatch, PrepContext, Prefetcher};
+use crate::pipeline::{fill_prep_with, negative_stream, PrepBatch, PrepContext, Prefetcher};
 use crate::runtime::engine::{fetch_f32, fetch_scalar, lit_scalar};
 use crate::runtime::{ArtifactSpec, Engine, Step};
 use crate::sampler::{NegativeSampler, NeighborIndex};
 use crate::training::{Assembler, HostBatch};
+use crate::util::pool::WorkerPool;
 use crate::util::rng::Pcg32;
 
 /// Per-epoch record (drives Fig. 5/14/16/17 and Table 1 timing).
@@ -89,11 +90,18 @@ pub struct Trainer {
     pub engine: Rc<Engine>,
     pub dataset: Arc<Dataset>,
     state: ModelState,
-    /// Vertex memory behind the backend trait: flat at `memory_shards = 1`
-    /// (the exact legacy layout), sharded with parallel gather/scatter
-    /// above that. Routing is pure data, so PREP precomputes shard routes
-    /// off-thread while the backend itself never leaves the coordinator.
-    store: Box<dyn MemoryBackend>,
+    /// Vertex memory behind the closed backend enum: flat at
+    /// `memory_shards = 1` (the exact legacy layout), sharded with pooled
+    /// parallel gather/scatter above that. Enum (not `Box<dyn>`) so the
+    /// assembler's per-row scalar reads monomorphize to branch dispatch.
+    /// Routing is pure data, so PREP precomputes shard routes off-thread
+    /// while the backend itself never leaves the coordinator.
+    store: MemoryBackendKind,
+    /// Persistent worker lanes shared by the sharded store's
+    /// gather/scatter, the PREP hot loops (both inline and on the prefetch
+    /// thread) — spawned once here, reused every op
+    /// (`--pool-workers`; 0 = the auto-sized process pool).
+    pool: Arc<WorkerPool>,
     nbr: NeighborIndex,
     mailbox: Option<Mailbox>,
     gmm: GmmTrackers,
@@ -148,10 +156,22 @@ impl Trainer {
         let hosts = (0..cfg.pipeline.bounded_staleness + 1)
             .map(|_| HostBatch::new(&cfg.model, b, dims))
             .collect();
+        // one persistent pool per trainer (or the shared process pool at
+        // the 0 = auto default): workers spawn here, never per op
+        let pool = match cfg.pipeline.pool_workers {
+            0 => WorkerPool::global().clone(),
+            n => Arc::new(WorkerPool::new(n)),
+        };
         Ok(Trainer {
             cfg: cfg.clone(),
             state,
-            store: memory::make_backend(n_nodes, dims.d_mem, cfg.memory_shards),
+            store: memory::make_backend_pooled(
+                n_nodes,
+                dims.d_mem,
+                cfg.memory_shards,
+                pool.clone(),
+            ),
+            pool,
             nbr: NeighborIndex::new(n_nodes, dims.k_nbr),
             mailbox,
             gmm: GmmTrackers::new(n_nodes, dims.d_mem, cfg.anchor_fraction, cfg.seed),
@@ -295,6 +315,7 @@ impl Trainer {
             batch_size: self.cfg.batch_size,
             d_edge: self.assembler.dims.d_edge,
             router: self.store.router(),
+            pool: self.pool.clone(),
         };
         let mut pf = Prefetcher::spawn(ctx, 1..n_train, self.cfg.pipeline.depth)?;
         let mut presliced: VecDeque<usize> = VecDeque::new();
@@ -353,15 +374,16 @@ impl Trainer {
             let prev = &self.plans[i - 1];
             let cur = &self.plans[i];
             let host = &mut self.hosts[0];
-            let mut rng = negative_stream(self.cfg.seed, epoch, i);
-            fill_prep(
+            let base = negative_stream(self.cfg.seed, epoch, i);
+            fill_prep_with(
                 &mut host.prep,
                 &self.dataset.log,
                 prev,
                 cur,
                 &self.neg_sampler,
-                &mut rng,
+                &base,
                 self.store.router(),
+                &self.pool,
             );
             host.prep.index = i;
             host.prep.epoch = epoch;
@@ -416,7 +438,7 @@ impl Trainer {
             host,
             &self.dataset.log,
             prev,
-            &*self.store,
+            &self.store, // concrete enum: the scalar pass devirtualizes
             &self.nbr,
             self.mailbox.as_ref(),
             &self.gmm,
@@ -484,7 +506,7 @@ impl Trainer {
             prev,
             &self.sbar_scratch,
             u_msg,
-            &mut *self.store,
+            &mut self.store,
             &mut self.nbr,
             self.mailbox.as_mut(),
             &mut self.gmm,
@@ -542,7 +564,7 @@ impl Trainer {
                     prev,
                     cur,
                     &negatives,
-                    &*self.store,
+                    &self.store,
                     &self.nbr,
                     self.mailbox.as_ref(),
                     &self.gmm,

@@ -134,4 +134,16 @@ mod tests {
         let bad = parse(&["--pipeline-depth", "two"], &[]);
         assert!(bad.usize_opt("pipeline-depth").is_err());
     }
+
+    #[test]
+    fn pool_workers_option_parses_both_spellings() {
+        // `--pool-workers N` sizes the trainer's persistent worker pool;
+        // absent means "0 = auto" decided by the config layer, not here
+        let a = parse(&["train", "--pool-workers", "4"], &[]);
+        assert_eq!(a.usize_opt("pool-workers").unwrap(), Some(4));
+        let b = parse(&["train", "--pool-workers=8"], &[]);
+        assert_eq!(b.usize_opt("pool-workers").unwrap(), Some(8));
+        let c = parse(&["train"], &[]);
+        assert_eq!(c.usize_opt("pool-workers").unwrap(), None);
+    }
 }

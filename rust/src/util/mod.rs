@@ -1,10 +1,12 @@
 //! From-scratch infrastructure: the offline registry snapshot only ships
 //! the `xla` crate closure + `anyhow`, so RNG, JSON, CLI parsing, statistics,
-//! a microbench harness and a mini property-testing helper live here.
+//! a microbench harness, a mini property-testing helper and the persistent
+//! worker pool live here.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,452 @@
+//! Persistent worker pool: the threads behind every parallel host-side
+//! stage (sharded SPLICE gathers, WRITEBACK scatters, parallel PREP).
+//!
+//! ## Why not `std::thread::scope` per op
+//!
+//! The sharded memory store used to respawn scoped threads on every batched
+//! gather/scatter — tens of microseconds of spawn/join per op, which forced
+//! a conservative serial/parallel crossover (`PAR_MIN_ELEMS = 1 << 15`) and
+//! left wiki-scale batches on the serial path. A [`WorkerPool`] spawns its
+//! workers **once**; per-op handoff is a generation bump + condvar wake
+//! (~1–2 µs), so the crossover drops by an order of magnitude and the PREP
+//! hot loops can afford to fan out too.
+//!
+//! ## Handoff protocol (generation barrier)
+//!
+//! One job slot guarded by a mutex, two condvars:
+//!
+//! ```text
+//!   submitter: job = f; generation += 1; remaining = workers; notify_all
+//!              f(0)                               (lane 0 = caller)
+//!              wait until remaining == 0          (done_cv)
+//!   worker i:  wait until generation != seen      (work_cv)
+//!              f(i); remaining -= 1; notify done_cv
+//! ```
+//!
+//! The submitter **blocks until every worker has finished**, which is what
+//! makes it sound to hand workers a borrowed closure: the borrow outlives
+//! every use by construction (the `'static` transmute in `broadcast` is
+//! justified exactly by that barrier). Tasks are claimed through an atomic
+//! counter, so each `&mut` task is handed out exactly once — ownership
+//! replaces locking, as in the scoped design this pool supersedes.
+//!
+//! A `submit` mutex serializes concurrent submitters (the coordinator's
+//! SPLICE/WRITEBACK and the PREP thread may share one pool): the per-op
+//! critical sections are microseconds, so contention is noise next to the
+//! copies. **Do not** call [`WorkerPool::run`] from inside a task closure
+//! of the same pool — the nested submit would self-deadlock.
+//!
+//! `lanes() == 1` pools spawn no threads at all and run everything inline
+//! on the caller, so `--pool-workers 1` is the zero-overhead serial path —
+//! and the trivial witness that results cannot depend on the worker count
+//! (every parallel consumer is bit-identical across lane counts; pinned by
+//! the property suites in `memory/shard.rs` and `tests/shard_equivalence.rs`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+
+/// Lock with poison recovery: a panic inside a job closure unwinds through
+/// `broadcast` while guards are live, poisoning the mutexes — but every
+/// critical section here leaves `PoolState` consistent (plain field writes,
+/// nothing partial), and the `poisoned` flag already carries the error
+/// state, so recovering the guard is correct. Without this, one caught
+/// task panic would permanently brick the pool (including the process-wide
+/// global one) via `PoisonError` on the next op.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar wait with the same poison recovery as [`lock`].
+fn wait<'m, T>(cv: &Condvar, guard: MutexGuard<'m, T>) -> MutexGuard<'m, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Type-erased pointer to the submitter's borrowed job closure. Only ever
+/// dereferenced between the generation bump and the matching
+/// `remaining == 0` barrier, while the submitter is still blocked in
+/// [`WorkerPool::broadcast`] keeping the referent alive.
+#[derive(Clone, Copy)]
+struct RawJob {
+    ptr: *const (dyn Fn(usize) + Sync + 'static),
+}
+
+// SAFETY: the pointer is only shared under the generation-barrier protocol
+// above; the pointee is Sync, so calling it from worker threads is sound.
+unsafe impl Send for RawJob {}
+
+struct PoolState {
+    generation: u64,
+    job: Option<RawJob>,
+    /// Workers still running the current generation.
+    remaining: usize,
+    /// A worker's job closure panicked this generation.
+    poisoned: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// `lanes` persistent execution lanes: `lanes - 1` pinned worker threads
+/// plus the submitting thread itself (lane 0). Spawned once, reused for
+/// every op until drop (which joins all workers).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes concurrent submitters onto the single job slot.
+    submit: Mutex<()>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("lanes", &self.lanes()).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Pool with `lanes` total lanes (including the caller's). `lanes = 1`
+    /// spawns nothing and runs everything inline; `lanes = 0` means "auto"
+    /// (one lane per available core).
+    pub fn new(lanes: usize) -> WorkerPool {
+        let lanes = if lanes == 0 { default_lanes() } else { lanes };
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                generation: 0,
+                job: None,
+                remaining: 0,
+                poisoned: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..lanes)
+            .map(|lane| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("pres-pool-{lane}"))
+                    .spawn(move || worker_loop(&shared, lane))
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, submit: Mutex::new(()) }
+    }
+
+    /// Auto-sized pool: one lane per available core.
+    pub fn auto() -> WorkerPool {
+        WorkerPool::new(0)
+    }
+
+    /// The process-wide shared pool (auto-sized, spawned on first use,
+    /// lives for the process). Default home of every component that is not
+    /// handed an explicit pool — so casual construction of a sharded store
+    /// or a PREP fill never respawns threads.
+    pub fn global() -> &'static Arc<WorkerPool> {
+        static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(WorkerPool::auto()))
+    }
+
+    /// Total execution lanes (worker threads + the submitting caller).
+    pub fn lanes(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f` over every task, fanned out across the pool's lanes. Tasks
+    /// are claimed via an atomic counter, so each `&mut T` is exclusive to
+    /// exactly one lane; **within** a task `f` runs sequentially, so a task
+    /// that is an ordered work list keeps its order (the property WRITEBACK
+    /// "last masked row wins" leans on). Blocks until all tasks finished.
+    ///
+    /// Inline (no handoff at all) when the pool has one lane or there is at
+    /// most one task.
+    pub fn run<T: Send, F: Fn(&mut T) + Sync>(&self, tasks: &mut [T], f: F) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n == 1 {
+            for t in tasks.iter_mut() {
+                f(t);
+            }
+            return;
+        }
+        let base = TaskPtr(tasks.as_mut_ptr());
+        let next = AtomicUsize::new(0);
+        let body = move |_lane: usize| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: `i` is claimed exactly once across all lanes, so this
+            // is the unique `&mut` to task `i`; the slice outlives
+            // `broadcast`, which does not return before every lane is done.
+            f(unsafe { &mut *base.0.add(i) });
+        };
+        self.broadcast(&body);
+    }
+
+    /// Publish one job to every worker lane, run lane 0 on the caller, and
+    /// block until all lanes completed (the generation barrier).
+    fn broadcast<'a>(&self, f: &'a (dyn Fn(usize) + Sync + 'a)) {
+        /// Erase the job borrow's lifetime. Sound only because `broadcast`
+        /// does not return before `remaining` hits zero, so the referent
+        /// outlives every worker dereference.
+        fn erase<'a>(
+            f: &'a (dyn Fn(usize) + Sync + 'a),
+        ) -> *const (dyn Fn(usize) + Sync + 'static) {
+            let ptr: *const (dyn Fn(usize) + Sync + 'a) = f;
+            // SAFETY: same pointer, lifetime bound erased (see above).
+            unsafe {
+                std::mem::transmute::<
+                    *const (dyn Fn(usize) + Sync + 'a),
+                    *const (dyn Fn(usize) + Sync + 'static),
+                >(ptr)
+            }
+        }
+        let _serialized = lock(&self.submit);
+        {
+            let mut s = lock(&self.shared.state);
+            s.job = Some(RawJob { ptr: erase(f) });
+            s.generation += 1;
+            s.remaining = self.handles.len();
+            self.shared.work_cv.notify_all();
+        }
+        // Lane 0: the submitter works too — a 1-worker delta never loses to
+        // the serial path. Catch a panic so we still drain the barrier (the
+        // workers may be touching borrows of this very frame).
+        let lane0 = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let poisoned = {
+            let mut s = lock(&self.shared.state);
+            while s.remaining > 0 {
+                s = wait(&self.shared.done_cv, s);
+            }
+            s.job = None;
+            std::mem::take(&mut s.poisoned)
+        };
+        match lane0 {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(()) if poisoned => panic!("WorkerPool: a worker lane panicked"),
+            Ok(()) => {}
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = lock(&self.shared.state);
+            s.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut s = lock(&shared.state);
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                if s.generation != seen {
+                    seen = s.generation;
+                    break s.job.expect("job published with generation bump");
+                }
+                s = wait(&shared.work_cv, s);
+            }
+        };
+        // run outside the lock so lanes actually overlap
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (&*job.ptr)(lane) })).is_ok();
+        let mut s = lock(&shared.state);
+        if !ok {
+            s.poisoned = true;
+        }
+        s.remaining -= 1;
+        if s.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn default_lanes() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Send a raw task pointer into the job closure.
+struct TaskPtr<T>(*mut T);
+
+// SAFETY: lanes only ever materialize disjoint `&mut` elements from it
+// (atomic index claim), and T: Send bounds the data that crosses threads.
+unsafe impl<T: Send> Sync for TaskPtr<T> {}
+
+// ---- chunking helpers (shared by the PREP / sampler / route loops) ------
+
+/// Chunk size for splitting `total` rows across `lanes`, with `min_rows`
+/// the serial crossover: below it (or on a 1-lane pool) everything lands in
+/// one chunk, which [`WorkerPool::run`] executes inline. Chunks are pure
+/// layout — per-row outputs are written to fixed disjoint slots — so the
+/// chunking can never change results, only where they are computed.
+pub fn chunk_for(total: usize, lanes: usize, min_rows: usize) -> usize {
+    if lanes <= 1 || total < min_rows {
+        return total.max(1);
+    }
+    total.div_ceil(lanes).max(min_rows / 2).max(1)
+}
+
+/// Carve the leading `n` elements off a mutable-slice cursor (the standard
+/// `mem::take` + `split_at_mut` reborrow dance, named once instead of
+/// inlined at every parallel-loop construction site).
+pub fn take_chunk<'a, T>(cursor: &mut &'a mut [T], n: usize) -> &'a mut [T] {
+    let (head, tail) = std::mem::take(cursor).split_at_mut(n);
+    *cursor = tail;
+    head
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let mut tasks: Vec<(usize, usize)> = (0..257).map(|i| (i, 0)).collect();
+        pool.run(&mut tasks, |t| t.1 = t.0 * 2);
+        for (i, got) in &tasks {
+            assert_eq!(*got, i * 2);
+        }
+    }
+
+    #[test]
+    fn results_are_identical_across_lane_counts() {
+        let serial = {
+            let mut xs: Vec<u64> = (0..1000).collect();
+            WorkerPool::new(1).run(&mut xs, |x| *x = x.wrapping_mul(0x9E37_79B9).rotate_left(7));
+            xs
+        };
+        for lanes in [2usize, 3, 8] {
+            let pool = WorkerPool::new(lanes);
+            let mut xs: Vec<u64> = (0..1000).collect();
+            pool.run(&mut xs, |x| *x = x.wrapping_mul(0x9E37_79B9).rotate_left(7));
+            assert_eq!(xs, serial, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn single_lane_pool_spawns_no_threads_and_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.lanes(), 1);
+        // inline => runs on this very thread, in task order
+        let me = std::thread::current().id();
+        let log = Mutex::new(Vec::new());
+        let mut tasks: Vec<usize> = (0..8).collect();
+        pool.run(&mut tasks, |t| {
+            assert_eq!(std::thread::current().id(), me);
+            log.lock().unwrap().push(*t);
+        });
+        assert_eq!(log.into_inner().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_generations() {
+        // epochs × ops on one pool: the generation counter and the free
+        // barrier must survive arbitrary reuse (the trainer runs thousands
+        // of ops per epoch on the same pool)
+        let pool = WorkerPool::new(3);
+        for epoch in 0..50 {
+            let mut xs = vec![0usize; 64];
+            pool.run(&mut xs, |x| *x += epoch);
+            assert!(xs.iter().all(|&x| x == epoch));
+        }
+    }
+
+    #[test]
+    fn construct_drop_cycles_do_not_leak_workers() {
+        // every Drop joins its workers; 50 cycles would accumulate 150
+        // threads if join were broken (and deadlock if shutdown were)
+        for _ in 0..50 {
+            let pool = WorkerPool::new(4);
+            let mut xs = vec![1u32; 16];
+            pool.run(&mut xs, |x| *x += 1);
+            assert!(xs.iter().all(|&x| x == 2));
+            drop(pool);
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_without_deadlock() {
+        // the PREP thread and the coordinator share one pool in the trainer
+        let pool = Arc::new(WorkerPool::new(2));
+        let other = pool.clone();
+        let handle = std::thread::spawn(move || {
+            let mut xs = vec![0u64; 512];
+            for _ in 0..20 {
+                other.run(&mut xs, |x| *x += 1);
+            }
+            xs[0]
+        });
+        let mut ys = vec![0u64; 512];
+        for _ in 0..20 {
+            pool.run(&mut ys, |y| *y += 2);
+        }
+        assert_eq!(handle.join().unwrap(), 20);
+        assert!(ys.iter().all(|&y| y == 40));
+    }
+
+    #[test]
+    fn empty_and_singleton_task_lists_are_noops_or_inline() {
+        let pool = WorkerPool::new(4);
+        let mut none: Vec<u32> = Vec::new();
+        pool.run(&mut none, |_| unreachable!("no tasks to run"));
+        let mut one = vec![7u32];
+        pool.run(&mut one, |x| *x += 1);
+        assert_eq!(one[0], 8);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_submitter_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut xs: Vec<usize> = (0..64).collect();
+            pool.run(&mut xs, |x| {
+                if *x == 13 {
+                    panic!("unlucky task");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic in a task must surface");
+        // the barrier drained, the pool keeps working
+        let mut xs = vec![0u8; 32];
+        pool.run(&mut xs, |x| *x = 1);
+        assert!(xs.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_for_respects_serial_crossover_and_covers_total() {
+        assert_eq!(chunk_for(100, 1, 8), 100); // 1 lane => one chunk
+        assert_eq!(chunk_for(100, 4, 256), 100); // below crossover => serial
+        let c = chunk_for(10_000, 4, 256);
+        assert!(c >= 128 && c * 4 >= 10_000);
+        assert_eq!(chunk_for(0, 4, 8), 1); // degenerate: still nonzero
+    }
+
+    #[test]
+    fn take_chunk_walks_a_cursor_without_overlap() {
+        let mut data: Vec<u32> = (0..10).collect();
+        let mut cur = data.as_mut_slice();
+        let a = take_chunk(&mut cur, 4);
+        let b = take_chunk(&mut cur, 6);
+        assert_eq!(a, &[0, 1, 2, 3]);
+        assert_eq!(b, &[4, 5, 6, 7, 8, 9]);
+        assert!(cur.is_empty());
+    }
+}

@@ -13,8 +13,23 @@ fn cfg(model: &str, pres: bool) -> ExperimentConfig {
     c
 }
 
+/// These tests drive `Trainer` through the compiled XLA step, so they skip
+/// (with a notice) when the artifacts are absent — same convention as the
+/// equivalence suites; the host-side unit/property tests remain the floor.
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists();
+    if !ok {
+        eprintln!("skipping trainer integration test: no compiled artifacts");
+    }
+    ok
+}
+
 #[test]
 fn tgn_learns_link_prediction_above_chance() {
+    if !artifacts_available() {
+        return;
+    }
     let mut trainer = Trainer::from_config(&cfg("tgn", false)).unwrap();
     let report = trainer.run().unwrap();
     // 1:1 pos:neg -> random AP = 0.5; the stream is strongly learnable
@@ -32,6 +47,9 @@ fn tgn_learns_link_prediction_above_chance() {
 
 #[test]
 fn pres_mode_trains_and_tracks_gamma() {
+    if !artifacts_available() {
+        return;
+    }
     let mut trainer = Trainer::from_config(&cfg("tgn", true)).unwrap();
     let report = trainer.run().unwrap();
     assert!(report.best_val_ap > 0.65, "val AP {}", report.best_val_ap);
@@ -45,6 +63,9 @@ fn pres_mode_trains_and_tracks_gamma() {
 
 #[test]
 fn jodie_and_apan_run_end_to_end() {
+    if !artifacts_available() {
+        return;
+    }
     for model in ["jodie", "apan"] {
         let mut trainer = Trainer::from_config(&cfg(model, true)).unwrap();
         let report = trainer.run().unwrap();
@@ -59,6 +80,9 @@ fn jodie_and_apan_run_end_to_end() {
 
 #[test]
 fn determinism_same_seed_same_curve() {
+    if !artifacts_available() {
+        return;
+    }
     let c = cfg("jodie", true);
     let mut a = Trainer::from_config(&c).unwrap();
     let mut b = Trainer::from_config(&c).unwrap();
@@ -70,6 +94,9 @@ fn determinism_same_seed_same_curve() {
 
 #[test]
 fn pending_stats_grow_with_batch_size() {
+    if !artifacts_available() {
+        return;
+    }
     let mut c_small = cfg("tgn", false);
     c_small.batch_size = 25;
     let mut c_large = cfg("tgn", false);

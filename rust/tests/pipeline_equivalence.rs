@@ -34,9 +34,9 @@ fn depth1_staleness0_is_bit_identical_to_sequential() {
         return;
     }
     let mut seq_cfg = cfg("tgn", true, 50);
-    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let mut pipe_cfg = cfg("tgn", true, 50);
-    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0 };
+    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 };
 
     let mut seq = Trainer::from_config(&seq_cfg).unwrap();
     let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
@@ -64,9 +64,9 @@ fn deeper_lookahead_stays_bit_identical_without_staleness() {
         return;
     }
     let mut a_cfg = cfg("jodie", false, 50);
-    a_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0 };
+    a_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 };
     let mut b_cfg = cfg("jodie", false, 50);
-    b_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0 };
+    b_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0, pool_workers: 0 };
     let mut a = Trainer::from_config(&a_cfg).unwrap();
     let mut b = Trainer::from_config(&b_cfg).unwrap();
     for e in 0..2 {
@@ -85,7 +85,7 @@ fn bounded_staleness_trains_to_finite_loss() {
     }
     let mut c = cfg("tgn", true, 50);
     c.epochs = 3;
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0 };
     let mut tr = Trainer::from_config(&c).unwrap();
     for e in 0..3 {
         let r = tr.train_epoch(e).unwrap();
@@ -104,9 +104,9 @@ fn staleness_zero_stays_bit_identical_and_reports_zero_lag() {
         return;
     }
     let mut seq_cfg = cfg("tgn", true, 50);
-    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let mut pipe_cfg = cfg("tgn", true, 50);
-    pipe_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0 };
+    pipe_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0, pool_workers: 0 };
     let mut seq = Trainer::from_config(&seq_cfg).unwrap();
     let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
     for e in 0..2 {
@@ -130,7 +130,7 @@ fn staleness_k_views_lag_at_most_k_commits() {
     for k in [1usize, 2] {
         let mut c = cfg("tgn", true, 50);
         c.epochs = 2;
-        c.pipeline = PipelineConfig { depth: k + 1, bounded_staleness: k };
+        c.pipeline = PipelineConfig { depth: k + 1, bounded_staleness: k, pool_workers: 0 };
         let mut tr = Trainer::from_config(&c).unwrap();
         let mut peak = 0;
         for e in 0..2 {
@@ -159,7 +159,7 @@ fn overlap_metrics_are_reported_when_pipelined() {
         return;
     }
     let mut c = cfg("tgn", false, 50);
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0 };
     let mut tr = Trainer::from_config(&c).unwrap();
     tr.train_epoch(0).unwrap(); // warm the executable cache
     let r = tr.train_epoch(1).unwrap();
@@ -172,7 +172,7 @@ fn overlap_metrics_are_reported_when_pipelined() {
     );
     assert!((0.0..=1.0).contains(&r.device_idle_frac));
     // sequential epochs report no overlap
-    tr.cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    tr.cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let r = tr.train_epoch(2).unwrap();
     assert_eq!(r.prep_secs, 0.0);
     assert_eq!(r.assemble_hidden_secs, 0.0);

@@ -13,6 +13,17 @@ fn engine() -> Engine {
     Engine::new(&dir).expect("run `make artifacts` first")
 }
 
+/// Like the other integration suites: skip (with a notice) when the
+/// compiled artifacts are absent, so the host-only tests still gate CI.
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists();
+    if !ok {
+        eprintln!("skipping runtime roundtrip test: no compiled artifacts");
+    }
+    ok
+}
+
 /// Build zero-ish but well-formed data inputs for a step (everything after
 /// the first `skip` ABI slots).
 fn data_literals(
@@ -62,6 +73,9 @@ fn clone_lits(lits: &[Literal]) -> Vec<Literal> {
 
 #[test]
 fn eval_step_runs_with_correct_arity_and_standard_semantics() {
+    if !artifacts_available() {
+        return;
+    }
     let engine = engine();
     let step = engine.step("tgn", 25, "eval").unwrap();
     let state = ModelState::init(&engine, "tgn", 0).unwrap();
@@ -92,6 +106,9 @@ fn eval_step_runs_with_correct_arity_and_standard_semantics() {
 
 #[test]
 fn train_step_updates_params_and_reports_loss() {
+    if !artifacts_available() {
+        return;
+    }
     let engine = engine();
     let step = engine.step("tgn", 25, "train").unwrap();
     let mut state = ModelState::init(&engine, "tgn", 0).unwrap();
@@ -119,6 +136,9 @@ fn train_step_updates_params_and_reports_loss() {
 
 #[test]
 fn pres_mode_produces_innovation() {
+    if !artifacts_available() {
+        return;
+    }
     let engine = engine();
     let step = engine.step("tgn", 25, "eval").unwrap();
     let state = ModelState::init(&engine, "tgn", 0).unwrap();
@@ -136,6 +156,9 @@ fn pres_mode_produces_innovation() {
 
 #[test]
 fn all_models_compile_and_run_eval() {
+    if !artifacts_available() {
+        return;
+    }
     let engine = engine();
     for model in ["tgn", "jodie", "apan"] {
         let step = engine.step(model, 25, "eval").unwrap();
@@ -151,6 +174,9 @@ fn all_models_compile_and_run_eval() {
 
 #[test]
 fn compile_cache_reuses_executables() {
+    if !artifacts_available() {
+        return;
+    }
     let engine = engine();
     let a = engine.step("jodie", 25, "eval").unwrap();
     let b = engine.step("jodie", 25, "eval").unwrap();

@@ -10,16 +10,20 @@
 //! the full PREP → SPLICE → (simulated) EXEC → WRITEBACK loop against both
 //! backends directly.
 
+use std::sync::Arc;
+
 use pres::batching::{partition, BatchPlan};
 use pres::config::{ExperimentConfig, PipelineConfig};
 use pres::datagen;
 use pres::memory::{
-    make_backend, GmmTrackers, MemoryBackend, ShardRouter, ShardedMemoryStore,
+    make_backend, make_backend_pooled, GmmTrackers, MemoryBackend, ShardRouter,
+    ShardedMemoryStore,
 };
 use pres::pipeline::{fill_prep_from, negative_stream, PrepBatch};
 use pres::runtime::Dims;
 use pres::sampler::{NegativeSampler, NeighborIndex};
 use pres::training::{Assembler, HostBatch, Trainer};
+use pres::util::pool::WorkerPool;
 use pres::util::rng::Pcg32;
 
 fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
@@ -57,7 +61,12 @@ fn dims() -> Dims {
 /// one memory backend and return the final logical snapshot. The simulated
 /// step output is a pure function of the iteration, so two backends fed the
 /// same stream diverge only if gather/scatter/routing diverge.
-fn run_host_epoch(store: &mut dyn MemoryBackend, d: Dims, b: usize) -> pres::memory::MemorySnapshot {
+fn run_host_epoch<S: MemoryBackend>(
+    store: &mut S,
+    d: Dims,
+    b: usize,
+    pool: &WorkerPool,
+) -> pres::memory::MemorySnapshot {
     let ds = datagen::generate(&datagen::tiny_profile(), 5);
     let plans: Vec<BatchPlan> = partition(0..ds.log.len(), b)
         .into_iter()
@@ -70,9 +79,17 @@ fn run_host_epoch(store: &mut dyn MemoryBackend, d: Dims, b: usize) -> pres::mem
     let mut gmm = GmmTrackers::new(ds.log.num_nodes, d.d_mem, 1.0, 0);
     for i in 1..plans.len() {
         let (prev, cur) = (&plans[i - 1], &plans[i]);
-        let mut rng = negative_stream(7, 0, i);
-        sampler.sample_batch(&ds.log, cur.range.clone(), &mut rng, &mut host.prep.negatives);
-        fill_prep_from(&mut host.prep, &ds.log, prev, cur, store.router());
+        let base = negative_stream(7, 0, i);
+        sampler.sample_batch_rowwise(
+            &ds.log,
+            cur.range.clone(),
+            &base,
+            &mut host.prep.negatives,
+            pool,
+        );
+        pres::pipeline::fill_prep_from_with(
+            &mut host.prep, &ds.log, prev, cur, store.router(), pool,
+        );
         asm.splice(&mut host, &ds.log, prev, &*store, &nbr, None, &gmm, true, 0.1);
         // "EXEC": a deterministic stand-in for the step's corrected states
         let mut step_rng = Pcg32::new(0xE0EC ^ i as u64);
@@ -87,12 +104,13 @@ fn run_host_epoch(store: &mut dyn MemoryBackend, d: Dims, b: usize) -> pres::mem
 fn host_epoch_is_bit_identical_across_shard_counts() {
     let d = dims();
     let num_nodes = datagen::generate(&datagen::tiny_profile(), 5).log.num_nodes;
+    let pool = WorkerPool::global();
     let mut flat = make_backend(num_nodes, d.d_mem, 1);
-    let baseline = run_host_epoch(&mut *flat, d, 25);
+    let baseline = run_host_epoch(&mut flat, d, 25, pool);
     for shards in [2usize, 4, 7] {
         let mut sharded = make_backend(num_nodes, d.d_mem, shards);
         assert_eq!(sharded.router().n_shards, shards as u32);
-        let snap = run_host_epoch(&mut *sharded, d, 25);
+        let snap = run_host_epoch(&mut sharded, d, 25, pool);
         assert_eq!(
             snap, baseline,
             "{shards}-shard epoch diverged from the flat store"
@@ -103,14 +121,56 @@ fn host_epoch_is_bit_identical_across_shard_counts() {
 #[test]
 fn host_epoch_survives_forced_parallel_paths() {
     // same harness, but with the serial/parallel crossover forced to 0 so
-    // every gather/scatter takes the scoped-thread path even at toy sizes
+    // every gather/scatter takes the pooled path even at toy sizes
     let d = dims();
     let num_nodes = datagen::generate(&datagen::tiny_profile(), 5).log.num_nodes;
+    let pool = Arc::new(WorkerPool::new(4));
     let mut flat = make_backend(num_nodes, d.d_mem, 1);
-    let baseline = run_host_epoch(&mut *flat, d, 25);
-    let mut forced = ShardedMemoryStore::new(num_nodes, d.d_mem, 4).with_par_threshold(0);
-    let snap = run_host_epoch(&mut forced, d, 25);
+    let baseline = run_host_epoch(&mut flat, d, 25, &pool);
+    let mut forced = ShardedMemoryStore::new(num_nodes, d.d_mem, 4)
+        .with_par_threshold(0)
+        .with_pool(pool.clone());
+    let snap = run_host_epoch(&mut forced, d, 25, &pool);
     assert_eq!(snap, baseline, "parallel-path epoch diverged from the flat store");
+}
+
+#[test]
+fn host_epoch_is_bit_identical_for_every_shard_and_worker_combination() {
+    // the PR-3 acceptance sweep: (shards, pool lanes) ∈ {2,4} × {1,2,4,8}
+    // all reproduce the flat baseline bit-for-bit, with the parallel path
+    // forced so every gather/scatter actually runs through the pool
+    let d = dims();
+    let num_nodes = datagen::generate(&datagen::tiny_profile(), 5).log.num_nodes;
+    let serial = Arc::new(WorkerPool::new(1));
+    let mut flat = make_backend(num_nodes, d.d_mem, 1);
+    let baseline = run_host_epoch(&mut flat, d, 25, &serial);
+    for shards in [2usize, 4] {
+        for lanes in [1usize, 2, 4, 8] {
+            let pool = Arc::new(WorkerPool::new(lanes));
+            let mut store = ShardedMemoryStore::new(num_nodes, d.d_mem, shards)
+                .with_par_threshold(0)
+                .with_pool(pool.clone());
+            let snap = run_host_epoch(&mut store, d, 25, &pool);
+            assert_eq!(
+                snap, baseline,
+                "epoch diverged at shards={shards}, lanes={lanes}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_backend_constructor_matches_default_pool_backend() {
+    // make_backend_pooled with an explicit pool is the same machine as
+    // make_backend on the process pool — layout and values
+    let d = dims();
+    let num_nodes = datagen::generate(&datagen::tiny_profile(), 5).log.num_nodes;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut a = make_backend_pooled(num_nodes, d.d_mem, 3, pool.clone());
+    let mut b = make_backend(num_nodes, d.d_mem, 3);
+    let snap_a = run_host_epoch(&mut a, d, 25, &pool);
+    let snap_b = run_host_epoch(&mut b, d, 25, WorkerPool::global());
+    assert_eq!(snap_a, snap_b);
 }
 
 #[test]
@@ -169,15 +229,53 @@ fn sharded_training_is_bit_identical_to_flat() {
 }
 
 #[test]
+fn training_is_bit_identical_for_every_pool_worker_count() {
+    // depth=1/staleness=0 with shards ∈ {1, 4} and --pool-workers ∈
+    // {1, 2, 4}: every combination must match the serial flat baseline
+    if !artifacts_available() {
+        return;
+    }
+    let flat_cfg = {
+        let mut c = cfg("tgn", true, 50);
+        c.pipeline.pool_workers = 1; // fully serial baseline
+        c
+    };
+    let mut flat = Trainer::from_config(&flat_cfg).unwrap();
+    let mut baseline = Vec::new();
+    for e in 0..2 {
+        baseline.push(flat.train_epoch(e).unwrap());
+    }
+    for shards in [1usize, 4] {
+        for workers in [2usize, 4] {
+            let mut c = cfg("tgn", true, 50);
+            c.memory_shards = shards;
+            c.pipeline.pool_workers = workers;
+            let mut tr = Trainer::from_config(&c).unwrap();
+            for (e, want) in baseline.iter().enumerate() {
+                let r = tr.train_epoch(e).unwrap();
+                assert_eq!(
+                    r.train_loss, want.train_loss,
+                    "epoch {e}: loss diverged at shards={shards}, workers={workers}"
+                );
+                assert_eq!(
+                    r.train_ap, want.train_ap,
+                    "epoch {e}: AP diverged at shards={shards}, workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn sharded_training_matches_flat_in_sequential_mode_too() {
     // depth = 0 exercises the inline-PREP path's router plumbing
     if !artifacts_available() {
         return;
     }
     let mut a_cfg = cfg("jodie", false, 50);
-    a_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    a_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let mut b_cfg = cfg("jodie", false, 50);
-    b_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0 };
+    b_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     b_cfg.memory_shards = 4;
     let mut a = Trainer::from_config(&a_cfg).unwrap();
     let mut b = Trainer::from_config(&b_cfg).unwrap();
