@@ -1,0 +1,122 @@
+//! Host EXEC throughput: full train-step latency (forward + backward +
+//! Adam) on the pure-Rust backend, swept over batch size × pool workers.
+//!
+//!     cargo bench --bench host_exec [-- --quick]
+//!
+//! Lands in `BENCH_exec.json`: per-case step wall time and steps/s, plus
+//! an events/s figure (batch events per step). The worker sweep is the
+//! acceptance signal that host EXEC actually exercises the PR 3 worker
+//! pool — steps/s should improve from 1 lane to multiple lanes at the
+//! larger batch sizes.
+
+use std::sync::Arc;
+
+use pres::model::ModelState;
+use pres::runtime::engine::{lit_f32, lit_i32};
+use pres::runtime::{DType, Engine};
+use pres::util::bench::{black_box, Bench};
+use pres::util::json::Json;
+use pres::util::pool::WorkerPool;
+use pres::util::rng::Pcg32;
+use xla::Literal;
+
+/// Plausible data literals for every non-param input of a train spec.
+fn data_literals(spec: &pres::runtime::ArtifactSpec, skip: usize, seed: u64) -> Vec<Literal> {
+    let mut rng = Pcg32::new(seed);
+    spec.inputs[skip..]
+        .iter()
+        .map(|t| match t.dtype {
+            DType::I32 => {
+                let vals: Vec<i32> = (0..t.elems())
+                    .map(|_| if rng.below(3) == 0 { rng.below(2 * spec.batch as u32) as i32 } else { -1 })
+                    .collect();
+                lit_i32(&vals, &t.shape).unwrap()
+            }
+            DType::F32 => {
+                let host: Vec<f32> = if t.name == "pres_on" {
+                    vec![1.0]
+                } else if t.name == "beta" || t.name == "lr" {
+                    vec![0.01]
+                } else if t.name == "step_t" {
+                    vec![1.0]
+                } else if t.name.ends_with("_mask") || t.name == "u_wmask" || t.name == "u_cmask" {
+                    (0..t.elems()).map(|_| rng.below(2) as f32).collect()
+                } else if t.name.ends_with("_dt") {
+                    (0..t.elems()).map(|_| rng.f32() * 3.0).collect()
+                } else {
+                    (0..t.elems()).map(|_| rng.normal() * 0.3).collect()
+                };
+                lit_f32(&host, &t.shape).unwrap()
+            }
+        })
+        .collect()
+}
+
+fn clone_f32(lits: &[Literal]) -> Vec<Literal> {
+    lits.iter()
+        .map(|l| {
+            let mut host = vec![0.0f32; l.element_count()];
+            l.copy_raw_to(&mut host).unwrap();
+            let dims: Vec<usize> =
+                l.array_shape().unwrap().dims().iter().map(|&d| d as usize).collect();
+            lit_f32(&host, &dims).unwrap()
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("host_exec");
+    bench.header();
+    let mut cases = Vec::new();
+
+    let batches: &[usize] = if quick { &[50] } else { &[50, 200] };
+    let workers: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+
+    for model in ["tgn", "jodie", "apan"] {
+        for &b in batches {
+            for &w in workers {
+                let engine = Engine::host();
+                engine.set_host_pool(Arc::new(WorkerPool::new(w)));
+                let step = engine.step(model, b, "train").unwrap();
+                let state = ModelState::init(&engine, model, 0).unwrap();
+                let n = state.len();
+                let data = data_literals(&step.spec, 3 * n, 7);
+                let params = clone_f32(&state.params);
+                let m = clone_f32(&state.adam_m);
+                let v = clone_f32(&state.adam_v);
+                let args: Vec<&Literal> = params
+                    .iter()
+                    .chain(m.iter())
+                    .chain(v.iter())
+                    .chain(data.iter())
+                    .collect();
+                let label = format!("{model}_b{b}_w{w}");
+                let ns = bench
+                    .run(&label, || {
+                        black_box(step.run(&args).unwrap().len());
+                    })
+                    .mean_ns;
+                let steps_per_sec = 1e9 / ns;
+                cases.push(Json::obj(vec![
+                    ("label", Json::str(&label)),
+                    ("model", Json::str(model)),
+                    ("batch", Json::num(b as f64)),
+                    ("pool_workers", Json::num(w as f64)),
+                    ("step_ns", Json::num(ns)),
+                    ("steps_per_sec", Json::num(steps_per_sec)),
+                    ("events_per_sec", Json::num(steps_per_sec * b as f64)),
+                ]));
+            }
+        }
+    }
+
+    bench.write_csv().unwrap();
+    let report = Json::obj(vec![
+        ("bench", Json::str("host_exec")),
+        ("backend", Json::str("host")),
+        ("cases", Json::arr(cases.into_iter())),
+    ]);
+    std::fs::write("BENCH_exec.json", report.to_string_pretty()).unwrap();
+    println!("-> wrote BENCH_exec.json");
+}

@@ -61,6 +61,9 @@ pub struct ExperimentConfig {
     pub anchor_fraction: f32,
     /// Directory with HLO artifacts + manifest.json.
     pub artifacts_dir: String,
+    /// EXEC backend: "auto" (default — PJRT when `artifacts_dir` holds a
+    /// manifest, else the pure-Rust host step), "host", or "pjrt".
+    pub exec: String,
     /// Evaluate on val split every n epochs (0 = only at the end).
     pub eval_every: usize,
     /// Reuse batch plans across epochs (false rebuilds per epoch — the
@@ -91,6 +94,7 @@ impl ExperimentConfig {
             seed: 0,
             anchor_fraction: 1.0,
             artifacts_dir: "artifacts".to_string(),
+            exec: "auto".to_string(),
             eval_every: 0,
             prefetch: true,
             pipeline: PipelineConfig::default(),
@@ -128,6 +132,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.opt("artifacts_dir") {
             cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("exec") {
+            cfg.exec = v.as_str()?.to_string();
         }
         if let Some(v) = j.opt("eval_every") {
             cfg.eval_every = v.as_usize()?;
@@ -170,6 +177,9 @@ impl ExperimentConfig {
         if !(self.data_scale > 0.0) {
             bail!("data_scale must be positive");
         }
+        if !["auto", "host", "pjrt"].contains(&self.exec.as_str()) {
+            bail!("exec must be one of auto | host | pjrt, got '{}'", self.exec);
+        }
         if self.pipeline.bounded_staleness > 0 && self.pipeline.depth == 0 {
             bail!("bounded_staleness > 0 requires pipeline depth >= 1");
         }
@@ -191,6 +201,7 @@ impl ExperimentConfig {
             ("seed", Json::num(self.seed as f64)),
             ("anchor_fraction", Json::num(self.anchor_fraction as f64)),
             ("artifacts_dir", Json::str(&self.artifacts_dir)),
+            ("exec", Json::str(&self.exec)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("prefetch", Json::Bool(self.prefetch)),
             ("pipeline_depth", Json::num(self.pipeline.depth as f64)),
@@ -268,6 +279,19 @@ mod tests {
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.memory_shards, 8);
         cfg.memory_shards = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn exec_backend_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert_eq!(cfg.exec, "auto"); // default resolves by artifact presence
+        cfg.exec = "host".into();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.exec, "host");
+        cfg.exec = "pjrt".into();
+        assert!(cfg.validate().is_ok());
+        cfg.exec = "tpu".into();
         assert!(cfg.validate().is_err());
     }
 

@@ -33,7 +33,10 @@ impl Lab {
     pub fn from_args(args: &Args) -> Result<Lab> {
         let quick = args.flag("quick");
         Ok(Lab {
-            engine: Rc::new(Engine::new(Path::new(args.get_or("artifacts", "artifacts")))?),
+            engine: Rc::new(Engine::auto(
+                Path::new(args.get_or("artifacts", "artifacts")),
+                args.get_or("exec", "auto"),
+            )?),
             datasets: RefCell::new(HashMap::new()),
             trials: args.usize_or("trials", if quick { 1 } else { 3 })?,
             epochs: args.usize_or("epochs", if quick { 3 } else { 6 })?,

@@ -75,6 +75,7 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.seed = args.u64_or("seed", 0)?;
     cfg.anchor_fraction = args.f32_or("anchor", 1.0)?;
     cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    cfg.exec = args.get_or("exec", "auto").to_string();
     cfg.eval_every = args.usize_or("eval-every", 1)?;
     cfg.prefetch = !args.flag("no-prefetch");
     if let Some(depth) = args.usize_opt("pipeline-depth")? {
@@ -105,6 +106,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.seed
     );
     let mut trainer = Trainer::from_config(&cfg).context("building trainer")?;
+    println!(
+        "# exec: {} backend (requested '{}')",
+        match trainer.engine.backend() {
+            pres::runtime::ExecBackendKind::Pjrt => "pjrt",
+            pres::runtime::ExecBackendKind::Host => "host",
+        },
+        cfg.exec
+    );
     let (pend_frac, pend_pairs) = trainer.pending_summary();
     println!(
         "# pending: {:.1}% of events pend, {pend_pairs:.2} pairs/event",
@@ -225,8 +234,16 @@ fn cmd_pending(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
-    let engine = Rc::new(Engine::new(Path::new(dir))?);
+    let engine = Rc::new(Engine::auto(Path::new(dir), args.get_or("exec", "auto"))?);
     let m = engine.manifest();
+    println!(
+        "# exec backend: {}",
+        match engine.backend() {
+            pres::runtime::ExecBackendKind::Pjrt => "pjrt (compiled artifacts)",
+            pres::runtime::ExecBackendKind::Host =>
+                "host (pure-rust step over the builtin manifest; any batch size)",
+        }
+    );
     println!(
         "# dims: d_mem={} d_msg={} d_edge={} d_time={} K={} heads={} d_emb={}",
         m.dims.d_mem,

@@ -4,8 +4,18 @@
 //! The paper models the change delta_s of each vertex's memory with a
 //! 2-component GMM and predicts s_hat(t2) = s(t1) + (t2 - t1) * delta_s.
 //! Applying MLE naively would need the full history; Eq. 9's trackers
-//! (n, xi, psi) reduce it to running sums:  mu = xi / n,
-//! Sigma = psi / n - mu^2 (diagonal).
+//! reduce it to running sums. Two rate estimators coexist, each matched to
+//! its use:
+//!
+//! * **prediction** uses the time-weighted rate `mu = xi / tau`
+//!   (sum of deltas over sum of elapsed time) — robust to near-zero
+//!   per-event dt, where a mean of per-event rates explodes;
+//! * **variance** is over the *per-event* rates `r_k = delta_k / dt_k`:
+//!   `Sigma = psi / n - (rho / n)^2` (diagonal), with `rho` the running
+//!   sum of rates and `psi` the running sum of their squares. Mean and
+//!   second moment come from the same estimator, so `Sigma >= 0` up to
+//!   float rounding by construction (the `max(0)` clamp only absorbs
+//!   rounding, never a systematic inconsistency).
 //!
 //! Component assignment: the two mixture components correspond to the two
 //! event *roles* a vertex's update can arrive from — source-side vs
@@ -39,9 +49,18 @@ pub struct GmmTrackers {
     tau: Vec<f32>,
     /// [slots * 2 * d] running sums xi_i^(j) of state deltas.
     xi: Vec<f32>,
-    /// [slots * 2 * d] running square sums psi_i^(j) of per-time rates.
+    /// [slots * 2 * d] running sums rho_i^(j) of per-event rates.
+    rho: Vec<f32>,
+    /// [slots * 2 * d] running square sums psi_i^(j) of per-event rates.
     psi: Vec<f32>,
 }
+
+/// Elapsed-time floor shared by the rate denominator and the accumulated
+/// time `tau`: a `dt = 0` burst contributes one bounded rate sample AND the
+/// matching sliver of accumulated time, keeping the two estimators
+/// consistent (previously `tau` gained nothing while the rate divided by
+/// the floor).
+const DT_FLOOR: f32 = 1e-3;
 
 impl GmmTrackers {
     /// `anchor_fraction` = 1.0 tracks every vertex; < 1.0 tracks a stable
@@ -50,12 +69,16 @@ impl GmmTrackers {
         let mut slot = vec![u32::MAX; num_nodes as usize];
         let threshold = (anchor_fraction.clamp(0.0, 1.0) as f64 * u32::MAX as f64) as u64;
         let mut next = 0u32;
-        for (v, s) in slot.iter_mut().enumerate() {
-            let mut h = seed ^ (v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            let hash = splitmix64(&mut h) as u32 as u64;
-            if hash <= threshold {
-                *s = next;
-                next += 1;
+        // fraction 0.0 must track NOTHING: with `hash <= threshold` a zero
+        // threshold would still admit every vertex whose 32-bit hash is 0
+        if threshold > 0 {
+            for (v, s) in slot.iter_mut().enumerate() {
+                let mut h = seed ^ (v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let hash = splitmix64(&mut h) as u32 as u64;
+                if hash <= threshold {
+                    *s = next;
+                    next += 1;
+                }
             }
         }
         GmmTrackers {
@@ -64,6 +87,7 @@ impl GmmTrackers {
             n: vec![0; next as usize * 2],
             tau: vec![0.0; next as usize * 2],
             xi: vec![0.0; next as usize * 2 * d],
+            rho: vec![0.0; next as usize * 2 * d],
             psi: vec![0.0; next as usize * 2 * d],
         }
     }
@@ -116,13 +140,18 @@ impl GmmTrackers {
     pub fn observe(&mut self, v: u32, role: Role, s_t1: &[f32], s_bar: &[f32], dt: f32) {
         let Some(base) = self.base(v, role) else { return };
         let k = base / self.d;
+        // one floor for BOTH the accumulated time and the rate denominator
+        // (see DT_FLOOR): a zero-dt burst cannot contribute a rate sample
+        // while adding zero accumulated time
+        let dt_eff = dt.max(DT_FLOOR);
         self.n[k] += 1;
-        self.tau[k] += dt.max(0.0);
-        let inv_dt = 1.0 / dt.max(1e-3);
+        self.tau[k] += dt_eff;
+        let inv_dt = 1.0 / dt_eff;
         for i in 0..self.d {
             let delta = s_bar[i] - s_t1[i];
             self.xi[base + i] += delta;
             let r = delta * inv_dt;
+            self.rho[base + i] += r;
             self.psi[base + i] += r * r;
         }
     }
@@ -138,8 +167,10 @@ impl GmmTrackers {
         Some((0..self.d).map(|i| self.xi[base + i] * inv_tau).collect())
     }
 
-    /// Diagonal variance of per-time rates, Sigma_i^(j) = psi/n - mu^2
-    /// (Eq. 9), with mu the time-weighted rate.
+    /// Diagonal variance of the per-event rates, Sigma_i^(j) =
+    /// psi/n - (rho/n)^2 (Eq. 9): mean and second moment both come from
+    /// the per-event rate samples, so the estimator is consistent and
+    /// non-negative up to float rounding (the clamp only absorbs rounding).
     pub fn variance(&self, v: u32, role: Role) -> Option<Vec<f32>> {
         let base = self.base(v, role)?;
         let k = base / self.d;
@@ -148,12 +179,11 @@ impl GmmTrackers {
             return None;
         }
         let inv = 1.0 / count as f32;
-        let inv_tau = 1.0 / self.tau[k];
         Some(
             (0..self.d)
                 .map(|i| {
-                    let mu = self.xi[base + i] * inv_tau;
-                    (self.psi[base + i] * inv - mu * mu).max(0.0)
+                    let mean_rate = self.rho[base + i] * inv;
+                    (self.psi[base + i] * inv - mean_rate * mean_rate).max(0.0)
                 })
                 .collect(),
         )
@@ -187,6 +217,7 @@ impl GmmTrackers {
         self.n.iter_mut().for_each(|x| *x = 0);
         self.tau.iter_mut().for_each(|x| *x = 0.0);
         self.xi.iter_mut().for_each(|x| *x = 0.0);
+        self.rho.iter_mut().for_each(|x| *x = 0.0);
         self.psi.iter_mut().for_each(|x| *x = 0.0);
     }
 
@@ -194,7 +225,7 @@ impl GmmTrackers {
     pub fn bytes(&self) -> usize {
         self.slot.len() * 4
             + (self.n.len() + self.tau.len()) * 4
-            + (self.xi.len() + self.psi.len()) * 4
+            + (self.xi.len() + self.rho.len() + self.psi.len()) * 4
     }
 }
 
@@ -316,6 +347,77 @@ mod tests {
     }
 
     #[test]
+    fn anchor_fraction_zero_tracks_nothing() {
+        // regression: `hash <= threshold` with threshold 0 used to keep
+        // every vertex whose 32-bit hash is exactly 0 in the anchor set
+        for seed in 0..8u64 {
+            let g = GmmTrackers::new(1 << 16, 2, 0.0, seed);
+            assert_eq!(g.tracked_vertices(), 0, "seed {seed}");
+            assert!((0..1u32 << 16).all(|v| !g.is_tracked(v)));
+        }
+        // untracked everywhere -> every prediction is the identity
+        let mut g = GmmTrackers::new(16, 2, 0.0, 1);
+        g.observe(3, Role::Src, &[0.0, 0.0], &[5.0, 5.0], 1.0); // no-op
+        let mut out = [0.0; 2];
+        g.predict_into(3, Role::Src, &[1.0, -1.0], 10.0, &mut out);
+        assert_eq!(out, [1.0, -1.0]);
+    }
+
+    #[test]
+    fn zero_dt_burst_accumulates_time_and_rate_consistently() {
+        // regression: dt = 0 used to add a rate sample (divided by the
+        // 1e-3 floor) while adding ZERO accumulated time — now both sides
+        // use the same floor
+        let mut g = GmmTrackers::new(1, 1, 1.0, 0);
+        g.observe(0, Role::Src, &[0.0], &[2.0], 0.0);
+        assert_eq!(g.count(0, Role::Src), 1);
+        // tau gained the same floored dt the rate divided by
+        let mu = g.mean(0, Role::Src).unwrap();
+        assert!((mu[0] - 2.0 / 1e-3).abs() < 1.0, "mu {}", mu[0]);
+        // a single sample has zero variance under the consistent estimator
+        let var = g.variance(0, Role::Src).unwrap();
+        assert!(var[0].abs() < 1e-3 * (2.0f32 / 1e-3).powi(2), "var {}", var[0]);
+        // negative dt clamps to the same floor as zero
+        let mut h = GmmTrackers::new(1, 1, 1.0, 0);
+        h.observe(0, Role::Src, &[0.0], &[2.0], -5.0);
+        assert_eq!(h.mean(0, Role::Src), g.mean(0, Role::Src));
+    }
+
+    #[test]
+    fn variance_is_nonnegative_before_clamp_under_mixed_dt() {
+        // regression for the mixed estimator Sigma = psi/n - (xi/tau)^2:
+        // when slow transitions carry large deltas, the time-weighted mean
+        // exceeds the rms per-event rate and the old formula went
+        // systematically negative — silently clamped to 0. The consistent
+        // estimator must equal the naive per-event-rate sample variance.
+        let stream = [(10.0f32, 100.0f32), (0.1, 0.01)]; // (dt, delta)
+        let mut g = GmmTrackers::new(1, 1, 1.0, 0);
+        let mut rates: Vec<f64> = Vec::new();
+        for &(dt, delta) in &stream {
+            g.observe(0, Role::Src, &[0.0], &[delta], dt);
+            rates.push((delta / dt) as f64);
+        }
+        let n = rates.len() as f64;
+        let second = rates.iter().map(|r| r * r).sum::<f64>() / n;
+        let m_r = rates.iter().sum::<f64>() / n;
+        let naive = second - m_r * m_r;
+        assert!(naive > 1.0, "scenario sanity: {naive}");
+        // the old formula really is negative on this stream
+        let total_dt: f64 = stream.iter().map(|&(d, _)| d as f64).sum();
+        let total_delta: f64 = stream.iter().map(|&(_, x)| x as f64).sum();
+        let mu_tw = total_delta / total_dt;
+        assert!(
+            second - mu_tw * mu_tw < 0.0,
+            "scenario sanity: old estimator should be negative here"
+        );
+        let var = g.variance(0, Role::Src).unwrap()[0] as f64;
+        assert!(
+            (var - naive).abs() < 1e-2 * naive,
+            "tracker variance {var} != naive {naive}"
+        );
+    }
+
+    #[test]
     fn property_tracker_matches_naive_mle() {
         // running sums == batch MLE over the full history (Eq. 9's claim)
         prop::check_msg(
@@ -353,11 +455,14 @@ mod tests {
                 let var = g.variance(0, Role::Src).unwrap();
                 let n = transitions.len() as f64;
                 for i in 0..2 {
-                    // time-weighted rate: sum(delta) / sum(dt)
+                    // prediction mean: time-weighted rate sum(delta)/sum(dt)
                     let m: f64 = deltas.iter().map(|d| d[i]).sum::<f64>() / total_dt;
-                    // rate second moment minus mu^2
+                    // variance: sample variance of the per-event rates —
+                    // mean and second moment from the SAME estimator
+                    let m_r: f64 = rates.iter().map(|r| r[i]).sum::<f64>() / n;
                     let v: f64 =
-                        rates.iter().map(|r| r[i] * r[i]).sum::<f64>() / n - m * m;
+                        rates.iter().map(|r| r[i] * r[i]).sum::<f64>() / n - m_r * m_r;
+                    assert!(v >= -1e-9, "naive per-event variance cannot be negative");
                     if (mu[i] as f64 - m).abs() > 1e-3 * (1.0 + m.abs()) {
                         return Err(format!("mean[{i}] {} != {m}", mu[i]));
                     }

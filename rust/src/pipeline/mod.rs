@@ -14,7 +14,10 @@
 //!             predictions) — the only stage that depends on the previous
 //!             batch's WRITEBACK. Coordinator thread; sharded gathers fan
 //!             out on the same pool.
-//!   EXEC      the AOT-compiled XLA step (PJRT call). Coordinator thread.
+//!   EXEC      the fused training step — the AOT-compiled XLA executable
+//!             (PJRT) or the pure-Rust host step (`--exec host`, the
+//!             default without artifacts); the host step's GEMMs fan out
+//!             on the same pool. Coordinator thread either way.
 //!   WRITEBACK corrected memory states, GMM observations, neighbor-index
 //!             and mailbox updates. Coordinator thread; sharded scatters
 //!             fan out on the pool.
@@ -74,14 +77,16 @@
 //! every splice exact and the whole pipeline bit-identical to the
 //! sequential path.
 //!
-//! **Honest caveat:** today EXEC is a *synchronous* PJRT call on the
-//! coordinator thread, so pre-splicing only reorders coordinator work —
-//! it cannot yet overlap anything and is roughly perf-neutral versus
-//! simply raising `depth` (which costs no exactness). The knob is the
-//! semantic seam for the planned multi-stream / async EXEC (see ROADMAP
-//! "Open items"), where splicing batch `t+1` *while* batch `t` runs on a
-//! second stream is exactly what bounded staleness licenses. Until then,
-//! prefer `depth >= 1, staleness = 0`.
+//! **Honest caveat:** today EXEC is a *synchronous* call on the
+//! coordinator thread (PJRT or host), so pre-splicing only reorders
+//! coordinator work — it cannot yet overlap anything and is roughly
+//! perf-neutral versus simply raising `depth` (which costs no exactness).
+//! The knob is the semantic seam for the planned multi-stream / async EXEC
+//! (see ROADMAP "Open items"), where splicing batch `t+1` *while* batch
+//! `t` runs on a second stream is exactly what bounded staleness licenses —
+//! and the host backend's `HostStep` is Send + Sync, so that second stream
+//! no longer needs a second PJRT client. Until then, prefer
+//! `depth >= 1, staleness = 0`.
 //!
 //! Knobs live in [`crate::config::PipelineConfig`] (`--pipeline-depth` /
 //! `--staleness` on the CLI); overlap metrics (assemble-hidden seconds,

@@ -15,9 +15,11 @@
 //! blocked `send` and lets the worker exit; `Drop` then joins it, so an
 //! early coordinator error can never leak the thread or deadlock.
 //!
-//! Everything crossing the channel is plain host data — device handles
-//! (`Engine`/`Step`, `Rc` + PJRT) never leave the coordinator thread (the
-//! Send boundary; see `runtime/mod.rs`).
+//! Everything crossing the channel is plain host data — the EXEC handles
+//! (`Engine`/`Step`, `Rc`-held, raw PJRT on that backend) never leave the
+//! coordinator thread (the Send boundary; see `runtime/mod.rs`). The host
+//! EXEC backend keeps the same discipline for uniformity, even though its
+//! raw `HostStep` is Send — the seam a future multi-stream EXEC will use.
 
 use std::ops::Range;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};

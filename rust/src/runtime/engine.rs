@@ -1,10 +1,18 @@
-//! PJRT client wrapper: HLO-text loading, compile caching, typed execution.
+//! The EXEC engine: one typed step interface over two interchangeable
+//! backends (see [`ExecBackendKind`]):
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
-//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! * **Pjrt** — the original path: HLO-text loading, XLA compile caching,
+//!   PJRT execution. Interchange is HLO *text*
+//!   (`HloModuleProto::from_text_file`): jax >= 0.5 serializes protos with
+//!   64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids (see /opt/xla-example/README.md).
+//! * **Host** — the pure-Rust step (`runtime/host_step.rs`) over the
+//!   builtin manifest; no artifacts, no device runtime, any batch size.
 //!
-//! ## Result handling
+//! Both produce [`Step`]s speaking the identical positional literal ABI,
+//! so the trainer cannot tell them apart.
+//!
+//! ## Result handling (PJRT)
 //!
 //! The bundled PJRT CPU client executes with `untuple_result = false`, so a
 //! multi-output step comes back as ONE tuple buffer. `Step::run` therefore
@@ -20,65 +28,147 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
+use crate::runtime::host_step::HostStep;
 use crate::runtime::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+use crate::util::pool::WorkerPool;
 
-/// Process-wide runtime: one PJRT CPU client + compiled-executable cache.
+/// Which EXEC backend an [`Engine`] runs steps on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecBackendKind {
+    /// AOT-compiled XLA artifacts executed through PJRT.
+    Pjrt,
+    /// The pure-Rust host step (`runtime/host_step.rs`).
+    Host,
+}
+
+enum BackendImpl {
+    Pjrt { client: PjRtClient },
+    Host { pool: RefCell<Arc<WorkerPool>> },
+}
+
+/// Process-wide runtime: the manifest + a per-(model, batch, kind) step
+/// cache over one of the two EXEC backends.
 pub struct Engine {
-    client: PjRtClient,
+    backend: BackendImpl,
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<Step>>>,
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifact directory (needs manifest.json).
+    /// Create a PJRT CPU engine over an artifact directory (needs
+    /// manifest.json).
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine {
-            client,
+            backend: BackendImpl::Pjrt { client },
             manifest,
             cache: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// Create a host-native engine over the builtin manifest — runs the
+    /// full step ABI in pure Rust on the shared process pool (swap the
+    /// pool with [`Engine::set_host_pool`]).
+    pub fn host() -> Engine {
+        Engine {
+            backend: BackendImpl::Host { pool: RefCell::new(WorkerPool::global().clone()) },
+            manifest: Manifest::builtin(),
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Resolve an engine for `artifacts_dir` under an exec choice string:
+    /// `"pjrt"` requires the artifacts, `"host"` never touches them, and
+    /// `"auto"` (the default) picks PJRT exactly when
+    /// `artifacts_dir/manifest.json` exists — so a fresh checkout trains
+    /// host-native with zero setup.
+    pub fn auto(artifacts_dir: &Path, exec: &str) -> Result<Engine> {
+        match exec {
+            "pjrt" => Engine::new(artifacts_dir),
+            "host" => Ok(Engine::host()),
+            "auto" | "" => {
+                if artifacts_dir.join("manifest.json").exists() {
+                    Engine::new(artifacts_dir)
+                } else {
+                    Ok(Engine::host())
+                }
+            }
+            other => bail!("unknown exec backend '{other}' (pjrt | host | auto)"),
+        }
+    }
+
+    /// Which backend this engine executes on.
+    pub fn backend(&self) -> ExecBackendKind {
+        match self.backend {
+            BackendImpl::Pjrt { .. } => ExecBackendKind::Pjrt,
+            BackendImpl::Host { .. } => ExecBackendKind::Host,
+        }
+    }
+
+    /// Point host-executed steps at a specific worker pool (the trainer
+    /// passes its `--pool-workers` pool so host EXEC matmuls fan out on the
+    /// same lanes as SPLICE/WRITEBACK/PREP). Steps created *after* this
+    /// call use the new pool; results are lane-count-invariant either way.
+    /// No-op on the PJRT backend.
+    pub fn set_host_pool(&self, pool: Arc<WorkerPool>) {
+        if let BackendImpl::Host { pool: slot } = &self.backend {
+            *slot.borrow_mut() = pool;
+            self.cache.borrow_mut().clear(); // rebuild steps on the new pool
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
-    }
-
     /// Load + compile (cached) the step for (model, batch, kind).
     pub fn step(&self, model: &str, batch: usize, kind: &str) -> Result<Rc<Step>> {
-        let spec = self.manifest.artifact(model, batch, kind)?.clone();
+        let spec = match &self.backend {
+            // host ABI is synthesized for ANY batch size, no artifact matrix
+            BackendImpl::Host { .. } => {
+                ArtifactSpec::host(self.manifest.dims, model, batch, kind)?
+            }
+            BackendImpl::Pjrt { .. } => self.manifest.artifact(model, batch, kind)?.clone(),
+        };
         if let Some(step) = self.cache.borrow().get(&spec.name) {
             return Ok(step.clone());
         }
-        let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA-compiling {}", spec.name))?;
-        let step = Rc::new(Step {
-            spec,
-            exe,
-            client: self.client.clone(),
-        });
+        let imp = match &self.backend {
+            BackendImpl::Host { pool } => {
+                let n_params = self.manifest.param_specs(model)?.len();
+                StepImpl::Host(Box::new(HostStep::new(
+                    spec.clone(),
+                    self.manifest.dims,
+                    n_params,
+                    pool.borrow().clone(),
+                )))
+            }
+            BackendImpl::Pjrt { client } => {
+                let path = self.manifest.dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("XLA-compiling {}", spec.name))?;
+                StepImpl::Pjrt { exe, client: client.clone() }
+            }
+        };
+        let step = Rc::new(Step { spec, imp });
         self.cache
             .borrow_mut()
             .insert(step.spec.name.clone(), step.clone());
         Ok(step)
     }
 
-    /// Number of executables compiled so far (perf accounting).
+    /// Number of executables compiled/instantiated so far (perf
+    /// accounting; cache hits don't count).
     pub fn compiled_count(&self) -> usize {
         self.cache.borrow().len()
     }
@@ -149,19 +239,30 @@ pub fn check_len(spec: &TensorSpec, len: usize) -> Result<()> {
     Ok(())
 }
 
-/// One compiled executable + its ABI.
+/// One executable step + its ABI — compiled on PJRT or native on the host
+/// backend, behind the same `run` contract.
 pub struct Step {
     pub spec: ArtifactSpec,
-    exe: PjRtLoadedExecutable,
-    client: PjRtClient,
+    imp: StepImpl,
+}
+
+enum StepImpl {
+    Pjrt {
+        exe: PjRtLoadedExecutable,
+        client: PjRtClient,
+    },
+    // boxed: the host step carries its spec + dims inline, the PJRT
+    // variant only raw handles — keep the enum lean either way
+    Host(Box<HostStep>),
 }
 
 impl Step {
     /// Execute with host literals (owned or borrowed); returns one literal
     /// per manifest output (the PJRT tuple result is synced and decomposed —
-    /// see module docs).
+    /// see module docs; the host backend produces per-output literals
+    /// directly).
     ///
-    /// Inputs are staged to device buffers here and executed via
+    /// PJRT inputs are staged to device buffers here and executed via
     /// `execute_b` so the rust `PjRtBuffer` wrappers free them on drop.
     /// The crate's literal-based `execute` leaks every input device buffer
     /// (the C shim `release()`s them and never frees) — at ~3 MB/step that
@@ -175,11 +276,18 @@ impl Step {
                 self.spec.inputs.len()
             );
         }
+        let (exe, client) = match &self.imp {
+            StepImpl::Host(host) => {
+                let borrowed: Vec<&Literal> = args.iter().map(|l| l.borrow()).collect();
+                return host.run(&borrowed);
+            }
+            StepImpl::Pjrt { exe, client } => (exe, client),
+        };
         let buffers: Vec<xla::PjRtBuffer> = args
             .iter()
-            .map(|lit| self.client.buffer_from_host_literal(None, lit.borrow()))
+            .map(|lit| client.buffer_from_host_literal(None, lit.borrow()))
             .collect::<std::result::Result<_, _>>()?;
-        let mut results = self.exe.execute_b(&buffers)?;
+        let mut results = exe.execute_b(&buffers)?;
         let replica = results
             .drain(..)
             .next()

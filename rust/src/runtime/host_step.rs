@@ -1,0 +1,1738 @@
+//! Host EXEC backend: a pure-Rust forward **and backward** implementation
+//! of the manifest step ABI — the same positional contract the compiled
+//! XLA artifacts expose (see `runtime/manifest.rs` and
+//! `python/compile/model.py`), executed natively so the full PRES training
+//! loop runs on any machine with zero artifacts.
+//!
+//! One [`HostStep::run`] call is one fused training iteration of
+//! Algorithm 2, mirroring model.py's `_forward` line for line:
+//!
+//! ```text
+//!   messages -> memory update (GRU / RNN) -> PRES correction (Eq. 8)
+//!   -> memory coherence (Eq. 10) -> lag-one splice -> embeddings
+//!   (TGN attention / JODIE projection / APAN attention + pooled mail)
+//!   -> MLP decoder -> BCE + beta * (1 - coherence) -> backprop -> Adam
+//! ```
+//!
+//! The backward pass is hand-written reverse-mode over the exact forward
+//! formulas (the same formulas the Pallas kernels' custom VJPs
+//! differentiate), pinned by directional finite-difference checks in the
+//! test module. The optimizer is the artifact's Adam with identical
+//! hyper-parameters and bias correction, so `ModelState::absorb_outputs`
+//! consumes host outputs unchanged.
+//!
+//! Batched matmuls fan out on the persistent [`WorkerPool`] in fixed row
+//! chunks: each output row is accumulated independently in a fixed order,
+//! so results are bit-identical for every lane count — the same exactness
+//! invariant the PR 3 runtime pins for SPLICE/WRITEBACK/PREP.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::runtime::engine::lit_f32;
+use crate::runtime::manifest::{ArtifactSpec, DType, Dims, TensorSpec};
+use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Rows below which a pooled matmul stays on one lane (a chunk handoff
+/// costs ~1–2 µs; a 64-row by 64-wide GEMM slice is ~0.5 µs of FMA).
+const MM_PAR_MIN_ROWS: usize = 64;
+
+// ------------------------------------------------------------ small math
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    // stable log(1 + e^x)
+    x.max(0.0) + (1.0 + (-x.abs()).exp()).ln()
+}
+
+/// Run `f(first_row, rows_chunk)` over `out` split into row chunks across
+/// the pool. Per-row outputs land in fixed disjoint slots, so lane count
+/// can never change results.
+fn par_rows<F>(pool: &WorkerPool, out: &mut [f32], m: usize, row_w: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * row_w);
+    if m == 0 {
+        return;
+    }
+    let chunk = chunk_for(m, pool.lanes(), MM_PAR_MIN_ROWS);
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::with_capacity(m.div_ceil(chunk));
+    let mut cursor = out;
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = chunk.min(m - r0);
+        tasks.push((r0, take_chunk(&mut cursor, rows * row_w)));
+        r0 += rows;
+    }
+    pool.run(&mut tasks, |t| f(t.0, &mut *t.1));
+}
+
+/// out = a @ b for a: [m, k], b: [k, n] (overwrites `out`).
+fn mm_nn(pool: &WorkerPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    par_rows(pool, out, m, n, |r0, rows| {
+        for (i, or) in rows.chunks_exact_mut(n).enumerate() {
+            or.fill(0.0);
+            let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            for (kk, &av) in ar.iter().enumerate() {
+                let br = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in or.iter_mut().zip(br) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// out = a @ b^T for a: [m, k], b: [n, k] (overwrites `out`).
+fn mm_nt(pool: &WorkerPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    par_rows(pool, out, m, n, |r0, rows| {
+        for (i, or) in rows.chunks_exact_mut(n).enumerate() {
+            let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            for (j, o) in or.iter_mut().enumerate() {
+                let br = &b[j * k..(j + 1) * k];
+                *o = ar.iter().zip(br).map(|(&x, &y)| x * y).sum();
+            }
+        }
+    });
+}
+
+/// out += a^T @ b for a: [r, m], b: [r, n] (weight-gradient accumulation).
+fn mm_tn_acc(
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    par_rows(pool, out, m, n, |p0, rows| {
+        for (pi, or) in rows.chunks_exact_mut(n).enumerate() {
+            let p = p0 + pi;
+            for i in 0..r {
+                let av = a[i * m + p];
+                if av != 0.0 {
+                    let br = &b[i * n..(i + 1) * n];
+                    for (o, &bv) in or.iter_mut().zip(br) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// out[j] += sum over rows of a[:, j] (bias gradients).
+fn col_sum_acc(a: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    for row in a.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_exact_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// phi(dt) = cos(dt * omega + phi) into `out` [n, D].
+fn time_enc(dt: &[f32], omega: &[f32], phi: &[f32], out: &mut [f32]) {
+    let d = omega.len();
+    debug_assert_eq!(out.len(), dt.len() * d);
+    for (i, row) in out.chunks_exact_mut(d).enumerate() {
+        for j in 0..d {
+            row[j] = (dt[i] * omega[j] + phi[j]).cos();
+        }
+    }
+}
+
+/// Accumulate d_omega / d_phi for the encoding of `dt` given upstream
+/// `d_out` [n, D] (dt itself is data — no gradient needed).
+fn time_enc_bwd(dt: &[f32], omega: &[f32], phi: &[f32], d_out: &[f32], g_omega: &mut [f32], g_phi: &mut [f32]) {
+    let d = omega.len();
+    for (i, drow) in d_out.chunks_exact(d).enumerate() {
+        for j in 0..d {
+            let s = (dt[i] * omega[j] + phi[j]).sin();
+            g_omega[j] -= s * dt[i] * drow[j];
+            g_phi[j] -= s * drow[j];
+        }
+    }
+}
+
+// --------------------------------------------------------------- arg views
+
+fn read_f32(lit: &Literal, spec: &TensorSpec) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; spec.elems()];
+    lit.copy_raw_to(&mut out)
+        .map_err(|e| anyhow!("input '{}': {e}", spec.name))?;
+    Ok(out)
+}
+
+fn read_i32(lit: &Literal, spec: &TensorSpec) -> Result<Vec<i32>> {
+    let mut out = vec![0i32; spec.elems()];
+    lit.copy_raw_to(&mut out)
+        .map_err(|e| anyhow!("input '{}': {e}", spec.name))?;
+    Ok(out)
+}
+
+/// Parameter bank: values in ABI order plus name lookup.
+struct Params {
+    index: HashMap<String, usize>,
+    vals: Vec<Vec<f32>>,
+}
+
+impl Params {
+    fn get(&self, name: &str) -> &[f32] {
+        &self.vals[self.index[name]]
+    }
+}
+
+/// Data tensors by name (f32 and the i32 match indices).
+struct Data {
+    f: HashMap<String, Vec<f32>>,
+    i: HashMap<String, Vec<i32>>,
+}
+
+impl Data {
+    fn f(&self, name: &str) -> &[f32] {
+        &self.f[name]
+    }
+
+    fn i(&self, name: &str) -> &[i32] {
+        &self.i[name]
+    }
+
+    fn scalar(&self, name: &str) -> f32 {
+        self.f[name][0]
+    }
+}
+
+// ----------------------------------------------------------- forward state
+
+/// Per-role embedding intermediates kept for the backward pass.
+#[derive(Default)]
+struct RoleFwd {
+    mem: Vec<f32>,   // spliced memory [b, d]
+    q_in: Vec<f32>,  // tgn: [b, d + Dt] (mem | phi(0)); apan: empty
+    q: Vec<f32>,     // [b, dqk]
+    kv_in: Vec<f32>, // [b*K, k_in]
+    k: Vec<f32>,     // [b*K, dqk]
+    v: Vec<f32>,     // [b*K, dv]
+    att_w: Vec<f32>, // softmax weights [b, H, K]
+    cat: Vec<f32>,   // decoder-side concat [b, cat_w]
+    h: Vec<f32>,     // embedding [b, d_emb]
+}
+
+/// Everything the backward pass reuses from the forward evaluation.
+struct Fwd {
+    x_msg: Vec<f32>,  // [U, msg_in]
+    h1: Vec<f32>,     // [U, mh] post-relu
+    msg: Vec<f32>,    // [U, dm]
+    gh: Vec<f32>,     // gru hidden bank [U, 3d]
+    r: Vec<f32>,      // [U, d]
+    z: Vec<f32>,      // [U, d]
+    cand: Vec<f32>,   // candidate tanh [U, d]
+    s_new: Vec<f32>,  // [U, d]
+    gamma: f32,
+    gamma_rows: Vec<f32>, // [U]
+    s_bar: Vec<f32>,      // [U, d]
+    coh: f32,
+    coh_da: f32,
+    coh_db: f32,
+    roles: [RoleFwd; 3],
+    x_pos: Vec<f32>,   // [b, 2*demb]
+    hid_pos: Vec<f32>, // [b, dh]
+    pos: Vec<f32>,     // [b]
+    x_neg: Vec<f32>,
+    hid_neg: Vec<f32>,
+    neg: Vec<f32>,
+    bce: f32,
+    loss: f32,
+}
+
+// ---------------------------------------------------------------- the step
+
+/// One host-executed step for a `(model, batch, kind)` triple. Send-able by
+/// construction (plain data + `Arc<WorkerPool>`), unlike its PJRT
+/// counterpart — which is what makes multi-stream host EXEC possible
+/// (ROADMAP).
+pub struct HostStep {
+    pub spec: ArtifactSpec,
+    dims: Dims,
+    n_params: usize,
+    pool: Arc<WorkerPool>,
+}
+
+impl HostStep {
+    pub fn new(spec: ArtifactSpec, dims: Dims, n_params: usize, pool: Arc<WorkerPool>) -> HostStep {
+        HostStep { spec, dims, n_params, pool }
+    }
+
+    /// Execute the step over positional literals; returns one literal per
+    /// manifest output — the exact contract of the PJRT path.
+    pub fn run(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "host step {}: got {} args, ABI expects {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        if self.spec.model == "clf" {
+            return self.run_clf(args);
+        }
+        self.run_model(args)
+    }
+
+    fn parse_params(&self, args: &[&Literal]) -> Result<Params> {
+        let mut index = HashMap::new();
+        let mut vals = Vec::with_capacity(self.n_params);
+        for (i, spec) in self.spec.inputs[..self.n_params].iter().enumerate() {
+            index.insert(spec.name.clone(), i);
+            vals.push(read_f32(args[i], spec)?);
+        }
+        Ok(Params { index, vals })
+    }
+
+    fn parse_data(&self, args: &[&Literal], offset: usize, count: usize) -> Result<Data> {
+        let mut f = HashMap::new();
+        let mut i32s = HashMap::new();
+        for (spec, lit) in self.spec.inputs[offset..offset + count]
+            .iter()
+            .zip(&args[offset..offset + count])
+        {
+            match spec.dtype {
+                DType::F32 => {
+                    f.insert(spec.name.clone(), read_f32(lit, spec)?);
+                }
+                DType::I32 => {
+                    i32s.insert(spec.name.clone(), read_i32(lit, spec)?);
+                }
+            }
+        }
+        Ok(Data { f, i: i32s })
+    }
+
+    fn run_model(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let train = self.spec.kind == "train";
+        let n = self.n_params;
+        let data_off = if train { 3 * n } else { n };
+        let n_data = self.spec.inputs.len() - data_off - if train { 2 } else { 0 };
+        let p = self.parse_params(args)?;
+        let d = self.parse_data(args, data_off, n_data)?;
+
+        let fwd = self.forward(&p, &d);
+
+        let mut outputs: Vec<Literal> = Vec::with_capacity(self.spec.outputs.len());
+        if train {
+            let grads = self.backward(&p, &d, &fwd);
+            let lr = read_f32(args[args.len() - 2], &self.spec.inputs[args.len() - 2])?[0];
+            let t = read_f32(args[args.len() - 1], &self.spec.inputs[args.len() - 1])?[0];
+            let mut m: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let mut v: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for i in 0..n {
+                m.push(read_f32(args[n + i], &self.spec.inputs[n + i])?);
+                v.push(read_f32(args[2 * n + i], &self.spec.inputs[2 * n + i])?);
+            }
+            let mut new_p = p.vals.clone();
+            adam_update(&mut new_p, &grads, &mut m, &mut v, lr, t);
+            for (vals, spec) in new_p.iter().zip(&self.spec.inputs[..n]) {
+                outputs.push(lit_f32(vals, &spec.shape)?);
+            }
+            for (vals, spec) in m.iter().zip(&self.spec.inputs[..n]) {
+                outputs.push(lit_f32(vals, &spec.shape)?);
+            }
+            for (vals, spec) in v.iter().zip(&self.spec.inputs[..n]) {
+                outputs.push(lit_f32(vals, &spec.shape)?);
+            }
+        }
+        self.push_step_outputs(&fwd, &mut outputs)?;
+        Ok(outputs)
+    }
+
+    fn push_step_outputs(&self, fwd: &Fwd, outputs: &mut Vec<Literal>) -> Result<()> {
+        let off = outputs.len();
+        let dims = self.dims;
+        let b = self.spec.batch;
+        let u = 2 * b;
+        let delta: Vec<f32> = fwd
+            .s_bar
+            .iter()
+            .zip(&fwd.s_new)
+            .map(|(&sb, &sn)| sb - sn)
+            .collect();
+        outputs.push(lit_f32(&fwd.s_bar, &[u, dims.d_mem])?);
+        outputs.push(lit_f32(&delta, &[u, dims.d_mem])?);
+        outputs.push(lit_f32(&fwd.msg, &[u, dims.d_msg])?);
+        outputs.push(lit_f32(&fwd.pos, &[b])?);
+        outputs.push(lit_f32(&fwd.neg, &[b])?);
+        outputs.push(lit_f32(&fwd.roles[0].h, &[b, dims.d_emb])?);
+        outputs.push(lit_f32(&[fwd.loss], &[])?);
+        outputs.push(lit_f32(&[fwd.bce], &[])?);
+        outputs.push(lit_f32(&[fwd.coh], &[])?);
+        debug_assert_eq!(outputs.len() - off, 9);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ forward
+
+    fn forward(&self, p: &Params, d: &Data) -> Fwd {
+        let dims = self.dims;
+        let model = self.spec.model.as_str();
+        let pool = &*self.pool;
+        let b = self.spec.batch;
+        let u = 2 * b;
+        let (dm, de, dt_w) = (dims.d_msg, dims.d_edge, dims.d_time);
+        let dmem = dims.d_mem;
+        let msg_in = 2 * dmem + de + dt_w;
+        let mh = p.get("msg_b1").len();
+
+        // 1. MSG module: MLP over [s_self, s_other, e, phi(dt)] (Eq. 1)
+        let u_self = d.f("u_self_mem");
+        let u_dt = d.f("u_dt");
+        let mut phi_u = vec![0.0f32; u * dt_w];
+        time_enc(u_dt, p.get("time_omega"), p.get("time_phi"), &mut phi_u);
+        let mut x_msg = vec![0.0f32; u * msg_in];
+        {
+            let u_other = d.f("u_other_mem");
+            let u_efeat = d.f("u_efeat");
+            for r in 0..u {
+                let row = &mut x_msg[r * msg_in..(r + 1) * msg_in];
+                row[..dmem].copy_from_slice(&u_self[r * dmem..(r + 1) * dmem]);
+                row[dmem..2 * dmem].copy_from_slice(&u_other[r * dmem..(r + 1) * dmem]);
+                row[2 * dmem..2 * dmem + de].copy_from_slice(&u_efeat[r * de..(r + 1) * de]);
+                row[2 * dmem + de..].copy_from_slice(&phi_u[r * dt_w..(r + 1) * dt_w]);
+            }
+        }
+        let mut h1 = vec![0.0f32; u * mh];
+        mm_nn(pool, &x_msg, p.get("msg_w1"), u, msg_in, mh, &mut h1);
+        add_bias(&mut h1, p.get("msg_b1"));
+        h1.iter_mut().for_each(|x| *x = x.max(0.0));
+        let mut msg = vec![0.0f32; u * dm];
+        mm_nn(pool, &h1, p.get("msg_w2"), u, mh, dm, &mut msg);
+        add_bias(&mut msg, p.get("msg_b2"));
+
+        // 2. MEM module: GRU (tgn/apan) or vanilla RNN (jodie)
+        let mut gh = Vec::new();
+        let mut r_gate = Vec::new();
+        let mut z_gate = Vec::new();
+        let mut cand = Vec::new();
+        let mut s_new = vec![0.0f32; u * dmem];
+        if model == "jodie" {
+            // pre = msg @ wx + h @ wh + b; s_new = tanh(pre)
+            mm_nn(pool, &msg, p.get("rnn_wx"), u, dm, dmem, &mut s_new);
+            let mut hh = vec![0.0f32; u * dmem];
+            mm_nn(pool, u_self, p.get("rnn_wh"), u, dmem, dmem, &mut hh);
+            let bias = p.get("rnn_b");
+            for r in 0..u {
+                for j in 0..dmem {
+                    let idx = r * dmem + j;
+                    s_new[idx] = (s_new[idx] + hh[idx] + bias[j]).tanh();
+                }
+            }
+        } else {
+            // fused gate banks, cuDNN layout: reset | update | candidate
+            let d3 = 3 * dmem;
+            let mut gx = vec![0.0f32; u * d3];
+            mm_nn(pool, &msg, p.get("gru_wx"), u, dm, d3, &mut gx);
+            gh = vec![0.0f32; u * d3];
+            mm_nn(pool, u_self, p.get("gru_wh"), u, dmem, d3, &mut gh);
+            let bias = p.get("gru_b"); // [2, 3d] row-major
+            add_bias(&mut gx, &bias[..d3]);
+            add_bias(&mut gh, &bias[d3..]);
+            r_gate = vec![0.0f32; u * dmem];
+            z_gate = vec![0.0f32; u * dmem];
+            cand = vec![0.0f32; u * dmem];
+            for rr in 0..u {
+                let gxr = &gx[rr * d3..(rr + 1) * d3];
+                let ghr = &gh[rr * d3..(rr + 1) * d3];
+                let hr = &u_self[rr * dmem..(rr + 1) * dmem];
+                for j in 0..dmem {
+                    let r = sigmoid(gxr[j] + ghr[j]);
+                    let z = sigmoid(gxr[dmem + j] + ghr[dmem + j]);
+                    let n = (gxr[2 * dmem + j] + r * ghr[2 * dmem + j]).tanh();
+                    r_gate[rr * dmem + j] = r;
+                    z_gate[rr * dmem + j] = z;
+                    cand[rr * dmem + j] = n;
+                    s_new[rr * dmem + j] = (1.0 - z) * n + z * hr[j];
+                }
+            }
+        }
+
+        // 3. PRES prediction-correction (Eq. 8), gated to pending rows
+        let gamma = sigmoid(p.get("gamma_raw")[0]);
+        let pres_on = d.scalar("pres_on");
+        let u_cmask = d.f("u_cmask");
+        let u_pred = d.f("u_pred");
+        let gamma_rows: Vec<f32> = (0..u)
+            .map(|r| 1.0 - pres_on * u_cmask[r] * (1.0 - gamma))
+            .collect();
+        let mut s_bar = vec![0.0f32; u * dmem];
+        for r in 0..u {
+            let g = gamma_rows[r];
+            for j in 0..dmem {
+                let idx = r * dmem + j;
+                s_bar[idx] = g * s_new[idx] + (1.0 - g) * u_pred[idx];
+            }
+        }
+
+        // 4. memory coherence (Eq. 10): masked Frobenius cosine
+        let wmask = d.f("u_wmask");
+        let mut num = 0.0f32;
+        let mut aa = 0.0f32;
+        let mut bb = 0.0f32;
+        for r in 0..u {
+            let w = wmask[r];
+            if w == 0.0 {
+                continue;
+            }
+            for j in 0..dmem {
+                let idx = r * dmem + j;
+                let a = u_self[idx] * w;
+                let bv = s_bar[idx] * w;
+                num += a * bv;
+                aa += a * a;
+                bb += bv * bv;
+            }
+        }
+        let coh_da = aa.sqrt();
+        let coh_db = bb.sqrt();
+        let coh = num / (coh_da * coh_db).max(1e-9);
+
+        // 5 + 6. lag-one splice into the current rows, then embeddings
+        let mut roles: [RoleFwd; 3] = Default::default();
+        for (ri, role) in ["src", "dst", "neg"].iter().enumerate() {
+            let matches = d.i(&format!("c_{role}_match"));
+            let store_mem = d.f(&format!("c_{role}_mem"));
+            let mut mem = vec![0.0f32; b * dmem];
+            for j in 0..b {
+                let src = if matches[j] >= 0 {
+                    &s_bar[matches[j] as usize * dmem..(matches[j] as usize + 1) * dmem]
+                } else {
+                    &store_mem[j * dmem..(j + 1) * dmem]
+                };
+                mem[j * dmem..(j + 1) * dmem].copy_from_slice(src);
+            }
+            roles[ri] = self.embed(p, d, role, mem);
+        }
+
+        // 7. temporal link prediction (self-supervised BCE)
+        let demb = dims.d_emb;
+        let dh = p.get("dec_b1").len();
+        let decode = |h_a: &[f32], h_b: &[f32]| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let mut x = vec![0.0f32; b * 2 * demb];
+            for j in 0..b {
+                x[j * 2 * demb..j * 2 * demb + demb]
+                    .copy_from_slice(&h_a[j * demb..(j + 1) * demb]);
+                x[j * 2 * demb + demb..(j + 1) * 2 * demb]
+                    .copy_from_slice(&h_b[j * demb..(j + 1) * demb]);
+            }
+            let mut hid = vec![0.0f32; b * dh];
+            mm_nn(pool, &x, p.get("dec_w1"), b, 2 * demb, dh, &mut hid);
+            add_bias(&mut hid, p.get("dec_b1"));
+            hid.iter_mut().for_each(|v| *v = v.max(0.0));
+            let w2 = p.get("dec_w2"); // [dh, 1]
+            let b2 = p.get("dec_b2")[0];
+            let logits: Vec<f32> = hid
+                .chunks_exact(dh)
+                .map(|row| row.iter().zip(w2).map(|(&h, &w)| h * w).sum::<f32>() + b2)
+                .collect();
+            (x, hid, logits)
+        };
+        let (x_pos, hid_pos, pos) = decode(&roles[0].h, &roles[1].h);
+        let (x_neg, hid_neg, neg) = decode(&roles[0].h, &roles[2].h);
+
+        let bce = pos
+            .iter()
+            .zip(&neg)
+            .map(|(&p, &n)| softplus(-p) + softplus(n))
+            .sum::<f32>()
+            / b as f32;
+        let loss = bce + d.scalar("beta") * (1.0 - coh);
+
+        Fwd {
+            x_msg,
+            h1,
+            msg,
+            gh,
+            r: r_gate,
+            z: z_gate,
+            cand,
+            s_new,
+            gamma,
+            gamma_rows,
+            s_bar,
+            coh,
+            coh_da,
+            coh_db,
+            roles,
+            x_pos,
+            hid_pos,
+            pos,
+            x_neg,
+            hid_neg,
+            neg,
+            bce,
+            loss,
+        }
+    }
+
+    /// EMB module for one role over its spliced memory rows.
+    fn embed(&self, p: &Params, d: &Data, role: &str, mem: Vec<f32>) -> RoleFwd {
+        let dims = self.dims;
+        let pool = &*self.pool;
+        let b = self.spec.batch;
+        let (dmem, dt_w, k_n, heads) = (dims.d_mem, dims.d_time, dims.k_nbr, dims.heads);
+        let mut out = RoleFwd { mem, ..Default::default() };
+        match self.spec.model.as_str() {
+            "jodie" => {
+                // h = s * (1 + dt * w): a linear drift, no activation
+                let dt = d.f(&format!("c_{role}_dt"));
+                let w = p.get("proj_w");
+                let mut h = vec![0.0f32; b * dmem];
+                for j in 0..b {
+                    for i in 0..dmem {
+                        h[j * dmem + i] = out.mem[j * dmem + i] * (1.0 + dt[j] * w[i]);
+                    }
+                }
+                out.h = h;
+            }
+            "apan" => {
+                let mail = d.f(&format!("n_{role}_mail"));
+                let n_dt = d.f(&format!("n_{role}_dt"));
+                let mask = d.f(&format!("n_{role}_mask"));
+                let dqk = p.get("att_wq").len() / dmem;
+                let k_in = dims.d_msg + dt_w;
+                let dv = p.get("att_wv").len() / k_in;
+                let rows = b * k_n;
+                let mut q = vec![0.0f32; b * dqk];
+                mm_nn(pool, &out.mem, p.get("att_wq"), b, dmem, dqk, &mut q);
+                let mut phi_n = vec![0.0f32; rows * dt_w];
+                time_enc(n_dt, p.get("time_omega"), p.get("time_phi"), &mut phi_n);
+                let mut kv_in = vec![0.0f32; rows * k_in];
+                for r in 0..rows {
+                    let row = &mut kv_in[r * k_in..(r + 1) * k_in];
+                    row[..dims.d_msg]
+                        .copy_from_slice(&mail[r * dims.d_msg..(r + 1) * dims.d_msg]);
+                    row[dims.d_msg..].copy_from_slice(&phi_n[r * dt_w..(r + 1) * dt_w]);
+                }
+                let mut kk = vec![0.0f32; rows * dqk];
+                mm_nn(pool, &kv_in, p.get("att_wk"), rows, k_in, dqk, &mut kk);
+                let mut vv = vec![0.0f32; rows * dv];
+                mm_nn(pool, &kv_in, p.get("att_wv"), rows, k_in, dv, &mut vv);
+                let (att, att_w) = attention(pool, &q, &kk, &vv, mask, b, k_n, heads);
+                // pooled masked mail mean over the value projections
+                let mut pooled = vec![0.0f32; b * dv];
+                masked_mean(&vv, mask, b, k_n, dv, &mut pooled);
+                let cat_w = dmem + 2 * dv;
+                let mut cat = vec![0.0f32; b * cat_w];
+                for j in 0..b {
+                    let row = &mut cat[j * cat_w..(j + 1) * cat_w];
+                    row[..dmem].copy_from_slice(&out.mem[j * dmem..(j + 1) * dmem]);
+                    row[dmem..dmem + dv].copy_from_slice(&att[j * dv..(j + 1) * dv]);
+                    row[dmem + dv..].copy_from_slice(&pooled[j * dv..(j + 1) * dv]);
+                }
+                let mut h = vec![0.0f32; b * dims.d_emb];
+                mm_nn(pool, &cat, p.get("att_wo"), b, cat_w, dims.d_emb, &mut h);
+                add_bias(&mut h, p.get("att_bo"));
+                h.iter_mut().for_each(|v| *v = v.tanh());
+                out.q = q;
+                out.kv_in = kv_in;
+                out.k = kk;
+                out.v = vv;
+                out.att_w = att_w;
+                out.cat = cat;
+                out.h = h;
+            }
+            _ => {
+                // tgn: attention over the K most recent temporal neighbors
+                let n_mem = d.f(&format!("n_{role}_mem"));
+                let n_efeat = d.f(&format!("n_{role}_efeat"));
+                let n_dt = d.f(&format!("n_{role}_dt"));
+                let mask = d.f(&format!("n_{role}_mask"));
+                let de = dims.d_edge;
+                let q_in_w = dmem + dt_w;
+                let dqk = p.get("att_wq").len() / q_in_w;
+                let k_in = dmem + de + dt_w;
+                let dv = p.get("att_wv").len() / k_in;
+                let rows = b * k_n;
+                // query = [mem | phi(0)]
+                let zeros = vec![0.0f32; b];
+                let mut phi0 = vec![0.0f32; b * dt_w];
+                time_enc(&zeros, p.get("time_omega"), p.get("time_phi"), &mut phi0);
+                let mut q_in = vec![0.0f32; b * q_in_w];
+                for j in 0..b {
+                    let row = &mut q_in[j * q_in_w..(j + 1) * q_in_w];
+                    row[..dmem].copy_from_slice(&out.mem[j * dmem..(j + 1) * dmem]);
+                    row[dmem..].copy_from_slice(&phi0[j * dt_w..(j + 1) * dt_w]);
+                }
+                let mut q = vec![0.0f32; b * dqk];
+                mm_nn(pool, &q_in, p.get("att_wq"), b, q_in_w, dqk, &mut q);
+                let mut phi_n = vec![0.0f32; rows * dt_w];
+                time_enc(n_dt, p.get("time_omega"), p.get("time_phi"), &mut phi_n);
+                let mut kv_in = vec![0.0f32; rows * k_in];
+                for r in 0..rows {
+                    let row = &mut kv_in[r * k_in..(r + 1) * k_in];
+                    row[..dmem].copy_from_slice(&n_mem[r * dmem..(r + 1) * dmem]);
+                    row[dmem..dmem + de].copy_from_slice(&n_efeat[r * de..(r + 1) * de]);
+                    row[dmem + de..].copy_from_slice(&phi_n[r * dt_w..(r + 1) * dt_w]);
+                }
+                let mut kk = vec![0.0f32; rows * dqk];
+                mm_nn(pool, &kv_in, p.get("att_wk"), rows, k_in, dqk, &mut kk);
+                let mut vv = vec![0.0f32; rows * dv];
+                mm_nn(pool, &kv_in, p.get("att_wv"), rows, k_in, dv, &mut vv);
+                let (att, att_w) = attention(pool, &q, &kk, &vv, mask, b, k_n, heads);
+                let cat_w = dmem + dv;
+                let mut cat = vec![0.0f32; b * cat_w];
+                for j in 0..b {
+                    let row = &mut cat[j * cat_w..(j + 1) * cat_w];
+                    row[..dmem].copy_from_slice(&out.mem[j * dmem..(j + 1) * dmem]);
+                    row[dmem..].copy_from_slice(&att[j * dv..(j + 1) * dv]);
+                }
+                let mut h = vec![0.0f32; b * dims.d_emb];
+                mm_nn(pool, &cat, p.get("att_wo"), b, cat_w, dims.d_emb, &mut h);
+                add_bias(&mut h, p.get("att_bo"));
+                h.iter_mut().for_each(|v| *v = v.tanh());
+                out.q_in = q_in;
+                out.q = q;
+                out.kv_in = kv_in;
+                out.k = kk;
+                out.v = vv;
+                out.att_w = att_w;
+                out.cat = cat;
+                out.h = h;
+            }
+        }
+        out
+    }
+
+    // ----------------------------------------------------------- backward
+
+    /// Hand-written reverse-mode pass: d loss / d params, in param order.
+    fn backward(&self, p: &Params, d: &Data, fwd: &Fwd) -> Vec<Vec<f32>> {
+        let dims = self.dims;
+        let model = self.spec.model.as_str();
+        let pool = &*self.pool;
+        let b = self.spec.batch;
+        let u = 2 * b;
+        let dmem = dims.d_mem;
+        let demb = dims.d_emb;
+        let beta = d.scalar("beta");
+
+        let mut grads: Vec<Vec<f32>> =
+            p.vals.iter().map(|v| vec![0.0f32; v.len()]).collect();
+        // closures can't borrow `grads` twice; use an index helper
+        let gi = |name: &str| p.index[name];
+
+        // ---- loss = bce + beta * (1 - coh)
+        // d_bce = 1, d_coh = -beta
+        let inv_b = 1.0 / b as f32;
+        let d_pos: Vec<f32> = fwd.pos.iter().map(|&x| -inv_b * sigmoid(-x)).collect();
+        let d_neg: Vec<f32> = fwd.neg.iter().map(|&x| inv_b * sigmoid(x)).collect();
+
+        // ---- decoder backward (pos and neg heads share parameters)
+        let dh = p.get("dec_b1").len();
+        let mut d_h = [
+            vec![0.0f32; b * demb], // src
+            vec![0.0f32; b * demb], // dst
+            vec![0.0f32; b * demb], // neg
+        ];
+        let mut dec_bwd = |x: &[f32], hid: &[f32], d_logit: &[f32], other: usize| {
+            let w2 = p.get("dec_w2");
+            let mut d_hid = vec![0.0f32; b * dh];
+            for j in 0..b {
+                let dl = d_logit[j];
+                grads[gi("dec_b2")][0] += dl;
+                let hrow = &hid[j * dh..(j + 1) * dh];
+                let drow = &mut d_hid[j * dh..(j + 1) * dh];
+                let g2 = &mut grads[gi("dec_w2")];
+                for i in 0..dh {
+                    g2[i] += hrow[i] * dl;
+                    drow[i] = if hrow[i] > 0.0 { dl * w2[i] } else { 0.0 };
+                }
+            }
+            col_sum_acc(&d_hid, dh, &mut grads[gi("dec_b1")]);
+            mm_tn_acc(pool, x, &d_hid, b, 2 * demb, dh, &mut grads[gi("dec_w1")]);
+            let mut d_x = vec![0.0f32; b * 2 * demb];
+            mm_nt(pool, &d_hid, p.get("dec_w1"), b, dh, 2 * demb, &mut d_x);
+            for j in 0..b {
+                for i in 0..demb {
+                    d_h[0][j * demb + i] += d_x[j * 2 * demb + i];
+                    d_h[other][j * demb + i] += d_x[j * 2 * demb + demb + i];
+                }
+            }
+        };
+        dec_bwd(&fwd.x_pos, &fwd.hid_pos, &d_pos, 1);
+        dec_bwd(&fwd.x_neg, &fwd.hid_neg, &d_neg, 2);
+
+        // ---- embeddings backward -> d_mem per role, attention params
+        let mut d_s_bar = vec![0.0f32; u * dmem];
+        for (ri, role) in ["src", "dst", "neg"].iter().enumerate() {
+            let d_mem = self.embed_bwd(p, d, fwd, role, ri, &d_h[ri], &mut grads);
+            // splice backward: matched rows route into s_bar, store rows
+            // are data (no parameter path)
+            let matches = d.i(&format!("c_{role}_match"));
+            for j in 0..b {
+                if matches[j] >= 0 {
+                    let m = matches[j] as usize;
+                    for i in 0..dmem {
+                        d_s_bar[m * dmem + i] += d_mem[j * dmem + i];
+                    }
+                }
+            }
+        }
+
+        // ---- coherence backward into s_bar (a-side is input data)
+        {
+            let d_coh = -beta;
+            let den = (fwd.coh_da * fwd.coh_db).max(1e-9);
+            let active = fwd.coh_da * fwd.coh_db > 1e-9;
+            let wmask = d.f("u_wmask");
+            let u_self = d.f("u_self_mem");
+            for r in 0..u {
+                let w = wmask[r];
+                if w == 0.0 {
+                    continue;
+                }
+                for i in 0..dmem {
+                    let idx = r * dmem + i;
+                    let a = u_self[idx] * w;
+                    let bv = fwd.s_bar[idx] * w;
+                    let mut g = a / den;
+                    if active {
+                        g -= fwd.coh * bv / (fwd.coh_db * fwd.coh_db);
+                    }
+                    // d b / d s_bar = w
+                    d_s_bar[idx] += d_coh * g * w;
+                }
+            }
+        }
+
+        // ---- PRES correction backward
+        let pres_on = d.scalar("pres_on");
+        let u_cmask = d.f("u_cmask");
+        let u_pred = d.f("u_pred");
+        let mut d_s_new = vec![0.0f32; u * dmem];
+        let mut d_gamma = 0.0f32;
+        for r in 0..u {
+            let g = fwd.gamma_rows[r];
+            let gate = pres_on * u_cmask[r];
+            let mut d_grow = 0.0f32;
+            for i in 0..dmem {
+                let idx = r * dmem + i;
+                d_s_new[idx] = d_s_bar[idx] * g;
+                d_grow += d_s_bar[idx] * (fwd.s_new[idx] - u_pred[idx]);
+            }
+            d_gamma += d_grow * gate;
+        }
+        grads[gi("gamma_raw")][0] += d_gamma * fwd.gamma * (1.0 - fwd.gamma);
+
+        // ---- memory cell backward -> d_msg
+        let u_self = d.f("u_self_mem");
+        let dm = dims.d_msg;
+        let mut d_msg = vec![0.0f32; u * dm];
+        if model == "jodie" {
+            // s_new = tanh(msg wx + h wh + b)
+            let mut d_pre = vec![0.0f32; u * dmem];
+            for idx in 0..u * dmem {
+                d_pre[idx] = d_s_new[idx] * (1.0 - fwd.s_new[idx] * fwd.s_new[idx]);
+            }
+            col_sum_acc(&d_pre, dmem, &mut grads[gi("rnn_b")]);
+            mm_tn_acc(pool, &fwd.msg, &d_pre, u, dm, dmem, &mut grads[gi("rnn_wx")]);
+            mm_tn_acc(pool, u_self, &d_pre, u, dmem, dmem, &mut grads[gi("rnn_wh")]);
+            mm_nt(pool, &d_pre, p.get("rnn_wx"), u, dmem, dm, &mut d_msg);
+        } else {
+            let d3 = 3 * dmem;
+            let mut d_gx = vec![0.0f32; u * d3];
+            let mut d_gh = vec![0.0f32; u * d3];
+            for rr in 0..u {
+                for j in 0..dmem {
+                    let idx = rr * dmem + j;
+                    let (r, z, n) = (fwd.r[idx], fwd.z[idx], fwd.cand[idx]);
+                    let h = u_self[idx];
+                    let ds = d_s_new[idx];
+                    let d_n = ds * (1.0 - z);
+                    let d_z = ds * (h - n);
+                    let d_pre_n = d_n * (1.0 - n * n);
+                    let gh_n = fwd.gh[rr * d3 + 2 * dmem + j];
+                    let d_r = d_pre_n * gh_n;
+                    let d_pre_z = d_z * z * (1.0 - z);
+                    let d_pre_r = d_r * r * (1.0 - r);
+                    d_gx[rr * d3 + j] = d_pre_r;
+                    d_gh[rr * d3 + j] = d_pre_r;
+                    d_gx[rr * d3 + dmem + j] = d_pre_z;
+                    d_gh[rr * d3 + dmem + j] = d_pre_z;
+                    d_gx[rr * d3 + 2 * dmem + j] = d_pre_n;
+                    d_gh[rr * d3 + 2 * dmem + j] = d_pre_n * r;
+                }
+            }
+            {
+                let gb = &mut grads[gi("gru_b")];
+                let (b0, b1) = gb.split_at_mut(d3);
+                col_sum_acc(&d_gx, d3, b0);
+                col_sum_acc(&d_gh, d3, b1);
+            }
+            mm_tn_acc(pool, &fwd.msg, &d_gx, u, dm, d3, &mut grads[gi("gru_wx")]);
+            mm_tn_acc(pool, u_self, &d_gh, u, dmem, d3, &mut grads[gi("gru_wh")]);
+            mm_nt(pool, &d_gx, p.get("gru_wx"), u, d3, dm, &mut d_msg);
+        }
+
+        // ---- MSG MLP backward (u_msg output carries no loss gradient)
+        let mh = p.get("msg_b1").len();
+        let de = dims.d_edge;
+        let dt_w = dims.d_time;
+        let msg_in = 2 * dmem + de + dt_w;
+        col_sum_acc(&d_msg, dm, &mut grads[gi("msg_b2")]);
+        mm_tn_acc(pool, &fwd.h1, &d_msg, u, mh, dm, &mut grads[gi("msg_w2")]);
+        let mut d_h1 = vec![0.0f32; u * mh];
+        mm_nt(pool, &d_msg, p.get("msg_w2"), u, dm, mh, &mut d_h1);
+        for (dv, &hv) in d_h1.iter_mut().zip(&fwd.h1) {
+            if hv <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+        col_sum_acc(&d_h1, mh, &mut grads[gi("msg_b1")]);
+        mm_tn_acc(pool, &fwd.x_msg, &d_h1, u, msg_in, mh, &mut grads[gi("msg_w1")]);
+        let mut d_x = vec![0.0f32; u * msg_in];
+        mm_nt(pool, &d_h1, p.get("msg_w1"), u, mh, msg_in, &mut d_x);
+        // only the phi(dt) slice reaches parameters (the rest is data)
+        let mut d_phi_u = vec![0.0f32; u * dt_w];
+        for r in 0..u {
+            d_phi_u[r * dt_w..(r + 1) * dt_w]
+                .copy_from_slice(&d_x[r * msg_in + 2 * dmem + de..(r + 1) * msg_in]);
+        }
+        {
+            let (go, gp) = split_two(&mut grads, gi("time_omega"), gi("time_phi"));
+            time_enc_bwd(d.f("u_dt"), p.get("time_omega"), p.get("time_phi"), &d_phi_u, go, gp);
+        }
+        grads
+    }
+
+    /// Backward through one role's embedding; returns d_mem [b, d_mem].
+    #[allow(clippy::too_many_arguments)]
+    fn embed_bwd(
+        &self,
+        p: &Params,
+        d: &Data,
+        fwd: &Fwd,
+        role: &str,
+        ri: usize,
+        d_h: &[f32],
+        grads: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let dims = self.dims;
+        let pool = &*self.pool;
+        let b = self.spec.batch;
+        let (dmem, dt_w, k_n, heads) = (dims.d_mem, dims.d_time, dims.k_nbr, dims.heads);
+        let rf = &fwd.roles[ri];
+        let gi = |name: &str| p.index[name];
+        match self.spec.model.as_str() {
+            "jodie" => {
+                let dt = d.f(&format!("c_{role}_dt"));
+                let w = p.get("proj_w");
+                let mut d_mem = vec![0.0f32; b * dmem];
+                for j in 0..b {
+                    for i in 0..dmem {
+                        let idx = j * dmem + i;
+                        d_mem[idx] = d_h[idx] * (1.0 + dt[j] * w[i]);
+                        grads[gi("proj_w")][i] += d_h[idx] * rf.mem[idx] * dt[j];
+                    }
+                }
+                d_mem
+            }
+            "apan" => {
+                let mask = d.f(&format!("n_{role}_mask"));
+                let k_in = dims.d_msg + dt_w;
+                let dqk = p.get("att_wq").len() / dmem;
+                let dv = p.get("att_wv").len() / k_in;
+                let rows = b * k_n;
+                let cat_w = dmem + 2 * dv;
+                // h = tanh(cat @ wo + bo)
+                let mut d_pre = vec![0.0f32; b * dims.d_emb];
+                for (i, dp) in d_pre.iter_mut().enumerate() {
+                    *dp = d_h[i] * (1.0 - rf.h[i] * rf.h[i]);
+                }
+                col_sum_acc(&d_pre, dims.d_emb, &mut grads[gi("att_bo")]);
+                mm_tn_acc(pool, &rf.cat, &d_pre, b, cat_w, dims.d_emb, &mut grads[gi("att_wo")]);
+                let mut d_cat = vec![0.0f32; b * cat_w];
+                mm_nt(pool, &d_pre, p.get("att_wo"), b, dims.d_emb, cat_w, &mut d_cat);
+                let mut d_mem = vec![0.0f32; b * dmem];
+                let mut d_att = vec![0.0f32; b * dv];
+                let mut d_pooled = vec![0.0f32; b * dv];
+                for j in 0..b {
+                    let row = &d_cat[j * cat_w..(j + 1) * cat_w];
+                    d_mem[j * dmem..(j + 1) * dmem].copy_from_slice(&row[..dmem]);
+                    d_att[j * dv..(j + 1) * dv].copy_from_slice(&row[dmem..dmem + dv]);
+                    d_pooled[j * dv..(j + 1) * dv].copy_from_slice(&row[dmem + dv..]);
+                }
+                let (d_q, d_k, mut d_v) =
+                    attention_bwd(&rf.q, &rf.k, &rf.v, mask, &rf.att_w, &d_att, b, k_n, heads);
+                masked_mean_bwd(mask, b, k_n, dv, &d_pooled, &mut d_v);
+                // kv projections
+                mm_tn_acc(pool, &rf.kv_in, &d_k, rows, k_in, dqk, &mut grads[gi("att_wk")]);
+                mm_tn_acc(pool, &rf.kv_in, &d_v, rows, k_in, dv, &mut grads[gi("att_wv")]);
+                let mut d_kv = vec![0.0f32; rows * k_in];
+                mm_nt(pool, &d_k, p.get("att_wk"), rows, dqk, k_in, &mut d_kv);
+                let mut d_kv2 = vec![0.0f32; rows * k_in];
+                mm_nt(pool, &d_v, p.get("att_wv"), rows, dv, k_in, &mut d_kv2);
+                for (a, &bv) in d_kv.iter_mut().zip(&d_kv2) {
+                    *a += bv;
+                }
+                // phi(dt) slice -> time encoder params
+                let mut d_phi = vec![0.0f32; rows * dt_w];
+                for r in 0..rows {
+                    d_phi[r * dt_w..(r + 1) * dt_w]
+                        .copy_from_slice(&d_kv[r * k_in + dims.d_msg..(r + 1) * k_in]);
+                }
+                {
+                    let (go, gp) = split_two(grads, gi("time_omega"), gi("time_phi"));
+                    time_enc_bwd(
+                        d.f(&format!("n_{role}_dt")),
+                        p.get("time_omega"),
+                        p.get("time_phi"),
+                        &d_phi,
+                        go,
+                        gp,
+                    );
+                }
+                // q = mem @ wq
+                mm_tn_acc(pool, &rf.mem, &d_q, b, dmem, dqk, &mut grads[gi("att_wq")]);
+                let mut d_mem_q = vec![0.0f32; b * dmem];
+                mm_nt(pool, &d_q, p.get("att_wq"), b, dqk, dmem, &mut d_mem_q);
+                for (a, &bv) in d_mem.iter_mut().zip(&d_mem_q) {
+                    *a += bv;
+                }
+                d_mem
+            }
+            _ => {
+                // tgn
+                let mask = d.f(&format!("n_{role}_mask"));
+                let de = dims.d_edge;
+                let q_in_w = dmem + dt_w;
+                let dqk = p.get("att_wq").len() / q_in_w;
+                let k_in = dmem + de + dt_w;
+                let dv = p.get("att_wv").len() / k_in;
+                let rows = b * k_n;
+                let cat_w = dmem + dv;
+                let mut d_pre = vec![0.0f32; b * dims.d_emb];
+                for (i, dp) in d_pre.iter_mut().enumerate() {
+                    *dp = d_h[i] * (1.0 - rf.h[i] * rf.h[i]);
+                }
+                col_sum_acc(&d_pre, dims.d_emb, &mut grads[gi("att_bo")]);
+                mm_tn_acc(pool, &rf.cat, &d_pre, b, cat_w, dims.d_emb, &mut grads[gi("att_wo")]);
+                let mut d_cat = vec![0.0f32; b * cat_w];
+                mm_nt(pool, &d_pre, p.get("att_wo"), b, dims.d_emb, cat_w, &mut d_cat);
+                let mut d_mem = vec![0.0f32; b * dmem];
+                let mut d_att = vec![0.0f32; b * dv];
+                for j in 0..b {
+                    let row = &d_cat[j * cat_w..(j + 1) * cat_w];
+                    d_mem[j * dmem..(j + 1) * dmem].copy_from_slice(&row[..dmem]);
+                    d_att[j * dv..(j + 1) * dv].copy_from_slice(&row[dmem..]);
+                }
+                let (d_q, d_k, d_v) =
+                    attention_bwd(&rf.q, &rf.k, &rf.v, mask, &rf.att_w, &d_att, b, k_n, heads);
+                mm_tn_acc(pool, &rf.kv_in, &d_k, rows, k_in, dqk, &mut grads[gi("att_wk")]);
+                mm_tn_acc(pool, &rf.kv_in, &d_v, rows, k_in, dv, &mut grads[gi("att_wv")]);
+                let mut d_kv = vec![0.0f32; rows * k_in];
+                mm_nt(pool, &d_k, p.get("att_wk"), rows, dqk, k_in, &mut d_kv);
+                let mut d_kv2 = vec![0.0f32; rows * k_in];
+                mm_nt(pool, &d_v, p.get("att_wv"), rows, dv, k_in, &mut d_kv2);
+                for (a, &bv) in d_kv.iter_mut().zip(&d_kv2) {
+                    *a += bv;
+                }
+                let mut d_phi = vec![0.0f32; rows * dt_w];
+                for r in 0..rows {
+                    d_phi[r * dt_w..(r + 1) * dt_w]
+                        .copy_from_slice(&d_kv[r * k_in + dmem + de..(r + 1) * k_in]);
+                }
+                {
+                    let (go, gp) = split_two(grads, gi("time_omega"), gi("time_phi"));
+                    time_enc_bwd(
+                        d.f(&format!("n_{role}_dt")),
+                        p.get("time_omega"),
+                        p.get("time_phi"),
+                        &d_phi,
+                        go,
+                        gp,
+                    );
+                }
+                // q = q_in @ wq with q_in = [mem | phi(0)]
+                mm_tn_acc(pool, &rf.q_in, &d_q, b, q_in_w, dqk, &mut grads[gi("att_wq")]);
+                let mut d_q_in = vec![0.0f32; b * q_in_w];
+                mm_nt(pool, &d_q, p.get("att_wq"), b, dqk, q_in_w, &mut d_q_in);
+                let zeros = vec![0.0f32; b];
+                let mut d_phi0 = vec![0.0f32; b * dt_w];
+                for j in 0..b {
+                    for i in 0..dmem {
+                        d_mem[j * dmem + i] += d_q_in[j * q_in_w + i];
+                    }
+                    d_phi0[j * dt_w..(j + 1) * dt_w]
+                        .copy_from_slice(&d_q_in[j * q_in_w + dmem..(j + 1) * q_in_w]);
+                }
+                {
+                    let (go, gp) = split_two(grads, gi("time_omega"), gi("time_phi"));
+                    time_enc_bwd(&zeros, p.get("time_omega"), p.get("time_phi"), &d_phi0, go, gp);
+                }
+                d_mem
+            }
+        }
+    }
+
+    // -------------------------------------------------- classifier head
+
+    fn run_clf(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let train = self.spec.kind == "train";
+        let n = self.n_params;
+        let b = self.spec.batch;
+        let demb = self.dims.d_emb;
+        let p = self.parse_params(args)?;
+        let ch = p.get("clf_b1").len();
+        let pool = &*self.pool;
+        let data_off = if train { 3 * n } else { n };
+        let emb = read_f32(args[data_off], &self.spec.inputs[data_off])?;
+
+        // forward: relu MLP over frozen embeddings
+        let mut hid = vec![0.0f32; b * ch];
+        mm_nn(pool, &emb, p.get("clf_w1"), b, demb, ch, &mut hid);
+        add_bias(&mut hid, p.get("clf_b1"));
+        hid.iter_mut().for_each(|v| *v = v.max(0.0));
+        let w2 = p.get("clf_w2");
+        let b2 = p.get("clf_b2")[0];
+        let logits: Vec<f32> = hid
+            .chunks_exact(ch)
+            .map(|row| row.iter().zip(w2).map(|(&h, &w)| h * w).sum::<f32>() + b2)
+            .collect();
+
+        if !train {
+            return Ok(vec![lit_f32(&logits, &[b])?]);
+        }
+
+        let labels = read_f32(args[data_off + 1], &self.spec.inputs[data_off + 1])?;
+        let weight = read_f32(args[data_off + 2], &self.spec.inputs[data_off + 2])?;
+        let lr = read_f32(args[args.len() - 2], &self.spec.inputs[args.len() - 2])?[0];
+        let t = read_f32(args[args.len() - 1], &self.spec.inputs[args.len() - 1])?[0];
+        let wsum: f32 = weight.iter().sum::<f32>().max(1.0);
+        let loss = logits
+            .iter()
+            .zip(&labels)
+            .zip(&weight)
+            .map(|((&lg, &y), &w)| w * (y * softplus(-lg) + (1.0 - y) * softplus(lg)))
+            .sum::<f32>()
+            / wsum;
+
+        // backward
+        let mut grads: Vec<Vec<f32>> =
+            p.vals.iter().map(|v| vec![0.0f32; v.len()]).collect();
+        let gi = |name: &str| p.index[name];
+        let mut d_hid = vec![0.0f32; b * ch];
+        for j in 0..b {
+            // d loss / d logit = w * (sigmoid(logit) - y) / wsum
+            let dl = weight[j] * (sigmoid(logits[j]) - labels[j]) / wsum;
+            grads[gi("clf_b2")][0] += dl;
+            let hrow = &hid[j * ch..(j + 1) * ch];
+            let drow = &mut d_hid[j * ch..(j + 1) * ch];
+            let g2 = &mut grads[gi("clf_w2")];
+            for i in 0..ch {
+                g2[i] += hrow[i] * dl;
+                drow[i] = if hrow[i] > 0.0 { dl * w2[i] } else { 0.0 };
+            }
+        }
+        col_sum_acc(&d_hid, ch, &mut grads[gi("clf_b1")]);
+        mm_tn_acc(pool, &emb, &d_hid, b, demb, ch, &mut grads[gi("clf_w1")]);
+
+        let mut m: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut v: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for i in 0..n {
+            m.push(read_f32(args[n + i], &self.spec.inputs[n + i])?);
+            v.push(read_f32(args[2 * n + i], &self.spec.inputs[2 * n + i])?);
+        }
+        let mut new_p = p.vals.clone();
+        adam_update(&mut new_p, &grads, &mut m, &mut v, lr, t);
+        let mut outputs = Vec::with_capacity(self.spec.outputs.len());
+        for (vals, spec) in new_p.iter().zip(&self.spec.inputs[..n]) {
+            outputs.push(lit_f32(vals, &spec.shape)?);
+        }
+        for (vals, spec) in m.iter().zip(&self.spec.inputs[..n]) {
+            outputs.push(lit_f32(vals, &spec.shape)?);
+        }
+        for (vals, spec) in v.iter().zip(&self.spec.inputs[..n]) {
+            outputs.push(lit_f32(vals, &spec.shape)?);
+        }
+        outputs.push(lit_f32(&[loss], &[])?);
+        outputs.push(lit_f32(&logits, &[b])?);
+        Ok(outputs)
+    }
+}
+
+/// Two distinct mutable gradient banks out of the flat gradient list
+/// (omega/phi always travel together through the time encoder).
+fn split_two(grads: &mut [Vec<f32>], a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+    debug_assert_ne!(a, b);
+    let (lo, hi) = (a.min(b), a.max(b));
+    let (head, tail) = grads.split_at_mut(hi);
+    if a < b {
+        (head[lo].as_mut_slice(), tail[0].as_mut_slice())
+    } else {
+        (tail[0].as_mut_slice(), head[lo].as_mut_slice())
+    }
+}
+
+/// Masked multi-head scaled-dot attention over K neighbors (kernels/ref.py
+/// `temporal_attention`). Returns (out [b, H*dv], att weights [b, H, K]).
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    pool: &WorkerPool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    kk: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let hdk = q.len() / b;
+    let hdv = v.len() / (b * kk);
+    let dk = hdk / heads;
+    let dv = hdv / heads;
+    let scale = 1.0 / (dk as f32).sqrt();
+    assert!(kk <= 64, "attention scratch sized for K <= 64 neighbors");
+    let mut out = vec![0.0f32; b * hdv];
+    let mut att_w = vec![0.0f32; b * heads * kk];
+    // fan out over batch rows; each row writes its own out + att_w slots
+    {
+        struct Task<'a> {
+            i: usize,
+            out: &'a mut [f32],
+            att: &'a mut [f32],
+        }
+        let mut tasks: Vec<Task> = Vec::with_capacity(b);
+        {
+            let mut out_cur = out.as_mut_slice();
+            let mut att_cur = att_w.as_mut_slice();
+            for i in 0..b {
+                tasks.push(Task {
+                    i,
+                    out: take_chunk(&mut out_cur, hdv),
+                    att: take_chunk(&mut att_cur, heads * kk),
+                });
+            }
+        }
+        pool.run(&mut tasks, |t| {
+            let i = t.i;
+            for h in 0..heads {
+                let qrow = &q[i * hdk + h * dk..i * hdk + (h + 1) * dk];
+                let mut scores = [0.0f32; 64];
+                let scores = &mut scores[..kk];
+                let mut maxs = f32::NEG_INFINITY;
+                for (s, sc) in scores.iter_mut().enumerate() {
+                    let krow = &k[(i * kk + s) * hdk + h * dk..(i * kk + s) * hdk + (h + 1) * dk];
+                    let mut dot = 0.0f32;
+                    for (x, y) in qrow.iter().zip(krow) {
+                        dot += x * y;
+                    }
+                    let mut val = dot * scale;
+                    val += (1.0 - mask[i * kk + s]) * -1e9;
+                    *sc = val;
+                    maxs = maxs.max(val);
+                }
+                let mut denom = 0.0f32;
+                for (s, sc) in scores.iter_mut().enumerate() {
+                    *sc = (*sc - maxs).exp() * mask[i * kk + s];
+                    denom += *sc;
+                }
+                let inv = 1.0 / denom.max(1e-9);
+                for (s, sc) in scores.iter().enumerate() {
+                    let a = sc * inv;
+                    t.att[h * kk + s] = a;
+                    if a != 0.0 {
+                        let vrow =
+                            &v[(i * kk + s) * hdv + h * dv..(i * kk + s) * hdv + (h + 1) * dv];
+                        let orow = &mut t.out[h * dv..(h + 1) * dv];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += a * vv;
+                        }
+                    }
+                }
+            }
+        });
+    }
+    (out, att_w)
+}
+
+/// Reverse-mode of [`attention`]: given d_out [b, H*dv] and the saved
+/// softmax weights, produce (d_q, d_k, d_v).
+#[allow(clippy::too_many_arguments)]
+fn attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    _mask: &[f32],
+    att_w: &[f32],
+    d_out: &[f32],
+    b: usize,
+    kk: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let hdk = q.len() / b;
+    let hdv = d_out.len() / b;
+    let dk = hdk / heads;
+    let dv = hdv / heads;
+    let scale = 1.0 / (dk as f32).sqrt();
+    assert!(kk <= 64, "attention scratch sized for K <= 64 neighbors");
+    let mut d_q = vec![0.0f32; b * hdk];
+    let mut d_k = vec![0.0f32; b * kk * hdk];
+    let mut d_v = vec![0.0f32; b * kk * hdv];
+    for i in 0..b {
+        for h in 0..heads {
+            let dorow = &d_out[i * hdv + h * dv..i * hdv + (h + 1) * dv];
+            // d_att and d_v
+            let mut d_att = [0.0f32; 64];
+            let d_att = &mut d_att[..kk];
+            let mut inner = 0.0f32;
+            for s in 0..kk {
+                let a = att_w[(i * heads + h) * kk + s];
+                let vrow = &v[(i * kk + s) * hdv + h * dv..(i * kk + s) * hdv + (h + 1) * dv];
+                let dvrow =
+                    &mut d_v[(i * kk + s) * hdv + h * dv..(i * kk + s) * hdv + (h + 1) * dv];
+                let mut da = 0.0f32;
+                for ((&g, &vv), dvv) in dorow.iter().zip(vrow).zip(dvrow.iter_mut()) {
+                    da += g * vv;
+                    *dvv += a * g;
+                }
+                d_att[s] = da;
+                inner += a * da;
+            }
+            // masked softmax vjp (att rows are zero at masked slots, so
+            // they contribute nothing — same as the reference formula)
+            let qrow = &q[i * hdk + h * dk..i * hdk + (h + 1) * dk];
+            let dqrow_base = i * hdk + h * dk;
+            for s in 0..kk {
+                let a = att_w[(i * heads + h) * kk + s];
+                if a == 0.0 {
+                    continue;
+                }
+                let d_score = a * (d_att[s] - inner) * scale;
+                let krow = &k[(i * kk + s) * hdk + h * dk..(i * kk + s) * hdk + (h + 1) * dk];
+                let dkrow =
+                    &mut d_k[(i * kk + s) * hdk + h * dk..(i * kk + s) * hdk + (h + 1) * dk];
+                for (j, (&kv, dkv)) in krow.iter().zip(dkrow.iter_mut()).enumerate() {
+                    d_q[dqrow_base + j] += d_score * kv;
+                    *dkv += d_score * qrow[j];
+                }
+            }
+        }
+    }
+    (d_q, d_k, d_v)
+}
+
+/// Masked mean over the K axis (kernels/ref.py `masked_mean`).
+fn masked_mean(v: &[f32], mask: &[f32], b: usize, kk: usize, dv: usize, out: &mut [f32]) {
+    for i in 0..b {
+        let den = mask[i * kk..(i + 1) * kk].iter().sum::<f32>().max(1.0);
+        let orow = &mut out[i * dv..(i + 1) * dv];
+        orow.fill(0.0);
+        for s in 0..kk {
+            let m = mask[i * kk + s];
+            if m != 0.0 {
+                let vrow = &v[(i * kk + s) * dv..(i * kk + s + 1) * dv];
+                for (o, &x) in orow.iter_mut().zip(vrow) {
+                    *o += m * x;
+                }
+            }
+        }
+        for o in orow.iter_mut() {
+            *o /= den;
+        }
+    }
+}
+
+/// Reverse-mode of [`masked_mean`], accumulating into `d_v`.
+fn masked_mean_bwd(mask: &[f32], b: usize, kk: usize, dv: usize, d_out: &[f32], d_v: &mut [f32]) {
+    for i in 0..b {
+        let den = mask[i * kk..(i + 1) * kk].iter().sum::<f32>().max(1.0);
+        let dorow = &d_out[i * dv..(i + 1) * dv];
+        for s in 0..kk {
+            let m = mask[i * kk + s];
+            if m != 0.0 {
+                let dvrow = &mut d_v[(i * kk + s) * dv..(i * kk + s + 1) * dv];
+                for (o, &g) in dvrow.iter_mut().zip(dorow) {
+                    *o += m * g / den;
+                }
+            }
+        }
+    }
+}
+
+/// The artifact's Adam, bias-corrected with `t = step_t` (model.py
+/// `_adam`). Updates params and moments in place.
+pub(crate) fn adam_update(
+    params: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    lr: f32,
+    t: f32,
+) {
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for (((pv, gv), mv), vv) in params.iter_mut().zip(grads).zip(m.iter_mut()).zip(v.iter_mut()) {
+        for i in 0..pv.len() {
+            let g = gv[i];
+            mv[i] = ADAM_B1 * mv[i] + (1.0 - ADAM_B1) * g;
+            vv[i] = ADAM_B2 * vv[i] + (1.0 - ADAM_B2) * g * g;
+            let step = lr * (mv[i] / bc1) / ((vv[i] / bc2).sqrt() + ADAM_EPS);
+            pv[i] -= step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::init_host;
+    use crate::runtime::manifest::{builtin_param_specs, Manifest};
+    use crate::util::rng::Pcg32;
+
+    const B: usize = 3;
+
+    fn pool() -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(1))
+    }
+
+    fn make_step(model: &str, kind: &str, pool: Arc<WorkerPool>) -> HostStep {
+        let m = Manifest::builtin();
+        let spec = ArtifactSpec::host(m.dims, model, B, kind).unwrap();
+        let n = m.param_specs(model).unwrap().len();
+        HostStep::new(spec, m.dims, n, pool)
+    }
+
+    fn make_params(model: &str, seed: u64) -> Params {
+        let m = Manifest::builtin();
+        let specs = builtin_param_specs(m.dims, model);
+        let mut rng = Pcg32::new(seed);
+        let mut index = HashMap::new();
+        let mut vals = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            index.insert(s.name.clone(), i);
+            vals.push(init_host(s, &mut rng));
+        }
+        Params { index, vals }
+    }
+
+    /// Well-formed random data exercising every path: mixed masks, real
+    /// lag-one matches, pres gating on, nonzero beta.
+    fn make_data(step: &HostStep, seed: u64, pres_on: f32) -> Data {
+        let mut rng = Pcg32::new(seed ^ 0xDA7A);
+        let mut f = HashMap::new();
+        let mut i = HashMap::new();
+        let n = step.n_params;
+        let train = step.spec.kind == "train";
+        let off = if train { 3 * n } else { n };
+        let count = step.spec.inputs.len() - off - if train { 2 } else { 0 };
+        let u = 2 * step.spec.batch;
+        for spec in &step.spec.inputs[off..off + count] {
+            match spec.dtype {
+                DType::I32 => {
+                    // alternate between "no match" and a valid update row
+                    let vals: Vec<i32> = (0..spec.elems())
+                        .map(|_| {
+                            if rng.below(2) == 0 {
+                                -1
+                            } else {
+                                rng.below(u as u32) as i32
+                            }
+                        })
+                        .collect();
+                    i.insert(spec.name.clone(), vals);
+                }
+                DType::F32 => {
+                    let vals: Vec<f32> = if spec.name == "pres_on" {
+                        vec![pres_on]
+                    } else if spec.name == "beta" {
+                        vec![0.3]
+                    } else if spec.name.ends_with("_mask") || spec.name == "u_wmask"
+                        || spec.name == "u_cmask"
+                    {
+                        (0..spec.elems()).map(|_| rng.below(2) as f32).collect()
+                    } else if spec.name.ends_with("_dt") {
+                        (0..spec.elems()).map(|_| rng.f32() * 3.0).collect()
+                    } else {
+                        (0..spec.elems()).map(|_| rng.normal() * 0.3).collect()
+                    };
+                    f.insert(spec.name.clone(), vals);
+                }
+            }
+        }
+        Data { f, i }
+    }
+
+    /// Directional finite-difference check, one direction per parameter
+    /// tensor: (L(p + eps u) - L(p - eps u)) / 2eps vs grad . u.
+    fn grad_check(model: &str) {
+        let pool = pool();
+        let step = make_step(model, "train", pool);
+        let p = make_params(model, 11);
+        let d = make_data(&step, 5, 1.0);
+        let fwd = step.forward(&p, &d);
+        assert!(fwd.loss.is_finite(), "{model} loss {}", fwd.loss);
+        let grads = step.backward(&p, &d, &fwd);
+        let eps = 5e-3f32;
+        let mut rng = Pcg32::new(99);
+        let mut checked = 0;
+        // iterate in ABI order (NOT HashMap order) so each tensor draws
+        // the same direction every run — the check must be reproducible
+        let specs = builtin_param_specs(Manifest::builtin().dims, model);
+        for (name_idx, ps) in specs.iter().enumerate() {
+            let ti = ps.name.as_str();
+            let dir: Vec<f32> = (0..p.vals[name_idx].len()).map(|_| rng.normal()).collect();
+            let ana: f32 = grads[name_idx].iter().zip(&dir).map(|(&g, &u)| g * u).sum();
+            let mut plus = Params { index: p.index.clone(), vals: p.vals.clone() };
+            let mut minus = Params { index: p.index.clone(), vals: p.vals.clone() };
+            for (j, &uj) in dir.iter().enumerate() {
+                plus.vals[name_idx][j] += eps * uj;
+                minus.vals[name_idx][j] -= eps * uj;
+            }
+            let lp = step.forward(&plus, &d).loss;
+            let lm = step.forward(&minus, &d).loss;
+            let num = (lp - lm) / (2.0 * eps);
+            let tol = 3e-2 * (num.abs() + ana.abs()) + 2e-3;
+            assert!(
+                (num - ana).abs() <= tol,
+                "{model}/{ti}: numeric {num} vs analytic {ana} (tol {tol})"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 10, "{model}: only {checked} tensors checked");
+    }
+
+    #[test]
+    fn tgn_gradients_match_finite_differences() {
+        grad_check("tgn");
+    }
+
+    #[test]
+    fn jodie_gradients_match_finite_differences() {
+        grad_check("jodie");
+    }
+
+    #[test]
+    fn apan_gradients_match_finite_differences() {
+        grad_check("apan");
+    }
+
+    #[test]
+    fn standard_mode_delta_is_exactly_zero() {
+        // pres_on = 0 -> gamma_rows = 1 -> s_bar == s_new bitwise
+        let step = make_step("tgn", "eval", pool());
+        let p = make_params("tgn", 3);
+        let d = make_data(&step, 7, 0.0);
+        let fwd = step.forward(&p, &d);
+        assert_eq!(fwd.s_bar, fwd.s_new);
+        assert!(fwd.gamma_rows.iter().all(|&g| g == 1.0));
+    }
+
+    #[test]
+    fn pres_mode_produces_innovation_on_gated_rows() {
+        let step = make_step("tgn", "eval", pool());
+        let p = make_params("tgn", 3);
+        let mut d = make_data(&step, 7, 1.0);
+        d.f.get_mut("u_cmask").unwrap()[0] = 1.0; // at least one gated row
+        let fwd = step.forward(&p, &d);
+        assert!(
+            fwd.s_bar.iter().zip(&fwd.s_new).any(|(&a, &b)| a != b),
+            "PRES mode should correct gated rows"
+        );
+    }
+
+    #[test]
+    fn outputs_are_lane_count_invariant() {
+        // the exactness invariant: matmul chunking moves work, never values
+        let serial = make_step("tgn", "train", Arc::new(WorkerPool::new(1)));
+        let pooled = make_step("tgn", "train", Arc::new(WorkerPool::new(4)));
+        let p = make_params("tgn", 21);
+        let d = make_data(&serial, 13, 1.0);
+        let fa = serial.forward(&p, &d);
+        let fb = pooled.forward(&p, &d);
+        assert_eq!(fa.loss, fb.loss);
+        assert_eq!(fa.s_bar, fb.s_bar);
+        assert_eq!(fa.pos, fb.pos);
+        assert_eq!(fa.roles[0].h, fb.roles[0].h);
+        let ga = serial.backward(&p, &d, &fa);
+        let gb = pooled.backward(&p, &d, &fb);
+        assert_eq!(ga, gb, "gradients must be bit-identical across lane counts");
+    }
+
+    #[test]
+    fn splice_prefers_fresh_rows_over_store_rows() {
+        let step = make_step("jodie", "eval", pool());
+        let p = make_params("jodie", 1);
+        let mut d = make_data(&step, 1, 0.0);
+        // row 0 matched to update row 2, row 1 unmatched
+        let matches = d.i.get_mut("c_src_match").unwrap();
+        matches[0] = 2;
+        matches[1] = -1;
+        let fwd = step.forward(&p, &d);
+        let dm = step.dims.d_mem;
+        assert_eq!(&fwd.roles[0].mem[..dm], &fwd.s_bar[2 * dm..3 * dm]);
+        assert_eq!(&fwd.roles[0].mem[dm..2 * dm], &d.f("c_src_mem")[dm..2 * dm]);
+    }
+
+    #[test]
+    fn coherence_is_a_cosine() {
+        let step = make_step("tgn", "eval", pool());
+        let p = make_params("tgn", 2);
+        let d = make_data(&step, 2, 0.0);
+        let fwd = step.forward(&p, &d);
+        assert!((-1.0..=1.0).contains(&fwd.coh), "coherence {}", fwd.coh);
+        assert!(fwd.bce > 0.0);
+        assert!((fwd.loss - (fwd.bce + 0.3 * (1.0 - fwd.coh))).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adam_matches_reference_formula() {
+        let mut p = vec![vec![1.0f32, -2.0]];
+        let g = vec![vec![0.5f32, -0.25]];
+        let mut m = vec![vec![0.0f32; 2]];
+        let mut v = vec![vec![0.0f32; 2]];
+        adam_update(&mut p, &g, &mut m, &mut v, 1e-2, 1.0);
+        // t = 1: m_hat = g, v_hat = g^2 -> step ~ lr * sign(g)
+        assert!((p[0][0] - (1.0 - 1e-2)).abs() < 1e-4, "{}", p[0][0]);
+        assert!((p[0][1] - (-2.0 + 1e-2)).abs() < 1e-4, "{}", p[0][1]);
+        assert!((m[0][0] - 0.05).abs() < 1e-6);
+        assert!((v[0][0] - 0.00025).abs() < 1e-8);
+    }
+
+    #[test]
+    fn attention_respects_masks_and_normalizes() {
+        let pool = WorkerPool::new(1);
+        let (b, kk, heads, dk) = (2usize, 4usize, 2usize, 3usize);
+        let mut rng = Pcg32::new(17);
+        let q: Vec<f32> = (0..b * heads * dk).map(|_| rng.normal()).collect();
+        let k: Vec<f32> = (0..b * kk * heads * dk).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..b * kk * heads * dk).map(|_| rng.normal()).collect();
+        // row 0: slots 0 and 2 live; row 1: fully masked
+        let mask = vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let (out, att) = attention(&pool, &q, &k, &v, &mask, b, kk, heads);
+        for h in 0..heads {
+            let s: f32 = att[h * kk..(h + 1) * kk].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "weights must normalize, got {s}");
+            assert_eq!(att[h * kk + 1], 0.0);
+            assert_eq!(att[h * kk + 3], 0.0);
+        }
+        // fully-masked row: zero weights, zero output
+        assert!(att[heads * kk..].iter().all(|&a| a == 0.0));
+        assert!(out[heads * dk..].iter().all(|&o| o == 0.0));
+    }
+
+    #[test]
+    fn masked_mean_matches_reference() {
+        let v = vec![
+            1.0, 2.0, /* slot0 */ 3.0, 4.0, /* slot1 */ 5.0, 6.0, /* slot2 */
+        ];
+        let mask = vec![1.0, 0.0, 1.0];
+        let mut out = vec![0.0; 2];
+        masked_mean(&v, &mask, 1, 3, 2, &mut out);
+        assert_eq!(out, vec![3.0, 4.0]); // mean of slots 0 and 2
+        // empty mailbox -> zeros (den clamps to 1)
+        let mut empty = vec![7.0; 2];
+        masked_mean(&v, &[0.0, 0.0, 0.0], 1, 3, 2, &mut empty);
+        assert_eq!(empty, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn clf_train_descends_on_separable_embeddings() {
+        let m = Manifest::builtin();
+        let b = m.dims.clf_batch;
+        let spec = ArtifactSpec::host(m.dims, "clf", b, "train").unwrap();
+        let step = HostStep::new(spec, m.dims, 4, pool());
+        let mut p = make_params_clf(7);
+        let mut mm: Vec<Vec<f32>> = p.vals.iter().map(|v| vec![0.0; v.len()]).collect();
+        let mut vv = mm.clone();
+        // separable: label = 1 iff emb[0] > 0
+        let mut rng = Pcg32::new(31);
+        let mut emb = vec![0.0f32; b * m.dims.d_emb];
+        let mut labels = vec![0.0f32; b];
+        let weight = vec![1.0f32; b];
+        for j in 0..b {
+            let x = rng.normal();
+            emb[j * m.dims.d_emb] = x;
+            labels[j] = (x > 0.0) as u8 as f32;
+        }
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for t in 1..=40u64 {
+            let mut args: Vec<Literal> = Vec::new();
+            for (vals, s) in p.vals.iter().zip(&step.spec.inputs[..4]) {
+                args.push(lit_f32(vals, &s.shape).unwrap());
+            }
+            for (vals, s) in mm.iter().zip(&step.spec.inputs[..4]) {
+                args.push(lit_f32(vals, &s.shape).unwrap());
+            }
+            for (vals, s) in vv.iter().zip(&step.spec.inputs[..4]) {
+                args.push(lit_f32(vals, &s.shape).unwrap());
+            }
+            args.push(lit_f32(&emb, &[b, m.dims.d_emb]).unwrap());
+            args.push(lit_f32(&labels, &[b]).unwrap());
+            args.push(lit_f32(&weight, &[b]).unwrap());
+            args.push(lit_f32(&[0.05], &[]).unwrap());
+            args.push(lit_f32(&[t as f32], &[]).unwrap());
+            let refs: Vec<&Literal> = args.iter().collect();
+            let outs = step.run(&refs).unwrap();
+            // absorb params/m/v
+            for i in 0..4 {
+                outs[i].copy_raw_to(&mut p.vals[i]).unwrap();
+                outs[4 + i].copy_raw_to(&mut mm[i]).unwrap();
+                outs[8 + i].copy_raw_to(&mut vv[i]).unwrap();
+            }
+            let mut loss = [0.0f32];
+            outs[12].copy_raw_to(&mut loss).unwrap();
+            if t == 1 {
+                first = loss[0];
+            }
+            last = loss[0];
+        }
+        assert!(
+            last < first * 0.7,
+            "clf loss should descend on separable data: {first} -> {last}"
+        );
+    }
+
+    fn make_params_clf(seed: u64) -> Params {
+        let m = Manifest::builtin();
+        let specs = crate::runtime::manifest::builtin_clf_param_specs(m.dims);
+        let mut rng = Pcg32::new(seed);
+        let mut index = HashMap::new();
+        let mut vals = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            index.insert(s.name.clone(), i);
+            vals.push(init_host(s, &mut rng));
+        }
+        Params { index, vals }
+    }
+}

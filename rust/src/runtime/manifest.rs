@@ -1,5 +1,16 @@
-//! artifacts/manifest.json: the ABI contract between python/compile (which
-//! lowered the steps) and this crate (which packs positional inputs).
+//! The step ABI contract, from either side of the backend split:
+//!
+//! * **PJRT**: `artifacts/manifest.json`, written by python/compile (which
+//!   lowered the steps) and parsed here so this crate can pack positional
+//!   inputs against the compiled executables;
+//! * **Host**: [`Manifest::builtin`], the same dims / parameter specs /
+//!   input-output orders generated natively (mirroring
+//!   `python/compile/model.py` line for line), so the pure-Rust host step
+//!   backend speaks the identical ABI without any artifact directory.
+//!
+//! [`ArtifactSpec::host`] synthesizes the positional spec for any
+//! `(model, batch, kind)` — the host backend is not restricted to the
+//! compiled batch matrix.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -235,6 +246,318 @@ impl Manifest {
     }
 }
 
+// --------------------------------------------------------- builtin manifest
+//
+// The native mirror of python/compile/model.py's DIMS / param_specs /
+// data_input_specs / output_specs. Keep the two in lockstep: the host
+// backend promises the EXACT positional ABI the compiled artifacts use, so
+// the trainer's packing code cannot tell the backends apart.
+
+/// Model hyper-dimensions that only appear inside parameter shapes
+/// (model.py's DIMS entries that `Dims` doesn't carry).
+pub const MSG_HIDDEN: usize = 128;
+pub const DEC_HIDDEN: usize = 128;
+pub const CLF_HIDDEN: usize = 64;
+pub const D_QK: usize = 64;
+pub const D_VAL: usize = 64;
+
+fn glorot(shape: &[usize]) -> InitSpec {
+    InitSpec::GlorotUniform { fan_in: shape[0], fan_out: *shape.last().unwrap() }
+}
+
+fn spec(name: &str, shape: &[usize], init: InitSpec) -> ParamSpec {
+    ParamSpec { name: name.to_string(), shape: shape.to_vec(), init }
+}
+
+fn w(name: &str, shape: &[usize]) -> ParamSpec {
+    spec(name, shape, glorot(shape))
+}
+
+fn zeros(name: &str, shape: &[usize]) -> ParamSpec {
+    spec(name, shape, InitSpec::Zeros)
+}
+
+/// TGN-style timescale spread omega_i = 10^(-4i/(D-1)), phi = 0
+/// (model.py `_time_encoder_specs`).
+fn time_encoder_specs(d_time: usize) -> Vec<ParamSpec> {
+    let denom = (d_time - 1).max(1) as f32;
+    let omega: Vec<f32> = (0..d_time)
+        .map(|i| 10.0f32.powf(-4.0 * i as f32 / denom))
+        .collect();
+    vec![
+        spec("time_omega", &[d_time], InitSpec::Const(omega)),
+        spec("time_phi", &[d_time], InitSpec::Const(vec![0.0; d_time])),
+    ]
+}
+
+/// Ordered parameter specs for `model` (the ABI order; model.py
+/// `param_specs`).
+pub fn builtin_param_specs(dims: Dims, model: &str) -> Vec<ParamSpec> {
+    let (d, dm, de, dt) = (dims.d_mem, dims.d_msg, dims.d_edge, dims.d_time);
+    let (dqk, dv, demb) = (D_QK, D_VAL, dims.d_emb);
+    let (mh, dh) = (MSG_HIDDEN, DEC_HIDDEN);
+    let msg_in = 2 * d + de + dt;
+
+    let mut specs = time_encoder_specs(dt);
+    specs.extend([
+        w("msg_w1", &[msg_in, mh]),
+        zeros("msg_b1", &[mh]),
+        w("msg_w2", &[mh, dm]),
+        zeros("msg_b2", &[dm]),
+    ]);
+    if model == "jodie" {
+        specs.extend([
+            w("rnn_wx", &[dm, d]),
+            w("rnn_wh", &[d, d]),
+            zeros("rnn_b", &[d]),
+            zeros("proj_w", &[d]), // drift starts at identity projection
+        ]);
+    } else {
+        specs.extend([
+            w("gru_wx", &[dm, 3 * d]),
+            w("gru_wh", &[d, 3 * d]),
+            zeros("gru_b", &[2, 3 * d]),
+        ]);
+    }
+    if model == "tgn" {
+        let k_in = d + de + dt;
+        specs.extend([
+            w("att_wq", &[d + dt, dqk]),
+            w("att_wk", &[k_in, dqk]),
+            w("att_wv", &[k_in, dv]),
+            w("att_wo", &[d + dv, demb]),
+            zeros("att_bo", &[demb]),
+        ]);
+    } else if model == "apan" {
+        let k_in = dm + dt;
+        specs.extend([
+            w("att_wq", &[d, dqk]),
+            w("att_wk", &[k_in, dqk]),
+            w("att_wv", &[k_in, dv]),
+            w("att_wo", &[d + 2 * dv, demb]),
+            zeros("att_bo", &[demb]),
+        ]);
+    }
+    specs.extend([
+        w("dec_w1", &[2 * demb, dh]),
+        zeros("dec_b1", &[dh]),
+        w("dec_w2", &[dh, 1]),
+        zeros("dec_b2", &[1]),
+        // PRES learnable fusion gamma (Eq. 8), sigmoid-squashed:
+        // raw = 3.9 -> gamma ~ 0.98
+        spec("gamma_raw", &[1], InitSpec::Const(vec![3.9])),
+    ]);
+    specs
+}
+
+/// Node-classification head params (model.py `clf_param_specs`).
+pub fn builtin_clf_param_specs(dims: Dims) -> Vec<ParamSpec> {
+    vec![
+        w("clf_w1", &[dims.d_emb, CLF_HIDDEN]),
+        zeros("clf_b1", &[CLF_HIDDEN]),
+        w("clf_w2", &[CLF_HIDDEN, 1]),
+        zeros("clf_b2", &[1]),
+    ]
+}
+
+fn t_f32(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn t_i32(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+/// Ordered non-parameter inputs (model.py `data_input_specs`).
+pub fn builtin_data_input_specs(dims: Dims, model: &str, b: usize) -> Vec<TensorSpec> {
+    let (d, dm, de, k) = (dims.d_mem, dims.d_msg, dims.d_edge, dims.k_nbr);
+    let u = 2 * b;
+    let mut specs = vec![
+        t_f32("u_self_mem", &[u, d]),
+        t_f32("u_other_mem", &[u, d]),
+        t_f32("u_efeat", &[u, de]),
+        t_f32("u_dt", &[u]),
+        t_f32("u_pred", &[u, d]),
+        t_f32("u_wmask", &[u]),
+        t_f32("u_cmask", &[u]),
+        t_f32("c_src_mem", &[b, d]),
+        t_f32("c_dst_mem", &[b, d]),
+        t_f32("c_neg_mem", &[b, d]),
+        t_i32("c_src_match", &[b]),
+        t_i32("c_dst_match", &[b]),
+        t_i32("c_neg_match", &[b]),
+        t_f32("c_src_dt", &[b]),
+        t_f32("c_dst_dt", &[b]),
+        t_f32("c_neg_dt", &[b]),
+    ];
+    if model == "tgn" {
+        for role in ["src", "dst", "neg"] {
+            specs.push(t_f32(&format!("n_{role}_mem"), &[b, k, d]));
+            specs.push(t_f32(&format!("n_{role}_efeat"), &[b, k, de]));
+            specs.push(t_f32(&format!("n_{role}_dt"), &[b, k]));
+            specs.push(t_f32(&format!("n_{role}_mask"), &[b, k]));
+        }
+    } else if model == "apan" {
+        for role in ["src", "dst", "neg"] {
+            specs.push(t_f32(&format!("n_{role}_mail"), &[b, k, dm]));
+            specs.push(t_f32(&format!("n_{role}_dt"), &[b, k]));
+            specs.push(t_f32(&format!("n_{role}_mask"), &[b, k]));
+        }
+    }
+    specs.push(t_f32("beta", &[]));
+    specs.push(t_f32("pres_on", &[]));
+    specs
+}
+
+/// Ordered step outputs after any params/opt state (model.py
+/// `output_specs`).
+pub fn builtin_output_specs(dims: Dims, b: usize) -> Vec<TensorSpec> {
+    let u = 2 * b;
+    vec![
+        t_f32("u_sbar", &[u, dims.d_mem]),
+        t_f32("u_delta", &[u, dims.d_mem]),
+        t_f32("u_msg", &[u, dims.d_msg]),
+        t_f32("pos_logit", &[b]),
+        t_f32("neg_logit", &[b]),
+        t_f32("h_src", &[b, dims.d_emb]),
+        t_f32("loss", &[]),
+        t_f32("bce", &[]),
+        t_f32("coherence", &[]),
+    ]
+}
+
+impl ArtifactSpec {
+    /// Synthesize the positional ABI for a host-executed `(model, batch,
+    /// kind)` step — identical to what aot.py would serialize for the same
+    /// triple (train: params + m + v + data + lr/step_t in, updated state +
+    /// step outputs out; eval: params + data in, step outputs out).
+    pub fn host(dims: Dims, model: &str, batch: usize, kind: &str) -> Result<ArtifactSpec> {
+        if !["train", "eval"].contains(&kind) {
+            bail!("unknown step kind '{kind}'");
+        }
+        if model == "clf" {
+            // the clf head is a fixed-batch artifact in the compiled
+            // matrix too — reject mismatches upfront instead of failing
+            // with a per-input length error at run()
+            if batch != dims.clf_batch {
+                bail!(
+                    "clf steps exist at batch {} only (got {batch})",
+                    dims.clf_batch
+                );
+            }
+            return Ok(Self::host_clf(dims, kind));
+        }
+        if !["tgn", "jodie", "apan"].contains(&model) {
+            bail!("unknown model '{model}'");
+        }
+        let pspecs = builtin_param_specs(dims, model);
+        let params: Vec<TensorSpec> =
+            pspecs.iter().map(|p| t_f32(&p.name, &p.shape)).collect();
+        let mut inputs = params.clone();
+        if kind == "train" {
+            for prefix in ["adam_m_", "adam_v_"] {
+                inputs.extend(
+                    pspecs.iter().map(|p| t_f32(&format!("{prefix}{}", p.name), &p.shape)),
+                );
+            }
+        }
+        inputs.extend(builtin_data_input_specs(dims, model, batch));
+        let mut outputs = Vec::new();
+        if kind == "train" {
+            inputs.push(t_f32("lr", &[]));
+            inputs.push(t_f32("step_t", &[]));
+            outputs.extend(params.clone());
+            for prefix in ["adam_m_", "adam_v_"] {
+                outputs.extend(
+                    pspecs.iter().map(|p| t_f32(&format!("{prefix}{}", p.name), &p.shape)),
+                );
+            }
+        }
+        outputs.extend(builtin_output_specs(dims, batch));
+        Ok(ArtifactSpec {
+            name: format!("{model}_b{batch}_{kind}"),
+            file: String::new(), // host steps have no HLO file
+            model: model.to_string(),
+            kind: kind.to_string(),
+            batch,
+            inputs,
+            outputs,
+        })
+    }
+
+    /// The classifier head's ABI (model.py `make_clf_step`).
+    fn host_clf(dims: Dims, kind: &str) -> ArtifactSpec {
+        let b = dims.clf_batch;
+        let pspecs = builtin_clf_param_specs(dims);
+        let params: Vec<TensorSpec> =
+            pspecs.iter().map(|p| t_f32(&p.name, &p.shape)).collect();
+        let mut inputs = params.clone();
+        let mut outputs = Vec::new();
+        if kind == "train" {
+            for prefix in ["adam_m_", "adam_v_"] {
+                inputs.extend(
+                    pspecs.iter().map(|p| t_f32(&format!("{prefix}{}", p.name), &p.shape)),
+                );
+            }
+            inputs.push(t_f32("emb", &[b, dims.d_emb]));
+            inputs.push(t_f32("labels", &[b]));
+            inputs.push(t_f32("weight", &[b]));
+            inputs.push(t_f32("lr", &[]));
+            inputs.push(t_f32("step_t", &[]));
+            outputs.extend(params.clone());
+            for prefix in ["adam_m_", "adam_v_"] {
+                outputs.extend(
+                    pspecs.iter().map(|p| t_f32(&format!("{prefix}{}", p.name), &p.shape)),
+                );
+            }
+            outputs.push(t_f32("loss", &[]));
+            outputs.push(t_f32("logits", &[b]));
+        } else {
+            inputs.push(t_f32("emb", &[b, dims.d_emb]));
+            outputs.push(t_f32("logits", &[b]));
+        }
+        ArtifactSpec {
+            name: format!("clf_{kind}"),
+            file: String::new(),
+            model: "clf".to_string(),
+            kind: kind.to_string(),
+            batch: b,
+            inputs,
+            outputs,
+        }
+    }
+}
+
+impl Manifest {
+    /// The native manifest backing the host EXEC backend: model.py's DIMS
+    /// plus parameter specs for every model — no artifact directory, no
+    /// compiled batch matrix ([`ArtifactSpec::host`] synthesizes the ABI
+    /// for any batch size on demand).
+    pub fn builtin() -> Manifest {
+        let dims = Dims {
+            d_mem: 64,
+            d_msg: 64,
+            d_edge: 16,
+            d_time: 16,
+            k_nbr: 10,
+            heads: 2,
+            d_emb: 64,
+            clf_batch: 256,
+        };
+        let mut params = BTreeMap::new();
+        for model in ["tgn", "jodie", "apan"] {
+            params.insert(model.to_string(), builtin_param_specs(dims, model));
+        }
+        Manifest {
+            dir: PathBuf::new(),
+            dims,
+            params,
+            clf_params: builtin_clf_param_specs(dims),
+            artifacts: Vec::new(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +605,102 @@ mod tests {
         // eval ABI: params then data; first data input is u_self_mem
         assert_eq!(a.inputs[n_params].name, "u_self_mem");
         assert_eq!(a.output_index("pos_logit").unwrap() + 1, a.output_index("neg_logit").unwrap());
+    }
+
+    #[test]
+    fn builtin_dims_and_params_cover_all_models() {
+        let m = Manifest::builtin();
+        assert_eq!(m.dims.d_mem, 64);
+        assert_eq!(m.dims.clf_batch, 256);
+        for model in ["tgn", "jodie", "apan"] {
+            let specs = m.param_specs(model).unwrap();
+            assert_eq!(specs[0].name, "time_omega");
+            assert_eq!(specs.last().unwrap().name, "gamma_raw");
+            // omega_0 = 1, omega decays by 10^(-4/15) per index
+            match &specs[0].init {
+                InitSpec::Const(v) => {
+                    assert_eq!(v.len(), 16);
+                    assert!((v[0] - 1.0).abs() < 1e-6);
+                    assert!((v[15] - 1e-4).abs() < 1e-8);
+                }
+                other => panic!("time_omega init {other:?}"),
+            }
+        }
+        assert_eq!(m.param_specs("clf").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn builtin_abi_positions_mirror_compiled_layout() {
+        // the invariants `abi_positions_are_stable` pins on the parsed
+        // manifest, restated for the synthesized host ABI
+        let m = Manifest::builtin();
+        for model in ["tgn", "jodie", "apan"] {
+            let n_params = m.param_specs(model).unwrap().len();
+            let eval = ArtifactSpec::host(m.dims, model, 100, "eval").unwrap();
+            assert_eq!(eval.inputs[0].name, "time_omega");
+            assert_eq!(eval.inputs[n_params].name, "u_self_mem");
+            assert_eq!(eval.outputs[0].name, "u_sbar");
+            assert_eq!(
+                eval.output_index("pos_logit").unwrap() + 1,
+                eval.output_index("neg_logit").unwrap()
+            );
+            assert_eq!(eval.inputs.last().unwrap().name, "pres_on");
+
+            let train = ArtifactSpec::host(m.dims, model, 100, "train").unwrap();
+            assert_eq!(train.inputs.len(), eval.inputs.len() + 2 * n_params + 2);
+            assert_eq!(train.inputs[n_params].name, "adam_m_time_omega");
+            assert_eq!(train.inputs[3 * n_params].name, "u_self_mem");
+            assert_eq!(train.inputs.last().unwrap().name, "step_t");
+            assert_eq!(train.outputs[0].name, "time_omega");
+            assert_eq!(train.outputs[3 * n_params].name, "u_sbar");
+            assert_eq!(train.outputs.len(), 3 * n_params + eval.outputs.len());
+            // match indices are the only i32 inputs
+            let i32s: Vec<&str> = train
+                .inputs
+                .iter()
+                .filter(|t| t.dtype == DType::I32)
+                .map(|t| t.name.as_str())
+                .collect();
+            assert_eq!(i32s, ["c_src_match", "c_dst_match", "c_neg_match"]);
+        }
+        // clf is fixed-batch: the right size resolves, others error early
+        assert!(ArtifactSpec::host(m.dims, "clf", m.dims.clf_batch, "train").is_ok());
+        let err = ArtifactSpec::host(m.dims, "clf", 64, "eval").unwrap_err().to_string();
+        assert!(err.contains("batch"), "{err}");
+        // tgn carries neighbor tensors, jodie none, apan mail
+        let tgn = ArtifactSpec::host(m.dims, "tgn", 50, "eval").unwrap();
+        assert!(tgn.input_index("n_src_efeat").is_ok());
+        let jodie = ArtifactSpec::host(m.dims, "jodie", 50, "eval").unwrap();
+        assert!(jodie.input_index("n_src_mem").is_err());
+        let apan = ArtifactSpec::host(m.dims, "apan", 50, "eval").unwrap();
+        assert!(apan.input_index("n_src_mail").is_ok());
+        assert!(apan.input_index("n_src_efeat").is_err());
+    }
+
+    #[test]
+    fn builtin_matches_compiled_manifest_when_artifacts_exist() {
+        // the lockstep gate: whenever real artifacts are present, the
+        // native mirror must agree tensor-for-tensor with what aot.py wrote
+        if !artifacts_available() {
+            return;
+        }
+        let compiled = Manifest::load(&manifest_dir()).unwrap();
+        let builtin = Manifest::builtin();
+        assert_eq!(builtin.dims.d_mem, compiled.dims.d_mem);
+        assert_eq!(builtin.dims.k_nbr, compiled.dims.k_nbr);
+        for model in ["tgn", "jodie", "apan"] {
+            assert_eq!(
+                builtin.param_specs(model).unwrap(),
+                compiled.param_specs(model).unwrap(),
+                "{model} param specs drifted from the compiled manifest"
+            );
+        }
+        assert_eq!(&builtin.clf_params, &compiled.clf_params);
+        for a in &compiled.artifacts {
+            let host = ArtifactSpec::host(builtin.dims, &a.model, a.batch, &a.kind).unwrap();
+            assert_eq!(host.inputs, a.inputs, "{} inputs drifted", a.name);
+            assert_eq!(host.outputs, a.outputs, "{} outputs drifted", a.name);
+        }
     }
 
     #[test]

@@ -1,19 +1,44 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
-//! by `make artifacts`, compiles them once per process on the CPU PJRT
-//! client, and exposes a typed step interface to the trainer.
+//! The EXEC runtime behind the trainer's step calls, split across two
+//! backends sharing one ABI (see [`engine::ExecBackendKind`]):
+//!
+//! * **Pjrt** loads the AOT artifacts (`artifacts/*.hlo.txt`) produced by
+//!   `make artifacts`, compiles them once per process on the CPU PJRT
+//!   client, and executes through the device runtime;
+//! * **Host** (`host_step.rs`) evaluates the identical step — forward,
+//!   backward and Adam — in pure Rust over the builtin manifest
+//!   (`manifest.rs`), so the full training loop runs with no artifacts at
+//!   all. This is the default whenever `artifacts/` is absent.
+//!
+//! ## The Host/Pjrt ABI contract
+//!
+//! An [`engine::Engine`] hands out [`engine::Step`]s; a step is a pure
+//! function over **positional host literals** in manifest order:
+//!
+//! ```text
+//!   train:  params..., adam_m..., adam_v..., data..., lr, step_t
+//!        -> params'..., adam_m'..., adam_v'..., step outputs...
+//!   eval:   params..., data...  ->  step outputs...
+//! ```
+//!
+//! with `data` and `step outputs` exactly `builtin_data_input_specs` /
+//! `builtin_output_specs` (mirrored from python/compile/model.py, pinned
+//! against the compiled manifest whenever artifacts exist). Everything the
+//! trainer does — `HostBatch::pack`, `ModelState::absorb_outputs`, output
+//! fetches by name — goes through the spec, so the backends are
+//! interchangeable per step. Differences that remain are numeric only
+//! (same formulas, different float-summation order), never structural.
 //!
 //! Performance notes (EXPERIMENTS.md §Perf): parameters and optimizer state
-//! stay resident as device buffers across steps — only batch data crosses
-//! the host boundary per step, and outputs the trainer doesn't consume are
-//! never copied back.
+//! stay resident as literals that thread from one step's outputs into the
+//! next step's inputs — only batch data is re-staged per step.
 //!
 //! ## The Send boundary
 //!
 //! `Engine` and `Step` are deliberately **not** `Send`/`Sync`: they hold
-//! `Rc`s, a `RefCell` compile cache, and raw PJRT client/executable
-//! handles whose thread affinity the C API does not guarantee. The
-//! pipelined training runtime (`pipeline/`) is designed around that fact
-//! rather than against it:
+//! `Rc`s, a `RefCell` compile cache, and (on the PJRT backend) raw client/
+//! executable handles whose thread affinity the C API does not guarantee.
+//! The pipelined training runtime (`pipeline/`) is designed around that
+//! fact rather than against it:
 //!
 //! * every device handle stays on the **coordinator thread** — SPLICE,
 //!   EXEC and WRITEBACK all run there;
@@ -25,9 +50,14 @@
 //!
 //! Keep it that way: if a future stage needs device access off-thread
 //! (multi-stream exec), give it its own client, don't smuggle this one.
+//! Note the raw [`host_step::HostStep`] itself IS Send + Sync (plain data
+//! plus an `Arc<WorkerPool>`), so a future multi-stream EXEC stage can own
+//! host steps on a second thread without any of the PJRT caveats.
 
 pub mod engine;
+pub mod host_step;
 pub mod manifest;
 
-pub use engine::{Engine, Step};
+pub use engine::{Engine, ExecBackendKind, Step};
+pub use host_step::HostStep;
 pub use manifest::{ArtifactSpec, DType, Dims, InitSpec, Manifest, ParamSpec, TensorSpec};

@@ -81,8 +81,9 @@ pub struct RunReport {
 
 /// The training coordinator for one (dataset, model, batch, mode) run.
 ///
-/// Owns the device handles (`Rc<Engine>` / `Rc<Step>` — deliberately NOT
-/// Send, see `runtime/mod.rs` on the Send boundary) and the mutable
+/// Owns the EXEC handles (`Rc<Engine>` / `Rc<Step>` — deliberately NOT
+/// Send, see `runtime/mod.rs` on the Send boundary; the engine dispatches
+/// PJRT or the pure-Rust host step per `cfg.exec`) and the mutable
 /// substrates. Only plain prepped host data ever crosses to/from the
 /// background PREP thread.
 pub struct Trainer {
@@ -125,9 +126,10 @@ pub struct Trainer {
 
 impl Trainer {
     /// Build everything from a config: dataset (generated deterministically
-    /// from the seed), engine, compiled steps, substrates.
+    /// from the seed), engine (PJRT or host per `cfg.exec` — "auto" picks
+    /// host whenever `artifacts_dir` has no manifest), steps, substrates.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Trainer> {
-        let engine = Rc::new(Engine::new(Path::new(&cfg.artifacts_dir))?);
+        let engine = Rc::new(Engine::auto(Path::new(&cfg.artifacts_dir), &cfg.exec)?);
         let dataset = Arc::new(Self::make_dataset(cfg)?);
         Self::with_shared(cfg, engine, dataset)
     }
@@ -141,6 +143,15 @@ impl Trainer {
         cfg.validate()?;
         let dims = engine.manifest().dims;
         let b = cfg.batch_size;
+        // one persistent pool per trainer (or the shared process pool at
+        // the 0 = auto default): workers spawn here, never per op. Created
+        // before the steps so host EXEC matmuls fan out on the same lanes
+        // as SPLICE/WRITEBACK/PREP (no-op on the PJRT backend).
+        let pool = match cfg.pipeline.pool_workers {
+            0 => WorkerPool::global().clone(),
+            n => Arc::new(WorkerPool::new(n)),
+        };
+        engine.set_host_pool(pool.clone());
         let train_step = engine
             .step(&cfg.model, b, "train")
             .context("loading train step")?;
@@ -156,12 +167,6 @@ impl Trainer {
         let hosts = (0..cfg.pipeline.bounded_staleness + 1)
             .map(|_| HostBatch::new(&cfg.model, b, dims))
             .collect();
-        // one persistent pool per trainer (or the shared process pool at
-        // the 0 = auto default): workers spawn here, never per op
-        let pool = match cfg.pipeline.pool_workers {
-            0 => WorkerPool::global().clone(),
-            n => Arc::new(WorkerPool::new(n)),
-        };
         Ok(Trainer {
             cfg: cfg.clone(),
             state,
@@ -448,7 +453,7 @@ impl Trainer {
     }
 
     /// Pack host slot `slot` and run the train step (pack time lands in the
-    /// assemble bucket, the PJRT call in execute).
+    /// assemble bucket, the EXEC call — PJRT or host — in execute).
     fn exec_train_slot(
         &mut self,
         slot: usize,

@@ -1,6 +1,11 @@
 //! End-to-end: train real MDGNNs on the tiny synthetic stream through the
-//! full stack (datagen -> batching -> assembly -> PJRT step -> write-back)
+//! full stack (datagen -> batching -> assembly -> EXEC step -> write-back)
 //! and require learning to happen.
+//!
+//! Since the host EXEC backend these tests run EVERYWHERE: `cfg.exec`
+//! defaults to "auto", which picks the compiled PJRT artifacts when
+//! `artifacts/` exists and the pure-Rust host step otherwise — same ABI,
+//! same assertions either way.
 
 use pres::config::ExperimentConfig;
 use pres::training::Trainer;
@@ -13,23 +18,8 @@ fn cfg(model: &str, pres: bool) -> ExperimentConfig {
     c
 }
 
-/// These tests drive `Trainer` through the compiled XLA step, so they skip
-/// (with a notice) when the artifacts are absent — same convention as the
-/// equivalence suites; the host-side unit/property tests remain the floor.
-fn artifacts_available() -> bool {
-    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
-        .exists();
-    if !ok {
-        eprintln!("skipping trainer integration test: no compiled artifacts");
-    }
-    ok
-}
-
 #[test]
 fn tgn_learns_link_prediction_above_chance() {
-    if !artifacts_available() {
-        return;
-    }
     let mut trainer = Trainer::from_config(&cfg("tgn", false)).unwrap();
     let report = trainer.run().unwrap();
     // 1:1 pos:neg -> random AP = 0.5; the stream is strongly learnable
@@ -47,9 +37,6 @@ fn tgn_learns_link_prediction_above_chance() {
 
 #[test]
 fn pres_mode_trains_and_tracks_gamma() {
-    if !artifacts_available() {
-        return;
-    }
     let mut trainer = Trainer::from_config(&cfg("tgn", true)).unwrap();
     let report = trainer.run().unwrap();
     assert!(report.best_val_ap > 0.65, "val AP {}", report.best_val_ap);
@@ -63,9 +50,6 @@ fn pres_mode_trains_and_tracks_gamma() {
 
 #[test]
 fn jodie_and_apan_run_end_to_end() {
-    if !artifacts_available() {
-        return;
-    }
     for model in ["jodie", "apan"] {
         let mut trainer = Trainer::from_config(&cfg(model, true)).unwrap();
         let report = trainer.run().unwrap();
@@ -80,9 +64,6 @@ fn jodie_and_apan_run_end_to_end() {
 
 #[test]
 fn determinism_same_seed_same_curve() {
-    if !artifacts_available() {
-        return;
-    }
     let c = cfg("jodie", true);
     let mut a = Trainer::from_config(&c).unwrap();
     let mut b = Trainer::from_config(&c).unwrap();
@@ -94,9 +75,6 @@ fn determinism_same_seed_same_curve() {
 
 #[test]
 fn pending_stats_grow_with_batch_size() {
-    if !artifacts_available() {
-        return;
-    }
     let mut c_small = cfg("tgn", false);
     c_small.batch_size = 25;
     let mut c_large = cfg("tgn", false);

@@ -1,0 +1,117 @@
+//! Host EXEC backend gates: the full training loop must run — and learn —
+//! with NO artifacts directory at all, and the pipelined loop must stay
+//! bit-identical to the sequential one on the host step (`depth = 1,
+//! staleness = 0`), mirroring the PJRT-era equivalence contract.
+//!
+//! Everything here runs in plain `cargo test -q` on a fresh checkout.
+
+use std::path::Path;
+
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::model::ModelState;
+use pres::runtime::{Engine, ExecBackendKind};
+use pres::training::Trainer;
+
+/// A config whose artifacts_dir can never exist, so "auto" resolves host.
+fn host_cfg(dataset: &str, model: &str, batch: usize, pres: bool) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with(dataset, model, batch, pres);
+    c.artifacts_dir = format!("{}/no-such-artifacts", env!("CARGO_MANIFEST_DIR"));
+    c.eval_every = 0;
+    c
+}
+
+#[test]
+fn auto_resolves_to_host_without_artifacts_and_pjrt_needs_them() {
+    let missing = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/no-such-artifacts"));
+    let engine = Engine::auto(missing, "auto").unwrap();
+    assert_eq!(engine.backend(), ExecBackendKind::Host);
+    // explicit host never touches the directory
+    assert_eq!(Engine::auto(missing, "host").unwrap().backend(), ExecBackendKind::Host);
+    // explicit pjrt must fail loudly without a manifest
+    assert!(Engine::auto(missing, "pjrt").is_err());
+    assert!(Engine::auto(missing, "cuda").is_err());
+}
+
+#[test]
+fn host_engine_serves_any_batch_size_and_caches_steps() {
+    let engine = Engine::host();
+    // no compiled batch matrix: odd sizes work too
+    let step = engine.step("tgn", 7, "train").unwrap();
+    assert_eq!(step.spec.batch, 7);
+    let again = engine.step("tgn", 7, "train").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&step, &again));
+    assert_eq!(engine.compiled_count(), 1);
+    // model state initializes from the builtin manifest
+    let state = ModelState::init(&engine, "tgn", 0).unwrap();
+    assert!(state.len() > 10);
+    let g = state.gamma().unwrap();
+    assert!((g - 0.98).abs() < 0.01, "initial gamma {g}");
+}
+
+#[test]
+fn host_loss_descends_on_tiny_wiki_stream() {
+    // the satellite smoke test: a scaled-down wiki profile (Zipf-ish
+    // bipartite stream with edge features), a few epochs, loss must drop
+    let mut c = host_cfg("wiki", "tgn", 100, true);
+    c.data_scale = 0.05; // ~1250 events
+    c.epochs = 3;
+    let mut trainer = Trainer::from_config(&c).unwrap();
+    assert_eq!(trainer.engine.backend(), ExecBackendKind::Host);
+    let mut bces = Vec::new();
+    for e in 0..c.epochs {
+        let r = trainer.train_epoch(e).unwrap();
+        assert!(r.train_loss.is_finite(), "epoch {e} loss {}", r.train_loss);
+        assert!((0.0..=1.0).contains(&r.gamma), "gamma {}", r.gamma);
+        bces.push(r.train_bce);
+    }
+    assert!(
+        bces.last().unwrap() < bces.first().unwrap(),
+        "bce should descend: {bces:?}"
+    );
+}
+
+#[test]
+fn host_pipelined_is_bit_identical_to_sequential() {
+    // the host-backend equivalence gate at depth = 1, staleness = 0 —
+    // the host step is a pure function of its literal inputs, so the
+    // pipelined loop must reproduce the sequential loop bit for bit
+    let mut seq_cfg = host_cfg("tiny", "tgn", 50, true);
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
+    let mut pipe_cfg = host_cfg("tiny", "tgn", 50, true);
+    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 };
+    let mut seq = Trainer::from_config(&seq_cfg).unwrap();
+    let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
+    for e in 0..2 {
+        let rs = seq.train_epoch(e).unwrap();
+        let rp = pipe.train_epoch(e).unwrap();
+        assert_eq!(rs.train_loss, rp.train_loss, "epoch {e}: loss diverged");
+        assert_eq!(rs.train_bce, rp.train_bce, "epoch {e}: bce diverged");
+        assert_eq!(rs.train_ap, rp.train_ap, "epoch {e}: AP diverged");
+        assert_eq!(rs.coherence, rp.coherence, "epoch {e}: coherence diverged");
+        assert_eq!(rs.gamma, rp.gamma, "epoch {e}: gamma diverged");
+    }
+    assert_eq!(seq.eval_val().unwrap(), pipe.eval_val().unwrap());
+}
+
+#[test]
+fn host_training_is_deterministic_across_trainer_instances() {
+    let c = host_cfg("tiny", "jodie", 50, true);
+    let mut a = Trainer::from_config(&c).unwrap();
+    let mut b = Trainer::from_config(&c).unwrap();
+    let ra = a.train_epoch(0).unwrap();
+    let rb = b.train_epoch(0).unwrap();
+    assert_eq!(ra.train_loss, rb.train_loss);
+    assert_eq!(ra.train_ap, rb.train_ap);
+}
+
+#[test]
+fn explicit_host_exec_overrides_even_with_artifacts_present() {
+    // `--exec host` must win regardless of what's on disk: point at the
+    // real artifacts dir (which may or may not exist) and require host
+    let mut c = ExperimentConfig::default_with("tiny", "tgn", 25, false);
+    c.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c.exec = "host".into();
+    c.epochs = 1;
+    let trainer = Trainer::from_config(&c).unwrap();
+    assert_eq!(trainer.engine.backend(), ExecBackendKind::Host);
+}

@@ -4,10 +4,10 @@
 //! APs, same GMM trajectory — because PREP is pure and negative streams
 //! are derived per `(seed, epoch, batch)`.
 //!
-//! These tests need the compiled artifacts (like the other integration
-//! suites); they skip with a notice when `artifacts/` is absent so the
-//! pure-host equivalence coverage in `training::assembler` and
-//! `pipeline::runner` unit tests remains the floor.
+//! Run everywhere since the host EXEC backend: the trainer resolves
+//! `exec = "auto"` to the compiled artifacts when present and the
+//! pure-Rust host step otherwise — the equivalence contract is identical
+//! (the host step is a deterministic pure function of its literal inputs).
 
 use pres::config::{ExperimentConfig, PipelineConfig};
 use pres::training::Trainer;
@@ -19,20 +19,8 @@ fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
     c
 }
 
-fn artifacts_available() -> bool {
-    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
-        .exists();
-    if !ok {
-        eprintln!("skipping pipeline equivalence test: no compiled artifacts");
-    }
-    ok
-}
-
 #[test]
 fn depth1_staleness0_is_bit_identical_to_sequential() {
-    if !artifacts_available() {
-        return;
-    }
     let mut seq_cfg = cfg("tgn", true, 50);
     seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let mut pipe_cfg = cfg("tgn", true, 50);
@@ -60,9 +48,6 @@ fn depth1_staleness0_is_bit_identical_to_sequential() {
 fn deeper_lookahead_stays_bit_identical_without_staleness() {
     // PREP never reads memory, so ANY depth with staleness 0 is exact —
     // lookahead only changes when prep work happens, not what it computes.
-    if !artifacts_available() {
-        return;
-    }
     let mut a_cfg = cfg("jodie", false, 50);
     a_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 };
     let mut b_cfg = cfg("jodie", false, 50);
@@ -80,9 +65,6 @@ fn deeper_lookahead_stays_bit_identical_without_staleness() {
 fn bounded_staleness_trains_to_finite_loss() {
     // staleness > 0 is allowed to change results (it reads lagged memory)
     // but must stay numerically sane and produce a working model
-    if !artifacts_available() {
-        return;
-    }
     let mut c = cfg("tgn", true, 50);
     c.epochs = 3;
     c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0 };
@@ -100,9 +82,6 @@ fn staleness_zero_stays_bit_identical_and_reports_zero_lag() {
     // the k = 0 contract, asserted directly on the staleness path's own
     // metric: every splice is exact (lag 0) and the results are the
     // sequential loop's, bit for bit
-    if !artifacts_available() {
-        return;
-    }
     let mut seq_cfg = cfg("tgn", true, 50);
     seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let mut pipe_cfg = cfg("tgn", true, 50);
@@ -124,9 +103,6 @@ fn staleness_k_views_lag_at_most_k_commits() {
     // the MSPipe-style bound itself: with bounded_staleness = k, the
     // farthest any splice's memory view may trail the commit stream is k —
     // the trainer reports the max lag it actually incurred as a witness
-    if !artifacts_available() {
-        return;
-    }
     for k in [1usize, 2] {
         let mut c = cfg("tgn", true, 50);
         c.epochs = 2;
@@ -155,9 +131,6 @@ fn staleness_k_views_lag_at_most_k_commits() {
 
 #[test]
 fn overlap_metrics_are_reported_when_pipelined() {
-    if !artifacts_available() {
-        return;
-    }
     let mut c = cfg("tgn", false, 50);
     c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0 };
     let mut tr = Trainer::from_config(&c).unwrap();

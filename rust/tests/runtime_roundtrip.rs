@@ -1,6 +1,7 @@
-//! Integration: load real artifacts, compile on PJRT, execute, and verify
-//! the ABI end-to-end (output arity, finite numerics, STANDARD-mode
-//! semantics reproduced through the compiled path).
+//! Integration: resolve an EXEC engine (compiled PJRT artifacts when
+//! `artifacts/` exists, the pure-Rust host backend otherwise), execute
+//! steps, and verify the ABI end-to-end (output arity, finite numerics,
+//! STANDARD-mode semantics reproduced through the executed path).
 
 use pres::model::ModelState;
 use pres::runtime::engine::{fetch_f32, fetch_scalar, lit_f32, lit_i32, lit_scalar};
@@ -10,18 +11,7 @@ use xla::Literal;
 
 fn engine() -> Engine {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Engine::new(&dir).expect("run `make artifacts` first")
-}
-
-/// Like the other integration suites: skip (with a notice) when the
-/// compiled artifacts are absent, so the host-only tests still gate CI.
-fn artifacts_available() -> bool {
-    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
-        .exists();
-    if !ok {
-        eprintln!("skipping runtime roundtrip test: no compiled artifacts");
-    }
-    ok
+    Engine::auto(&dir, "auto").expect("resolving EXEC engine")
 }
 
 /// Build zero-ish but well-formed data inputs for a step (everything after
@@ -73,9 +63,6 @@ fn clone_lits(lits: &[Literal]) -> Vec<Literal> {
 
 #[test]
 fn eval_step_runs_with_correct_arity_and_standard_semantics() {
-    if !artifacts_available() {
-        return;
-    }
     let engine = engine();
     let step = engine.step("tgn", 25, "eval").unwrap();
     let state = ModelState::init(&engine, "tgn", 0).unwrap();
@@ -106,9 +93,6 @@ fn eval_step_runs_with_correct_arity_and_standard_semantics() {
 
 #[test]
 fn train_step_updates_params_and_reports_loss() {
-    if !artifacts_available() {
-        return;
-    }
     let engine = engine();
     let step = engine.step("tgn", 25, "train").unwrap();
     let mut state = ModelState::init(&engine, "tgn", 0).unwrap();
@@ -136,9 +120,6 @@ fn train_step_updates_params_and_reports_loss() {
 
 #[test]
 fn pres_mode_produces_innovation() {
-    if !artifacts_available() {
-        return;
-    }
     let engine = engine();
     let step = engine.step("tgn", 25, "eval").unwrap();
     let state = ModelState::init(&engine, "tgn", 0).unwrap();
@@ -156,9 +137,6 @@ fn pres_mode_produces_innovation() {
 
 #[test]
 fn all_models_compile_and_run_eval() {
-    if !artifacts_available() {
-        return;
-    }
     let engine = engine();
     for model in ["tgn", "jodie", "apan"] {
         let step = engine.step(model, 25, "eval").unwrap();
@@ -174,9 +152,6 @@ fn all_models_compile_and_run_eval() {
 
 #[test]
 fn compile_cache_reuses_executables() {
-    if !artifacts_available() {
-        return;
-    }
     let engine = engine();
     let a = engine.step("jodie", 25, "eval").unwrap();
     let b = engine.step("jodie", 25, "eval").unwrap();

@@ -4,11 +4,12 @@
 //! shard count must reproduce the flat store bit-for-bit — same epoch
 //! losses, same APs, same memory trajectory.
 //!
-//! Mirrors `tests/pipeline_equivalence.rs`: the trainer-level tests need
-//! the compiled artifacts and skip with a notice when `artifacts/` is
-//! absent; the host-level epoch harness below runs everywhere and drives
-//! the full PREP → SPLICE → (simulated) EXEC → WRITEBACK loop against both
-//! backends directly.
+//! Mirrors `tests/pipeline_equivalence.rs`: the trainer-level tests run
+//! everywhere since the host EXEC backend ("auto" resolves to compiled
+//! artifacts when present, the pure-Rust host step otherwise); the
+//! host-level epoch harness below additionally drives the full PREP →
+//! SPLICE → (simulated) EXEC → WRITEBACK loop against both memory
+//! backends directly, with no model in the loop.
 
 use std::sync::Arc;
 
@@ -31,15 +32,6 @@ fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
     c.epochs = 2;
     c.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     c
-}
-
-fn artifacts_available() -> bool {
-    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
-        .exists();
-    if !ok {
-        eprintln!("skipping shard equivalence test: no compiled artifacts");
-    }
-    ok
 }
 
 // ---------------------------------------------------------------- host level
@@ -197,9 +189,6 @@ fn prep_routes_match_backend_router_through_the_public_surface() {
 
 #[test]
 fn sharded_training_is_bit_identical_to_flat() {
-    if !artifacts_available() {
-        return;
-    }
     let flat_cfg = cfg("tgn", true, 50);
     assert_eq!(flat_cfg.memory_shards, 1);
     let mut flat = Trainer::from_config(&flat_cfg).unwrap();
@@ -232,9 +221,6 @@ fn sharded_training_is_bit_identical_to_flat() {
 fn training_is_bit_identical_for_every_pool_worker_count() {
     // depth=1/staleness=0 with shards ∈ {1, 4} and --pool-workers ∈
     // {1, 2, 4}: every combination must match the serial flat baseline
-    if !artifacts_available() {
-        return;
-    }
     let flat_cfg = {
         let mut c = cfg("tgn", true, 50);
         c.pipeline.pool_workers = 1; // fully serial baseline
@@ -269,9 +255,6 @@ fn training_is_bit_identical_for_every_pool_worker_count() {
 #[test]
 fn sharded_training_matches_flat_in_sequential_mode_too() {
     // depth = 0 exercises the inline-PREP path's router plumbing
-    if !artifacts_available() {
-        return;
-    }
     let mut a_cfg = cfg("jodie", false, 50);
     a_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
     let mut b_cfg = cfg("jodie", false, 50);
@@ -291,9 +274,6 @@ fn sharded_training_matches_flat_in_sequential_mode_too() {
 fn apan_mailbox_path_is_shard_agnostic() {
     // APAN adds the mailbox substrate to SPLICE/WRITEBACK; sharding only
     // touches the memory store, so results must stay bit-identical
-    if !artifacts_available() {
-        return;
-    }
     let mut a = Trainer::from_config(&cfg("apan", true, 50)).unwrap();
     let mut c = cfg("apan", true, 50);
     c.memory_shards = 2;

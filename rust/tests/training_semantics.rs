@@ -1,7 +1,10 @@
 //! Training-semantics integration tests: properties of the orchestrated
-//! loop that unit tests can't see (lag-one splice through the compiled
-//! step, PRES vs STANDARD behavioural differences, memory continuity,
-//! anchor-set fallbacks).
+//! loop that unit tests can't see (lag-one splice through the EXEC step,
+//! PRES vs STANDARD behavioural differences, memory continuity, anchor-set
+//! fallbacks).
+//!
+//! Run everywhere since the host EXEC backend: "auto" resolves to the
+//! compiled artifacts when present and the pure-Rust host step otherwise.
 
 use pres::config::ExperimentConfig;
 use pres::training::Trainer;
@@ -13,23 +16,8 @@ fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
     c
 }
 
-/// These tests drive `Trainer` through the compiled XLA step, so they skip
-/// (with a notice) when the artifacts are absent — same convention as the
-/// equivalence suites; the host-side unit/property tests remain the floor.
-fn artifacts_available() -> bool {
-    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
-        .exists();
-    if !ok {
-        eprintln!("skipping trainer integration test: no compiled artifacts");
-    }
-    ok
-}
-
 #[test]
 fn standard_and_pres_diverge_only_through_pres_machinery() {
-    if !artifacts_available() {
-        return;
-    }
     // identical seeds: losses start close (GMM has no observations at the
     // first iteration -> prediction = identity -> correction is a no-op
     // even with pres on) but diverge as trackers accumulate.
@@ -48,9 +36,6 @@ fn standard_and_pres_diverge_only_through_pres_machinery() {
 
 #[test]
 fn beta_zero_and_beta_positive_give_different_training() {
-    if !artifacts_available() {
-        return;
-    }
     let mut a = Trainer::from_config(&{
         let mut c = cfg("tgn", true, 50);
         c.beta = 0.0;
@@ -74,9 +59,6 @@ fn beta_zero_and_beta_positive_give_different_training() {
 
 #[test]
 fn anchor_fraction_zero_disables_prediction_learning() {
-    if !artifacts_available() {
-        return;
-    }
     // with no tracked vertices, predictions are identity; training still
     // works and gamma becomes irrelevant
     let mut c = cfg("jodie", true, 50);
@@ -93,9 +75,6 @@ fn anchor_fraction_zero_disables_prediction_learning() {
 
 #[test]
 fn eval_does_not_perturb_training_state() {
-    if !artifacts_available() {
-        return;
-    }
     let mut a = Trainer::from_config(&cfg("tgn", true, 50)).unwrap();
     let mut b = Trainer::from_config(&cfg("tgn", true, 50)).unwrap();
     // a: eval_val between epochs; b: straight through. Epoch 1 must match.
@@ -109,9 +88,6 @@ fn eval_does_not_perturb_training_state() {
 
 #[test]
 fn larger_batch_fewer_iterations_same_events() {
-    if !artifacts_available() {
-        return;
-    }
     let mut a = Trainer::from_config(&cfg("tgn", false, 50)).unwrap();
     let mut b = Trainer::from_config(&cfg("tgn", false, 200)).unwrap();
     a.train_epoch(0).unwrap();
@@ -122,9 +98,6 @@ fn larger_batch_fewer_iterations_same_events() {
 
 #[test]
 fn coherence_penalty_raises_measured_coherence() {
-    if !artifacts_available() {
-        return;
-    }
     // the smoothing objective should push memory coherence up vs beta=0
     let mut lo = Trainer::from_config(&{
         let mut c = cfg("tgn", false, 100);
