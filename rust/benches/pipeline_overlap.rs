@@ -66,7 +66,12 @@ fn main() {
             // one warm epoch primes the XLA executable + caches
             tr.train_epoch(0).unwrap();
             for (name, depth, staleness) in modes {
-                tr.cfg.pipeline = PipelineConfig { depth, bounded_staleness: staleness, pool_workers: 0 };
+                tr.cfg.pipeline = PipelineConfig {
+                    depth,
+                    bounded_staleness: staleness,
+                    pool_workers: 0,
+                    exec_streams: 1,
+                };
                 let label = format!("{model}_b{batch}_{name}");
                 bench.run(&label, || {
                     tr.train_epoch(1).unwrap();

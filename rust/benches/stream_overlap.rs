@@ -1,0 +1,136 @@
+//! Multi-stream EXEC overlap: training throughput at exec streams 1 vs 2
+//! vs 4 under bounded staleness, wiki- and gdelt-like profiles.
+//!
+//!     cargo bench --bench stream_overlap [-- --quick]
+//!
+//! At streams = 1 the staleness-k loop executes every step inline on the
+//! coordinator; at streams >= 2 steps run on executor lanes while the
+//! coordinator commits write-backs, computes metrics and pre-splices the
+//! window — results are bit-identical (tests/pipeline_equivalence.rs), so
+//! any steps/s delta here is pure overlap. The exact parameter chain keeps
+//! at most one step mid-flight, so streams = 4 is a *control* expected to
+//! match streams = 2 (flat beyond 2 lanes until relaxed parameter
+//! staleness lands), not a scaling point. Writes the sweep to
+//! `BENCH_stream.json` for EXPERIMENTS.md / CI tracking.
+
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::training::Trainer;
+use pres::util::bench::Bench;
+use pres::util::json::Json;
+
+struct Case {
+    label: String,
+    profile: String,
+    batch: usize,
+    streams: usize,
+    staleness: usize,
+    steps_per_sec: f64,
+    events_per_sec: f64,
+    epoch_secs: f64,
+    exec_wait_secs: f64,
+    exec_union_secs: f64,
+    device_idle_frac: f64,
+}
+
+fn case_json(c: &Case) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&c.label)),
+        ("profile", Json::str(&c.profile)),
+        ("batch", Json::num(c.batch as f64)),
+        ("exec_streams", Json::num(c.streams as f64)),
+        ("bounded_staleness", Json::num(c.staleness as f64)),
+        ("steps_per_sec", Json::num(c.steps_per_sec)),
+        ("events_per_sec", Json::num(c.events_per_sec)),
+        ("epoch_secs", Json::num(c.epoch_secs)),
+        ("exec_wait_secs", Json::num(c.exec_wait_secs)),
+        ("exec_union_secs", Json::num(c.exec_union_secs)),
+        ("device_idle_frac", Json::num(c.device_idle_frac)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("stream_overlap").with_iters(2, if quick { 3 } else { 6 });
+    bench.header();
+    const STALENESS: usize = 1;
+
+    let mut cases: Vec<Case> = Vec::new();
+    // (profile, batch, data_scale): wiki-scale is the acceptance profile;
+    // the gdelt-like case stresses bigger batches at reduced scale
+    let profiles = [
+        ("wiki", 200usize, if quick { 0.2f32 } else { 0.5 }),
+        ("gdelt", 400, if quick { 0.02 } else { 0.1 }),
+    ];
+    for (profile, batch, scale) in profiles {
+        let mut cfg = ExperimentConfig::default_with(profile, "tgn", batch, true);
+        cfg.epochs = 1;
+        cfg.data_scale = scale;
+        cfg.exec = "host".into(); // lanes require the host backend
+        let mut tr = match Trainer::from_config(&cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("skip {profile} b={batch}: {e}");
+                continue;
+            }
+        };
+        // one warm epoch primes the step cache and the worker pool
+        tr.train_epoch(0).unwrap();
+        for streams in [1usize, 2, 4] {
+            tr.cfg.pipeline = PipelineConfig {
+                depth: 2,
+                bounded_staleness: STALENESS,
+                pool_workers: 0,
+                exec_streams: streams,
+            };
+            let label = format!("{profile}_b{batch}_s{streams}");
+            bench.run(&label, || {
+                tr.train_epoch(1).unwrap();
+            });
+            let r = tr.train_epoch(2).unwrap();
+            let steps_per_sec = r.events_per_sec / batch as f64;
+            println!(
+                "    {label}: {:.2} steps/s ({:.0} ev/s) | wait {:.3}s | union {:.3}s | idle {:.1}%",
+                steps_per_sec,
+                r.events_per_sec,
+                r.exec_wait_secs,
+                r.exec_union_secs,
+                r.device_idle_frac * 100.0,
+            );
+            cases.push(Case {
+                label,
+                profile: profile.to_string(),
+                batch,
+                streams,
+                staleness: STALENESS,
+                steps_per_sec,
+                events_per_sec: r.events_per_sec,
+                epoch_secs: r.epoch_secs,
+                exec_wait_secs: r.exec_wait_secs,
+                exec_union_secs: r.exec_union_secs,
+                device_idle_frac: r.device_idle_frac,
+            });
+        }
+    }
+
+    bench.write_csv().unwrap();
+    let report = Json::obj(vec![
+        ("bench", Json::str("stream_overlap")),
+        ("cases", Json::arr(cases.iter().map(case_json))),
+    ]);
+    std::fs::write("BENCH_stream.json", report.to_string_pretty()).unwrap();
+    println!("-> wrote BENCH_stream.json ({} cases)", cases.len());
+
+    // the acceptance line: 2-stream >= 1-stream on the wiki-scale profile
+    let wiki = |s: usize| {
+        cases
+            .iter()
+            .find(|c| c.profile == "wiki" && c.streams == s)
+            .map(|c| c.steps_per_sec)
+    };
+    if let (Some(s1), Some(s2)) = (wiki(1), wiki(2)) {
+        println!(
+            "-> wiki 2-stream / 1-stream: {:.3}x ({s2:.2} vs {s1:.2} steps/s)",
+            s2 / s1
+        );
+    }
+}

@@ -32,11 +32,27 @@ pub struct PipelineConfig {
     /// pool at trainer construction. Results are bit-identical for every
     /// value — the pool moves work across cores, never values.
     pub pool_workers: usize,
+    /// EXEC stream lanes. 1 (default) runs every step inline on the
+    /// coordinator (the legacy loop). N >= 2 spawns N executor lanes
+    /// (`pipeline/stream.rs`) so a step executes off the coordinator while
+    /// it commits the previous write-back, computes metrics and pre-splices
+    /// the staleness window — requires `bounded_staleness >= 1` (the
+    /// staleness window is what licenses splicing batch t+1 before step t
+    /// commits) and the host EXEC backend (PJRT handles are not Send).
+    /// Results are bit-identical for every stream count: the commit queue
+    /// applies write-backs strictly in plan order and each step still
+    /// consumes the previous step's parameters. That exact parameter chain
+    /// also means at most ONE step is ever mid-flight, so N > 2 adds only
+    /// parked lane threads over N = 2 — higher counts are useful as a
+    /// control (the stream sweep pins streams-4 == streams-2 throughput),
+    /// not as a scaling dimension, until relaxed parameter staleness
+    /// lands (ROADMAP).
+    pub exec_streams: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 }
+        PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 }
     }
 }
 
@@ -151,6 +167,9 @@ impl ExperimentConfig {
         if let Some(v) = j.opt("pool_workers") {
             cfg.pipeline.pool_workers = v.as_usize()?;
         }
+        if let Some(v) = j.opt("exec_streams") {
+            cfg.pipeline.exec_streams = v.as_usize()?;
+        }
         if let Some(v) = j.opt("memory_shards") {
             cfg.memory_shards = v.as_usize()?;
         }
@@ -183,6 +202,25 @@ impl ExperimentConfig {
         if self.pipeline.bounded_staleness > 0 && self.pipeline.depth == 0 {
             bail!("bounded_staleness > 0 requires pipeline depth >= 1");
         }
+        if self.pipeline.exec_streams == 0 {
+            bail!("exec_streams must be >= 1 (1 = inline EXEC on the coordinator)");
+        }
+        if self.pipeline.exec_streams > 1 {
+            if self.exec == "pjrt" {
+                bail!(
+                    "exec_streams > 1 requires the host EXEC backend — PJRT executes on a \
+                     single stream (its handles are not Send); use --exec host or \
+                     --exec-streams 1"
+                );
+            }
+            if self.pipeline.bounded_staleness == 0 {
+                bail!(
+                    "exec_streams > 1 requires bounded_staleness >= 1: overlapped EXEC is \
+                     licensed by the staleness window (batch t+1 must be pre-spliced \
+                     before step t commits)"
+                );
+            }
+        }
         if self.memory_shards == 0 {
             bail!("memory_shards must be >= 1 (1 = flat legacy store)");
         }
@@ -210,6 +248,7 @@ impl ExperimentConfig {
                 Json::num(self.pipeline.bounded_staleness as f64),
             ),
             ("pool_workers", Json::num(self.pipeline.pool_workers as f64)),
+            ("exec_streams", Json::num(self.pipeline.exec_streams as f64)),
             ("memory_shards", Json::num(self.memory_shards as f64)),
             ("data_scale", Json::num(self.data_scale as f64)),
         ])
@@ -246,16 +285,50 @@ mod tests {
         let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
         assert_eq!(
             cfg.pipeline,
-            PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0 }
+            PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 }
         );
-        cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 2, pool_workers: 0 };
+        cfg.pipeline =
+            PipelineConfig { depth: 3, bounded_staleness: 2, pool_workers: 0, exec_streams: 1 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.pipeline.depth, 3);
         assert_eq!(back.pipeline.bounded_staleness, 2);
         // staleness without a prefetch thread is meaningless
-        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 1, pool_workers: 0 };
+        cfg.pipeline =
+            PipelineConfig { depth: 0, bounded_staleness: 1, pool_workers: 0, exec_streams: 1 };
         assert!(cfg.validate().is_err());
-        cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0 };
+        cfg.pipeline =
+            PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn exec_streams_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert_eq!(cfg.pipeline.exec_streams, 1); // default = inline EXEC
+        cfg.pipeline =
+            PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 4 };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.pipeline.exec_streams, 4);
+
+        // 0 lanes is meaningless
+        cfg.pipeline.exec_streams = 0;
+        assert!(cfg.validate().is_err());
+
+        // streams > 1 without a staleness window has nothing to overlap:
+        // batch t+1 cannot splice before step t commits, so lanes would
+        // only add overhead — rejected with a clear message
+        cfg.pipeline =
+            PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 2 };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("bounded_staleness"), "unexpected error: {err}");
+
+        // the PJRT backend cannot serve stream lanes (handles are not Send)
+        cfg.pipeline.bounded_staleness = 1;
+        assert!(cfg.validate().is_ok());
+        cfg.exec = "pjrt".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("host EXEC backend"), "unexpected error: {err}");
+        cfg.exec = "host".into();
         assert!(cfg.validate().is_ok());
     }
 

@@ -87,6 +87,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(w) = args.usize_opt("pool-workers")? {
         cfg.pipeline.pool_workers = w;
     }
+    if let Some(s) = args.usize_opt("exec-streams")? {
+        cfg.pipeline.exec_streams = s;
+    }
     cfg.memory_shards = args.usize_or("memory-shards", cfg.memory_shards)?;
     cfg.data_scale = args.f32_or("data-scale", 1.0)?;
     cfg.validate()?;
@@ -120,10 +123,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         pend_frac * 100.0
     );
     println!(
-        "# pipeline: depth={} staleness={}{} | memory shards={}{} | pool workers={}{}",
+        "# pipeline: depth={} staleness={}{} | exec streams={}{} | memory shards={}{} | pool workers={}{}",
         cfg.pipeline.depth,
         cfg.pipeline.bounded_staleness,
         if cfg.pipeline.depth == 0 { " (sequential)" } else { "" },
+        cfg.pipeline.exec_streams,
+        if cfg.pipeline.exec_streams == 1 { " (inline)" } else { "" },
         cfg.memory_shards,
         if cfg.memory_shards == 1 { " (flat)" } else { "" },
         cfg.pipeline.pool_workers,

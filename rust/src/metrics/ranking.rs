@@ -3,9 +3,20 @@
 //! `average_precision` matches sklearn's `average_precision_score`
 //! (step-wise precision-recall integral, ties broken by stable descending
 //! sort); `roc_auc` is the Mann-Whitney U statistic with tie correction.
+//!
+//! ## NaN scores
+//!
+//! A diverged model can emit NaN logits; eval must *report* that run, not
+//! crash it, so both metrics order scores with [`f32::total_cmp`] instead
+//! of `partial_cmp().unwrap()`. Under the IEEE total order, +NaN ranks
+//! above +inf and -NaN below -inf — i.e. a (positive-bit-pattern) NaN
+//! score is treated as the most confident score in the ranking, and the
+//! metric stays finite and deterministic. Callers who want to reject NaN
+//! runs outright should check `scores.iter().all(|s| s.is_finite())`.
 
 /// Average precision: sum over positive hits of precision-at-that-rank
 /// weighted by recall increments. Scores descending; `labels[i]` in {0,1}.
+/// NaN-safe: scores sort under the IEEE total order (see module docs).
 pub fn average_precision(scores: &[f32], labels: &[bool]) -> f64 {
     debug_assert_eq!(scores.len(), labels.len());
     let n_pos = labels.iter().filter(|&&l| l).count();
@@ -13,7 +24,7 @@ pub fn average_precision(scores: &[f32], labels: &[bool]) -> f64 {
         return if n_pos == 0 { 0.0 } else { 1.0 };
     }
     let mut order: Vec<usize> = (0..scores.len()).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
     let mut tp = 0usize;
     let mut ap = 0.0f64;
     for (rank, &i) in order.iter().enumerate() {
@@ -25,7 +36,9 @@ pub fn average_precision(scores: &[f32], labels: &[bool]) -> f64 {
     ap / n_pos as f64
 }
 
-/// ROC-AUC via rank statistics (tie-corrected midranks).
+/// ROC-AUC via rank statistics (tie-corrected midranks). NaN-safe: scores
+/// sort under the IEEE total order (see module docs); NaNs never compare
+/// `==`, so each forms its own midrank group.
 pub fn roc_auc(scores: &[f32], labels: &[bool]) -> f64 {
     debug_assert_eq!(scores.len(), labels.len());
     let n_pos = labels.iter().filter(|&&l| l).count();
@@ -34,7 +47,7 @@ pub fn roc_auc(scores: &[f32], labels: &[bool]) -> f64 {
         return 0.5;
     }
     let mut order: Vec<usize> = (0..scores.len()).collect();
-    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     // midranks for ties
     let mut rank_sum_pos = 0.0f64;
     let mut i = 0;
@@ -162,6 +175,44 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn nan_scores_report_instead_of_panicking_ap() {
+        // one diverged logit used to panic the whole eval via
+        // partial_cmp().unwrap(); now it ranks as the most confident score
+        // (IEEE total order: +NaN above +inf) and AP stays finite.
+        let scores = [f32::NAN, 0.9, 0.1];
+        let labels = [false, true, false];
+        let ap = average_precision(&scores, &labels);
+        assert!(ap.is_finite());
+        // NaN (negative) outranks the positive at 0.9 -> precision 1/2
+        assert!((ap - 0.5).abs() < 1e-12, "ap {ap}");
+
+        // a NaN-scoring positive counts as an immediate hit
+        let ap = average_precision(&[f32::NAN, 0.5], &[true, false]);
+        assert_eq!(ap, 1.0);
+        // all-NaN input: deterministic, finite, index-tiebroken
+        let ap = average_precision(&[f32::NAN, f32::NAN], &[true, false]);
+        assert!(ap.is_finite());
+    }
+
+    #[test]
+    fn nan_scores_report_instead_of_panicking_auc() {
+        // NaN sorts above every finite score: a NaN-scoring positive wins
+        // every (pos, neg) pair
+        let auc = roc_auc(&[f32::NAN, 0.5, 0.2], &[true, false, false]);
+        assert_eq!(auc, 1.0);
+        // and a NaN-scoring negative loses the metric the same way
+        let auc = roc_auc(&[f32::NAN, 0.5, 0.2], &[false, true, true]);
+        assert_eq!(auc, 0.0);
+        // mixed NaNs stay in [0, 1] and deterministic
+        let scores = [f32::NAN, 0.3, f32::NAN, 0.7];
+        let labels = [true, false, false, true];
+        let a = roc_auc(&scores, &labels);
+        let b = roc_auc(&scores, &labels);
+        assert_eq!(a, b);
+        assert!((0.0..=1.0).contains(&a), "auc {a}");
     }
 
     #[test]

@@ -1,26 +1,58 @@
-//! Wall-clock accounting for epochs and phases (assembly vs PJRT dispatch
+//! Wall-clock accounting for epochs and phases (assembly vs EXEC dispatch
 //! vs write-back) — the numbers behind Table 1's speedup column and the
 //! §Perf iteration log.
 //!
 //! Pipeline-era buckets: coordinator-side phases (`assemble` = splice +
-//! pack, `execute`, `writeback`) plus two overlap counters — `prep_busy`
-//! (time the background PREP worker spent filling batches) and
-//! `prep_stall` (time the coordinator spent blocked waiting for one).
-//! Their difference is the assembly work actually hidden behind device
-//! execution; in the sequential loop PREP runs inline inside `assemble`
-//! and both counters stay zero.
+//! pack, `writeback`) plus two overlap counters — `prep_busy` (time the
+//! background PREP worker spent filling batches) and `prep_stall` (time
+//! the coordinator spent blocked waiting for one). Their difference is the
+//! assembly work actually hidden behind device execution; in the
+//! sequential loop PREP runs inline inside `assemble` and both counters
+//! stay zero.
+//!
+//! ## EXEC accounting under stream lanes
+//!
+//! With multi-stream EXEC (`exec_streams > 1`) step executions run on lane
+//! threads and overlap coordinator work, so a single `execute` bucket can
+//! no longer double as both "device busy time" and "coordinator time spent
+//! on EXEC" — summed busy time may exceed the epoch wall clock, which used
+//! to clamp `device_idle_fraction` to 0 and corrupt `other = total -
+//! tracked`. Execution is therefore accounted three ways:
+//!
+//! * `execute` / `stream_busy[s]` — step-run busy time, summed / per lane
+//!   (recorded via [`EpochTimer::record_exec`]);
+//! * `exec_union` — the busy-union: overlapping busy intervals merged
+//!   before summing, so it never exceeds `total`. This is what
+//!   [`EpochTimer::device_idle_fraction`] is measured against;
+//! * `exec_wait` — coordinator wall time attributable to EXEC: the inline
+//!   run itself at `exec_streams = 1` (where it equals `execute`), or the
+//!   time blocked waiting on the commit queue's front under stream lanes.
+//!   This is the bucket that participates in `other = total - tracked`.
 
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug, Default)]
 pub struct EpochTimer {
     pub assemble: Duration,
+    /// Step-run busy time summed over all EXEC streams (equals the old
+    /// single-stream meaning at `exec_streams = 1`). May exceed `total`
+    /// when lanes overlap — use `exec_union` against wall clock.
     pub execute: Duration,
     pub writeback: Duration,
     /// Background PREP worker busy time (off-thread; overlaps the rest).
     pub prep_busy: Duration,
     /// Coordinator blocked on the PREP channel (pipeline bubble).
     pub prep_stall: Duration,
+    /// Coordinator wall time attributable to EXEC: inline run time at one
+    /// stream, blocked-wait time on the commit queue under stream lanes.
+    pub exec_wait: Duration,
+    /// Per-stream step-run busy time (index = stream id; sums to `execute`).
+    pub stream_busy: Vec<Duration>,
+    /// Union of EXEC busy intervals across streams (never exceeds `total`);
+    /// computed from the recorded spans at `finish_epoch`.
+    pub exec_union: Duration,
+    /// EXEC busy intervals as offsets from epoch start, for the union.
+    exec_spans: Vec<(Duration, Duration)>,
     pub other: Duration,
     epoch_start: Option<Instant>,
     pub total: Duration,
@@ -36,11 +68,36 @@ impl EpochTimer {
     pub fn finish_epoch(&mut self) {
         if let Some(t0) = self.epoch_start.take() {
             self.total = t0.elapsed();
-            // prep_busy is NOT part of the coordinator wall clock (it ran on
-            // the worker thread); prep_stall is.
-            let tracked = self.assemble + self.execute + self.writeback + self.prep_stall;
+            self.exec_union = merge_spans(&mut self.exec_spans);
+            // prep_busy and lane busy time are NOT part of the coordinator
+            // wall clock (they ran on other threads); prep_stall and
+            // exec_wait are.
+            let tracked = self.assemble + self.writeback + self.prep_stall + self.exec_wait;
             self.other = self.total.saturating_sub(tracked);
         }
+    }
+
+    /// Record one step execution on stream `stream` spanning
+    /// `[started, finished]` (lane-side wall clock; `Instant`s are
+    /// comparable across threads).
+    pub fn record_exec(&mut self, stream: usize, started: Instant, finished: Instant) {
+        let busy = finished.saturating_duration_since(started);
+        self.execute += busy;
+        if self.stream_busy.len() <= stream {
+            self.stream_busy.resize(stream + 1, Duration::ZERO);
+        }
+        self.stream_busy[stream] += busy;
+        if let Some(t0) = self.epoch_start {
+            let s = started.saturating_duration_since(t0);
+            self.exec_spans.push((s, s + busy));
+        }
+    }
+
+    /// Record an inline (coordinator-thread) step execution: busy time and
+    /// coordinator EXEC time coincide, so both buckets accrue.
+    pub fn record_exec_inline(&mut self, started: Instant, finished: Instant) {
+        self.exec_wait += finished.saturating_duration_since(started);
+        self.record_exec(0, started, finished);
     }
 
     pub fn time<T>(bucket: &mut Duration, f: impl FnOnce() -> T) -> T {
@@ -57,14 +114,14 @@ impl EpochTimer {
         self.prep_busy.saturating_sub(self.prep_stall)
     }
 
-    /// Fraction of the epoch wall clock the device spent idle (no step
-    /// executing). The pipeline exists to push this toward the true
-    /// host-bound floor.
+    /// Fraction of the epoch wall clock no step was executing on ANY
+    /// stream (the busy-union against total). The pipeline exists to push
+    /// this toward the true host-bound floor.
     pub fn device_idle_fraction(&self) -> f64 {
         if self.total.is_zero() {
             return 0.0;
         }
-        (1.0 - self.execute.as_secs_f64() / self.total.as_secs_f64()).clamp(0.0, 1.0)
+        (1.0 - self.exec_union.as_secs_f64() / self.total.as_secs_f64()).clamp(0.0, 1.0)
     }
 
     pub fn events_per_sec(&self, events: usize) -> f64 {
@@ -76,10 +133,13 @@ impl EpochTimer {
 
     pub fn summary(&self) -> String {
         format!(
-            "total {:.3}s (assemble {:.3}s | execute {:.3}s | writeback {:.3}s | stall {:.3}s | other {:.3}s; prep hidden {:.3}s, device idle {:.1}%) over {} steps",
+            "total {:.3}s (assemble {:.3}s | execute {:.3}s over {} stream(s), union {:.3}s, wait {:.3}s | writeback {:.3}s | stall {:.3}s | other {:.3}s; prep hidden {:.3}s, device idle {:.1}%) over {} steps",
             self.total.as_secs_f64(),
             self.assemble.as_secs_f64(),
             self.execute.as_secs_f64(),
+            self.stream_busy.len().max(1),
+            self.exec_union.as_secs_f64(),
+            self.exec_wait.as_secs_f64(),
             self.writeback.as_secs_f64(),
             self.prep_stall.as_secs_f64(),
             self.other.as_secs_f64(),
@@ -90,18 +150,53 @@ impl EpochTimer {
     }
 }
 
+/// Union length of a set of `[start, end)` spans: sort by start, merge
+/// overlapping/adjacent spans, sum the merged lengths.
+fn merge_spans(spans: &mut [(Duration, Duration)]) -> Duration {
+    spans.sort_by_key(|s| s.0);
+    let mut total = Duration::ZERO;
+    let mut current: Option<(Duration, Duration)> = None;
+    for &(start, end) in spans.iter() {
+        match current {
+            Some((_, ref mut cur_end)) if start <= *cur_end => {
+                if end > *cur_end {
+                    *cur_end = end;
+                }
+            }
+            _ => {
+                if let Some((s, e)) = current.take() {
+                    total += e - s;
+                }
+                current = Some((start, end));
+            }
+        }
+    }
+    if let Some((s, e)) = current {
+        total += e - s;
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
 
     #[test]
     fn buckets_accumulate() {
         let mut t = EpochTimer::default();
         t.start_epoch();
-        EpochTimer::time(&mut t.execute, || std::thread::sleep(Duration::from_millis(5)));
+        let t0 = Instant::now();
+        std::thread::sleep(ms(5));
+        t.record_exec_inline(t0, Instant::now());
         t.steps = 1;
         t.finish_epoch();
-        assert!(t.execute >= Duration::from_millis(5));
+        assert!(t.execute >= ms(5));
+        assert_eq!(t.execute, t.exec_wait, "inline EXEC: busy == coordinator time");
+        assert_eq!(t.execute, t.exec_union, "one stream never overlaps itself");
         assert!(t.total >= t.execute);
         assert!(t.events_per_sec(100) > 0.0);
     }
@@ -110,18 +205,19 @@ mod tests {
     fn overlap_accounting() {
         let mut t = EpochTimer::default();
         t.start_epoch();
+        let base = Instant::now();
         // real wall time must dominate the synthetic phase durations below,
         // otherwise `other` saturates to zero and proves nothing
-        std::thread::sleep(Duration::from_millis(20));
-        t.prep_busy = Duration::from_millis(12);
-        t.prep_stall = Duration::from_millis(2);
-        t.execute = Duration::from_millis(5);
+        std::thread::sleep(ms(20));
+        t.prep_busy = ms(12);
+        t.prep_stall = ms(2);
+        t.record_exec_inline(base, base + ms(5));
         t.finish_epoch();
-        assert_eq!(t.assemble_hidden(), Duration::from_millis(10));
-        assert!(t.total >= Duration::from_millis(20));
-        // stall counts toward coordinator wall time, busy does not: the
-        // untracked remainder is total minus (execute + stall) exactly
-        assert_eq!(t.other, t.total - Duration::from_millis(7));
+        assert_eq!(t.assemble_hidden(), ms(10));
+        assert!(t.total >= ms(20));
+        // stall and exec_wait count toward coordinator wall time, busy does
+        // not: the untracked remainder is total minus (exec_wait + stall)
+        assert_eq!(t.other, t.total - ms(7));
         let idle = t.device_idle_fraction();
         assert!(idle > 0.0 && idle < 1.0, "idle {idle}");
     }
@@ -129,10 +225,47 @@ mod tests {
     #[test]
     fn hidden_clamps_at_zero_when_stalled_throughout() {
         let t = EpochTimer {
-            prep_busy: Duration::from_millis(5),
-            prep_stall: Duration::from_millis(9),
+            prep_busy: ms(5),
+            prep_stall: ms(9),
             ..EpochTimer::default()
         };
         assert_eq!(t.assemble_hidden(), Duration::ZERO);
+    }
+
+    #[test]
+    fn two_stream_overlap_unions_not_sums() {
+        // two lanes whose busy windows overlap by 5 ms: summed execute (20)
+        // exceeds the union (15). Idle fraction must be measured against
+        // the union, and `other` must not be corrupted by lane busy time.
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        let base = Instant::now();
+        std::thread::sleep(ms(25));
+        t.record_exec(0, base, base + ms(10));
+        t.record_exec(1, base + ms(5), base + ms(15));
+        t.exec_wait = ms(2); // coordinator only briefly blocked
+        t.finish_epoch();
+        assert_eq!(t.execute, ms(20), "execute sums lane busy time");
+        assert_eq!(t.stream_busy, vec![ms(10), ms(10)]);
+        assert_eq!(t.exec_union, ms(15), "overlap must merge, not double-count");
+        let idle = t.device_idle_fraction();
+        assert!(
+            idle > 0.0 && idle < 1.0,
+            "union-based idle must be meaningful under overlap: {idle}"
+        );
+        // tracked coordinator time is exec_wait, not lane busy time
+        assert_eq!(t.other, t.total - ms(2));
+    }
+
+    #[test]
+    fn disjoint_spans_union_to_their_sum() {
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        let base = Instant::now();
+        t.record_exec(0, base, base + ms(4));
+        t.record_exec(1, base + ms(10), base + ms(14));
+        t.finish_epoch();
+        assert_eq!(t.exec_union, ms(8));
+        assert_eq!(t.execute, ms(8));
     }
 }

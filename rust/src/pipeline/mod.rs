@@ -17,10 +17,14 @@
 //!   EXEC      the fused training step — the AOT-compiled XLA executable
 //!             (PJRT) or the pure-Rust host step (`--exec host`, the
 //!             default without artifacts); the host step's GEMMs fan out
-//!             on the same pool. Coordinator thread either way.
+//!             on the same pool. Runs inline on the coordinator at
+//!             `exec_streams = 1`, or on an executor lane
+//!             ([`stream::StreamPool`]) at `exec_streams > 1` with the
+//!             host backend.
 //!   WRITEBACK corrected memory states, GMM observations, neighbor-index
-//!             and mailbox updates. Coordinator thread; sharded scatters
-//!             fan out on the pool.
+//!             and mailbox updates. Coordinator thread, strictly in plan
+//!             order (the [`stream::CommitQueue`] contract under
+//!             multi-stream EXEC); sharded scatters fan out on the pool.
 //! ```
 //!
 //! Steady-state timeline at `depth = 1` (the default; bit-identical to the
@@ -77,26 +81,57 @@
 //! every splice exact and the whole pipeline bit-identical to the
 //! sequential path.
 //!
-//! **Honest caveat:** today EXEC is a *synchronous* call on the
-//! coordinator thread (PJRT or host), so pre-splicing only reorders
-//! coordinator work — it cannot yet overlap anything and is roughly
-//! perf-neutral versus simply raising `depth` (which costs no exactness).
-//! The knob is the semantic seam for the planned multi-stream / async EXEC
-//! (see ROADMAP "Open items"), where splicing batch `t+1` *while* batch
-//! `t` runs on a second stream is exactly what bounded staleness licenses —
-//! and the host backend's `HostStep` is Send + Sync, so that second stream
-//! no longer needs a second PJRT client. Until then, prefer
-//! `depth >= 1, staleness = 0`.
+//! The window fill is **deterministic**: the coordinator blocks until the
+//! PREP worker delivers each window entry, so which batches splice stale —
+//! and therefore the results at any `k` — are a pure function of
+//! `(n_train, k)`, never of thread timing. That determinism is what makes
+//! the multi-stream equivalence gate below testable at all.
+//!
+//! ## Multi-stream EXEC (`exec_streams > 1`, host backend only)
+//!
+//! With `exec_streams = N >= 2` and `bounded_staleness = k >= 1`, step
+//! execution moves onto N executor lanes ([`stream::StreamPool`]) over the
+//! Arc-shared Send + Sync `HostStep`, and the coordinator's loop is
+//! software-pipelined:
+//!
+//! ```text
+//!   lane (i+1)%N:  ............ EXEC t+1 ..............
+//!   coordinator:   wait t | absorb params | submit t+1 | WB t | metrics t
+//!                  | SPLICE t+1+k |            wait t+1 | ...
+//! ```
+//!
+//! Step `t+1` executes while the coordinator commits step `t`'s write-back,
+//! computes its metrics and pre-splices window entry `t+1+k` — exactly the
+//! overlap the staleness bound licenses. Two invariants keep every stream
+//! count bit-identical to the serial staleness-k loop
+//! (`tests/pipeline_equivalence.rs`):
+//!
+//! * **ordered commits** — the [`stream::CommitQueue`] applies write-backs
+//!   strictly in plan order, so each splice sees exactly the commits the
+//!   serial schedule shows it (`splice_lag_max` is byte-identical);
+//! * **the parameter chain stays exact** — step `t+1` is submitted only
+//!   after step `t`'s Adam outputs are absorbed, so at most one step is
+//!   ever mid-flight and the overlap hides *coordinator* work (write-back,
+//!   metrics, splice, pack), never relaxes parameter freshness.
+//!
+//! The PJRT backend rejects `exec_streams > 1` (its handles are not Send);
+//! jobs cross the lane boundary as plain buffers, never literals — see
+//! `stream.rs` module docs. Per-stream execute accounting (busy-union vs
+//! wall clock) keeps `device_idle_frac` honest under overlap
+//! ([`crate::metrics::EpochTimer`]).
 //!
 //! Knobs live in [`crate::config::PipelineConfig`] (`--pipeline-depth` /
-//! `--staleness` on the CLI); overlap metrics (assemble-hidden seconds,
-//! device-idle fraction) land in `EpochReport` and
-//! `rust/benches/pipeline_overlap.rs`.
+//! `--staleness` / `--exec-streams` on the CLI); overlap metrics
+//! (assemble-hidden seconds, device-idle fraction, per-stream execute)
+//! land in `EpochReport`, `rust/benches/pipeline_overlap.rs` and
+//! `rust/benches/stream_overlap.rs`.
 
 pub mod prep;
 pub mod runner;
+pub mod stream;
 
 pub use prep::{
     fill_prep, fill_prep_from, fill_prep_from_with, fill_prep_with, negative_stream, PrepBatch,
 };
 pub use runner::{PrepContext, Prefetcher};
+pub use stream::{plain_to_literals, CommitQueue, PlainArg, StepDone, StreamPool};

@@ -17,12 +17,18 @@
 //!
 //! Everything crossing the channel is plain host data — the EXEC handles
 //! (`Engine`/`Step`, `Rc`-held, raw PJRT on that backend) never leave the
-//! coordinator thread (the Send boundary; see `runtime/mod.rs`). The host
-//! EXEC backend keeps the same discipline for uniformity, even though its
-//! raw `HostStep` is Send — the seam a future multi-stream EXEC will use.
+//! coordinator thread (the Send boundary; see `runtime/mod.rs`). The same
+//! discipline governs the EXEC stream lanes (`stream.rs`): they receive
+//! the Arc-shared Send + Sync `HostStep` plus plain buffer payloads, never
+//! the `Step` wrapper or a literal. The coordinator consumes prepped
+//! batches strictly in plan order; under bounded staleness it *blocks* on
+//! the window entries (deterministic fill), so each host slot's PREP half
+//! is installed exactly once per epoch no matter how EXEC is scheduled —
+//! one rotating slot per staleness window entry (`k + 1` slots) is the
+//! per-stream staging contract.
 
 use std::ops::Range;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -127,7 +133,15 @@ impl Prefetcher {
     /// Non-blocking: the next prepped batch if it is already waiting.
     /// `Ok(None)` means "nothing ready yet" or "range cleanly drained";
     /// a worker that died mid-stream is an error, not a quiet None.
+    ///
+    /// Test-only since the staleness window fill became deterministic:
+    /// production consumers must use the blocking [`Prefetcher::recv`] so
+    /// the splice schedule stays a pure function of `(n_train, k)` —
+    /// gating work on `try_recv` would reintroduce the timing-dependent
+    /// schedule this runtime deliberately removed.
+    #[cfg(test)]
     pub fn try_recv(&mut self) -> Result<Option<PrepBatch>> {
+        use std::sync::mpsc::TryRecvError;
         match self.rx.as_ref().expect("prefetcher already shut down").try_recv() {
             Ok(b) => {
                 self.outstanding -= 1;

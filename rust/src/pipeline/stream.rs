@@ -1,0 +1,414 @@
+//! Multi-stream EXEC: N executor lanes running host steps off the
+//! coordinator thread, plus the commit queue that keeps write-backs in
+//! plan order.
+//!
+//! ## Why lanes exist
+//!
+//! Under `bounded_staleness = k >= 1` the coordinator pre-splices up to
+//! `k` future batches — their inputs are fully staged before the current
+//! step's write-back lands. A [`StreamPool`] turns that license into
+//! overlap: step `t+1` executes on a lane while the coordinator commits
+//! step `t`'s write-back, computes its metrics and pre-splices the next
+//! window entry. The parameter chain still serializes the *computations*
+//! (step `t+1` consumes step `t`'s Adam output, which is what keeps
+//! results bit-identical to the serial staleness-k loop), so at any
+//! moment at most one step is mid-flight — the win is that the
+//! coordinator's commit work no longer sits on the EXEC critical path.
+//!
+//! ## Why payloads are plain buffers
+//!
+//! Jobs cross the lane boundary as [`PlainArg`]s — owned `Vec<f32>` /
+//! `Vec<i32>` payloads in ABI order — never as `xla::Literal`s. The
+//! vendored stub's literal happens to be plain host data, but the real
+//! xla-rs literal wraps a C pointer with no Send guarantee; keeping
+//! literals out of the channel types means linking the real bindings
+//! stays the advertised one-line swap. Lanes rebuild literals against the
+//! step's own [`ArtifactSpec`] (every payload is length- and
+//! dtype-checked), run, and ship the outputs back the same way.
+//!
+//! ## Ordering contract
+//!
+//! The [`CommitQueue`] holds the in-flight steps in submission order and
+//! only ever surfaces the oldest one — write-backs are applied strictly
+//! in plan order no matter which lane ran the step or when it finished.
+//! `StepDone::seq` is checked against the queue front, so a reordering
+//! bug is an error, not a silent corruption.
+//!
+//! Only the **host** backend can serve lanes ([`HostStep`] is Send + Sync
+//! — plain data plus an `Arc<WorkerPool>`); the PJRT backend rejects
+//! `exec_streams > 1` with a clear error at trainer construction.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::runtime::engine::{check_len, lit_f32, lit_i32};
+use crate::runtime::manifest::DType;
+use crate::runtime::{HostStep, TensorSpec};
+
+/// One tensor payload crossing the lane boundary: owned plain host data in
+/// the ABI's dtype, shape-checked against the spec on both conversions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlainArg {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl PlainArg {
+    /// Copy a literal's payload out into a plain buffer (params / Adam
+    /// state at submission time).
+    pub fn from_literal(lit: &Literal) -> Result<PlainArg> {
+        let n = lit.element_count();
+        match lit.ty()? {
+            ElementType::F32 => {
+                let mut v = vec![0.0f32; n];
+                lit.copy_raw_to(&mut v)?;
+                Ok(PlainArg::F32(v))
+            }
+            ElementType::S32 => {
+                let mut v = vec![0i32; n];
+                lit.copy_raw_to(&mut v)?;
+                Ok(PlainArg::I32(v))
+            }
+            other => bail!("stream payload: unsupported element type {other:?}"),
+        }
+    }
+
+    /// Rebuild the literal for `spec` (length- and dtype-checked).
+    pub fn to_literal(&self, spec: &TensorSpec) -> Result<Literal> {
+        match (self, spec.dtype) {
+            (PlainArg::F32(v), DType::F32) => {
+                check_len(spec, v.len())?;
+                lit_f32(v, &spec.shape)
+            }
+            (PlainArg::I32(v), DType::I32) => {
+                check_len(spec, v.len())?;
+                lit_i32(v, &spec.shape)
+            }
+            _ => bail!("tensor '{}': payload dtype does not match spec", spec.name),
+        }
+    }
+}
+
+/// Rebuild literals from plain payloads against their tensor specs
+/// (positional; the caller picks the matching slice of the ABI — e.g. the
+/// step outputs after the threaded parameter bank has been split off).
+pub fn plain_to_literals(outs: &[PlainArg], specs: &[TensorSpec]) -> Result<Vec<Literal>> {
+    if outs.len() != specs.len() {
+        bail!(
+            "stream payloads: got {} tensors, spec slice expects {}",
+            outs.len(),
+            specs.len()
+        );
+    }
+    outs.iter()
+        .zip(specs)
+        .map(|(arg, tspec)| arg.to_literal(tspec))
+        .collect()
+}
+
+/// Completion record for one submitted step.
+pub struct StepDone {
+    /// The submission sequence number (= plan index in the trainer).
+    pub seq: usize,
+    /// Which lane ran it (for per-stream execute accounting).
+    pub stream: usize,
+    /// The step outputs in ABI order, or the lane-side error.
+    pub outputs: Result<Vec<PlainArg>>,
+    /// Lane-side wall-clock span of the step execution proper. Payload
+    /// staging/flattening (plain-buffer <-> literal copies) is excluded so
+    /// `execute`/`device_idle_frac` stay comparable with the inline path,
+    /// which books the equivalent pack work under `assemble`; that copy
+    /// time runs on the lane, overlapped, and is deliberately untracked.
+    pub started: Instant,
+    pub finished: Instant,
+}
+
+struct Job {
+    seq: usize,
+    args: Vec<PlainArg>,
+    reply: Sender<StepDone>,
+}
+
+struct Lane {
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// N executor lanes over one shared [`HostStep`]. The step is stateless
+/// across runs (per-run activations are locals), so any number of lanes
+/// may hold it; its pooled GEMMs fan out on the trainer's `WorkerPool`
+/// from whichever thread runs them, bit-identical across lane counts.
+pub struct StreamPool {
+    lanes: Vec<Lane>,
+}
+
+impl StreamPool {
+    /// Spawn `streams` lanes executing `step`. Lane threads live until the
+    /// pool drops; an idle lane costs one parked thread.
+    pub fn new(streams: usize, step: Arc<HostStep>) -> Result<StreamPool> {
+        anyhow::ensure!(streams >= 1, "StreamPool requires >= 1 lane");
+        let lanes = (0..streams)
+            .map(|s| {
+                let (tx, rx) = channel::<Job>();
+                let step = step.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("pres-exec-{s}"))
+                    .spawn(move || lane_main(s, &step, &rx))
+                    .context("spawning EXEC stream lane")?;
+                Ok(Lane { tx: Some(tx), handle: Some(handle) })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StreamPool { lanes })
+    }
+
+    pub fn streams(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Submit step `seq` to lane `seq % streams`. Returns the receiver its
+    /// completion arrives on (exactly one [`StepDone`] per job). A lane
+    /// that died surfaces as a receive error on that channel.
+    pub fn submit(&self, seq: usize, args: Vec<PlainArg>) -> Receiver<StepDone> {
+        let (reply, rx) = channel();
+        let lane = &self.lanes[seq % self.lanes.len()];
+        let tx = lane.tx.as_ref().expect("StreamPool already shut down");
+        // send only fails if the lane panicked; the caller then sees a
+        // closed reply channel, which CommitQueue reports as a dead lane
+        let _ = tx.send(Job { seq, args, reply });
+        rx
+    }
+}
+
+impl Drop for StreamPool {
+    fn drop(&mut self) {
+        // closing the job channels lets each lane drain and exit its loop
+        for lane in &mut self.lanes {
+            drop(lane.tx.take());
+        }
+        for lane in &mut self.lanes {
+            if let Some(h) = lane.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn lane_main(stream: usize, step: &HostStep, rx: &Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let (outputs, (started, finished)) = run_job(step, &job.args);
+        // the coordinator may already be gone on an error path — dropping
+        // the result is then correct
+        let _ = job.reply.send(StepDone {
+            seq: job.seq,
+            stream,
+            outputs,
+            started,
+            finished,
+        });
+    }
+}
+
+/// Stage plain payloads into literals, run the shared step, and flatten
+/// the outputs back into plain payloads. The returned span brackets only
+/// `HostStep::run` (see [`StepDone::started`]).
+fn run_job(
+    step: &HostStep,
+    args: &[PlainArg],
+) -> (Result<Vec<PlainArg>>, (Instant, Instant)) {
+    let lits = match stage_inputs(step, args) {
+        Ok(lits) => lits,
+        Err(e) => {
+            let t = Instant::now();
+            return (Err(e), (t, t));
+        }
+    };
+    let refs: Vec<&Literal> = lits.iter().collect();
+    let started = Instant::now();
+    let outs = step.run(&refs);
+    let finished = Instant::now();
+    let flattened = outs.and_then(|outs| outs.iter().map(PlainArg::from_literal).collect());
+    (flattened, (started, finished))
+}
+
+fn stage_inputs(step: &HostStep, args: &[PlainArg]) -> Result<Vec<Literal>> {
+    if args.len() != step.spec.inputs.len() {
+        bail!(
+            "stream step {}: got {} args, ABI expects {}",
+            step.spec.name,
+            args.len(),
+            step.spec.inputs.len()
+        );
+    }
+    args.iter()
+        .zip(&step.spec.inputs)
+        .map(|(arg, spec)| arg.to_literal(spec))
+        .collect()
+}
+
+/// In-flight steps ordered by submission; completions surface strictly in
+/// that order regardless of lane or finish time — the write-back side of
+/// the staleness-k exactness contract.
+#[derive(Default)]
+pub struct CommitQueue {
+    pending: VecDeque<(usize, Receiver<StepDone>)>,
+}
+
+impl CommitQueue {
+    pub fn new() -> CommitQueue {
+        CommitQueue::default()
+    }
+
+    /// Record a submitted step. `seq` values must be pushed in increasing
+    /// order (the trainer submits plan indices monotonically).
+    pub fn push(&mut self, seq: usize, rx: Receiver<StepDone>) {
+        if let Some(&(last, _)) = self.pending.back() {
+            debug_assert!(seq > last, "commit queue requires monotone submission");
+        }
+        self.pending.push_back((seq, rx));
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Block for the oldest in-flight step. Errors if nothing is in flight
+    /// or the lane running it died.
+    pub fn wait_next(&mut self) -> Result<StepDone> {
+        let (seq, rx) = self
+            .pending
+            .pop_front()
+            .ok_or_else(|| anyhow!("commit queue: no step in flight"))?;
+        let done = rx
+            .recv()
+            .map_err(|_| anyhow!("EXEC stream lane died running step {seq}"))?;
+        anyhow::ensure!(
+            done.seq == seq,
+            "commit order violated: lane returned step {}, queue front is {seq}",
+            done.seq
+        );
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::ArtifactSpec;
+    use crate::util::pool::WorkerPool;
+
+    /// A small host train step (jodie avoids the attention path, so all-
+    /// zero inputs stay NaN-free) plus matching all-zero ABI args.
+    fn step_and_args() -> (Arc<HostStep>, Vec<PlainArg>) {
+        let m = Manifest::builtin();
+        let spec = ArtifactSpec::host(m.dims, "jodie", 4, "train").unwrap();
+        let n_params = m.param_specs("jodie").unwrap().len();
+        let step = Arc::new(HostStep::new(
+            spec,
+            m.dims,
+            n_params,
+            Arc::new(WorkerPool::new(2)),
+        ));
+        let mut args: Vec<PlainArg> = step
+            .spec
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => PlainArg::F32(vec![0.0; s.elems()]),
+                DType::I32 => PlainArg::I32(vec![0; s.elems()]),
+            })
+            .collect();
+        // step_t = 1 (t = 0 would zero Adam's bias correction); lr stays 0
+        let last = args.len() - 1;
+        args[last] = PlainArg::F32(vec![1.0]);
+        (step, args)
+    }
+
+    #[test]
+    fn host_step_is_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<HostStep>();
+        check::<PlainArg>();
+        check::<StepDone>();
+    }
+
+    #[test]
+    fn lane_run_matches_inline_run_bit_for_bit() {
+        let (step, args) = step_and_args();
+        // inline reference on the coordinator thread
+        let (want, (t0, t1)) = run_job(&step, &args);
+        let want = want.unwrap();
+        assert!(t1 >= t0);
+        // one job per lane, all identical inputs: every lane must agree
+        // with the inline run exactly (the pool moves work, never values)
+        let pool = StreamPool::new(3, step.clone()).unwrap();
+        for seq in 0..3 {
+            let rx = pool.submit(seq, args.clone());
+            let done = rx.recv().unwrap();
+            assert_eq!(done.seq, seq);
+            assert_eq!(done.stream, seq % 3);
+            let got = done.outputs.unwrap();
+            assert_eq!(got.len(), step.spec.outputs.len());
+            assert_eq!(got, want, "lane {seq} diverged from inline execution");
+        }
+    }
+
+    #[test]
+    fn commit_queue_surfaces_steps_in_submission_order() {
+        let (step, args) = step_and_args();
+        let pool = StreamPool::new(4, step).unwrap();
+        let mut commits = CommitQueue::new();
+        for seq in 1..=8usize {
+            commits.push(seq, pool.submit(seq, args.clone()));
+        }
+        assert_eq!(commits.len(), 8);
+        for expect in 1..=8usize {
+            let done = commits.wait_next().unwrap();
+            assert_eq!(done.seq, expect, "commit order must be submission order");
+            assert_eq!(done.stream, expect % 4);
+            assert!(done.outputs.is_ok());
+            assert!(done.finished >= done.started);
+        }
+        assert!(commits.is_empty());
+        assert!(commits.wait_next().is_err(), "empty queue must error");
+    }
+
+    #[test]
+    fn bad_payload_surfaces_as_lane_error_not_panic() {
+        let (step, mut args) = step_and_args();
+        // truncate one tensor: the lane must report a step error, and the
+        // pool must stay usable afterwards
+        args[0] = PlainArg::F32(vec![0.0; 1]);
+        let pool = StreamPool::new(1, step).unwrap();
+        let done = pool.submit(0, args).recv().unwrap();
+        assert!(done.outputs.is_err());
+        let (_, good) = step_and_args();
+        let done = pool.submit(1, good).recv().unwrap();
+        assert!(done.outputs.is_ok(), "lane must survive a bad job");
+    }
+
+    #[test]
+    fn plain_arg_roundtrips_and_checks_specs() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: DType::F32,
+        };
+        let arg = PlainArg::F32(vec![1.0, -2.0, 3.5, 0.0]);
+        let lit = arg.to_literal(&spec).unwrap();
+        assert_eq!(PlainArg::from_literal(&lit).unwrap(), arg);
+        // wrong length and wrong dtype both fail loudly
+        assert!(PlainArg::F32(vec![0.0; 3]).to_literal(&spec).is_err());
+        assert!(PlainArg::I32(vec![0; 4]).to_literal(&spec).is_err());
+    }
+}

@@ -142,7 +142,7 @@ impl Engine {
         let imp = match &self.backend {
             BackendImpl::Host { pool } => {
                 let n_params = self.manifest.param_specs(model)?.len();
-                StepImpl::Host(Box::new(HostStep::new(
+                StepImpl::Host(Arc::new(HostStep::new(
                     spec.clone(),
                     self.manifest.dims,
                     n_params,
@@ -251,9 +251,11 @@ enum StepImpl {
         exe: PjRtLoadedExecutable,
         client: PjRtClient,
     },
-    // boxed: the host step carries its spec + dims inline, the PJRT
-    // variant only raw handles — keep the enum lean either way
-    Host(Box<HostStep>),
+    // Arc-shared: the host step is plain data + a pool handle (Send +
+    // Sync), so the same instance serves both the coordinator's inline
+    // `run` and the EXEC stream lanes (`pipeline/stream.rs`) — and the
+    // enum stays lean next to the raw PJRT handles
+    Host(Arc<HostStep>),
 }
 
 impl Step {
@@ -320,6 +322,17 @@ impl Step {
             );
         }
         Ok(outputs)
+    }
+
+    /// The shared host-step instance when this step executes on the host
+    /// backend — what an EXEC stream lane runs (`HostStep` is Send + Sync).
+    /// `None` on PJRT: its handles are not Send, so steps cannot leave the
+    /// coordinator thread there.
+    pub fn host_step(&self) -> Option<Arc<HostStep>> {
+        match &self.imp {
+            StepImpl::Host(host) => Some(host.clone()),
+            StepImpl::Pjrt { .. } => None,
+        }
     }
 
     pub fn input_spec(&self, name: &str) -> Result<&TensorSpec> {

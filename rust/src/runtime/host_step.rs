@@ -277,10 +277,13 @@ struct Fwd {
 
 // ---------------------------------------------------------------- the step
 
-/// One host-executed step for a `(model, batch, kind)` triple. Send-able by
-/// construction (plain data + `Arc<WorkerPool>`), unlike its PJRT
-/// counterpart — which is what makes multi-stream host EXEC possible
-/// (ROADMAP).
+/// One host-executed step for a `(model, batch, kind)` triple. Send + Sync
+/// by construction (plain data + `Arc<WorkerPool>`), unlike its PJRT
+/// counterpart — which is what lets the EXEC stream lanes
+/// (`pipeline/stream.rs`) Arc-share one instance across threads. `run` is
+/// stateless across calls: parameters arrive as inputs and every per-run
+/// activation is a local, so concurrent `run`s from different lanes are
+/// sound (they only contend on the shared `WorkerPool`'s handoff lock).
 pub struct HostStep {
     pub spec: ArtifactSpec,
     dims: Dims,

@@ -41,18 +41,23 @@
 //! fact rather than against it:
 //!
 //! * every device handle stays on the **coordinator thread** — SPLICE,
-//!   EXEC and WRITEBACK all run there;
+//!   WRITEBACK, and inline EXEC (`exec_streams = 1`, or any stream count
+//!   on PJRT, which rejects more) all run there;
 //! * the background PREP worker receives only plain host data
 //!   (`Arc<Dataset>`, `Arc<Vec<BatchPlan>>`, a cloned `NegativeSampler`)
 //!   and sends back plain `PrepBatch` buffers over mpsc channels;
 //! * nothing in this module is ever captured by a spawned closure, which
 //!   the compiler enforces (`Rc` in `Engine`/`Step` makes them `!Send`).
 //!
-//! Keep it that way: if a future stage needs device access off-thread
-//! (multi-stream exec), give it its own client, don't smuggle this one.
-//! Note the raw [`host_step::HostStep`] itself IS Send + Sync (plain data
-//! plus an `Arc<WorkerPool>`), so a future multi-stream EXEC stage can own
-//! host steps on a second thread without any of the PJRT caveats.
+//! The one sanctioned crossing is the raw [`host_step::HostStep`], which
+//! IS Send + Sync (plain data plus an `Arc<WorkerPool>`): multi-stream
+//! EXEC (`pipeline/stream.rs`, `--exec-streams N`) Arc-shares exactly that
+//! type with its executor lanes via [`engine::Step::host_step`], never the
+//! `Step`/`Engine` wrappers — and job payloads cross as plain
+//! `Vec<f32>`/`Vec<i32>` buffers, never as `xla::Literal`s, so linking the
+//! real (non-Send-literal) bindings stays a one-line swap. If a future
+//! stage needs *PJRT* access off-thread, give it its own client; don't
+//! smuggle this one.
 
 pub mod engine;
 pub mod host_step;

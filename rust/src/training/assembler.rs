@@ -28,6 +28,7 @@ use crate::graph::EventLog;
 use crate::memory::gmm::Role;
 use crate::memory::{GmmTrackers, Mailbox, MemoryBackend};
 use crate::pipeline::prep::{fill_prep_from, PrepBatch};
+use crate::pipeline::stream::PlainArg;
 use crate::runtime::engine::{lit_f32, lit_i32};
 use crate::runtime::{ArtifactSpec, Dims, TensorSpec};
 use crate::sampler::{NeighborEntry, NeighborIndex};
@@ -63,6 +64,12 @@ pub struct HostBatch {
 
 const ROLES: [&str; 3] = ["src", "dst", "neg"];
 
+/// Borrowed view of one staged input's host payload (dtype-tagged).
+enum HostSlice<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
 impl HostBatch {
     pub fn new(model: &str, b: usize, dims: Dims) -> HostBatch {
         let u = 2 * b;
@@ -97,9 +104,10 @@ impl HostBatch {
         std::mem::replace(&mut self.prep, prep)
     }
 
-    /// Produce the literal for one manifest data input by name.
-    pub fn literal_for(&self, spec: &TensorSpec) -> Result<Literal> {
-        let name = spec.name.as_str();
+    /// The host slice backing one manifest data input by name — the single
+    /// source of truth behind both [`HostBatch::literal_for`] (inline
+    /// EXEC) and [`HostBatch::plain_for`] (stream-lane submission).
+    fn slice_for(&self, name: &str) -> Result<HostSlice<'_>> {
         if let Some(role_field) = name.strip_prefix("n_") {
             // n_{role}_{field}
             let (role, field) = role_field
@@ -116,7 +124,7 @@ impl HostBatch {
                 "mask" => &self.n_mask[ri],
                 _ => bail!("unknown neighbor field '{field}'"),
             };
-            return lit_f32(data, &spec.shape);
+            return Ok(HostSlice::F32(data));
         }
         if let Some(rest) = name.strip_prefix("c_") {
             let (role, field) = rest
@@ -127,24 +135,42 @@ impl HostBatch {
                 .position(|r| *r == role)
                 .ok_or_else(|| anyhow::anyhow!("bad role in '{name}'"))?;
             return match field {
-                "mem" => lit_f32(&self.c_mem[ri], &spec.shape),
-                "match" => lit_i32(&self.prep.c_match[ri], &spec.shape),
-                "dt" => lit_f32(&self.c_dt[ri], &spec.shape),
+                "mem" => Ok(HostSlice::F32(&self.c_mem[ri])),
+                "match" => Ok(HostSlice::I32(&self.prep.c_match[ri])),
+                "dt" => Ok(HostSlice::F32(&self.c_dt[ri])),
                 _ => bail!("unknown current field '{field}'"),
             };
         }
-        match name {
-            "u_self_mem" => lit_f32(&self.u_self_mem, &spec.shape),
-            "u_other_mem" => lit_f32(&self.u_other_mem, &spec.shape),
-            "u_efeat" => lit_f32(&self.prep.u_efeat, &spec.shape),
-            "u_dt" => lit_f32(&self.u_dt, &spec.shape),
-            "u_pred" => lit_f32(&self.u_pred, &spec.shape),
-            "u_wmask" => lit_f32(&self.prep.u_wmask, &spec.shape),
-            "u_cmask" => lit_f32(&self.u_cmask, &spec.shape),
-            "beta" => lit_f32(&[self.beta], &[]),
-            "pres_on" => lit_f32(&[self.pres_on], &[]),
+        Ok(match name {
+            "u_self_mem" => HostSlice::F32(&self.u_self_mem),
+            "u_other_mem" => HostSlice::F32(&self.u_other_mem),
+            "u_efeat" => HostSlice::F32(&self.prep.u_efeat),
+            "u_dt" => HostSlice::F32(&self.u_dt),
+            "u_pred" => HostSlice::F32(&self.u_pred),
+            "u_wmask" => HostSlice::F32(&self.prep.u_wmask),
+            "u_cmask" => HostSlice::F32(&self.u_cmask),
+            "beta" => HostSlice::F32(std::slice::from_ref(&self.beta)),
+            "pres_on" => HostSlice::F32(std::slice::from_ref(&self.pres_on)),
             _ => bail!("unknown data input '{name}'"),
+        })
+    }
+
+    /// Produce the literal for one manifest data input by name.
+    pub fn literal_for(&self, spec: &TensorSpec) -> Result<Literal> {
+        match self.slice_for(&spec.name)? {
+            HostSlice::F32(data) => lit_f32(data, &spec.shape),
+            HostSlice::I32(data) => lit_i32(data, &spec.shape),
         }
+    }
+
+    /// The same payload as [`HostBatch::literal_for`], as an owned plain
+    /// buffer for submission to an EXEC stream lane (`pipeline/stream.rs`
+    /// keeps `xla::Literal` out of the cross-thread channel types).
+    pub fn plain_for(&self, spec: &TensorSpec) -> Result<PlainArg> {
+        Ok(match self.slice_for(&spec.name)? {
+            HostSlice::F32(data) => PlainArg::F32(data.to_vec()),
+            HostSlice::I32(data) => PlainArg::I32(data.to_vec()),
+        })
     }
 
     /// Pack all data inputs of `spec` (after `skip` leading param/opt slots,
@@ -154,6 +180,21 @@ impl HostBatch {
         spec.inputs[skip..end]
             .iter()
             .map(|t| self.literal_for(t))
+            .collect()
+    }
+
+    /// [`HostBatch::pack`] for an EXEC stream-lane submission: the same
+    /// ABI slice, as owned plain payloads.
+    pub fn pack_plain(
+        &self,
+        spec: &ArtifactSpec,
+        skip: usize,
+        trailing: usize,
+    ) -> Result<Vec<PlainArg>> {
+        let end = spec.inputs.len() - trailing;
+        spec.inputs[skip..end]
+            .iter()
+            .map(|t| self.plain_for(t))
             .collect()
     }
 }

@@ -25,9 +25,12 @@ use crate::memory::{self, GmmTrackers, Mailbox, MemoryBackend, MemoryBackendKind
 use crate::metrics::ranking::link_ap;
 use crate::metrics::EpochTimer;
 use crate::model::ModelState;
-use crate::pipeline::{fill_prep_with, negative_stream, PrepBatch, PrepContext, Prefetcher};
+use crate::pipeline::{
+    fill_prep_with, negative_stream, plain_to_literals, CommitQueue, PlainArg, PrepBatch,
+    PrepContext, Prefetcher, StreamPool,
+};
 use crate::runtime::engine::{fetch_f32, fetch_scalar, lit_scalar};
-use crate::runtime::{ArtifactSpec, Engine, Step};
+use crate::runtime::{ArtifactSpec, Engine, ExecBackendKind, Step};
 use crate::sampler::{NegativeSampler, NeighborIndex};
 use crate::training::{Assembler, HostBatch};
 use crate::util::pool::WorkerPool;
@@ -44,7 +47,19 @@ pub struct EpochReport {
     pub val_ap: f64,
     pub epoch_secs: f64,
     pub assemble_secs: f64,
+    /// Step-run busy time summed over all EXEC streams (the single-stream
+    /// meaning at `exec_streams = 1`; may exceed `epoch_secs` when lanes
+    /// overlap — see `exec_union_secs`).
     pub execute_secs: f64,
+    /// Busy-union of EXEC across streams (never exceeds `epoch_secs`);
+    /// what `device_idle_frac` is measured against.
+    pub exec_union_secs: f64,
+    /// Coordinator wall time attributable to EXEC: the inline run at one
+    /// stream, the commit-queue wait under stream lanes.
+    pub exec_wait_secs: f64,
+    /// Per-stream EXEC busy seconds (index = stream id; sums to
+    /// `execute_secs`). One entry at `exec_streams = 1`.
+    pub exec_stream_busy_secs: Vec<f64>,
     pub writeback_secs: f64,
     /// Background PREP busy time (0 when running sequentially).
     pub prep_secs: f64,
@@ -141,6 +156,16 @@ impl Trainer {
         dataset: Arc<Dataset>,
     ) -> Result<Trainer> {
         cfg.validate()?;
+        // config validation rejects the statically-knowable case
+        // (exec = "pjrt"); this catches "auto" resolving to PJRT too
+        if cfg.pipeline.exec_streams > 1 && engine.backend() == ExecBackendKind::Pjrt {
+            anyhow::bail!(
+                "exec_streams = {} requires the host EXEC backend: PJRT handles are not \
+                 Send, so steps cannot run on stream lanes — use --exec host or \
+                 --exec-streams 1",
+                cfg.pipeline.exec_streams
+            );
+        }
         let dims = engine.manifest().dims;
         let b = cfg.batch_size;
         // one persistent pool per trainer (or the shared process pool at
@@ -252,7 +277,11 @@ impl Trainer {
         timer.start_epoch();
 
         let (results, splice_lag_max) = if self.cfg.pipeline.depth > 0 && n_train > 1 {
-            self.run_pipelined_epoch(epoch, n_train, &mut timer)?
+            if self.cfg.pipeline.exec_streams > 1 {
+                self.run_multistream_epoch(epoch, n_train, &mut timer)?
+            } else {
+                self.run_pipelined_epoch(epoch, n_train, &mut timer)?
+            }
         } else {
             let mut out = Vec::with_capacity(n_train.saturating_sub(1));
             for i in 1..n_train {
@@ -286,32 +315,24 @@ impl Trainer {
             epoch_secs: timer.total.as_secs_f64(),
             assemble_secs: timer.assemble.as_secs_f64(),
             execute_secs: timer.execute.as_secs_f64(),
+            exec_union_secs: timer.exec_union.as_secs_f64(),
+            exec_wait_secs: timer.exec_wait.as_secs_f64(),
+            exec_stream_busy_secs: timer.stream_busy.iter().map(|d| d.as_secs_f64()).collect(),
             writeback_secs: timer.writeback.as_secs_f64(),
             prep_secs: timer.prep_busy.as_secs_f64(),
             prep_stall_secs: timer.prep_stall.as_secs_f64(),
             assemble_hidden_secs: timer.assemble_hidden().as_secs_f64(),
             device_idle_frac: timer.device_idle_fraction(),
             splice_lag_max,
-            events_per_sec: timer.events_per_sec(n_train.saturating_sub(1) * self.cfg.batch_size),
+            events_per_sec: timer.events_per_sec(executed_events(&self.plans, n_train)),
             gamma: self.state.gamma().unwrap_or(f32::NAN),
         })
     }
 
-    /// The pipelined epoch body: a background PREP worker feeds the
-    /// coordinator's SPLICE → EXEC → WRITEBACK loop over bounded channels.
-    /// With `bounded_staleness = k > 0` up to `k` future batches are
-    /// spliced before the in-flight write-back lands (their memory view
-    /// lags at most `k` commits). Returns the per-iteration metrics plus
-    /// the maximum observed splice lag (the staleness bound's witness).
-    fn run_pipelined_epoch(
-        &mut self,
-        epoch: usize,
-        n_train: usize,
-        timer: &mut EpochTimer,
-    ) -> Result<(Vec<(f64, f64, f64, f64)>, usize)> {
-        let stale = self.cfg.pipeline.bounded_staleness;
-        let slots = self.hosts.len();
-        let ctx = PrepContext {
+    /// The PREP worker context for one epoch (shared by the single- and
+    /// multi-stream pipelined loops).
+    fn prep_context(&self, epoch: usize) -> PrepContext {
+        PrepContext {
             dataset: self.dataset.clone(),
             plans: self.plans.clone(),
             sampler: self.neg_sampler.clone(),
@@ -321,7 +342,27 @@ impl Trainer {
             d_edge: self.assembler.dims.d_edge,
             router: self.store.router(),
             pool: self.pool.clone(),
-        };
+        }
+    }
+
+    /// The pipelined epoch body: a background PREP worker feeds the
+    /// coordinator's SPLICE → EXEC → WRITEBACK loop over bounded channels.
+    /// With `bounded_staleness = k > 0` up to `k` future batches are
+    /// spliced before the in-flight write-back lands (their memory view
+    /// lags at most `k` commits). The window fill blocks on the PREP
+    /// worker, so which batches splice stale is a pure function of
+    /// `(n_train, k)` — deterministic, and the exact schedule the
+    /// multi-stream loop replays. Returns the per-iteration metrics plus
+    /// the maximum observed splice lag (the staleness bound's witness).
+    fn run_pipelined_epoch(
+        &mut self,
+        epoch: usize,
+        n_train: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<(Vec<(f64, f64, f64, f64)>, usize)> {
+        let stale = self.cfg.pipeline.bounded_staleness;
+        let slots = self.hosts.len();
+        let ctx = self.prep_context(epoch);
         let mut pf = Prefetcher::spawn(ctx, 1..n_train, self.cfg.pipeline.depth)?;
         let mut presliced: VecDeque<usize> = VecDeque::new();
         let mut results = Vec::with_capacity(n_train.saturating_sub(1));
@@ -332,10 +373,7 @@ impl Trainer {
             if presliced.front() == Some(&i) {
                 presliced.pop_front();
             } else {
-                let t0 = Instant::now();
-                let prep = pf.recv()?;
-                timer.prep_stall += t0.elapsed();
-                self.install_and_splice(prep, i, &pf, timer)?;
+                self.recv_install_splice(&mut pf, i, timer)?;
             }
 
             // ---- EXEC
@@ -347,8 +385,7 @@ impl Trainer {
                 if next >= n_train {
                     break;
                 }
-                let Some(prep) = pf.try_recv()? else { break };
-                self.install_and_splice(prep, next, &pf, timer)?;
+                self.recv_install_splice(&mut pf, next, timer)?;
                 // batch `next` should see commits up to `next - 1` but only
                 // `i - 1` have landed: its view lags `next - i` commits
                 splice_lag_max = splice_lag_max.max(next - i);
@@ -363,6 +400,184 @@ impl Trainer {
             results.push(metrics);
         }
         Ok((results, splice_lag_max))
+    }
+
+    /// The multi-stream epoch body (`exec_streams >= 2`, host backend,
+    /// `bounded_staleness = k >= 1`): steps execute on [`StreamPool`]
+    /// lanes while the coordinator commits write-backs strictly in plan
+    /// order through a [`CommitQueue`]. Software-pipelined so step `i+1`
+    /// runs concurrently with step `i`'s write-back, metrics and the next
+    /// window splice:
+    ///
+    /// ```text
+    ///   wait i → absorb params → submit i+1 → WB i → metrics i → splice i+1+k
+    /// ```
+    ///
+    /// Bit-identical to [`Trainer::run_pipelined_epoch`] at the same `k`
+    /// for every stream count: each splice sees exactly the serial
+    /// schedule's commits (batch `j` lags `min(k, j - 1)` commits, capped
+    /// by the range end), and step `i+1` is only submitted after step
+    /// `i`'s outputs returned the parameter bank — the parameter chain
+    /// stays exact, so at most one step is mid-flight and the lanes hide
+    /// *coordinator* work, never relax freshness.
+    ///
+    /// The parameters + Adam state thread through the epoch as a plain
+    /// [`PlainArg`] bank: exported from `state` once at epoch start, moved
+    /// into each job, and handed back zero-copy from each step's outputs —
+    /// no per-step literal round-trip on the coordinator critical path.
+    /// The bank AND the Adam step counter are re-imported into `state`
+    /// only when the epoch completes, so a mid-flight error (dead lane,
+    /// bad payload) leaves `state` exactly at its consistent epoch-start
+    /// values — params and `step` never drift apart.
+    fn run_multistream_epoch(
+        &mut self,
+        epoch: usize,
+        n_train: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<(Vec<(f64, f64, f64, f64)>, usize)> {
+        let stale = self.cfg.pipeline.bounded_staleness;
+        anyhow::ensure!(
+            stale >= 1,
+            "exec_streams > 1 requires bounded_staleness >= 1 (nothing can overlap at k = 0)"
+        );
+        let spec = self.train_step.spec.clone();
+        let host_step = self.train_step.host_step().ok_or_else(|| {
+            anyhow::anyhow!(
+                "exec_streams = {} requires the host EXEC backend: PJRT handles are not \
+                 Send, so steps cannot run on stream lanes",
+                self.cfg.pipeline.exec_streams
+            )
+        })?;
+        let streams = StreamPool::new(self.cfg.pipeline.exec_streams, host_step)?;
+        let ctx = self.prep_context(epoch);
+        let mut pf = Prefetcher::spawn(ctx, 1..n_train, self.cfg.pipeline.depth)?;
+        let mut commits = CommitQueue::new();
+        let mut results = Vec::with_capacity(n_train.saturating_sub(1));
+        let mut splice_lag_max = 0usize;
+        let n = self.state.len();
+        let last = n_train - 1; // highest plan index executed this epoch
+        // Adam step numbers this epoch: step `i` of 1..n_train executes
+        // with step_t = step0 + i (exactly the inline path's
+        // `state.step + 1` sequence); `state.step` itself is only advanced
+        // at the successful epoch-end import below
+        let step0 = self.state.step;
+
+        // export the parameter bank once (the literals in `state` stay
+        // untouched — and stale — until the epoch-end import below)
+        let mut bank: Vec<PlainArg> = Vec::with_capacity(3 * n);
+        for lit in self
+            .state
+            .params
+            .iter()
+            .chain(self.state.adam_m.iter())
+            .chain(self.state.adam_v.iter())
+        {
+            bank.push(PlainArg::from_literal(lit)?);
+        }
+
+        // ---- prologue: batch 1 splices exactly (lag 0) and goes in
+        // flight; the window then pre-splices batches 2..=1+k against the
+        // initial memory view — the serial loop's iteration-1 fill
+        self.recv_install_splice(&mut pf, 1, timer)?;
+        let job =
+            self.submit_train_slot(&streams, 1, std::mem::take(&mut bank), step0 + 1, timer)?;
+        commits.push(1, job);
+        let mut hi = 1usize; // highest plan index spliced so far
+        while hi < (1 + stale).min(last) {
+            let next = hi + 1;
+            self.recv_install_splice(&mut pf, next, timer)?;
+            splice_lag_max = splice_lag_max.max(next - 1);
+            hi = next;
+        }
+
+        for i in 1..n_train {
+            // ---- ordered commit: wait for step i (always the queue front)
+            let t0 = Instant::now();
+            let done = commits.wait_next()?;
+            timer.exec_wait += t0.elapsed();
+            anyhow::ensure!(
+                done.seq == i,
+                "commit queue returned step {}, expected {i}",
+                done.seq
+            );
+            timer.record_exec(done.stream, done.started, done.finished);
+            let mut outs = done
+                .outputs
+                .with_context(|| format!("EXEC stream step {i}"))?;
+            anyhow::ensure!(
+                outs.len() == spec.outputs.len(),
+                "EXEC stream step {i}: got {} outputs, ABI expects {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+
+            // ---- reclaim the updated parameter bank (zero-copy) and put
+            // batch i+1 (pre-spliced) in flight so it executes under the
+            // write-back below
+            let t1 = Instant::now();
+            let step_outs = outs.split_off(3 * n);
+            bank = outs;
+            let outputs = plain_to_literals(&step_outs, &spec.outputs[3 * n..])?;
+            timer.writeback += t1.elapsed();
+            if i < last {
+                let job = self.submit_train_slot(
+                    &streams,
+                    i + 1,
+                    std::mem::take(&mut bank),
+                    step0 + (i + 1) as u64,
+                    timer,
+                )?;
+                commits.push(i + 1, job);
+            }
+
+            // ---- WRITEBACK i, strictly in plan order
+            let t2 = Instant::now();
+            let metrics =
+                self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i, true)?;
+            timer.writeback += t2.elapsed();
+            results.push(metrics);
+
+            // ---- top up the staleness window: batch i+1+k sees commits
+            // <= i, exactly the serial loop's iteration-(i+1) fill
+            while hi < (i + 1 + stale).min(last) {
+                let next = hi + 1;
+                self.recv_install_splice(&mut pf, next, timer)?;
+                splice_lag_max = splice_lag_max.max(next - (i + 1));
+                hi = next;
+            }
+        }
+
+        // ---- re-import the final parameter bank + step counter into the
+        // state (one conversion per epoch; eval and reporting read `state`)
+        anyhow::ensure!(bank.len() == 3 * n, "parameter bank lost tensors mid-epoch");
+        let v_bank = bank.split_off(2 * n);
+        let m_bank = bank.split_off(n);
+        for (dst, src, specs) in [
+            (&mut self.state.params, &bank, &spec.inputs[..n]),
+            (&mut self.state.adam_m, &m_bank, &spec.inputs[n..2 * n]),
+            (&mut self.state.adam_v, &v_bank, &spec.inputs[2 * n..3 * n]),
+        ] {
+            for ((lit, plain), tspec) in dst.iter_mut().zip(src).zip(specs) {
+                *lit = plain.to_literal(tspec)?;
+            }
+        }
+        self.state.step = step0 + results.len() as u64;
+        Ok((results, splice_lag_max))
+    }
+
+    /// Block for the PREP worker's batch `idx` (stall time accounted),
+    /// install it into its rotating slot and SPLICE against the current
+    /// memory view.
+    fn recv_install_splice(
+        &mut self,
+        pf: &mut Prefetcher,
+        idx: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let prep = pf.recv()?;
+        timer.prep_stall += t0.elapsed();
+        self.install_and_splice(prep, idx, pf, timer)
     }
 
     /// One sequential iteration (`pipeline.depth = 0`): PREP runs inline on
@@ -477,8 +692,38 @@ impl Trainer {
         timer.assemble += t0.elapsed();
         let t1 = Instant::now();
         let outputs = self.train_step.run(&args)?;
-        timer.execute += t1.elapsed();
+        timer.record_exec_inline(t1, Instant::now());
         Ok((spec, outputs))
+    }
+
+    /// Stage host slot `i % slots` as plain payloads behind the threaded
+    /// parameter bank (params + Adam state, moved in — the step's outputs
+    /// hand it back) and put the step in flight on a [`StreamPool`] lane
+    /// (lane `i % streams`). `step_t` is the Adam step number this
+    /// execution uses (the multistream loop tracks it locally so `state`
+    /// stays consistent if the epoch errors mid-flight). Pack time lands
+    /// in the assemble bucket, like the inline path.
+    fn submit_train_slot(
+        &mut self,
+        streams: &StreamPool,
+        i: usize,
+        bank: Vec<PlainArg>,
+        step_t: u64,
+        timer: &mut EpochTimer,
+    ) -> Result<std::sync::mpsc::Receiver<crate::pipeline::StepDone>> {
+        let step = self.train_step.clone();
+        let spec = &step.spec;
+        let n_params = self.state.len();
+        debug_assert_eq!(bank.len(), 3 * n_params, "parameter bank out of step");
+        let t0 = Instant::now();
+        let mut args = bank;
+        // data tensors straight from the staged host buffers (the same ABI
+        // slice the inline path packs), then the trailing lr / step_t
+        args.extend(self.hosts[i % self.hosts.len()].pack_plain(spec, 3 * n_params, 2)?);
+        args.push(PlainArg::F32(vec![self.cfg.lr]));
+        args.push(PlainArg::F32(vec![step_t as f32]));
+        timer.assemble += t0.elapsed();
+        Ok(streams.submit(i, args))
     }
 
     /// Shared post-step handling: write-back, trackers, metrics. `slot` is
@@ -700,6 +945,19 @@ impl Trainer {
     }
 }
 
+/// Events actually executed in one training epoch: the plan ranges for
+/// indices `1..n_train` (plan 0 is never predicted). Counting real range
+/// lengths — not `steps * batch_size` — keeps `events_per_sec` honest
+/// when a partition is ragged (a tail plan shorter than `batch_size`).
+fn executed_events(plans: &[BatchPlan], n_train: usize) -> usize {
+    plans
+        .iter()
+        .take(n_train)
+        .skip(1)
+        .map(|p| p.range.len())
+        .sum()
+}
+
 /// Deep-copy a literal (the xla crate exposes no Clone).
 pub fn clone_literal(lit: &Literal) -> Result<Literal> {
     let shape = lit.array_shape()?;
@@ -717,5 +975,37 @@ pub fn clone_literal(lit: &Literal) -> Result<Literal> {
             crate::runtime::engine::lit_i32(&host, &dims)
         }
         other => anyhow::bail!("clone_literal: unsupported type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::partition;
+    use crate::datagen;
+
+    #[test]
+    fn executed_events_counts_ragged_tails_honestly() {
+        // 3000 events in batches of 64: 46 full plans + a ragged 56-event
+        // tail. steps * batch_size would claim (47 - 1) * 64 = 2944 events;
+        // the real executed count (plans 1..47) is 3000 - 64 = 2936.
+        let ds = datagen::generate(&datagen::tiny_profile(), 5);
+        let plans: Vec<BatchPlan> = partition(0..ds.log.len(), 64)
+            .into_iter()
+            .map(|r| BatchPlan::build(&ds.log, r))
+            .collect();
+        assert_eq!(ds.log.len(), 3000, "tiny profile size changed — update the test");
+        assert_eq!(plans.len(), 47);
+        let n_train = plans.len();
+        let actual = executed_events(&plans, n_train);
+        assert_eq!(actual, 3000 - 64);
+        assert_ne!(
+            actual,
+            (n_train - 1) * 64,
+            "ragged tail must not be rounded up to a full batch"
+        );
+        // no executable plan -> no events
+        assert_eq!(executed_events(&plans, 0), 0);
+        assert_eq!(executed_events(&plans, 1), 0);
     }
 }
