@@ -30,7 +30,7 @@ fn main() {
         cfg.epochs = 1;
         let mut tr = Trainer::from_config(&cfg).unwrap();
         tr.train_epoch(0).unwrap();
-        println!("    anchor={frac}: gmm bytes = {:.2} MB", tr.memory_bytes() as f64 / 1e6);
+        pres::log_info!("    anchor={frac}: gmm bytes = {:.2} MB", tr.memory_bytes() as f64 / 1e6);
         b.run(&format!("anchor_{frac}"), || {
             tr.train_epoch(1).unwrap();
         });

@@ -112,11 +112,8 @@ fn main() {
     }
 
     bench.write_csv().unwrap();
-    let report = Json::obj(vec![
-        ("bench", Json::str("host_exec")),
-        ("backend", Json::str("host")),
-        ("cases", Json::arr(cases.into_iter())),
-    ]);
+    let mut report = bench.report_json(cases);
+    report.set("backend", Json::str("host"));
     std::fs::write("BENCH_exec.json", report.to_string_pretty()).unwrap();
-    println!("-> wrote BENCH_exec.json");
+    pres::log_info!("-> wrote BENCH_exec.json");
 }

@@ -59,7 +59,7 @@ fn main() {
             let mut tr = match Trainer::from_config(&cfg) {
                 Ok(t) => t,
                 Err(e) => {
-                    eprintln!("skip {model} b={batch}: {e}");
+                    pres::log_warn!("skip {model} b={batch}: {e}");
                     continue;
                 }
             };
@@ -77,7 +77,7 @@ fn main() {
                     tr.train_epoch(1).unwrap();
                 });
                 let r = tr.train_epoch(2).unwrap();
-                println!(
+                pres::log_info!(
                     "    {label}: {:.0} ev/s | idle {:.1}% | hidden {:.3}s | stall {:.3}s",
                     r.events_per_sec,
                     r.device_idle_frac * 100.0,
@@ -99,10 +99,8 @@ fn main() {
     }
 
     bench.write_csv().unwrap();
-    let report = Json::obj(vec![
-        ("bench", Json::str("pipeline_overlap")),
-        ("cases", Json::arr(cases.iter().map(case_json))),
-    ]);
-    std::fs::write("BENCH_pipeline.json", report.to_string_pretty()).unwrap();
-    println!("-> wrote BENCH_pipeline.json ({} cases)", cases.len());
+    bench
+        .write_json("BENCH_pipeline.json", cases.iter().map(case_json).collect())
+        .unwrap();
+    pres::log_info!("-> wrote BENCH_pipeline.json ({} cases)", cases.len());
 }

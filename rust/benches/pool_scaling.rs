@@ -203,7 +203,7 @@ fn main() {
                     );
                 })
                 .mean_ns;
-            println!(
+            pres::log_info!(
                 "    {tag}: splice pooled {:.2} ms vs scoped {:.2} ms | \
                  writeback pooled {:.2} ms vs scoped {:.2} ms",
                 pooled_splice / 1e6,
@@ -293,7 +293,7 @@ fn main() {
                 })
                 .mean_ns;
             let rows_per_sec = (prev.rows() + b) as f64 / (ns / 1e9);
-            println!("    prep workers={workers}: {rows_per_sec:.0} rows/s");
+            pres::log_info!("    prep workers={workers}: {rows_per_sec:.0} rows/s");
             cases.push(Json::obj(vec![
                 ("section", Json::str("prep")),
                 ("label", Json::str(&format!("prep_w{workers}"))),
@@ -306,11 +306,11 @@ fn main() {
     }
 
     bench.write_csv().unwrap();
-    let report = Json::obj(vec![
-        ("bench", Json::str("pool_scaling")),
-        ("par_min_elems", Json::num(pres::memory::shard::PAR_MIN_ELEMS as f64)),
-        ("cases", Json::arr(cases.into_iter())),
-    ]);
+    let mut report = bench.report_json(cases);
+    report.set(
+        "par_min_elems",
+        Json::num(pres::memory::shard::PAR_MIN_ELEMS as f64),
+    );
     std::fs::write("BENCH_pool.json", report.to_string_pretty()).unwrap();
-    println!("-> wrote BENCH_pool.json");
+    pres::log_info!("-> wrote BENCH_pool.json");
 }

@@ -119,7 +119,7 @@ fn main() {
                     store.scatter_rows_routed(&u_self, &wb_rows, &wb_ts, Some(&wb_mask), &r_self, n);
                 })
                 .mean_ns;
-            println!(
+            pres::log_info!(
                 "    {label}: splice {:.2} ms | writeback {:.2} ms",
                 splice_ns / 1e6,
                 writeback_ns / 1e6
@@ -137,11 +137,11 @@ fn main() {
     }
 
     bench.write_csv().unwrap();
-    let report = Json::obj(vec![
-        ("bench", Json::str("shard_scaling")),
-        ("shard_counts", Json::arr([1.0, 2.0, 4.0, 8.0].iter().map(|&s| Json::num(s)))),
-        ("cases", Json::arr(cases.iter().map(case_json))),
-    ]);
+    let mut report = bench.report_json(cases.iter().map(case_json).collect());
+    report.set(
+        "shard_counts",
+        Json::arr([1.0, 2.0, 4.0, 8.0].iter().map(|&s| Json::num(s))),
+    );
     std::fs::write("BENCH_shard.json", report.to_string_pretty()).unwrap();
-    println!("-> wrote BENCH_shard.json ({} cases)", cases.len());
+    pres::log_info!("-> wrote BENCH_shard.json ({} cases)", cases.len());
 }

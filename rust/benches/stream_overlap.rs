@@ -69,7 +69,7 @@ fn main() {
         let mut tr = match Trainer::from_config(&cfg) {
             Ok(t) => t,
             Err(e) => {
-                eprintln!("skip {profile} b={batch}: {e}");
+                pres::log_warn!("skip {profile} b={batch}: {e}");
                 continue;
             }
         };
@@ -88,7 +88,7 @@ fn main() {
             });
             let r = tr.train_epoch(2).unwrap();
             let steps_per_sec = r.events_per_sec / batch as f64;
-            println!(
+            pres::log_info!(
                 "    {label}: {:.2} steps/s ({:.0} ev/s) | wait {:.3}s | union {:.3}s | idle {:.1}%",
                 steps_per_sec,
                 r.events_per_sec,
@@ -113,12 +113,10 @@ fn main() {
     }
 
     bench.write_csv().unwrap();
-    let report = Json::obj(vec![
-        ("bench", Json::str("stream_overlap")),
-        ("cases", Json::arr(cases.iter().map(case_json))),
-    ]);
-    std::fs::write("BENCH_stream.json", report.to_string_pretty()).unwrap();
-    println!("-> wrote BENCH_stream.json ({} cases)", cases.len());
+    bench
+        .write_json("BENCH_stream.json", cases.iter().map(case_json).collect())
+        .unwrap();
+    pres::log_info!("-> wrote BENCH_stream.json ({} cases)", cases.len());
 
     // the acceptance line: 2-stream >= 1-stream on the wiki-scale profile
     let wiki = |s: usize| {
@@ -128,7 +126,7 @@ fn main() {
             .map(|c| c.steps_per_sec)
     };
     if let (Some(s1), Some(s2)) = (wiki(1), wiki(2)) {
-        println!(
+        pres::log_info!(
             "-> wiki 2-stream / 1-stream: {:.3}x ({s2:.2} vs {s1:.2} steps/s)",
             s2 / s1
         );

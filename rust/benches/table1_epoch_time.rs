@@ -25,7 +25,7 @@ fn main() {
             });
             times[i] = row.mean_ns;
         }
-        println!(
+        pres::log_info!(
             "    {model}: speedup = {:.2}x (STANDARD b{base} -> PRES b{})",
             times[0] / times[1],
             4 * base

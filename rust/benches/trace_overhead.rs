@@ -1,0 +1,89 @@
+//! Tracing/telemetry overhead: training throughput with spans + counters
+//! enabled vs the default-off fast path, at exec streams 1 / 2 / 4.
+//!
+//!     cargo bench --bench trace_overhead [-- --quick]
+//!
+//! The overhead contract (`trace/mod.rs`): disabled, every instrumentation
+//! point costs one relaxed atomic load and a branch — the untraced rows
+//! here ARE that fast path, so regressions against the historical
+//! `BENCH_stream.json` throughput show up directly. The traced rows bound
+//! what `--trace-out`/`--metrics-out` cost when switched on (span pushes
+//! into per-thread rings + relaxed counter bumps; still allocation-free).
+//! Writes the sweep to `BENCH_trace.json` for EXPERIMENTS.md / CI tracking.
+
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::trace;
+use pres::training::Trainer;
+use pres::util::bench::Bench;
+use pres::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("trace_overhead").with_iters(2, if quick { 3 } else { 6 });
+    bench.header();
+
+    let batch = 200usize;
+    let mut cfg = ExperimentConfig::default_with("wiki", "tgn", batch, true);
+    cfg.epochs = 1;
+    cfg.data_scale = if quick { 0.2 } else { 0.5 };
+    cfg.exec = "host".into(); // lanes require the host backend
+    let mut tr = match Trainer::from_config(&cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            pres::log_warn!("skip wiki b={batch}: {e}");
+            return;
+        }
+    };
+    // one warm epoch primes the step cache and the worker pool
+    tr.train_epoch(0).unwrap();
+
+    let mut cases: Vec<Json> = Vec::new();
+    for streams in [1usize, 2, 4] {
+        tr.cfg.pipeline = PipelineConfig {
+            depth: 2,
+            bounded_staleness: 1,
+            pool_workers: 0,
+            exec_streams: streams,
+        };
+
+        // default-off fast path: instrumentation gates on one relaxed load
+        bench.run(&format!("untraced_s{streams}"), || {
+            tr.train_epoch(1).unwrap();
+        });
+        let r_off = tr.train_epoch(2).unwrap();
+        let sps_off = r_off.events_per_sec / batch as f64;
+
+        // everything on: span rings + telemetry counters
+        trace::start();
+        trace::telemetry::enable_metrics();
+        bench.run(&format!("traced_s{streams}"), || {
+            tr.train_epoch(1).unwrap();
+        });
+        let r_on = tr.train_epoch(2).unwrap();
+        trace::stop();
+        trace::telemetry::disable_metrics();
+        trace::clear();
+        trace::telemetry::reset();
+        let sps_on = r_on.events_per_sec / batch as f64;
+
+        let overhead = 1.0 - sps_on / sps_off;
+        pres::log_info!(
+            "    s{streams}: untraced {sps_off:.2} steps/s, traced {sps_on:.2} steps/s, \
+             enabled overhead {:.1}%",
+            overhead * 100.0
+        );
+        cases.push(Json::obj(vec![
+            ("exec_streams", Json::num(streams as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("untraced_steps_per_sec", Json::num(sps_off)),
+            ("traced_steps_per_sec", Json::num(sps_on)),
+            ("enabled_overhead_frac", Json::num(overhead)),
+        ]));
+    }
+
+    bench.write_csv().unwrap();
+    bench
+        .write_json("BENCH_trace.json", cases)
+        .unwrap();
+    pres::log_info!("-> wrote BENCH_trace.json");
+}

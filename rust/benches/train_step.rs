@@ -17,7 +17,7 @@ fn main() {
             let mut tr = match Trainer::from_config(&cfg) {
                 Ok(t) => t,
                 Err(e) => {
-                    eprintln!("skip {model} b={batch}: {e}");
+                    pres::log_warn!("skip {model} b={batch}: {e}");
                     continue;
                 }
             };
@@ -27,7 +27,7 @@ fn main() {
                 tr.train_epoch(1).unwrap();
             });
             let r = tr.train_epoch(2).unwrap();
-            println!(
+            pres::log_info!(
                 "    breakdown: assemble {:.1}% execute {:.1}% writeback {:.1}% ({:.0} events/s)",
                 r.assemble_secs / r.epoch_secs * 100.0,
                 r.execute_secs / r.epoch_secs * 100.0,

@@ -95,6 +95,12 @@ pub struct ExperimentConfig {
     /// Scale events generated (1.0 = profile default; figures use < 1 for
     /// quick sweeps).
     pub data_scale: f32,
+    /// Chrome trace_event JSON output path (`--trace-out`); None disables
+    /// span recording entirely (the instrumented sites cost one branch).
+    pub trace_out: Option<String>,
+    /// Per-epoch metrics JSONL output path (`--metrics-out`); None disables
+    /// the telemetry counters.
+    pub metrics_out: Option<String>,
 }
 
 impl ExperimentConfig {
@@ -116,6 +122,8 @@ impl ExperimentConfig {
             pipeline: PipelineConfig::default(),
             memory_shards: 1,
             data_scale: 1.0,
+            trace_out: None,
+            metrics_out: None,
         }
     }
 
@@ -176,6 +184,12 @@ impl ExperimentConfig {
         if let Some(v) = j.opt("data_scale") {
             cfg.data_scale = v.as_f32()?;
         }
+        if let Some(v) = j.opt("trace_out") {
+            cfg.trace_out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("metrics_out") {
+            cfg.metrics_out = Some(v.as_str()?.to_string());
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -228,7 +242,7 @@ impl ExperimentConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("dataset", Json::str(&self.dataset)),
             ("model", Json::str(&self.model)),
             ("batch_size", Json::num(self.batch_size as f64)),
@@ -251,7 +265,16 @@ impl ExperimentConfig {
             ("exec_streams", Json::num(self.pipeline.exec_streams as f64)),
             ("memory_shards", Json::num(self.memory_shards as f64)),
             ("data_scale", Json::num(self.data_scale as f64)),
-        ])
+        ]);
+        // Optional observability outputs only appear when set, so configs
+        // written by older builds keep round-tripping byte-for-byte.
+        if let Some(p) = &self.trace_out {
+            j.set("trace_out", Json::str(p));
+        }
+        if let Some(p) = &self.metrics_out {
+            j.set("metrics_out", Json::str(p));
+        }
+        j
     }
 }
 
@@ -366,6 +389,22 @@ mod tests {
         assert!(cfg.validate().is_ok());
         cfg.exec = "tpu".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn observability_paths_roundtrip_and_default_off() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert!(cfg.trace_out.is_none());
+        assert!(cfg.metrics_out.is_none());
+        // absent from JSON when unset (older configs stay byte-identical)
+        let plain = cfg.to_json().to_string();
+        assert!(!plain.contains("trace_out"));
+        assert!(!plain.contains("metrics_out"));
+        cfg.trace_out = Some("trace.json".into());
+        cfg.metrics_out = Some("metrics.jsonl".into());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trace_out.as_deref(), Some("trace.json"));
+        assert_eq!(back.metrics_out.as_deref(), Some("metrics.jsonl"));
     }
 
     #[test]

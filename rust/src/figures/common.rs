@@ -123,7 +123,7 @@ pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
         out.push('\n');
     }
     std::fs::write(&path, out)?;
-    println!("-> wrote {path}");
+    crate::log_info!("-> wrote {path}");
     Ok(())
 }
 
@@ -156,17 +156,17 @@ pub fn ascii_plot(title: &str, xlabel: &str, series: &[(&str, &[(f64, f64)])]) {
             grid[row][cx.min(W - 1)] = marks[si % marks.len()];
         }
     }
-    println!("\n  {title}");
-    println!("  {:+.3} ┐", y1);
+    crate::log_info!("\n  {title}");
+    crate::log_info!("  {:+.3} ┐", y1);
     for row in &grid {
-        println!("         │{}", row.iter().collect::<String>());
+        crate::log_info!("         │{}", row.iter().collect::<String>());
     }
-    println!("  {:+.3} └{}", y0, "─".repeat(W));
-    println!("          {x0:<10.1} {xlabel:^42} {x1:>10.1}");
+    crate::log_info!("  {:+.3} └{}", y0, "─".repeat(W));
+    crate::log_info!("          {x0:<10.1} {xlabel:^42} {x1:>10.1}");
     let legend: Vec<String> = series
         .iter()
         .enumerate()
         .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
         .collect();
-    println!("          legend: {}", legend.join("   "));
+    crate::log_info!("          legend: {}", legend.join("   "));
 }

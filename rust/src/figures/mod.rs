@@ -58,7 +58,7 @@ fn trial_seeds(lab: &Lab) -> Vec<u64> {
 /// Fig. 3: small temporal batches hurt — gradient variance (Theorem 1).
 /// AP of the three baselines (STANDARD mode) across the small-batch regime.
 fn fig3(lab: &Lab, args: &Args) -> Result<()> {
-    println!("\n=== Figure 3: baseline AP in the small-batch regime ===");
+    crate::log_info!("\n=== Figure 3: baseline AP in the small-batch regime ===");
     let dataset = args.get_or("dataset", "wiki");
     let mut rows = Vec::new();
     let mut plot: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
@@ -75,7 +75,7 @@ fn fig3(lab: &Lab, args: &Args) -> Result<()> {
                 .iter()
                 .map(|&t| lab.final_val_ap(&cfg, t).map(|(ap, _)| ap))
                 .collect::<Result<_>>()?;
-            println!(
+            crate::log_info!(
                 "  {model:<6} b={b:<5} AP = {}",
                 stats::fmt_mean_std(&aps, 4)
             );
@@ -100,7 +100,7 @@ fn fig3(lab: &Lab, args: &Args) -> Result<()> {
 fn fig4(lab: &Lab, args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "wiki");
     let model = args.get_or("model", "tgn");
-    println!("\n=== Figure 4: AP vs batch size w/wo PRES ({model} on {dataset}) ===");
+    crate::log_info!("\n=== Figure 4: AP vs batch size w/wo PRES ({model} on {dataset}) ===");
     let batches = [100usize, 200, 400, 800, 1600];
     let mut rows = Vec::new();
     let mut std_series = Vec::new();
@@ -122,7 +122,7 @@ fn fig4(lab: &Lab, args: &Args) -> Result<()> {
                 stats::std_dev(&aps)
             ));
         }
-        println!(
+        crate::log_info!(
             "  b={b:<5} STANDARD {:.4}   PRES {:.4}   (delta {:+.4})",
             means[0],
             means[1],
@@ -149,7 +149,7 @@ fn fig5(lab: &Lab, args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "wiki");
     let model = args.get_or("model", "tgn");
     let b = args.usize_or("batch", 800)?;
-    println!("\n=== Figure 5: statistical efficiency at b={b} ({model} on {dataset}) ===");
+    crate::log_info!("\n=== Figure 5: statistical efficiency at b={b} ({model} on {dataset}) ===");
     let mut rows = Vec::new();
     let mut curves = Vec::new();
     for pres in [false, true] {
@@ -171,7 +171,7 @@ fn fig5(lab: &Lab, args: &Args) -> Result<()> {
                 if pres { "pres" } else { "std" }
             ));
         }
-        println!(
+        crate::log_info!(
             "  {}: {}",
             if pres { "PRES    " } else { "STANDARD" },
             curve
@@ -195,7 +195,7 @@ fn fig5(lab: &Lab, args: &Args) -> Result<()> {
 /// Fig. 15: speed-vs-accuracy trade-off scatter against other-domain
 /// efficiency methods (literature constants, as in the paper) + our point.
 fn fig15(lab: &Lab, args: &Args) -> Result<()> {
-    println!("\n=== Figure 15: relative speedup vs accuracy impact ===");
+    crate::log_info!("\n=== Figure 15: relative speedup vs accuracy impact ===");
     // literature-reported points, as the paper's App. F.4 collects them
     let literature = [
         ("PipeGCN", 1.7, 0.4),
@@ -219,10 +219,10 @@ fn fig15(lab: &Lab, args: &Args) -> Result<()> {
         .map(|(n, s, d)| format!("{n},{s},{d},literature"))
         .collect();
     rows.push(format!("PRES(ours),{speedup:.2},{acc_drop:.2},measured"));
-    println!("  {:<12} {:>9} {:>10}", "method", "speedup", "acc drop%");
+    crate::log_info!("  {:<12} {:>9} {:>10}", "method", "speedup", "acc drop%");
     for r in &rows {
         let parts: Vec<&str> = r.split(',').collect();
-        println!("  {:<12} {:>8}x {:>9}%", parts[0], parts[1], parts[2]);
+        crate::log_info!("  {:<12} {:>8}x {:>9}%", parts[0], parts[1], parts[2]);
     }
     write_csv("fig15_tradeoff", "method,speedup,acc_drop_pct,source", &rows)
 }
@@ -234,7 +234,7 @@ fn fig16(lab: &Lab, args: &Args) -> Result<()> {
     let model = args.get_or("model", "tgn");
     let b = args.usize_or("batch", 800)?;
     let epochs = args.usize_or("long-epochs", lab.epochs * 4)?;
-    println!("\n=== Figure 16: extended training ({epochs} epochs, b={b}, {dataset}) ===");
+    crate::log_info!("\n=== Figure 16: extended training ({epochs} epochs, b={b}, {dataset}) ===");
     let mut rows = Vec::new();
     let mut curves = Vec::new();
     for pres in [false, true] {
@@ -255,7 +255,7 @@ fn fig16(lab: &Lab, args: &Args) -> Result<()> {
     }
     let gap_first = curves[1].1[0].1 - curves[0].1[0].1;
     let gap_last = curves[1].1.last().unwrap().1 - curves[0].1.last().unwrap().1;
-    println!("  AP gap (PRES - STANDARD): first epoch {gap_first:+.4}, last epoch {gap_last:+.4}");
+    crate::log_info!("  AP gap (PRES - STANDARD): first epoch {gap_first:+.4}, last epoch {gap_last:+.4}");
     let view: Vec<(&str, &[(f64, f64)])> =
         curves.iter().map(|(n, c)| (*n, c.as_slice())).collect();
     ascii_plot("Fig 16: extended training", "epoch", &view);
@@ -272,7 +272,7 @@ fn fig17(lab: &Lab, args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "wiki");
     let model = args.get_or("model", "tgn");
     let b = args.usize_or("batch", 800)?;
-    println!("\n=== Figure 17: PRES ablation at b={b} ({model} on {dataset}) ===");
+    crate::log_info!("\n=== Figure 17: PRES ablation at b={b} ({model} on {dataset}) ===");
     let variants: [(&str, bool, f32); 4] = [
         ("STANDARD", false, 0.0),
         ("PRES-S", false, 0.1), // memory-coherence smoothing only
@@ -286,7 +286,7 @@ fn fig17(lab: &Lab, args: &Args) -> Result<()> {
         cfg.beta = beta;
         cfg.epochs = (lab.epochs * 2).max(8);
         let curve = lab.val_curve(&cfg, 1)?;
-        println!(
+        crate::log_info!(
             "  {name:<9} final AP {:.4}  curve {}",
             curve.last().unwrap(),
             curve
@@ -322,7 +322,7 @@ fn fig18(lab: &Lab, args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "wiki");
     let model = args.get_or("model", "tgn");
     let b = args.usize_or("batch", 800)?;
-    println!("\n=== Figure 18: beta ablation at b={b} ({model} on {dataset}) ===");
+    crate::log_info!("\n=== Figure 18: beta ablation at b={b} ({model} on {dataset}) ===");
     let betas = [0.0f32, 0.01, 0.05, 0.1, 0.3, 1.0];
     let mut rows = Vec::new();
     for beta in betas {
@@ -334,7 +334,7 @@ fn fig18(lab: &Lab, args: &Args) -> Result<()> {
         let last = *curve.last().unwrap();
         let thresh = last * 0.95;
         let conv = curve.iter().position(|&ap| ap >= thresh).unwrap_or(0) + 1;
-        println!("  beta={beta:<5} final AP {last:.4}  reaches 95% at epoch {conv}");
+        crate::log_info!("  beta={beta:<5} final AP {last:.4}  reaches 95% at epoch {conv}");
         for (e, ap) in curve.iter().enumerate() {
             rows.push(format!("{beta},{e},{ap:.4}"));
         }
@@ -351,9 +351,9 @@ fn fig18(lab: &Lab, args: &Args) -> Result<()> {
 fn fig19(lab: &Lab, args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "wiki");
     let model = args.get_or("model", "tgn");
-    println!("\n=== Figure 19: coordinator memory vs batch size ({dataset}) ===");
+    crate::log_info!("\n=== Figure 19: coordinator memory vs batch size ({dataset}) ===");
     let mut rows = Vec::new();
-    println!(
+    crate::log_info!(
         "  {:>7} {:>14} {:>14} {:>16}",
         "batch", "STANDARD MB", "PRES MB", "PRES overhead MB"
     );
@@ -365,7 +365,7 @@ fn fig19(lab: &Lab, args: &Args) -> Result<()> {
             let tr = lab.trainer(&cfg)?;
             bytes[i] = tr.memory_bytes() + host_batch_bytes(&cfg, &lab.engine.manifest().dims);
         }
-        println!(
+        crate::log_info!(
             "  {:>7} {:>14.2} {:>14.2} {:>16.2}",
             b,
             bytes[0] as f64 / 1e6,
@@ -378,7 +378,7 @@ fn fig19(lab: &Lab, args: &Args) -> Result<()> {
             bytes[1] as f64 / 1e6
         ));
     }
-    println!("  (PRES tracker overhead is constant in b — the paper's scalability point)");
+    crate::log_info!("  (PRES tracker overhead is constant in b — the paper's scalability point)");
     write_csv(
         &format!("fig19_memory_{dataset}_{model}"),
         "batch,std_mb,pres_mb",

@@ -47,6 +47,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod sampler;
 pub mod tables;
+pub mod trace;
 pub mod training;
 pub mod util;
 

@@ -21,7 +21,7 @@ use pres::config::ExperimentConfig;
 use pres::runtime::Engine;
 use pres::training::Trainer;
 use pres::util::cli::Args;
-use pres::{datagen, figures, tables};
+use pres::{datagen, figures, log_error, log_info, tables, trace};
 
 const FLAGS: &[&str] = &["pres", "quick", "no-prefetch", "verbose"];
 
@@ -32,12 +32,13 @@ fn main() {
         std::process::exit(2);
     }
     if let Err(e) = dispatch(raw) {
-        eprintln!("error: {e:#}");
+        log_error!("{e:#}");
         std::process::exit(1);
     }
 }
 
 fn print_usage() {
+    // deliberately a bare eprintln: usage must print whatever the log level
     eprintln!(
         "usage: pres-train <train|datagen|pending|figure|table|inspect> [options]\n\
          see README.md for the full option list"
@@ -46,6 +47,12 @@ fn print_usage() {
 
 fn dispatch(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw, FLAGS)?;
+    if let Some(s) = args.get("log-level") {
+        match trace::log::parse_level(s) {
+            Some(l) => trace::log::set_level(l),
+            None => bail!("unknown log level '{s}' (error|warn|info|debug|trace)"),
+        }
+    }
     let cmd = args
         .positional
         .first()
@@ -92,13 +99,29 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.memory_shards = args.usize_or("memory-shards", cfg.memory_shards)?;
     cfg.data_scale = args.f32_or("data-scale", 1.0)?;
+    if let Some(p) = args.get("trace-out") {
+        cfg.trace_out = Some(p.to_string());
+    }
+    if let Some(p) = args.get("metrics-out") {
+        cfg.metrics_out = Some(p.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
-    println!(
+    if cfg.trace_out.is_some() {
+        trace::start();
+    }
+    if cfg.trace_out.is_some() || cfg.metrics_out.is_some() {
+        trace::telemetry::enable_metrics();
+    }
+    let mut sink = match &cfg.metrics_out {
+        Some(p) => Some(trace::MetricsSink::create(p).context("opening metrics sink")?),
+        None => None,
+    };
+    log_info!(
         "# train: dataset={} model={} b={} mode={} beta={} epochs={} seed={}",
         cfg.dataset,
         cfg.model,
@@ -109,7 +132,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.seed
     );
     let mut trainer = Trainer::from_config(&cfg).context("building trainer")?;
-    println!(
+    log_info!(
         "# exec: {} backend (requested '{}')",
         match trainer.engine.backend() {
             pres::runtime::ExecBackendKind::Pjrt => "pjrt",
@@ -118,11 +141,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.exec
     );
     let (pend_frac, pend_pairs) = trainer.pending_summary();
-    println!(
+    log_info!(
         "# pending: {:.1}% of events pend, {pend_pairs:.2} pairs/event",
         pend_frac * 100.0
     );
-    println!(
+    log_info!(
         "# pipeline: depth={} staleness={}{} | exec streams={}{} | memory shards={}{} | pool workers={}{}",
         cfg.pipeline.depth,
         cfg.pipeline.bounded_staleness,
@@ -134,27 +157,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.pipeline.pool_workers,
         if cfg.pipeline.pool_workers == 0 { " (auto)" } else { "" }
     );
-    println!(
+    log_info!(
         "{:>5} {:>9} {:>9} {:>9} {:>9} {:>9} {:>8} {:>9} {:>7}",
         "epoch", "loss", "bce", "trainAP", "valAP", "coher", "gamma", "ev/s", "secs"
     );
     let mut best = f64::NEG_INFINITY;
     let mut overlap = (0.0f64, 0.0f64, 0.0f64); // (hidden, stall, idle frac)
+    let mut tele_prev = trace::telemetry::snapshot();
     for e in 0..cfg.epochs {
         let mut r = trainer.train_epoch(e)?;
         if cfg.eval_every > 0 && (e + 1) % cfg.eval_every == 0 || e + 1 == cfg.epochs {
             r.val_ap = trainer.eval_val()?;
             best = best.max(r.val_ap);
         }
-        println!(
+        log_info!(
             "{:>5} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>8.3} {:>9.0} {:>7.2}",
             r.epoch, r.train_loss, r.train_bce, r.train_ap, r.val_ap, r.coherence,
             r.gamma, r.events_per_sec, r.epoch_secs
         );
         overlap = (r.assemble_hidden_secs, r.prep_stall_secs, r.device_idle_frac);
+        if let Some(s) = sink.as_mut() {
+            let tele_now = trace::telemetry::snapshot();
+            let mut rec = r.to_json();
+            rec.set("telemetry", tele_now.delta_since(&tele_prev).to_json());
+            tele_prev = tele_now;
+            s.emit(&rec)?;
+        }
     }
     if cfg.pipeline.depth > 0 {
-        println!(
+        log_info!(
             "# overlap (last epoch): assemble hidden {:.3}s, prep stall {:.3}s, device idle {:.1}%",
             overlap.0,
             overlap.1,
@@ -163,11 +194,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let (test_ap, rows) = trainer.eval_test(true)?;
     let auc = pres::eval::nodeclf::train_and_auc(&trainer.engine, &rows, cfg.seed)?;
-    println!("# best val AP = {best:.4}  test AP = {test_ap:.4}  node-clf AUC = {auc:.4}");
-    println!(
+    log_info!("# best val AP = {best:.4}  test AP = {test_ap:.4}  node-clf AUC = {auc:.4}");
+    log_info!(
         "# coordinator memory: {:.2} MB",
         trainer.memory_bytes() as f64 / 1e6
     );
+    if let Some(p) = &cfg.trace_out {
+        trace::stop();
+        trace::export_chrome(p)?;
+        log_info!("# trace: wrote {p}");
+    }
+    if let Some(p) = &cfg.metrics_out {
+        log_info!("# metrics: wrote {p}");
+    }
     Ok(())
 }
 
@@ -180,14 +219,14 @@ fn cmd_datagen(args: &Args) -> Result<()> {
         vec![datagen::profile(name)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?]
     };
-    println!(
+    log_info!(
         "{:<8} {:>9} {:>9} {:>6} {:>10} {:>8} {:>9} {:>7}",
         "dataset", "vertices", "events", "efeat", "timespan", "repeat%", "labeled", "pos%"
     );
     for p in profiles {
         let ds = datagen::generate(&p, seed);
         let s = ds.stats();
-        println!(
+        log_info!(
             "{:<8} {:>9} {:>9} {:>6} {:>10.0} {:>7.1}% {:>9} {:>6.1}%",
             s.name,
             s.num_nodes,
@@ -206,8 +245,8 @@ fn cmd_pending(args: &Args) -> Result<()> {
     use pres::batching::{partition, BatchPlan};
     let cfg = config_from(args)?;
     let ds = Trainer::make_dataset(&cfg)?;
-    println!("# pending-set statistics for '{}' (Def. 2)", cfg.dataset);
-    println!(
+    log_info!("# pending-set statistics for '{}' (Def. 2)", cfg.dataset);
+    log_info!(
         "{:>7} {:>12} {:>12} {:>12}",
         "batch", "pend-events%", "pairs/event", "collided%"
     );
@@ -226,7 +265,7 @@ fn cmd_pending(args: &Args) -> Result<()> {
             coll += plan.stats.collided_vertices as f64 / plan.stats.distinct_vertices as f64;
         }
         let n_ev = (parts.len() * b) as f64;
-        println!(
+        log_info!(
             "{:>7} {:>11.1}% {:>12.2} {:>11.1}%",
             b,
             ev / n_ev * 100.0,
@@ -241,7 +280,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     let engine = Rc::new(Engine::auto(Path::new(dir), args.get_or("exec", "auto"))?);
     let m = engine.manifest();
-    println!(
+    log_info!(
         "# exec backend: {}",
         match engine.backend() {
             pres::runtime::ExecBackendKind::Pjrt => "pjrt (compiled artifacts)",
@@ -249,7 +288,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 "host (pure-rust step over the builtin manifest; any batch size)",
         }
     );
-    println!(
+    log_info!(
         "# dims: d_mem={} d_msg={} d_edge={} d_time={} K={} heads={} d_emb={}",
         m.dims.d_mem,
         m.dims.d_msg,
@@ -259,12 +298,12 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         m.dims.heads,
         m.dims.d_emb
     );
-    println!(
+    log_info!(
         "{:<22} {:>7} {:>8} {:>9}",
         "artifact", "batch", "inputs", "outputs"
     );
     for a in &m.artifacts {
-        println!(
+        log_info!(
             "{:<22} {:>7} {:>8} {:>9}",
             a.name,
             a.batch,

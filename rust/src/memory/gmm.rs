@@ -179,14 +179,19 @@ impl GmmTrackers {
             return None;
         }
         let inv = 1.0 / count as f32;
-        Some(
-            (0..self.d)
-                .map(|i| {
-                    let mean_rate = self.rho[base + i] * inv;
-                    (self.psi[base + i] * inv - mean_rate * mean_rate).max(0.0)
-                })
-                .collect(),
-        )
+        let mut clamped = 0u64;
+        let out = (0..self.d)
+            .map(|i| {
+                let mean_rate = self.rho[base + i] * inv;
+                let raw = self.psi[base + i] * inv - mean_rate * mean_rate;
+                if raw < 0.0 {
+                    clamped += 1;
+                }
+                raw.max(0.0)
+            })
+            .collect();
+        crate::trace::telemetry::count_gmm_var_clamps(clamped);
+        Some(out)
     }
 
     /// Observation count n_i^(j) (0 when untracked).

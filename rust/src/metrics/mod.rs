@@ -5,4 +5,4 @@ pub mod ranking;
 pub mod timing;
 
 pub use ranking::{average_precision, roc_auc};
-pub use timing::EpochTimer;
+pub use timing::{EpochTimer, StageHists, StageQuantiles};

@@ -28,8 +28,68 @@
 //!   run itself at `exec_streams = 1` (where it equals `execute`), or the
 //!   time blocked waiting on the commit queue's front under stream lanes.
 //!   This is the bucket that participates in `other = total - tracked`.
+//!
+//! ## Per-step latency distributions
+//!
+//! Aggregate buckets answer "where did the epoch go"; they cannot show tail
+//! behaviour. Each accrual method therefore also records the sample into a
+//! per-stage [`LogHistogram`] ([`StageHists`]) — fixed-allocation,
+//! log-bucketed, ~3% relative error — and [`EpochTimer::stage_quantiles`]
+//! surfaces p50/p95/p99 per stage for `EpochReport` / the `--metrics-out`
+//! JSONL stream. Histogram samples use the same clock reads the buckets
+//! already take, so the extra per-step cost is one bucket index + add.
+//! Timeline-level visibility (who overlapped whom, on which thread) is the
+//! `trace` module's job; this module stays aggregate-only.
 
 use std::time::{Duration, Instant};
+
+use crate::trace::LogHistogram;
+use crate::util::json::Json;
+
+/// Per-stage per-step latency histograms for one epoch (ns samples), plus
+/// the per-step splice-lag distribution (commit counts, not time).
+#[derive(Clone, Debug, Default)]
+pub struct StageHists {
+    /// Background PREP fill time per batch.
+    pub prep: LogHistogram,
+    /// Coordinator assemble/splice time per step.
+    pub assemble: LogHistogram,
+    /// Step-run busy time per execution (all lanes).
+    pub exec: LogHistogram,
+    /// Writeback time per committed step.
+    pub writeback: LogHistogram,
+    /// Coordinator blocked-on-commit-queue time per wait.
+    pub exec_wait: LogHistogram,
+    /// Coordinator blocked-on-PREP-channel time per stall.
+    pub prep_stall: LogHistogram,
+    /// Memory-version lag (commits) each step's splice observed.
+    pub splice_lag: LogHistogram,
+}
+
+/// p50/p95/p99 for one stage, as surfaced in `EpochReport`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageQuantiles {
+    pub stage: &'static str,
+    /// "s" for latency stages, "commits" for splice lag.
+    pub unit: &'static str,
+    pub count: u64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl StageQuantiles {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str(self.stage)),
+            ("unit", Json::str(self.unit)),
+            ("count", Json::num(self.count as f64)),
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+        ])
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct EpochTimer {
@@ -57,6 +117,8 @@ pub struct EpochTimer {
     epoch_start: Option<Instant>,
     pub total: Duration,
     pub steps: usize,
+    /// Per-step latency distributions per stage (see module docs).
+    pub hist: StageHists,
 }
 
 impl EpochTimer {
@@ -79,25 +141,99 @@ impl EpochTimer {
 
     /// Record one step execution on stream `stream` spanning
     /// `[started, finished]` (lane-side wall clock; `Instant`s are
-    /// comparable across threads).
+    /// comparable across threads). Executions reported after
+    /// `finish_epoch` (e.g. a straggler lane) are ignored entirely, so the
+    /// summed buckets can never drift from the already-computed union.
     pub fn record_exec(&mut self, stream: usize, started: Instant, finished: Instant) {
+        let t0 = match self.epoch_start {
+            Some(t0) => t0,
+            None => return,
+        };
         let busy = finished.saturating_duration_since(started);
         self.execute += busy;
         if self.stream_busy.len() <= stream {
             self.stream_busy.resize(stream + 1, Duration::ZERO);
         }
         self.stream_busy[stream] += busy;
-        if let Some(t0) = self.epoch_start {
-            let s = started.saturating_duration_since(t0);
-            self.exec_spans.push((s, s + busy));
-        }
+        self.hist.exec.record_duration(busy);
+        let s = started.saturating_duration_since(t0);
+        self.exec_spans.push((s, s + busy));
     }
 
     /// Record an inline (coordinator-thread) step execution: busy time and
-    /// coordinator EXEC time coincide, so both buckets accrue.
+    /// coordinator EXEC time coincide, so both buckets accrue. Ignored
+    /// after `finish_epoch`, like `record_exec`.
     pub fn record_exec_inline(&mut self, started: Instant, finished: Instant) {
+        if self.epoch_start.is_none() {
+            return;
+        }
         self.exec_wait += finished.saturating_duration_since(started);
         self.record_exec(0, started, finished);
+    }
+
+    // ------------------------------------------------- per-step accrual
+    // Each method adds to the aggregate bucket AND records the sample into
+    // the stage histogram, so quantiles come for free at the call sites.
+
+    pub fn add_assemble(&mut self, d: Duration) {
+        self.assemble += d;
+        self.hist.assemble.record_duration(d);
+    }
+
+    pub fn add_writeback(&mut self, d: Duration) {
+        self.writeback += d;
+        self.hist.writeback.record_duration(d);
+    }
+
+    pub fn add_exec_wait(&mut self, d: Duration) {
+        self.exec_wait += d;
+        self.hist.exec_wait.record_duration(d);
+    }
+
+    pub fn add_prep_stall(&mut self, d: Duration) {
+        self.prep_stall += d;
+        self.hist.prep_stall.record_duration(d);
+    }
+
+    pub fn add_prep_busy(&mut self, d: Duration) {
+        self.prep_busy += d;
+        self.hist.prep.record_duration(d);
+    }
+
+    /// Record the memory-version lag (in commits) one step's splice saw.
+    pub fn record_splice_lag(&mut self, lag: usize) {
+        self.hist.splice_lag.record(lag as u64);
+    }
+
+    /// Per-stage p50/p95/p99 from the per-step histograms. Latency stages
+    /// report seconds; `splice_lag` reports commits.
+    pub fn stage_quantiles(&self) -> Vec<StageQuantiles> {
+        const NS: f64 = 1e9;
+        let time_q = |stage: &'static str, h: &LogHistogram| StageQuantiles {
+            stage,
+            unit: "s",
+            count: h.count(),
+            p50: h.quantile(0.50) / NS,
+            p95: h.quantile(0.95) / NS,
+            p99: h.quantile(0.99) / NS,
+        };
+        let lag = &self.hist.splice_lag;
+        vec![
+            time_q("prep", &self.hist.prep),
+            time_q("assemble", &self.hist.assemble),
+            time_q("exec", &self.hist.exec),
+            time_q("writeback", &self.hist.writeback),
+            time_q("exec_wait", &self.hist.exec_wait),
+            time_q("prep_stall", &self.hist.prep_stall),
+            StageQuantiles {
+                stage: "splice_lag",
+                unit: "commits",
+                count: lag.count(),
+                p50: lag.quantile(0.50),
+                p95: lag.quantile(0.95),
+                p99: lag.quantile(0.99),
+            },
+        ]
     }
 
     pub fn time<T>(bucket: &mut Duration, f: impl FnOnce() -> T) -> T {
@@ -151,12 +287,16 @@ impl EpochTimer {
 }
 
 /// Union length of a set of `[start, end)` spans: sort by start, merge
-/// overlapping/adjacent spans, sum the merged lengths.
+/// overlapping/adjacent spans, sum the merged lengths. Input may be
+/// unsorted and may contain duplicate or even inverted (`end < start`)
+/// intervals — inverted intervals are treated as empty rather than
+/// panicking on `Duration` underflow.
 fn merge_spans(spans: &mut [(Duration, Duration)]) -> Duration {
     spans.sort_by_key(|s| s.0);
     let mut total = Duration::ZERO;
     let mut current: Option<(Duration, Duration)> = None;
     for &(start, end) in spans.iter() {
+        let end = end.max(start);
         match current {
             Some((_, ref mut cur_end)) if start <= *cur_end => {
                 if end > *cur_end {
@@ -165,14 +305,14 @@ fn merge_spans(spans: &mut [(Duration, Duration)]) -> Duration {
             }
             _ => {
                 if let Some((s, e)) = current.take() {
-                    total += e - s;
+                    total += e.saturating_sub(s);
                 }
                 current = Some((start, end));
             }
         }
     }
     if let Some((s, e)) = current {
-        total += e - s;
+        total += e.saturating_sub(s);
     }
     total
 }
@@ -267,5 +407,69 @@ mod tests {
         t.finish_epoch();
         assert_eq!(t.exec_union, ms(8));
         assert_eq!(t.execute, ms(8));
+    }
+
+    #[test]
+    fn idle_fraction_and_throughput_on_zero_total_are_zero_not_nan() {
+        // a timer that never ran an epoch must not divide by zero
+        let t = EpochTimer::default();
+        assert_eq!(t.device_idle_fraction(), 0.0);
+        assert_eq!(t.events_per_sec(100), 0.0);
+    }
+
+    #[test]
+    fn records_after_finish_epoch_are_ignored() {
+        // a straggler lane reporting after finish_epoch used to accrue
+        // execute/stream_busy without a matching union span; now the whole
+        // record is dropped so the buckets stay consistent
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        t.finish_epoch();
+        let base = Instant::now();
+        t.record_exec(1, base, base + ms(5));
+        t.record_exec_inline(base, base + ms(5));
+        assert_eq!(t.execute, Duration::ZERO);
+        assert_eq!(t.exec_wait, Duration::ZERO);
+        assert!(t.stream_busy.is_empty());
+        assert_eq!(t.hist.exec.count(), 0);
+    }
+
+    #[test]
+    fn merge_spans_handles_unsorted_and_identical_intervals() {
+        let mut spans = vec![
+            (ms(10), ms(14)),
+            (ms(0), ms(4)),
+            (ms(10), ms(14)), // exact duplicate must not double-count
+            (ms(2), ms(6)),
+        ];
+        assert_eq!(merge_spans(&mut spans), ms(10)); // [0,6) ∪ [10,14)
+    }
+
+    #[test]
+    fn merge_spans_inverted_interval_is_empty_not_panic() {
+        let mut spans = vec![(ms(5), ms(3)), (ms(0), ms(2))];
+        assert_eq!(merge_spans(&mut spans), ms(2));
+    }
+
+    #[test]
+    fn stage_quantiles_surface_recorded_samples() {
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        for i in 1..=20u64 {
+            t.add_assemble(Duration::from_micros(i * 100));
+        }
+        t.record_splice_lag(3);
+        t.finish_epoch();
+        let qs = t.stage_quantiles();
+        let asm = qs.iter().find(|q| q.stage == "assemble").unwrap();
+        assert_eq!(asm.count, 20);
+        assert_eq!(asm.unit, "s");
+        assert!(asm.p50 > 0.0 && asm.p99 >= asm.p50);
+        // aggregate bucket accrues alongside the histogram
+        assert_eq!(t.assemble, Duration::from_micros((1..=20).sum::<u64>() * 100));
+        let lag = qs.iter().find(|q| q.stage == "splice_lag").unwrap();
+        assert_eq!(lag.unit, "commits");
+        assert_eq!(lag.count, 1);
+        assert!((lag.p50 - 3.0).abs() < 1e-9);
     }
 }

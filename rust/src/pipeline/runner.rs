@@ -39,6 +39,7 @@ use crate::graph::Dataset;
 use crate::memory::ShardRouter;
 use crate::pipeline::prep::{fill_prep_with, negative_stream, PrepBatch};
 use crate::sampler::NegativeSampler;
+use crate::trace::{self, telemetry, Stage};
 use crate::util::pool::WorkerPool;
 
 /// Everything the PREP worker needs — immutable shared state plus the
@@ -89,6 +90,7 @@ impl Prefetcher {
                     let mut buf = free_rx
                         .try_recv()
                         .unwrap_or_else(|_| PrepBatch::new(ctx.batch_size, ctx.d_edge));
+                    let span = trace::span(Stage::Prep, i as u64);
                     let base = negative_stream(ctx.seed, ctx.epoch, i);
                     fill_prep_with(
                         &mut buf,
@@ -102,6 +104,8 @@ impl Prefetcher {
                     );
                     buf.index = i;
                     buf.epoch = ctx.epoch;
+                    drop(span); // span covers the fill, not the channel wait
+                    telemetry::prep_depth_inc();
                     if data_tx.send(buf).is_err() {
                         return; // coordinator gone (early exit / error path)
                     }
@@ -121,6 +125,7 @@ impl Prefetcher {
         match self.rx.as_ref().expect("prefetcher already shut down").recv() {
             Ok(b) => {
                 self.outstanding -= 1;
+                telemetry::prep_depth_dec();
                 Ok(b)
             }
             Err(_) => bail!(
@@ -145,6 +150,7 @@ impl Prefetcher {
         match self.rx.as_ref().expect("prefetcher already shut down").try_recv() {
             Ok(b) => {
                 self.outstanding -= 1;
+                telemetry::prep_depth_dec();
                 Ok(Some(b))
             }
             Err(TryRecvError::Empty) => Ok(None),

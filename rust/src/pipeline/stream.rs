@@ -50,6 +50,7 @@ use xla::{ElementType, Literal};
 use crate::runtime::engine::{check_len, lit_f32, lit_i32};
 use crate::runtime::manifest::DType;
 use crate::runtime::{HostStep, TensorSpec};
+use crate::trace::{self, Stage};
 
 /// One tensor payload crossing the lane boundary: owned plain host data in
 /// the ABI's dtype, shape-checked against the spec on both conversions.
@@ -202,6 +203,9 @@ impl Drop for StreamPool {
 fn lane_main(stream: usize, step: &HostStep, rx: &Receiver<Job>) {
     while let Ok(job) = rx.recv() {
         let (outputs, (started, finished)) = run_job(step, &job.args);
+        // recorded on the lane thread so the exported timeline shows one
+        // row per EXEC lane; arg = the step's plan index
+        trace::record_span(Stage::Exec, started, finished, job.seq as u64);
         // the coordinator may already be gone on an error path — dropping
         // the result is then correct
         let _ = job.reply.send(StepDone {

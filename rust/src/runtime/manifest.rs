@@ -573,7 +573,7 @@ mod tests {
     fn artifacts_available() -> bool {
         let ok = manifest_dir().join("manifest.json").exists();
         if !ok {
-            eprintln!("skipping manifest test: no compiled artifacts");
+            crate::log_warn!("skipping manifest test: no compiled artifacts");
         }
         ok
     }

@@ -58,11 +58,11 @@ fn datasets(args: &Args, quick_set: &[&'static str]) -> Vec<&'static str> {
 /// size with near-peak accuracy in the small-batch regime); PRES at 4x.
 /// Speedup = STANDARD epoch time / PRES epoch time, the paper's metric.
 fn table1(lab: &Lab, args: &Args) -> Result<()> {
-    println!("\n=== Table 1: AP & speedup, STANDARD(b0) vs PRES(4*b0) ===");
+    crate::log_info!("\n=== Table 1: AP & speedup, STANDARD(b0) vs PRES(4*b0) ===");
     let b0 = args.usize_or("base-batch", 50)?;
     let b1 = 4 * b0;
     let mut rows = Vec::new();
-    println!(
+    crate::log_info!(
         "{:<8} {:<12} {:>16} {:>16} {:>9}",
         "dataset", "model", "AP (STANDARD)", "AP (PRES 4x)", "speedup"
     );
@@ -83,7 +83,7 @@ fn table1(lab: &Lab, args: &Args) -> Result<()> {
                 t_pres.push(secs);
             }
             let speedup = stats::mean(&t_std) / stats::mean(&t_pres).max(1e-9);
-            println!(
+            crate::log_info!(
                 "{:<8} {:<12} {:>16} {:>16} {:>8.2}x",
                 ds,
                 format!("{model}/-PRES"),
@@ -112,10 +112,10 @@ fn table1(lab: &Lab, args: &Args) -> Result<()> {
 /// Table 2: node classification ROC-AUC w/wo PRES (REDDIT/WIKI/MOOC in the
 /// paper; same trio here).
 fn table2(lab: &Lab, args: &Args) -> Result<()> {
-    println!("\n=== Table 2: node classification ROC-AUC ===");
+    crate::log_info!("\n=== Table 2: node classification ROC-AUC ===");
     let b0 = args.usize_or("base-batch", 50)?;
     let mut rows = Vec::new();
-    println!(
+    crate::log_info!(
         "{:<8} {:<12} {:>14} {:>14}",
         "dataset", "model", "AUC (STD)", "AUC (PRES)"
     );
@@ -149,7 +149,7 @@ fn table2(lab: &Lab, args: &Args) -> Result<()> {
                     }
                 }
             }
-            println!(
+            crate::log_info!(
                 "{:<8} {:<12} {:>14} {:>14}",
                 ds,
                 format!("{model}/-PRES"),
@@ -174,17 +174,17 @@ fn table2(lab: &Lab, args: &Args) -> Result<()> {
 
 /// Table 3: dataset statistics (generator outputs vs the profiles).
 fn table3(args: &Args) -> Result<()> {
-    println!("\n=== Table 3: dataset statistics ===");
+    crate::log_info!("\n=== Table 3: dataset statistics ===");
     let seed = args.u64_or("seed", 0)?;
     let mut rows = Vec::new();
-    println!(
+    crate::log_info!(
         "{:<8} {:>9} {:>9} {:>8} {:>9} {:>9}",
         "dataset", "vertices", "events", "efeat", "repeat%", "labeled"
     );
     for p in datagen::profiles() {
         let ds = datagen::generate(&p, seed);
         let s = ds.stats();
-        println!(
+        crate::log_info!(
             "{:<8} {:>9} {:>9} {:>8} {:>8.1}% {:>9}",
             s.name,
             s.num_nodes,

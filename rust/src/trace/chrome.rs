@@ -1,0 +1,82 @@
+//! Chrome `trace_event` JSON export (opens in `chrome://tracing` / Perfetto).
+//!
+//! Emits the JSON-object form: `{"traceEvents": [...], "displayTimeUnit":
+//! "ms"}` with one complete event (`"ph": "X"`) per recorded span and one
+//! `thread_name` metadata event (`"ph": "M"`) per registered ring, so PREP,
+//! EXEC lanes, pool workers and the coordinator each render as their own
+//! named row. Timestamps/durations are microseconds (fractional, from the
+//! shared nanosecond clock domain).
+
+use anyhow::{Context, Result};
+
+use super::span::snapshot;
+use crate::util::json::Json;
+
+/// Build the full Chrome trace document from the current span rings.
+pub fn chrome_trace_json() -> Json {
+    let snaps = snapshot();
+    let mut events = Vec::new();
+    for t in &snaps {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(t.tid as f64)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(t.thread.clone()))]),
+            ),
+        ]));
+        for s in &t.spans {
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.stage.name())),
+                ("cat", Json::str("pres")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(t.tid as f64)),
+                ("ts", Json::num(s.start_ns as f64 / 1_000.0)),
+                ("dur", Json::num(s.dur_ns as f64 / 1_000.0)),
+                ("args", Json::obj(vec![("arg", Json::num(s.arg as f64))])),
+            ]));
+        }
+    }
+    let dropped: u64 = snaps.iter().map(|t| t.dropped).sum();
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![("dropped_spans", Json::num(dropped as f64))]),
+        ),
+    ])
+}
+
+/// Write the trace document to `path`. Warns (does not fail the run) when
+/// ring wraparound dropped spans.
+pub fn export_chrome(path: &str) -> Result<()> {
+    let dropped: u64 = snapshot().iter().map(|t| t.dropped).sum();
+    if dropped > 0 {
+        crate::log_warn!("trace ring wrapped: {dropped} spans dropped from {path}");
+    }
+    let doc = chrome_trace_json();
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing trace file {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_trace_is_valid_chrome_json() {
+        let doc = chrome_trace_json();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(parsed.get("traceEvents").unwrap().as_arr().is_ok());
+        assert_eq!(
+            parsed.get("displayTimeUnit").unwrap().as_str().unwrap(),
+            "ms"
+        );
+    }
+}

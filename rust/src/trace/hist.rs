@@ -1,0 +1,208 @@
+//! Log-bucketed latency histogram with fixed allocation (HDR-style).
+//!
+//! Values below 2^SUB_BITS are recorded exactly; above that each power-of-two
+//! octave is split into `2^SUB_BITS` sub-buckets, bounding relative error at
+//! `2^-SUB_BITS` (~3% with `SUB_BITS = 5`). The bucket array is allocated once
+//! (`BUCKETS` u64 slots) and never grows, so recording is a single index + add
+//! with no allocation on the hot path.
+
+use std::fmt;
+use std::time::Duration;
+
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS; // 32 sub-buckets per octave
+const OCTAVES: usize = 64 - SUB_BITS as usize; // octaves above the exact range
+const BUCKETS: usize = SUB * (OCTAVES + 1);
+
+/// Fixed-allocation log-bucketed histogram over `u64` samples (nanoseconds by
+/// convention for stage latencies; raw counts for e.g. splice lag).
+#[derive(Clone)]
+pub struct LogHistogram {
+    buckets: Box<[u64]>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: vec![0u64; BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+}
+
+impl fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count)
+            .field("p50", &self.quantile(0.50))
+            .field("p95", &self.quantile(0.95))
+            .field("p99", &self.quantile(0.99))
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let octave = msb - SUB_BITS;
+        let sub = (v >> octave) as usize & (SUB - 1);
+        (((octave as usize) + 1) * SUB + sub).min(BUCKETS - 1)
+    }
+
+    /// Representative (midpoint) value for a bucket index.
+    fn bucket_mid(i: usize) -> f64 {
+        if i < SUB {
+            return i as f64;
+        }
+        let octave = (i / SUB - 1) as u32;
+        let sub = (i % SUB) as u64;
+        let lo = (SUB as u64 + sub) << octave;
+        let width = 1u64 << octave;
+        lo as f64 + width as f64 / 2.0
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.record(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Quantile estimate (bucket midpoint). `q` in [0, 1]; returns 0 when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum >= target {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(BUCKETS - 1)
+    }
+
+    pub fn clear(&mut self) {
+        self.buckets.iter_mut().for_each(|b| *b = 0);
+        self.count = 0;
+        self.sum = 0;
+        self.max = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_below_sub_range() {
+        // values < 32 land in their own bucket and quantiles are exact
+        let mut h = LogHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 32);
+        for v in 0..32u64 {
+            assert_ne!(
+                LogHistogram::bucket_index(v),
+                LogHistogram::bucket_index(v + 1)
+            );
+        }
+        let mut h2 = LogHistogram::new();
+        h2.record(7);
+        assert_eq!(h2.quantile(0.5), 7.0);
+    }
+
+    #[test]
+    fn octave_bucket_boundaries() {
+        // 64 and 65 share a bucket (second octave, width 2); 66 does not
+        assert_eq!(
+            LogHistogram::bucket_index(64),
+            LogHistogram::bucket_index(65)
+        );
+        assert_ne!(
+            LogHistogram::bucket_index(65),
+            LogHistogram::bucket_index(66)
+        );
+        // octave transitions are contiguous: 31 -> 32 and 63 -> 64 move up
+        assert_eq!(LogHistogram::bucket_index(31) + 1, LogHistogram::bucket_index(32));
+        assert_eq!(LogHistogram::bucket_index(63) + 1, LogHistogram::bucket_index(64));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = LogHistogram::new();
+        for &v in &[1_000u64, 10_000, 1_000_000, 123_456_789] {
+            h.clear();
+            h.record(v);
+            let est = h.quantile(0.5);
+            let err = (est - v as f64).abs() / v as f64;
+            assert!(err < 0.04, "v={v} est={est} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_counts() {
+        let mut h = LogHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v * 1000);
+        }
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!(p50 > 40_000.0 && p50 < 60_000.0, "p50={p50}");
+        assert!(p99 > 90_000.0, "p99={p99}");
+        assert!(p99 >= p50);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(0.5) > 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Leveled logger replacing scattered `println!`/`eprintln!` call sites.
+//!
+//! The level is a single process-global `AtomicU8`, lazily initialised from
+//! the `PALLAS_LOG` environment variable (error|warn|info|debug|trace,
+//! default `info`) and overridable via `--log-level` on the CLI. Checking
+//! whether a level is enabled is one relaxed atomic load.
+//!
+//! Routing preserves the historical output contract: `info` prints bare lines
+//! to stdout (so epoch tables and reports look exactly as before), while
+//! `error`/`warn` go to stderr with a level prefix. `debug`/`trace` are
+//! prefixed on stdout so they are trivially filterable from piped output.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+const UNSET: u8 = 255;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" | "warning" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+fn from_u8(v: u8) -> Level {
+    match v {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Current level; first call resolves `PALLAS_LOG` (default info).
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return from_u8(v);
+    }
+    let init = std::env::var("PALLAS_LOG")
+        .ok()
+        .and_then(|s| parse_level(&s))
+        .unwrap_or(Level::Info);
+    LEVEL.store(init as u8, Ordering::Relaxed);
+    init
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, args: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    match l {
+        Level::Error => eprintln!("error: {args}"),
+        Level::Warn => eprintln!("warn: {args}"),
+        Level::Info => println!("{args}"),
+        Level::Debug => println!("debug: {args}"),
+        Level::Trace => println!("trace: {args}"),
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::trace::log::log($crate::trace::log::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_levels() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("WARN"), Some(Level::Warn));
+        assert_eq!(parse_level("Info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("loud"), None);
+    }
+
+    #[test]
+    fn levels_order_error_to_trace() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn enabled_respects_set_level() {
+        // note: process-global; restore info (the default) afterwards so
+        // parallel tests that log keep their output
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,55 @@
+//! Zero-dependency tracing & telemetry for the PRES pipeline.
+//!
+//! # Span model
+//!
+//! A *span* is one closed interval of work on one thread, tagged with a
+//! [`Stage`] (PREP, SPLICE, per-lane EXEC, WRITEBACK, commit-queue wait,
+//! PREP stall, pool generation barrier) and a stage-specific `arg` (step
+//! index, lane id, task count). Spans are recorded into per-thread
+//! fixed-capacity seqlock rings ([`span`] module) — the recording thread is
+//! the only writer, so pushes are lock-free and allocation-free. Ring
+//! wraparound overwrites the oldest spans and is **counted** per thread,
+//! never silent. [`export_chrome`] serialises every ring as Chrome
+//! `trace_event` JSON (one named row per thread) for `chrome://tracing` /
+//! Perfetto; it is driven by `--trace-out <path>` on the CLI.
+//!
+//! # Clock domain
+//!
+//! All timestamps are nanosecond offsets from a single process-wide origin
+//! `Instant`, pinned the first time tracing starts. `Instant` is monotonic,
+//! so spans from different threads order consistently in the exported
+//! timeline; there is no wall-clock component and no cross-process meaning.
+//!
+//! # Overhead contract
+//!
+//! Disabled (the default), every instrumentation point costs exactly one
+//! relaxed atomic load and one branch — no time reads, no stores. The same
+//! holds for the telemetry counters behind [`telemetry::metrics_enabled`].
+//! `benches/trace_overhead.rs` pins this (`BENCH_trace.json`: traced vs.
+//! untraced steps/s at 1/2/4 streams), and the pipeline/stream equivalence
+//! suites run with tracing enabled to prove instrumentation never perturbs
+//! bit-identical results — tracing only ever *observes* the step stream.
+//!
+//! Complementing spans, [`hist::LogHistogram`] provides fixed-allocation
+//! log-bucketed per-step latency histograms (HDR-style) that
+//! `metrics::EpochTimer` aggregates into per-stage p50/p95/p99 for
+//! `EpochReport`, and [`telemetry`] holds pipeline-health gauges/counters
+//! (PREP channel depth, pool occupancy, GMM clamp events) plus the
+//! `--metrics-out` JSONL sink. [`log`] is the leveled logger
+//! (`--log-level` / `PALLAS_LOG`) that replaced the scattered `println!`
+//! call sites.
+
+pub mod chrome;
+pub mod hist;
+pub mod log;
+pub mod span;
+pub mod telemetry;
+
+pub use chrome::{chrome_trace_json, export_chrome};
+pub use hist::LogHistogram;
+pub use log::Level;
+pub use span::{
+    clear, enabled, record_span, snapshot, span, start, stop, SpanGuard, SpanRec, Stage,
+    ThreadSpans,
+};
+pub use telemetry::{metrics_enabled, MetricsSink, TelemetrySnapshot};

@@ -1,0 +1,242 @@
+//! Pipeline-health gauges/counters and the machine-readable metrics sink.
+//!
+//! Counters are process-global relaxed atomics, gated behind one
+//! `metrics_enabled()` branch per call site so a run without `--metrics-out`
+//! or `--trace-out` pays a single relaxed load. `snapshot()` reads them all;
+//! `take_delta()` returns the change since the previous call, which is what
+//! the per-epoch JSONL emitter wants.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+static METRICS_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// GMM variance estimates clamped at zero (raw estimate was negative).
+static GMM_VAR_CLAMPS: AtomicU64 = AtomicU64::new(0);
+/// Current PREP channel depth (batches prepared but not yet consumed).
+static PREP_DEPTH: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of `PREP_DEPTH`.
+static PREP_DEPTH_HWM: AtomicI64 = AtomicI64::new(0);
+/// Worker-pool generations dispatched (parallel `run` calls).
+static POOL_OPS: AtomicU64 = AtomicU64::new(0);
+/// Tasks distributed across those generations.
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+/// Lane slots those generations could occupy (ops × lanes).
+static POOL_LANE_SLOTS: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+pub fn metrics_enabled() -> bool {
+    METRICS_ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn enable_metrics() {
+    METRICS_ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable_metrics() {
+    METRICS_ENABLED.store(false, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn count_gmm_var_clamps(n: u64) {
+    if metrics_enabled() && n > 0 {
+        GMM_VAR_CLAMPS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn prep_depth_inc() {
+    if metrics_enabled() {
+        let d = PREP_DEPTH.fetch_add(1, Ordering::Relaxed) + 1;
+        PREP_DEPTH_HWM.fetch_max(d, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn prep_depth_dec() {
+    if metrics_enabled() {
+        PREP_DEPTH.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_pool_generation(tasks: u64, lanes: u64) {
+    if metrics_enabled() {
+        POOL_OPS.fetch_add(1, Ordering::Relaxed);
+        POOL_TASKS.fetch_add(tasks, Ordering::Relaxed);
+        POOL_LANE_SLOTS.fetch_add(lanes, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time read of every counter/gauge.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub gmm_var_clamps: u64,
+    pub prep_depth: i64,
+    pub prep_depth_hwm: i64,
+    pub pool_ops: u64,
+    pub pool_tasks: u64,
+    pub pool_lane_slots: u64,
+}
+
+impl TelemetrySnapshot {
+    /// Counter change relative to an earlier snapshot (gauges pass through).
+    pub fn delta_since(&self, prev: &TelemetrySnapshot) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            gmm_var_clamps: self.gmm_var_clamps.saturating_sub(prev.gmm_var_clamps),
+            prep_depth: self.prep_depth,
+            prep_depth_hwm: self.prep_depth_hwm,
+            pool_ops: self.pool_ops.saturating_sub(prev.pool_ops),
+            pool_tasks: self.pool_tasks.saturating_sub(prev.pool_tasks),
+            pool_lane_slots: self.pool_lane_slots.saturating_sub(prev.pool_lane_slots),
+        }
+    }
+
+    /// Mean fraction of pool lane slots actually carrying tasks, in [0, 1].
+    pub fn pool_occupancy(&self) -> f64 {
+        if self.pool_lane_slots == 0 {
+            return 0.0;
+        }
+        (self.pool_tasks.min(self.pool_lane_slots) as f64) / self.pool_lane_slots as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gmm_var_clamps", Json::num(self.gmm_var_clamps as f64)),
+            ("prep_depth", Json::num(self.prep_depth as f64)),
+            ("prep_depth_hwm", Json::num(self.prep_depth_hwm as f64)),
+            ("pool_ops", Json::num(self.pool_ops as f64)),
+            ("pool_tasks", Json::num(self.pool_tasks as f64)),
+            ("pool_lane_slots", Json::num(self.pool_lane_slots as f64)),
+            ("pool_occupancy", Json::num(self.pool_occupancy())),
+        ])
+    }
+}
+
+pub fn snapshot() -> TelemetrySnapshot {
+    TelemetrySnapshot {
+        gmm_var_clamps: GMM_VAR_CLAMPS.load(Ordering::Relaxed),
+        prep_depth: PREP_DEPTH.load(Ordering::Relaxed),
+        prep_depth_hwm: PREP_DEPTH_HWM.load(Ordering::Relaxed),
+        pool_ops: POOL_OPS.load(Ordering::Relaxed),
+        pool_tasks: POOL_TASKS.load(Ordering::Relaxed),
+        pool_lane_slots: POOL_LANE_SLOTS.load(Ordering::Relaxed),
+    }
+}
+
+/// Reset all counters and gauges (for test isolation / run boundaries).
+pub fn reset() {
+    GMM_VAR_CLAMPS.store(0, Ordering::Relaxed);
+    PREP_DEPTH.store(0, Ordering::Relaxed);
+    PREP_DEPTH_HWM.store(0, Ordering::Relaxed);
+    POOL_OPS.store(0, Ordering::Relaxed);
+    POOL_TASKS.store(0, Ordering::Relaxed);
+    POOL_LANE_SLOTS.store(0, Ordering::Relaxed);
+}
+
+/// Append-style JSONL writer for `--metrics-out`: one compact JSON object
+/// per line, flushed per emit so partial runs still leave a parseable file.
+pub struct MetricsSink {
+    w: BufWriter<File>,
+    path: String,
+}
+
+impl MetricsSink {
+    pub fn create(path: &str) -> Result<MetricsSink> {
+        let f = File::create(path).with_context(|| format!("creating metrics file {path}"))?;
+        Ok(MetricsSink {
+            w: BufWriter::new(f),
+            path: path.to_string(),
+        })
+    }
+
+    pub fn emit(&mut self, record: &Json) -> Result<()> {
+        let line = record.to_string();
+        writeln!(self.w, "{line}").with_context(|| format!("writing {}", self.path))?;
+        self.w
+            .flush()
+            .with_context(|| format!("flushing {}", self.path))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gate_on_enable() {
+        // process-global; other tests do not touch gmm clamps concurrently
+        disable_metrics();
+        let before = snapshot().gmm_var_clamps;
+        count_gmm_var_clamps(3);
+        assert_eq!(snapshot().gmm_var_clamps, before);
+        enable_metrics();
+        count_gmm_var_clamps(3);
+        assert_eq!(snapshot().gmm_var_clamps, before + 3);
+        disable_metrics();
+    }
+
+    #[test]
+    fn delta_subtracts_counters() {
+        let a = TelemetrySnapshot {
+            gmm_var_clamps: 5,
+            pool_ops: 10,
+            pool_tasks: 40,
+            pool_lane_slots: 80,
+            prep_depth: 1,
+            prep_depth_hwm: 2,
+        };
+        let b = TelemetrySnapshot {
+            gmm_var_clamps: 8,
+            pool_ops: 14,
+            pool_tasks: 60,
+            pool_lane_slots: 112,
+            prep_depth: 0,
+            prep_depth_hwm: 2,
+        };
+        let d = b.delta_since(&a);
+        assert_eq!(d.gmm_var_clamps, 3);
+        assert_eq!(d.pool_ops, 4);
+        assert_eq!(d.pool_tasks, 20);
+        assert_eq!(d.pool_lane_slots, 32);
+        assert_eq!(d.prep_depth, 0);
+    }
+
+    #[test]
+    fn occupancy_handles_zero_slots() {
+        let z = TelemetrySnapshot::default();
+        assert_eq!(z.pool_occupancy(), 0.0);
+        let s = TelemetrySnapshot {
+            pool_tasks: 30,
+            pool_lane_slots: 40,
+            ..TelemetrySnapshot::default()
+        };
+        assert!((s.pool_occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sink_writes_one_object_per_line() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pres_metrics_sink_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let mut sink = MetricsSink::create(&path).unwrap();
+            sink.emit(&Json::obj(vec![("epoch", Json::num(1.0))])).unwrap();
+            sink.emit(&Json::obj(vec![("epoch", Json::num(2.0))])).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("epoch").unwrap().as_usize().unwrap(), i + 1);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

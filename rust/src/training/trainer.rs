@@ -23,7 +23,7 @@ use crate::datagen;
 use crate::graph::Dataset;
 use crate::memory::{self, GmmTrackers, Mailbox, MemoryBackend, MemoryBackendKind};
 use crate::metrics::ranking::link_ap;
-use crate::metrics::EpochTimer;
+use crate::metrics::{EpochTimer, StageQuantiles};
 use crate::model::ModelState;
 use crate::pipeline::{
     fill_prep_with, negative_stream, plain_to_literals, CommitQueue, PlainArg, PrepBatch,
@@ -32,7 +32,9 @@ use crate::pipeline::{
 use crate::runtime::engine::{fetch_f32, fetch_scalar, lit_scalar};
 use crate::runtime::{ArtifactSpec, Engine, ExecBackendKind, Step};
 use crate::sampler::{NegativeSampler, NeighborIndex};
+use crate::trace::{self, Stage};
 use crate::training::{Assembler, HostBatch};
+use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Pcg32;
 
@@ -76,6 +78,50 @@ pub struct EpochReport {
     pub splice_lag_max: usize,
     pub events_per_sec: f64,
     pub gamma: f32,
+    /// Per-stage per-step p50/p95/p99 from the epoch's latency histograms.
+    pub stage_quantiles: Vec<StageQuantiles>,
+    /// Vertices the GMM prediction filter tracked at epoch end.
+    pub gmm_tracked: usize,
+    /// Non-finite pos/neg logits observed in training steps this epoch.
+    pub nan_logit_events: u64,
+}
+
+impl EpochReport {
+    /// Hand-rolled JSON (no serde offline). Non-finite floats (`val_ap`
+    /// before evaluation, `gamma` on non-PRES runs) emit as `null`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("train_loss", Json::finite(self.train_loss)),
+            ("train_bce", Json::finite(self.train_bce)),
+            ("train_ap", Json::finite(self.train_ap)),
+            ("coherence", Json::finite(self.coherence)),
+            ("val_ap", Json::finite(self.val_ap)),
+            ("epoch_secs", Json::finite(self.epoch_secs)),
+            ("assemble_secs", Json::finite(self.assemble_secs)),
+            ("execute_secs", Json::finite(self.execute_secs)),
+            ("exec_union_secs", Json::finite(self.exec_union_secs)),
+            ("exec_wait_secs", Json::finite(self.exec_wait_secs)),
+            (
+                "exec_stream_busy_secs",
+                Json::arr(self.exec_stream_busy_secs.iter().map(|&s| Json::finite(s))),
+            ),
+            ("writeback_secs", Json::finite(self.writeback_secs)),
+            ("prep_secs", Json::finite(self.prep_secs)),
+            ("prep_stall_secs", Json::finite(self.prep_stall_secs)),
+            ("assemble_hidden_secs", Json::finite(self.assemble_hidden_secs)),
+            ("device_idle_frac", Json::finite(self.device_idle_frac)),
+            ("splice_lag_max", Json::num(self.splice_lag_max as f64)),
+            ("events_per_sec", Json::finite(self.events_per_sec)),
+            ("gamma", Json::finite(self.gamma as f64)),
+            (
+                "stage_quantiles",
+                Json::arr(self.stage_quantiles.iter().map(|q| q.to_json())),
+            ),
+            ("gmm_tracked", Json::num(self.gmm_tracked as f64)),
+            ("nan_logit_events", Json::num(self.nan_logit_events as f64)),
+        ])
+    }
 }
 
 /// Whole-run summary.
@@ -92,6 +138,33 @@ pub struct RunReport {
     pub iteration_ap: Vec<(usize, f64)>,
     /// Coordinator-side live bytes (Fig. 19).
     pub coordinator_bytes: usize,
+}
+
+impl RunReport {
+    /// Whole-run JSON: config + per-epoch reports + summary scalars. The
+    /// JSONL emitter and `BENCH_*.json` writers build on this instead of
+    /// hand-rolling their own formats.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("best_val_ap", Json::finite(self.best_val_ap)),
+            ("test_ap", Json::finite(self.test_ap)),
+            ("test_auc", Json::finite(self.test_auc)),
+            ("total_train_secs", Json::finite(self.total_train_secs)),
+            ("mean_epoch_secs", Json::finite(self.mean_epoch_secs)),
+            ("coordinator_bytes", Json::num(self.coordinator_bytes as f64)),
+            (
+                "epochs",
+                Json::arr(self.epochs.iter().map(|e| e.to_json())),
+            ),
+            (
+                "iteration_ap",
+                Json::arr(self.iteration_ap.iter().map(|&(i, ap)| {
+                    Json::arr([Json::num(i as f64), Json::finite(ap)])
+                })),
+            ),
+        ])
+    }
 }
 
 /// The training coordinator for one (dataset, model, batch, mode) run.
@@ -137,6 +210,9 @@ pub struct Trainer {
     logit_scratch: [Vec<f32>; 2],
     pub iteration_ap: Vec<(usize, f64)>,
     iterations: usize,
+    /// Non-finite pos/neg logits seen in training steps this epoch
+    /// (telemetry; reset by `train_epoch`).
+    nan_logits: u64,
 }
 
 impl Trainer {
@@ -216,6 +292,7 @@ impl Trainer {
             logit_scratch: [vec![0.0; b], vec![0.0; b]],
             iteration_ap: Vec::new(),
             iterations: 0,
+            nan_logits: 0,
             engine,
             dataset,
         })
@@ -272,6 +349,7 @@ impl Trainer {
     /// val_ap = NaN (the caller decides whether to evaluate).
     pub fn train_epoch(&mut self, epoch: usize) -> Result<EpochReport> {
         self.reset_epoch_state();
+        self.nan_logits = 0;
         let n_train = self.train_plan_count();
         let mut timer = EpochTimer::default();
         timer.start_epoch();
@@ -326,6 +404,9 @@ impl Trainer {
             splice_lag_max,
             events_per_sec: timer.events_per_sec(executed_events(&self.plans, n_train)),
             gamma: self.state.gamma().unwrap_or(f32::NAN),
+            stage_quantiles: timer.stage_quantiles(),
+            gmm_tracked: self.gmm.tracked_vertices(),
+            nan_logit_events: self.nan_logits,
         })
     }
 
@@ -374,6 +455,7 @@ impl Trainer {
                 presliced.pop_front();
             } else {
                 self.recv_install_splice(&mut pf, i, timer)?;
+                timer.record_splice_lag(0); // exact splice: all commits landed
             }
 
             // ---- EXEC
@@ -389,6 +471,7 @@ impl Trainer {
                 // batch `next` should see commits up to `next - 1` but only
                 // `i - 1` have landed: its view lags `next - i` commits
                 splice_lag_max = splice_lag_max.max(next - i);
+                timer.record_splice_lag(next - i);
                 presliced.push_back(next);
             }
 
@@ -396,7 +479,9 @@ impl Trainer {
             let t2 = Instant::now();
             self.state.absorb_outputs(&mut outputs);
             let metrics = self.consume_step_outputs(&spec, &outputs, i % slots, i, true)?;
-            timer.writeback += t2.elapsed();
+            let took = t2.elapsed();
+            timer.add_writeback(took);
+            trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
             results.push(metrics);
         }
         Ok((results, splice_lag_max))
@@ -479,6 +564,7 @@ impl Trainer {
         // flight; the window then pre-splices batches 2..=1+k against the
         // initial memory view — the serial loop's iteration-1 fill
         self.recv_install_splice(&mut pf, 1, timer)?;
+        timer.record_splice_lag(0); // batch 1 splices exactly
         let job =
             self.submit_train_slot(&streams, 1, std::mem::take(&mut bank), step0 + 1, timer)?;
         commits.push(1, job);
@@ -487,6 +573,7 @@ impl Trainer {
             let next = hi + 1;
             self.recv_install_splice(&mut pf, next, timer)?;
             splice_lag_max = splice_lag_max.max(next - 1);
+            timer.record_splice_lag(next - 1);
             hi = next;
         }
 
@@ -494,7 +581,9 @@ impl Trainer {
             // ---- ordered commit: wait for step i (always the queue front)
             let t0 = Instant::now();
             let done = commits.wait_next()?;
-            timer.exec_wait += t0.elapsed();
+            let waited = t0.elapsed();
+            timer.add_exec_wait(waited);
+            trace::record_span(Stage::CommitWait, t0, t0 + waited, i as u64);
             anyhow::ensure!(
                 done.seq == i,
                 "commit queue returned step {}, expected {i}",
@@ -534,7 +623,9 @@ impl Trainer {
             let t2 = Instant::now();
             let metrics =
                 self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i, true)?;
-            timer.writeback += t2.elapsed();
+            let took = t2.elapsed();
+            timer.add_writeback(took);
+            trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
             results.push(metrics);
 
             // ---- top up the staleness window: batch i+1+k sees commits
@@ -543,6 +634,7 @@ impl Trainer {
                 let next = hi + 1;
                 self.recv_install_splice(&mut pf, next, timer)?;
                 splice_lag_max = splice_lag_max.max(next - (i + 1));
+                timer.record_splice_lag(next - (i + 1));
                 hi = next;
             }
         }
@@ -576,7 +668,9 @@ impl Trainer {
     ) -> Result<()> {
         let t0 = Instant::now();
         let prep = pf.recv()?;
-        timer.prep_stall += t0.elapsed();
+        let stalled = t0.elapsed();
+        timer.add_prep_stall(stalled);
+        trace::record_span(Stage::PrepStall, t0, t0 + stalled, idx as u64);
         self.install_and_splice(prep, idx, pf, timer)
     }
 
@@ -609,7 +703,9 @@ impl Trainer {
             host.prep.epoch = epoch;
         }
         self.splice_slot(0, i);
-        timer.assemble += t0.elapsed();
+        let assembled = t0.elapsed();
+        timer.add_assemble(assembled);
+        trace::record_span(Stage::Splice, t0, t0 + assembled, i as u64);
 
         // -------- EXEC
         let (spec, mut outputs) = self.exec_train_slot(0, timer)?;
@@ -618,7 +714,9 @@ impl Trainer {
         let t2 = Instant::now();
         self.state.absorb_outputs(&mut outputs);
         let metrics = self.consume_step_outputs(&spec, &outputs, 0, i, true)?;
-        timer.writeback += t2.elapsed();
+        let took = t2.elapsed();
+        timer.add_writeback(took);
+        trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
         Ok(metrics)
     }
 
@@ -639,13 +737,15 @@ impl Trainer {
             prep.index,
             idx
         );
-        timer.prep_busy += Duration::from_nanos(prep.prep_ns);
+        timer.add_prep_busy(Duration::from_nanos(prep.prep_ns));
         let t = Instant::now();
         let slot = idx % self.hosts.len();
         let old = self.hosts[slot].install_prep(prep);
         pf.recycle(old);
         self.splice_slot(slot, idx);
-        timer.assemble += t.elapsed();
+        let took = t.elapsed();
+        timer.add_assemble(took);
+        trace::record_span(Stage::Splice, t, t + took, idx as u64);
         Ok(())
     }
 
@@ -689,10 +789,12 @@ impl Trainer {
             .chain(data_lits.iter())
             .chain([&lr_lit, &t_lit])
             .collect();
-        timer.assemble += t0.elapsed();
+        timer.add_assemble(t0.elapsed());
         let t1 = Instant::now();
         let outputs = self.train_step.run(&args)?;
-        timer.record_exec_inline(t1, Instant::now());
+        let t_end = Instant::now();
+        timer.record_exec_inline(t1, t_end);
+        trace::record_span(Stage::Exec, t1, t_end, slot as u64);
         Ok((spec, outputs))
     }
 
@@ -722,7 +824,7 @@ impl Trainer {
         args.extend(self.hosts[i % self.hosts.len()].pack_plain(spec, 3 * n_params, 2)?);
         args.push(PlainArg::F32(vec![self.cfg.lr]));
         args.push(PlainArg::F32(vec![step_t as f32]));
-        timer.assemble += t0.elapsed();
+        timer.add_assemble(t0.elapsed());
         Ok(streams.submit(i, args))
     }
 
@@ -765,6 +867,16 @@ impl Trainer {
 
         fetch_f32(&outputs[idx("pos_logit")?], &mut self.logit_scratch[0])?;
         fetch_f32(&outputs[idx("neg_logit")?], &mut self.logit_scratch[1])?;
+        if train {
+            // NaN-logit telemetry: cheap linear scan over scratch already
+            // in cache, surfaced per epoch in EpochReport
+            let nans = self.logit_scratch[0]
+                .iter()
+                .chain(self.logit_scratch[1].iter())
+                .filter(|v| !v.is_finite())
+                .count() as u64;
+            self.nan_logits += nans;
+        }
         let ap = link_ap(&self.logit_scratch[0], &self.logit_scratch[1]);
         let loss = fetch_scalar(&outputs[idx("loss")?])? as f64;
         let bce = fetch_scalar(&outputs[idx("bce")?])? as f64;

@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 pub struct Bench {
@@ -72,7 +73,7 @@ impl Bench {
             p50_ns: stats::quantile(&samples, 0.5),
             p95_ns: stats::quantile(&samples, 0.95),
         };
-        println!(
+        crate::log_info!(
             "{:<44} {:>10} {:>12} {:>12} {:>6}",
             format!("{}/{}", self.name, case),
             fmt_ns(row.mean_ns),
@@ -85,7 +86,7 @@ impl Bench {
     }
 
     pub fn header(&self) {
-        println!(
+        crate::log_info!(
             "\n=== bench: {} ===\n{:<44} {:>10} {:>12} {:>12} {:>6}",
             self.name, "case", "mean", "p50", "p95", "iters"
         );
@@ -93,6 +94,22 @@ impl Bench {
 
     pub fn rows(&self) -> &[Row] {
         &self.rows
+    }
+
+    /// Canonical `BENCH_*.json` document: bench name, the harness timing
+    /// rows, plus bench-specific `cases` (the one JSON shape every bench
+    /// target emits, mirroring `EpochReport::to_json` on the training side).
+    pub fn report_json(&self, cases: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(&self.name)),
+            ("rows", Json::arr(self.rows.iter().map(Row::to_json))),
+            ("cases", Json::arr(cases)),
+        ])
+    }
+
+    /// Write [`Bench::report_json`] pretty-printed to `path`.
+    pub fn write_json(&self, path: &str, cases: Vec<Json>) -> std::io::Result<()> {
+        std::fs::write(path, self.report_json(cases).to_string_pretty())
     }
 
     /// Append rows to `results/bench/<name>.csv` for EXPERIMENTS.md.
@@ -107,6 +124,19 @@ impl Bench {
             ));
         }
         std::fs::write(path, out)
+    }
+}
+
+impl Row {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("case", Json::str(&self.case)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("std_ns", Json::num(self.std_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+        ])
     }
 }
 
@@ -143,6 +173,21 @@ mod tests {
         assert_eq!(b.rows().len(), 1);
         assert!(b.rows()[0].iters >= 3);
         assert!(b.rows()[0].mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn report_json_carries_rows_and_cases() {
+        std::env::set_var("PRES_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest_json");
+        b.run("noop", || {});
+        let j = b.report_json(vec![Json::obj(vec![("k", Json::num(1.0))])]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "selftest_json");
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("case").unwrap().as_str().unwrap(), "noop");
+        assert!(rows[0].get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(parsed.get("cases").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -128,8 +128,27 @@ impl Json {
         Json::Num(n.into())
     }
 
+    /// Number that degrades to `null` when non-finite (`NaN`/`inf` are not
+    /// representable in JSON; emitting them would corrupt the document).
+    pub fn finite(n: f64) -> Json {
+        if n.is_finite() {
+            Json::Num(n)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
+    }
+
+    /// Insert/replace a key on an object (no-op on non-objects). Lets
+    /// emitters merge extra fields into a `to_json` result without
+    /// rebuilding the pair list.
+    pub fn set(&mut self, key: &str, v: Json) {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), v);
+        }
     }
 
     // ------------------------------------------------------------- emission
@@ -454,6 +473,18 @@ mod tests {
             let v = gen(&mut rng, 3);
             assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
         }
+    }
+
+    #[test]
+    fn set_inserts_and_replaces_on_objects() {
+        let mut v = Json::obj(vec![("a", Json::num(1.0))]);
+        v.set("b", Json::str("x"));
+        v.set("a", Json::num(2.0));
+        assert_eq!(v.get("a").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "x");
+        let mut n = Json::Num(1.0);
+        n.set("a", Json::Null); // no-op, not a panic
+        assert_eq!(n, Json::Num(1.0));
     }
 
     #[test]

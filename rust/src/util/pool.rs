@@ -47,6 +47,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::thread::JoinHandle;
 
+use crate::trace::{self, telemetry, Stage};
+
 /// Lock with poison recovery: a panic inside a job closure unwinds through
 /// `broadcast` while guards are live, poisoning the mutexes — but every
 /// critical section here leaves `PoolState` consistent (plain field writes,
@@ -187,7 +189,12 @@ impl WorkerPool {
             // `broadcast`, which does not return before every lane is done.
             f(unsafe { &mut *base.0.add(i) });
         };
+        // one span per generation barrier (arg = task count) plus the
+        // occupancy counters — both a single relaxed load when disabled
+        let span = trace::span(Stage::PoolBarrier, n as u64);
+        telemetry::count_pool_generation(n as u64, self.lanes() as u64);
         self.broadcast(&body);
+        drop(span);
     }
 
     /// Publish one job to every worker lane, run lane 0 on the caller, and

@@ -1,0 +1,245 @@
+//! Observability acceptance gates: the traced 2-stream epoch exports a
+//! Chrome trace with per-thread rows and overlapping spans, tracing never
+//! perturbs training results, `EpochReport` carries per-stage latency
+//! quantiles, and the CLI end-to-end path (`--trace-out`/`--metrics-out`)
+//! writes files that parse.
+//!
+//! The span recorder and telemetry counters are process-global, so every
+//! test that toggles them serializes on one mutex — the OTHER integration
+//! binaries run as separate processes and are unaffected.
+
+use std::sync::Mutex;
+
+use pres::config::{ExperimentConfig, PipelineConfig};
+use pres::trace;
+use pres::training::Trainer;
+use pres::util::json::Json;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn cfg(streams: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default_with("tiny", "tgn", 50, true);
+    c.epochs = 2;
+    c.exec = "host".into();
+    c.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    c.pipeline = PipelineConfig {
+        depth: 2,
+        bounded_staleness: 1,
+        pool_workers: 0,
+        exec_streams: streams,
+    };
+    c
+}
+
+#[test]
+fn traced_two_stream_epoch_exports_thread_rows_with_overlapping_spans() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::stop();
+    trace::clear();
+    trace::start();
+    let mut tr = Trainer::from_config(&cfg(2)).unwrap();
+    for e in 0..2 {
+        tr.train_epoch(e).unwrap();
+    }
+    drop(tr); // lanes + PREP joined: rings are quiescent
+    trace::stop();
+    let doc = trace::chrome_trace_json();
+    trace::clear();
+
+    let parsed = Json::parse(&doc.to_string()).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "traced run must produce events");
+
+    // one named row per instrumented thread: PREP and the EXEC lanes at
+    // minimum (the coordinator row is named after the test thread)
+    let names: Vec<String> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+        .map(|e| {
+            e.get("args")
+                .unwrap()
+                .get("name")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert!(
+        names.iter().any(|n| n.starts_with("pres-prep")),
+        "missing PREP thread row in {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n.starts_with("pres-exec")),
+        "missing EXEC lane row in {names:?}"
+    );
+
+    // complete events carry stage names and land on >= 2 distinct threads
+    let spans: Vec<(u64, f64, f64)> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+        .map(|e| {
+            (
+                e.get("tid").unwrap().as_u64().unwrap(),
+                e.get("ts").unwrap().as_f64().unwrap(),
+                e.get("dur").unwrap().as_f64().unwrap(),
+            )
+        })
+        .collect();
+    let stage_names: Vec<String> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+        .map(|e| e.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(stage_names.iter().any(|n| n == "prep"), "no PREP spans");
+    assert!(stage_names.iter().any(|n| n == "exec"), "no EXEC spans");
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.0).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    assert!(tids.len() >= 2, "spans landed on {} thread(s)", tids.len());
+
+    // pipelining means some pair of spans on DIFFERENT threads overlaps in
+    // the shared clock domain (PREP runs ahead while the coordinator works)
+    let overlap = spans.iter().enumerate().any(|(i, a)| {
+        spans[i + 1..]
+            .iter()
+            .any(|b| a.0 != b.0 && a.1 < b.1 + b.2 && b.1 < a.1 + a.2)
+    });
+    assert!(overlap, "expected cross-thread overlapping spans");
+}
+
+#[test]
+fn tracing_enabled_is_bit_identical_to_disabled() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::stop();
+    trace::clear();
+
+    // instrumented-but-disabled run (the default fast path)
+    let mut plain = Trainer::from_config(&cfg(2)).unwrap();
+    let mut plain_epochs = Vec::new();
+    for e in 0..2 {
+        plain_epochs.push(plain.train_epoch(e).unwrap());
+    }
+    let plain_val = plain.eval_val().unwrap();
+
+    // everything on: span recording + telemetry counters
+    trace::start();
+    trace::telemetry::enable_metrics();
+    let mut traced = Trainer::from_config(&cfg(2)).unwrap();
+    for (e, want) in plain_epochs.iter().enumerate() {
+        let r = traced.train_epoch(e).unwrap();
+        assert_eq!(r.train_loss, want.train_loss, "epoch {e}: tracing changed loss");
+        assert_eq!(r.train_bce, want.train_bce, "epoch {e}");
+        assert_eq!(r.train_ap, want.train_ap, "epoch {e}");
+        assert_eq!(r.coherence, want.coherence, "epoch {e}");
+        assert_eq!(r.gamma, want.gamma, "epoch {e}");
+        assert_eq!(r.splice_lag_max, want.splice_lag_max, "epoch {e}");
+    }
+    let traced_val = traced.eval_val().unwrap();
+    trace::stop();
+    trace::telemetry::disable_metrics();
+    drop(traced);
+    trace::clear();
+    trace::telemetry::reset();
+    assert_eq!(traced_val, plain_val, "tracing changed the memory trajectory");
+}
+
+#[test]
+fn epoch_report_carries_per_stage_latency_quantiles() {
+    // gated too: a concurrent test enabling tracing must not race this
+    // trainer's span pushes against the other tests' clear() calls
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // histograms are part of EpochTimer, recorded regardless of tracing
+    let mut tr = Trainer::from_config(&cfg(2)).unwrap();
+    let r = tr.train_epoch(0).unwrap();
+    assert!(!r.stage_quantiles.is_empty(), "no stage quantiles reported");
+    let exec = r
+        .stage_quantiles
+        .iter()
+        .find(|q| q.stage == "exec")
+        .expect("exec stage missing from quantiles");
+    assert!(exec.count > 0, "exec histogram recorded no samples");
+    assert!(exec.p50 > 0.0, "exec p50 must be positive");
+    assert!(
+        exec.p50 <= exec.p95 && exec.p95 <= exec.p99,
+        "quantiles must be monotone: p50 {} p95 {} p99 {}",
+        exec.p50,
+        exec.p95,
+        exec.p99
+    );
+    let splice = r
+        .stage_quantiles
+        .iter()
+        .find(|q| q.stage == "splice_lag")
+        .expect("splice_lag missing from quantiles");
+    assert!(splice.count > 0, "every spliced batch records a lag sample");
+    // the report serializes without NaN/Infinity leaking into the JSON
+    let text = r.to_json().to_string();
+    assert!(Json::parse(&text).is_ok(), "EpochReport JSON must parse");
+    assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+}
+
+#[test]
+fn cli_trace_and_metrics_outputs_parse_end_to_end() {
+    let dir = std::env::temp_dir().join("pres_trace_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.json");
+    let metrics_path = dir.join("metrics.jsonl");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pres-train"))
+        .args([
+            "train",
+            "--dataset",
+            "tiny",
+            "--model",
+            "tgn",
+            "--batch",
+            "50",
+            "--epochs",
+            "2",
+            "--exec",
+            "host",
+            "--pipeline-depth",
+            "2",
+            "--staleness",
+            "1",
+            "--exec-streams",
+            "2",
+            "--log-level",
+            "info",
+        ])
+        .arg(format!("--trace-out={}", trace_path.display()))
+        .arg(format!("--metrics-out={}", metrics_path.display()))
+        .output()
+        .expect("launching pres-train");
+    assert!(
+        out.status.success(),
+        "pres-train failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // the trace is a valid Chrome trace_event document with named rows
+    let trace_text = std::fs::read_to_string(&trace_path).unwrap();
+    let trace_doc = Json::parse(&trace_text).unwrap();
+    let events = trace_doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "CLI trace must contain events");
+    assert!(trace_text.contains("pres-prep"), "missing PREP row");
+    assert!(trace_text.contains("pres-exec"), "missing EXEC lane row");
+
+    // one metrics record per epoch, each a parseable object with the
+    // epoch report + telemetry delta
+    let metrics_text = std::fs::read_to_string(&metrics_path).unwrap();
+    let lines: Vec<&str> = metrics_text.lines().collect();
+    assert_eq!(lines.len(), 2, "one JSONL record per epoch");
+    for (i, line) in lines.iter().enumerate() {
+        let rec = Json::parse(line).unwrap();
+        assert_eq!(rec.get("epoch").unwrap().as_usize().unwrap(), i);
+        assert!(rec.get("stage_quantiles").unwrap().as_arr().is_ok());
+        let tele = rec.get("telemetry").unwrap();
+        assert!(tele.get("pool_occupancy").unwrap().as_f64().is_ok());
+        assert!(tele.get("prep_depth_hwm").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
