@@ -71,6 +71,7 @@ fn main() {
                     bounded_staleness: staleness,
                     pool_workers: 0,
                     exec_streams: 1,
+                    param_staleness: 0,
                 };
                 let label = format!("{model}_b{batch}_{name}");
                 bench.run(&label, || {

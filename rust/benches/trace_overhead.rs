@@ -44,6 +44,7 @@ fn main() {
             bounded_staleness: 1,
             pool_workers: 0,
             exec_streams: streams,
+            param_staleness: 0,
         };
 
         // default-off fast path: instrumentation gates on one relaxed load

@@ -41,18 +41,38 @@ pub struct PipelineConfig {
     /// commits) and the host EXEC backend (PJRT handles are not Send).
     /// Results are bit-identical for every stream count: the commit queue
     /// applies write-backs strictly in plan order and each step still
-    /// consumes the previous step's parameters. That exact parameter chain
-    /// also means at most ONE step is ever mid-flight, so N > 2 adds only
-    /// parked lane threads over N = 2 — higher counts are useful as a
-    /// control (the stream sweep pins streams-4 == streams-2 throughput),
-    /// not as a scaling dimension, until relaxed parameter staleness
-    /// lands (ROADMAP).
+    /// consumes the previous step's parameters. At `param_staleness = 0`
+    /// that exact parameter chain also means at most ONE step is ever
+    /// mid-flight, so N > 2 adds only parked lane threads over N = 2;
+    /// lanes become a real scaling dimension once `param_staleness >= 1`
+    /// relaxes the chain (DistTGL-style).
     pub exec_streams: usize,
+    /// DistTGL-style bounded PARAMETER staleness for multi-stream EXEC.
+    /// 0 (default) keeps the exact parameter chain: step t consumes step
+    /// t-1's updated parameters, at most one step mid-flight, results
+    /// bit-identical to the serial staleness-k loop. p >= 1 lets the
+    /// coordinator keep a window of `min(p, exec_streams - 1) + 1` steps
+    /// genuinely in flight by cloning the parameter bank into each
+    /// submitted job: lane j runs its step against parameters at most
+    /// `min(p, exec_streams - 1)` commits stale, and gradients are applied
+    /// (Adam) strictly in plan order on the coordinator, so the schedule
+    /// is a pure function of `(n_train, k, p, streams)` and runs are
+    /// reproducible. Requires `min(p, exec_streams - 1) <=
+    /// bounded_staleness` (a step's batch must be spliceable before it is
+    /// submitted). Changes numerics (bounded gradient delay) — the stream
+    /// sweep in `benches/stream_overlap.rs` records the quality cost.
+    pub param_staleness: usize,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 }
+        PipelineConfig {
+            depth: 1,
+            bounded_staleness: 0,
+            pool_workers: 0,
+            exec_streams: 1,
+            param_staleness: 0,
+        }
     }
 }
 
@@ -178,6 +198,9 @@ impl ExperimentConfig {
         if let Some(v) = j.opt("exec_streams") {
             cfg.pipeline.exec_streams = v.as_usize()?;
         }
+        if let Some(v) = j.opt("param_staleness") {
+            cfg.pipeline.param_staleness = v.as_usize()?;
+        }
         if let Some(v) = j.opt("memory_shards") {
             cfg.memory_shards = v.as_usize()?;
         }
@@ -220,11 +243,25 @@ impl ExperimentConfig {
             bail!("exec_streams must be >= 1 (1 = inline EXEC on the coordinator)");
         }
         if self.pipeline.exec_streams > 1 {
-            if self.exec == "pjrt" {
+            // Validate against the backend `Engine::auto` will actually
+            // resolve, not just the literal string: "auto" with compiled
+            // artifacts present picks PJRT and would die mid-run otherwise.
+            let resolves_pjrt = self.exec == "pjrt"
+                || (self.exec == "auto"
+                    && Path::new(&self.artifacts_dir).join("manifest.json").exists());
+            if resolves_pjrt {
                 bail!(
                     "exec_streams > 1 requires the host EXEC backend — PJRT executes on a \
-                     single stream (its handles are not Send); use --exec host or \
-                     --exec-streams 1"
+                     single stream (its handles are not Send){}; use --exec host or \
+                     --exec-streams 1",
+                    if self.exec == "auto" {
+                        format!(
+                            " and --exec auto resolves to pjrt because {}/manifest.json exists",
+                            self.artifacts_dir
+                        )
+                    } else {
+                        String::new()
+                    }
                 );
             }
             if self.pipeline.bounded_staleness == 0 {
@@ -232,6 +269,27 @@ impl ExperimentConfig {
                     "exec_streams > 1 requires bounded_staleness >= 1: overlapped EXEC is \
                      licensed by the staleness window (batch t+1 must be pre-spliced \
                      before step t commits)"
+                );
+            }
+        }
+        if self.pipeline.param_staleness > 0 {
+            // The in-flight window submits step t while steps t-W..t-1 are
+            // still executing, which needs batch t spliced W-1 commits
+            // early — only licensed by an equal memory-staleness budget.
+            let lag = self
+                .pipeline
+                .param_staleness
+                .min(self.pipeline.exec_streams.saturating_sub(1));
+            if lag > self.pipeline.bounded_staleness {
+                bail!(
+                    "param_staleness = {} with exec_streams = {} keeps steps up to {} \
+                     commits in flight, which requires bounded_staleness >= {} (got {}): \
+                     raise --staleness or lower --param-staleness",
+                    self.pipeline.param_staleness,
+                    self.pipeline.exec_streams,
+                    lag + 1,
+                    lag,
+                    self.pipeline.bounded_staleness
                 );
             }
         }
@@ -263,6 +321,10 @@ impl ExperimentConfig {
             ),
             ("pool_workers", Json::num(self.pipeline.pool_workers as f64)),
             ("exec_streams", Json::num(self.pipeline.exec_streams as f64)),
+            (
+                "param_staleness",
+                Json::num(self.pipeline.param_staleness as f64),
+            ),
             ("memory_shards", Json::num(self.memory_shards as f64)),
             ("data_scale", Json::num(self.data_scale as f64)),
         ]);
@@ -308,19 +370,19 @@ mod tests {
         let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
         assert_eq!(
             cfg.pipeline,
-            PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 }
+            PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 }
         );
         cfg.pipeline =
-            PipelineConfig { depth: 3, bounded_staleness: 2, pool_workers: 0, exec_streams: 1 };
+            PipelineConfig { depth: 3, bounded_staleness: 2, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.pipeline.depth, 3);
         assert_eq!(back.pipeline.bounded_staleness, 2);
         // staleness without a prefetch thread is meaningless
         cfg.pipeline =
-            PipelineConfig { depth: 0, bounded_staleness: 1, pool_workers: 0, exec_streams: 1 };
+            PipelineConfig { depth: 0, bounded_staleness: 1, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
         assert!(cfg.validate().is_err());
         cfg.pipeline =
-            PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+            PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
         assert!(cfg.validate().is_ok());
     }
 
@@ -329,7 +391,7 @@ mod tests {
         let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
         assert_eq!(cfg.pipeline.exec_streams, 1); // default = inline EXEC
         cfg.pipeline =
-            PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 4 };
+            PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 4, param_staleness: 0 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.pipeline.exec_streams, 4);
 
@@ -341,7 +403,7 @@ mod tests {
         // batch t+1 cannot splice before step t commits, so lanes would
         // only add overhead — rejected with a clear message
         cfg.pipeline =
-            PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 2 };
+            PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 2, param_staleness: 0 };
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("bounded_staleness"), "unexpected error: {err}");
 
@@ -353,6 +415,69 @@ mod tests {
         assert!(err.contains("host EXEC backend"), "unexpected error: {err}");
         cfg.exec = "host".into();
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn param_staleness_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        cfg.exec = "host".into();
+        assert_eq!(cfg.pipeline.param_staleness, 0); // default = exact chain
+        cfg.pipeline = PipelineConfig {
+            depth: 2,
+            bounded_staleness: 2,
+            pool_workers: 0,
+            exec_streams: 4,
+            param_staleness: 2,
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.pipeline.param_staleness, 2);
+
+        // the in-flight window needs an equal memory-staleness budget:
+        // min(p, streams - 1) must not exceed bounded_staleness
+        cfg.pipeline.bounded_staleness = 1;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("bounded_staleness >= 2"), "unexpected error: {err}");
+        // ... but p is clamped by the lane count first: 2 lanes keep at
+        // most 2 steps in flight, so staleness 1 suffices at any p
+        cfg.pipeline.exec_streams = 2;
+        assert!(cfg.validate().is_ok());
+        // streams = 1 runs inline (exact chain) — p is a no-op, not an error
+        cfg.pipeline =
+            PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 3 };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn auto_exec_resolving_to_pjrt_rejects_streams_at_validate() {
+        // regression: `--exec auto` with compiled artifacts present used to
+        // pass validation for exec_streams > 1 and die mid-run when auto
+        // resolved to PJRT — validate must check the *resolved* backend
+        let dir = std::env::temp_dir().join(format!(
+            "pres_cfg_auto_pjrt_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+        cfg.pipeline =
+            PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 2, param_staleness: 0 };
+        assert_eq!(cfg.exec, "auto");
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("resolves to pjrt") && err.contains("manifest.json"),
+            "unexpected error: {err}"
+        );
+        // forcing the host backend over the same artifacts dir is fine
+        cfg.exec = "host".into();
+        assert!(cfg.validate().is_ok());
+        // and auto over a dir with no manifest resolves to host — accepted
+        cfg.exec = "auto".into();
+        std::fs::remove_file(dir.join("manifest.json")).unwrap();
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

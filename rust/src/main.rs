@@ -97,6 +97,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(s) = args.usize_opt("exec-streams")? {
         cfg.pipeline.exec_streams = s;
     }
+    if let Some(p) = args.usize_opt("param-staleness")? {
+        cfg.pipeline.param_staleness = p;
+    }
     cfg.memory_shards = args.usize_or("memory-shards", cfg.memory_shards)?;
     cfg.data_scale = args.f32_or("data-scale", 1.0)?;
     if let Some(p) = args.get("trace-out") {
@@ -146,12 +149,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         pend_frac * 100.0
     );
     log_info!(
-        "# pipeline: depth={} staleness={}{} | exec streams={}{} | memory shards={}{} | pool workers={}{}",
+        "# pipeline: depth={} staleness={}{} | exec streams={}{} param staleness={}{} | memory shards={}{} | pool workers={}{}",
         cfg.pipeline.depth,
         cfg.pipeline.bounded_staleness,
         if cfg.pipeline.depth == 0 { " (sequential)" } else { "" },
         cfg.pipeline.exec_streams,
         if cfg.pipeline.exec_streams == 1 { " (inline)" } else { "" },
+        cfg.pipeline.param_staleness,
+        if cfg.pipeline.param_staleness == 0 { " (exact chain)" } else { "" },
         cfg.memory_shards,
         if cfg.memory_shards == 1 { " (flat)" } else { "" },
         cfg.pipeline.pool_workers,

@@ -64,6 +64,12 @@ pub struct StageHists {
     pub prep_stall: LogHistogram,
     /// Memory-version lag (commits) each step's splice observed.
     pub splice_lag: LogHistogram,
+    /// Parameter-version lag (commits) each step executed against: how many
+    /// plan-order Adam commits were still outstanding when the step's
+    /// parameter snapshot was taken. Always 0 in the exact chain
+    /// (`param_staleness = 0`); bounded by `min(p, exec_streams - 1)` in
+    /// the relaxed chain.
+    pub param_lag: LogHistogram,
 }
 
 /// p50/p95/p99 for one stage, as surfaced in `EpochReport`.
@@ -117,6 +123,9 @@ pub struct EpochTimer {
     epoch_start: Option<Instant>,
     pub total: Duration,
     pub steps: usize,
+    /// Largest parameter-version lag any step executed against this epoch
+    /// (commits; the witness surfaced as `EpochReport::param_lag_max`).
+    pub param_lag_max: usize,
     /// Per-step latency distributions per stage (see module docs).
     pub hist: StageHists,
 }
@@ -205,6 +214,13 @@ impl EpochTimer {
         self.hist.splice_lag.record(lag as u64);
     }
 
+    /// Record the parameter-version lag (in commits) one step executed
+    /// against, updating both the histogram and the epoch max witness.
+    pub fn record_param_lag(&mut self, lag: usize) {
+        self.hist.param_lag.record(lag as u64);
+        self.param_lag_max = self.param_lag_max.max(lag);
+    }
+
     /// Per-stage p50/p95/p99 from the per-step histograms. Latency stages
     /// report seconds; `splice_lag` reports commits.
     pub fn stage_quantiles(&self) -> Vec<StageQuantiles> {
@@ -218,6 +234,7 @@ impl EpochTimer {
             p99: h.quantile(0.99) / NS,
         };
         let lag = &self.hist.splice_lag;
+        let plag = &self.hist.param_lag;
         vec![
             time_q("prep", &self.hist.prep),
             time_q("assemble", &self.hist.assemble),
@@ -232,6 +249,14 @@ impl EpochTimer {
                 p50: lag.quantile(0.50),
                 p95: lag.quantile(0.95),
                 p99: lag.quantile(0.99),
+            },
+            StageQuantiles {
+                stage: "param_lag",
+                unit: "commits",
+                count: plag.count(),
+                p50: plag.quantile(0.50),
+                p95: plag.quantile(0.95),
+                p99: plag.quantile(0.99),
             },
         ]
     }
@@ -459,6 +484,8 @@ mod tests {
             t.add_assemble(Duration::from_micros(i * 100));
         }
         t.record_splice_lag(3);
+        t.record_param_lag(1);
+        t.record_param_lag(2);
         t.finish_epoch();
         let qs = t.stage_quantiles();
         let asm = qs.iter().find(|q| q.stage == "assemble").unwrap();
@@ -471,5 +498,22 @@ mod tests {
         assert_eq!(lag.unit, "commits");
         assert_eq!(lag.count, 1);
         assert!((lag.p50 - 3.0).abs() < 1e-9);
+        let plag = qs.iter().find(|q| q.stage == "param_lag").unwrap();
+        assert_eq!(plag.unit, "commits");
+        assert_eq!(plag.count, 2);
+        assert_eq!(t.param_lag_max, 2, "max witness tracks the largest recorded lag");
+    }
+
+    #[test]
+    fn param_lag_max_defaults_to_zero_for_exact_chains() {
+        // an epoch that never records a param lag (exact chain, inline or
+        // pipelined loops) must report a 0 witness, not garbage
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        t.finish_epoch();
+        assert_eq!(t.param_lag_max, 0);
+        let qs = t.stage_quantiles();
+        let plag = qs.iter().find(|q| q.stage == "param_lag").unwrap();
+        assert_eq!(plag.count, 0);
     }
 }

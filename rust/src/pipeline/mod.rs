@@ -120,10 +120,50 @@
 //! wall clock) keeps `device_idle_frac` honest under overlap
 //! ([`crate::metrics::EpochTimer`]).
 //!
+//! ## Bounded parameter staleness (`param_staleness > 0`, PR 7)
+//!
+//! The exact parameter chain above caps concurrency at one step in flight
+//! no matter how many lanes exist. `param_staleness = p >= 1` relaxes
+//! exactly that chain, DistTGL-style: lanes run the forward+backward
+//! "grad" step kind against parameter snapshots *cloned* at submission,
+//! and the coordinator owns the optimizer, applying Adam updates strictly
+//! in plan order as each step commits. A window of
+//! `W = min(p, exec_streams - 1) + 1` steps is then genuinely concurrent:
+//!
+//! ```text
+//!   lanes:        EXEC t | EXEC t+1 | ... | EXEC t+W-1   (concurrent)
+//!   coordinator:  wait t | Adam t | WB t | SPLICE t+1+k | submit t+W | ...
+//! ```
+//!
+//! Step `j` executes against params missing at most `W - 1 =
+//! min(p, exec_streams - 1)` plan-order commits — witnessed per epoch by
+//! `EpochReport::param_lag_max` and the `param_lag` stage histogram. The
+//! memory-splice schedule is untouched (still the serial staleness-k
+//! schedule), and submissions/commits happen at fixed loop positions, so
+//! the whole schedule is a pure function of `(n_train, k, p, streams)`:
+//! relaxed runs are deterministic and repeatable even though lanes race.
+//! Because batch `t+W` must already be spliced when submitted, config
+//! validation requires `min(p, exec_streams - 1) <= bounded_staleness`.
+//! `p = 0` (the default) keeps the exact chain and stays bit-identical to
+//! the serial staleness-k loop; `p` only trades parameter freshness for
+//! lane concurrency, never memory freshness.
+//!
+//! Knob semantics, in one line each:
+//!
+//! * `depth` — PREP lookahead (batches the worker may run ahead);
+//! * `bounded_staleness` (`--staleness k`) — memory-view lag: how many
+//!   commits a SPLICE may trail;
+//! * `exec_streams` — executor lanes (host backend only);
+//! * `param_staleness` (`--param-staleness p`) — parameter-version lag:
+//!   how many plan-order Adam commits a step's snapshot may trail
+//!   (0 = exact chain, clamped to `exec_streams - 1` lanes of benefit);
+//! * `pool_workers` — shared worker-pool width under all of the above.
+//!
 //! Knobs live in [`crate::config::PipelineConfig`] (`--pipeline-depth` /
-//! `--staleness` / `--exec-streams` on the CLI); overlap metrics
-//! (assemble-hidden seconds, device-idle fraction, per-stream execute)
-//! land in `EpochReport`, `rust/benches/pipeline_overlap.rs` and
+//! `--staleness` / `--exec-streams` / `--param-staleness` on the CLI);
+//! overlap metrics (assemble-hidden seconds, device-idle fraction,
+//! per-stream execute, splice/param lag) land in `EpochReport`,
+//! `rust/benches/pipeline_overlap.rs` and
 //! `rust/benches/stream_overlap.rs`.
 
 pub mod prep;

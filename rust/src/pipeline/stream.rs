@@ -7,13 +7,25 @@
 //! Under `bounded_staleness = k >= 1` the coordinator pre-splices up to
 //! `k` future batches — their inputs are fully staged before the current
 //! step's write-back lands. A [`StreamPool`] turns that license into
-//! overlap: step `t+1` executes on a lane while the coordinator commits
-//! step `t`'s write-back, computes its metrics and pre-splices the next
-//! window entry. The parameter chain still serializes the *computations*
-//! (step `t+1` consumes step `t`'s Adam output, which is what keeps
-//! results bit-identical to the serial staleness-k loop), so at any
-//! moment at most one step is mid-flight — the win is that the
-//! coordinator's commit work no longer sits on the EXEC critical path.
+//! overlap, in one of two regimes selected by `param_staleness`:
+//!
+//! * **Exact chain** (`param_staleness = 0`, the default): step `t+1`
+//!   executes on a lane while the coordinator commits step `t`'s
+//!   write-back, computes its metrics and pre-splices the next window
+//!   entry. The parameter chain still serializes the *computations*
+//!   (step `t+1` consumes step `t`'s fused Adam output, which is what
+//!   keeps results bit-identical to the serial staleness-k loop), so at
+//!   any moment at most one step is mid-flight — the win is that the
+//!   coordinator's commit work no longer sits on the EXEC critical path.
+//! * **Relaxed chain** (`param_staleness = p >= 1`): lanes run the
+//!   forward+backward "grad" step kind against parameter snapshots cloned
+//!   at submission, and the coordinator applies the Adam updates strictly
+//!   in plan order as each step commits. A window of
+//!   `min(p, streams - 1) + 1` steps is then *genuinely* concurrent, each
+//!   executing against params at most `min(p, streams - 1)` plan-order
+//!   commits stale — DistTGL-style bounded parameter staleness. The
+//!   schedule stays a pure function of `(n_train, k, p, streams)`, so
+//!   runs remain deterministic even though lanes race.
 //!
 //! ## Why payloads are plain buffers
 //!
@@ -285,6 +297,14 @@ impl CommitQueue {
         self.pending.is_empty()
     }
 
+    /// Sequence number of the oldest in-flight step (the one `wait_next`
+    /// will surface), or `None` when nothing is in flight. The relaxed
+    /// parameter-chain loop uses this to assert its fixed submission
+    /// schedule without consuming the front.
+    pub fn front_seq(&self) -> Option<usize> {
+        self.pending.front().map(|&(seq, _)| seq)
+    }
+
     /// Block for the oldest in-flight step. Errors if nothing is in flight
     /// or the lane running it died.
     pub fn wait_next(&mut self) -> Result<StepDone> {
@@ -372,11 +392,13 @@ mod tests {
         let (step, args) = step_and_args();
         let pool = StreamPool::new(4, step).unwrap();
         let mut commits = CommitQueue::new();
+        assert_eq!(commits.front_seq(), None);
         for seq in 1..=8usize {
             commits.push(seq, pool.submit(seq, args.clone()));
         }
         assert_eq!(commits.len(), 8);
         for expect in 1..=8usize {
+            assert_eq!(commits.front_seq(), Some(expect), "front peeks without consuming");
             let done = commits.wait_next().unwrap();
             assert_eq!(done.seq, expect, "commit order must be submission order");
             assert_eq!(done.stream, expect % 4);
@@ -384,7 +406,43 @@ mod tests {
             assert!(done.finished >= done.started);
         }
         assert!(commits.is_empty());
+        assert_eq!(commits.front_seq(), None);
         assert!(commits.wait_next().is_err(), "empty queue must error");
+    }
+
+    #[test]
+    fn grad_jobs_run_on_lanes_and_lead_with_gradients() {
+        // the relaxed parameter chain ships grad-kind steps to lanes: the
+        // ABI takes params + data (no Adam state, no trailing lr/step_t)
+        // and leads its outputs with one gradient tensor per parameter
+        let m = Manifest::builtin();
+        let spec = ArtifactSpec::host(m.dims, "jodie", 4, "grad").unwrap();
+        let n_params = m.param_specs("jodie").unwrap().len();
+        let step = Arc::new(HostStep::new(
+            spec,
+            m.dims,
+            n_params,
+            Arc::new(WorkerPool::new(2)),
+        ));
+        let args: Vec<PlainArg> = step
+            .spec
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => PlainArg::F32(vec![0.0; s.elems()]),
+                DType::I32 => PlainArg::I32(vec![0; s.elems()]),
+            })
+            .collect();
+        let (want, _) = run_job(&step, &args);
+        let want = want.unwrap();
+        assert_eq!(want.len(), step.spec.outputs.len());
+        assert!(step.spec.outputs[0].name.starts_with("grad_"));
+        let pool = StreamPool::new(2, step.clone()).unwrap();
+        for seq in 0..4 {
+            let done = pool.submit(seq, args.clone()).recv().unwrap();
+            let got = done.outputs.unwrap();
+            assert_eq!(got, want, "lane {seq} grad run diverged from inline");
+        }
     }
 
     #[test]

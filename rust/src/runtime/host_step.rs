@@ -353,6 +353,17 @@ impl HostStep {
         let fwd = self.forward(&p, &d);
 
         let mut outputs: Vec<Literal> = Vec::with_capacity(self.spec.outputs.len());
+        if self.spec.kind == "grad" {
+            // gradient-only step (relaxed-parameter-staleness EXEC): same
+            // forward + backward as train, but the optimizer state never
+            // crosses the lane boundary — raw per-param gradients come
+            // back in spec order and the coordinator applies Adam in plan
+            // order
+            let grads = self.backward(&p, &d, &fwd);
+            for (vals, spec) in grads.iter().zip(&self.spec.inputs[..n]) {
+                outputs.push(lit_f32(vals, &spec.shape)?);
+            }
+        }
         if train {
             let grads = self.backward(&p, &d, &fwd);
             let lr = read_f32(args[args.len() - 2], &self.spec.inputs[args.len() - 2])?[0];
@@ -1615,6 +1626,97 @@ mod tests {
         assert!((-1.0..=1.0).contains(&fwd.coh), "coherence {}", fwd.coh);
         assert!(fwd.bce > 0.0);
         assert!((fwd.loss - (fwd.bce + 0.3 * (1.0 - fwd.coh))).abs() < 1e-5);
+    }
+
+    /// Data literals in spec order for a run() call (make_data keys by
+    /// name; the ABI is positional).
+    fn data_literals(step: &HostStep, d: &Data) -> Vec<Literal> {
+        let n = step.n_params;
+        let train = step.spec.kind == "train";
+        let off = if train { 3 * n } else { n };
+        let count = step.spec.inputs.len() - off - if train { 2 } else { 0 };
+        step.spec.inputs[off..off + count]
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => lit_f32(d.f(&s.name), &s.shape).unwrap(),
+                DType::I32 => crate::runtime::engine::lit_i32(d.i(&s.name), &s.shape).unwrap(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grad_kind_plus_coordinator_adam_matches_fused_train() {
+        // the contract behind relaxed-parameter-staleness EXEC: a lane
+        // running the grad-kind step plus the coordinator applying
+        // `adam_update` must be BIT-IDENTICAL to the fused train step —
+        // otherwise p >= 1 at lag 0 would already diverge from p = 0
+        for model in ["tgn", "jodie", "apan"] {
+            let train = make_step(model, "train", pool());
+            let grad = make_step(model, "grad", pool());
+            let n = train.n_params;
+            let p = make_params(model, 11);
+            let d = make_data(&train, 5, 1.0);
+            let mut rng = Pcg32::new(47);
+            let m0: Vec<Vec<f32>> =
+                p.vals.iter().map(|v| v.iter().map(|_| rng.normal() * 0.01).collect()).collect();
+            let v0: Vec<Vec<f32>> =
+                p.vals.iter().map(|v| v.iter().map(|_| rng.f32() * 0.01).collect()).collect();
+            let (lr, t) = (1e-3f32, 3.0f32);
+
+            // fused train run
+            let mut args: Vec<Literal> = Vec::new();
+            for (vals, s) in p.vals.iter().zip(&train.spec.inputs[..n]) {
+                args.push(lit_f32(vals, &s.shape).unwrap());
+            }
+            for bank in [&m0, &v0] {
+                for (vals, s) in bank.iter().zip(&train.spec.inputs[..n]) {
+                    args.push(lit_f32(vals, &s.shape).unwrap());
+                }
+            }
+            args.extend(data_literals(&train, &d));
+            args.push(lit_f32(&[lr], &[]).unwrap());
+            args.push(lit_f32(&[t], &[]).unwrap());
+            let refs: Vec<&Literal> = args.iter().collect();
+            let fused = train.run(&refs).unwrap();
+
+            // grad run + coordinator-side Adam
+            let mut gargs: Vec<Literal> = Vec::new();
+            for (vals, s) in p.vals.iter().zip(&grad.spec.inputs[..n]) {
+                gargs.push(lit_f32(vals, &s.shape).unwrap());
+            }
+            gargs.extend(data_literals(&grad, &d));
+            let grefs: Vec<&Literal> = gargs.iter().collect();
+            let gouts = grad.run(&grefs).unwrap();
+            assert_eq!(gouts.len(), n + 9, "{model}: grads + 9 step outputs");
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
+            for (lit, s) in gouts[..n].iter().zip(&grad.spec.outputs[..n]) {
+                let mut buf = vec![0.0f32; s.elems()];
+                lit.copy_raw_to(&mut buf).unwrap();
+                grads.push(buf);
+            }
+            let mut np = p.vals.clone();
+            let mut nm = m0.clone();
+            let mut nv = v0.clone();
+            adam_update(&mut np, &grads, &mut nm, &mut nv, lr, t);
+
+            for i in 0..n {
+                let s = &train.spec.inputs[i];
+                for (j, bank) in [&np, &nm, &nv].into_iter().enumerate() {
+                    let mut got = vec![0.0f32; s.elems()];
+                    fused[j * n + i].copy_raw_to(&mut got).unwrap();
+                    assert_eq!(got, bank[i], "{model}: bank {j} tensor {} diverged", s.name);
+                }
+            }
+            // the step outputs (metrics, write-back rows) match too
+            for k in 0..9 {
+                let s = &train.spec.outputs[3 * n + k];
+                let mut a = vec![0.0f32; s.elems()];
+                let mut b = vec![0.0f32; s.elems()];
+                fused[3 * n + k].copy_raw_to(&mut a).unwrap();
+                gouts[n + k].copy_raw_to(&mut b).unwrap();
+                assert_eq!(a, b, "{model}: step output {} diverged", s.name);
+            }
+        }
     }
 
     #[test]

@@ -430,10 +430,16 @@ impl ArtifactSpec {
     /// Synthesize the positional ABI for a host-executed `(model, batch,
     /// kind)` step — identical to what aot.py would serialize for the same
     /// triple (train: params + m + v + data + lr/step_t in, updated state +
-    /// step outputs out; eval: params + data in, step outputs out).
+    /// step outputs out; eval: params + data in, step outputs out; grad:
+    /// params + data in, per-parameter gradients + step outputs out — the
+    /// host-only ABI behind relaxed-parameter-staleness EXEC, where the
+    /// coordinator owns the Adam apply instead of the lane).
     pub fn host(dims: Dims, model: &str, batch: usize, kind: &str) -> Result<ArtifactSpec> {
-        if !["train", "eval"].contains(&kind) {
+        if !["train", "eval", "grad"].contains(&kind) {
             bail!("unknown step kind '{kind}'");
+        }
+        if model == "clf" && kind == "grad" {
+            bail!("the clf head has no grad-kind step (it never runs on stream lanes)");
         }
         if model == "clf" {
             // the clf head is a fixed-batch artifact in the compiled
@@ -472,6 +478,13 @@ impl ArtifactSpec {
                     pspecs.iter().map(|p| t_f32(&format!("{prefix}{}", p.name), &p.shape)),
                 );
             }
+        }
+        if kind == "grad" {
+            // gradients come back in param-spec order, one per parameter,
+            // so the coordinator can zip them against its bank directly
+            outputs.extend(
+                pspecs.iter().map(|p| t_f32(&format!("grad_{}", p.name), &p.shape)),
+            );
         }
         outputs.extend(builtin_output_specs(dims, batch));
         Ok(ArtifactSpec {
@@ -662,7 +675,25 @@ mod tests {
                 .map(|t| t.name.as_str())
                 .collect();
             assert_eq!(i32s, ["c_src_match", "c_dst_match", "c_neg_match"]);
+
+            // grad kind: eval-shaped inputs (params + data, no optimizer
+            // state, no lr/step_t), per-param gradients ahead of the step
+            // outputs in param-spec order
+            let grad = ArtifactSpec::host(m.dims, model, 100, "grad").unwrap();
+            assert_eq!(grad.inputs.len(), eval.inputs.len());
+            assert_eq!(grad.inputs[0].name, "time_omega");
+            assert_eq!(grad.inputs[n_params].name, "u_self_mem");
+            assert_eq!(grad.inputs.last().unwrap().name, "pres_on");
+            assert_eq!(grad.outputs.len(), n_params + eval.outputs.len());
+            assert_eq!(grad.outputs[0].name, "grad_time_omega");
+            assert_eq!(grad.outputs[n_params].name, "u_sbar");
+            for (g, p) in grad.outputs[..n_params].iter().zip(m.param_specs(model).unwrap()) {
+                assert_eq!(g.name, format!("grad_{}", p.name));
+                assert_eq!(g.shape, p.shape, "grad shape mirrors its parameter");
+            }
         }
+        // the clf head never runs on stream lanes — no grad-kind ABI
+        assert!(ArtifactSpec::host(m.dims, "clf", m.dims.clf_batch, "grad").is_err());
         // clf is fixed-batch: the right size resolves, others error early
         assert!(ArtifactSpec::host(m.dims, "clf", m.dims.clf_batch, "train").is_ok());
         let err = ArtifactSpec::host(m.dims, "clf", 64, "eval").unwrap_err().to_string();

@@ -17,6 +17,8 @@
 //! ```text
 //!   train:  params..., adam_m..., adam_v..., data..., lr, step_t
 //!        -> params'..., adam_m'..., adam_v'..., step outputs...
+//!   grad:   params..., data...
+//!        -> grad_<param>..., step outputs...
 //!   eval:   params..., data...  ->  step outputs...
 //! ```
 //!
@@ -31,6 +33,24 @@
 //! Performance notes (EXPERIMENTS.md §Perf): parameters and optimizer state
 //! stay resident as literals that thread from one step's outputs into the
 //! next step's inputs — only batch data is re-staged per step.
+//!
+//! ## The parameter-chain contract
+//!
+//! "train" fuses forward + backward + Adam, so whoever runs it owns the
+//! whole optimizer step and the next step *must* consume its outputs —
+//! the chain is exact by construction (one step in flight, the
+//! `param_staleness = 0` regimes). "grad" (host backend only) splits that
+//! fusion: it stops after gradient emission, takes no Adam state and no
+//! trailing `lr`/`step_t`, and the **coordinator** owns the optimizer,
+//! applying [`host_step::adam_update`] (β1 = 0.9, β2 = 0.999, ε = 1e-8,
+//! bias-corrected by `step_t`) strictly in plan order as steps commit.
+//! The two decompositions are bit-identical per step — "grad" + a
+//! coordinator-side `adam_update` reproduces "train"'s updated bank
+//! exactly (unit-tested in `host_step.rs`) — which is what lets the
+//! relaxed multi-stream loop (`--param-staleness`, `pipeline/stream.rs`)
+//! run several grad steps concurrently against cloned snapshots while the
+//! committed parameter sequence stays the plan-order Adam chain, merely
+//! evaluated on gradients up to `min(p, streams - 1)` commits stale.
 //!
 //! ## The Send boundary
 //!

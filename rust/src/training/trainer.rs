@@ -76,6 +76,12 @@ pub struct EpochReport {
     /// this epoch: 0 when exact (staleness 0 or sequential), bounded by
     /// `pipeline.bounded_staleness` otherwise.
     pub splice_lag_max: usize,
+    /// Largest number of plan-order Adam commits any step's parameter
+    /// snapshot lagged behind this epoch: 0 in the exact chain
+    /// (`param_staleness = 0`, or any single-stream loop), exactly
+    /// `min(param_staleness, exec_streams - 1)` once the relaxed chain's
+    /// in-flight window fills.
+    pub param_lag_max: usize,
     pub events_per_sec: f64,
     pub gamma: f32,
     /// Per-stage per-step p50/p95/p99 from the epoch's latency histograms.
@@ -112,6 +118,7 @@ impl EpochReport {
             ("assemble_hidden_secs", Json::finite(self.assemble_hidden_secs)),
             ("device_idle_frac", Json::finite(self.device_idle_frac)),
             ("splice_lag_max", Json::num(self.splice_lag_max as f64)),
+            ("param_lag_max", Json::num(self.param_lag_max as f64)),
             ("events_per_sec", Json::finite(self.events_per_sec)),
             ("gamma", Json::finite(self.gamma as f64)),
             (
@@ -213,6 +220,11 @@ pub struct Trainer {
     /// Non-finite pos/neg logits seen in training steps this epoch
     /// (telemetry; reset by `train_epoch`).
     nan_logits: u64,
+    /// Fault-injection hook for the epoch error-path tests: when set to
+    /// `Some(i)`, the stream submit for plan index `i` truncates its
+    /// payload so the lane rejects the step mid-epoch. Never set outside
+    /// tests; `None` is a no-op on the hot path.
+    pub exec_fault_at: Option<usize>,
 }
 
 impl Trainer {
@@ -293,6 +305,7 @@ impl Trainer {
             iteration_ap: Vec::new(),
             iterations: 0,
             nan_logits: 0,
+            exec_fault_at: None,
             engine,
             dataset,
         })
@@ -356,7 +369,11 @@ impl Trainer {
 
         let (results, splice_lag_max) = if self.cfg.pipeline.depth > 0 && n_train > 1 {
             if self.cfg.pipeline.exec_streams > 1 {
-                self.run_multistream_epoch(epoch, n_train, &mut timer)?
+                if self.cfg.pipeline.param_staleness > 0 {
+                    self.run_relaxed_multistream_epoch(epoch, n_train, &mut timer)?
+                } else {
+                    self.run_multistream_epoch(epoch, n_train, &mut timer)?
+                }
             } else {
                 self.run_pipelined_epoch(epoch, n_train, &mut timer)?
             }
@@ -402,6 +419,7 @@ impl Trainer {
             assemble_hidden_secs: timer.assemble_hidden().as_secs_f64(),
             device_idle_frac: timer.device_idle_fraction(),
             splice_lag_max,
+            param_lag_max: timer.param_lag_max,
             events_per_sec: timer.events_per_sec(executed_events(&self.plans, n_train)),
             gamma: self.state.gamma().unwrap_or(f32::NAN),
             stage_quantiles: timer.stage_quantiles(),
@@ -478,7 +496,7 @@ impl Trainer {
             // ---- WRITEBACK
             let t2 = Instant::now();
             self.state.absorb_outputs(&mut outputs);
-            let metrics = self.consume_step_outputs(&spec, &outputs, i % slots, i, true)?;
+            let metrics = self.consume_step_outputs(&spec, &outputs, i % slots, i)?;
             let took = t2.elapsed();
             timer.add_writeback(took);
             trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
@@ -504,7 +522,11 @@ impl Trainer {
     /// by the range end), and step `i+1` is only submitted after step
     /// `i`'s outputs returned the parameter bank — the parameter chain
     /// stays exact, so at most one step is mid-flight and the lanes hide
-    /// *coordinator* work, never relax freshness.
+    /// *coordinator* work, never relax freshness. This is the
+    /// `param_staleness = 0` default; see
+    /// [`Trainer::run_relaxed_multistream_epoch`] for the bounded-lag
+    /// sibling that keeps `min(p, streams - 1) + 1` steps genuinely in
+    /// flight.
     ///
     /// The parameters + Adam state thread through the epoch as a plain
     /// [`PlainArg`] bank: exported from `state` once at epoch start, moved
@@ -565,6 +587,7 @@ impl Trainer {
         // initial memory view — the serial loop's iteration-1 fill
         self.recv_install_splice(&mut pf, 1, timer)?;
         timer.record_splice_lag(0); // batch 1 splices exactly
+        timer.record_param_lag(0); // exact chain: every snapshot is current
         let job =
             self.submit_train_slot(&streams, 1, std::mem::take(&mut bank), step0 + 1, timer)?;
         commits.push(1, job);
@@ -609,6 +632,7 @@ impl Trainer {
             let outputs = plain_to_literals(&step_outs, &spec.outputs[3 * n..])?;
             timer.writeback += t1.elapsed();
             if i < last {
+                timer.record_param_lag(0); // step i+1 sees all i commits
                 let job = self.submit_train_slot(
                     &streams,
                     i + 1,
@@ -622,7 +646,7 @@ impl Trainer {
             // ---- WRITEBACK i, strictly in plan order
             let t2 = Instant::now();
             let metrics =
-                self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i, true)?;
+                self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i)?;
             let took = t2.elapsed();
             timer.add_writeback(took);
             trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
@@ -655,6 +679,254 @@ impl Trainer {
         }
         self.state.step = step0 + results.len() as u64;
         Ok((results, splice_lag_max))
+    }
+
+    /// The relaxed multi-stream epoch body (`param_staleness = p >= 1`,
+    /// `exec_streams = s >= 2`, host backend): a window of
+    /// `W = min(p, s - 1) + 1` steps is *genuinely* in flight at once.
+    /// Lanes run the "grad" step kind — forward + backward only, no fused
+    /// Adam — against a parameter snapshot cloned at submission; the
+    /// coordinator owns the optimizer and applies [`adam_update`] strictly
+    /// in plan order as each step commits, so step `j` executes against
+    /// params missing at most `W - 1 = min(p, s - 1)` plan-order commits
+    /// (the `param_lag` histogram's witness):
+    ///
+    /// ```text
+    ///   wait i → Adam i → WB i → splice i+1+k → submit i+W (params after i)
+    /// ```
+    ///
+    /// The schedule — which step runs against which parameter version and
+    /// which memory view — is a pure function of `(n_train, k, p, s)`:
+    /// submissions and commits happen at fixed loop positions, never in
+    /// response to lane timing, so two runs of the same config are
+    /// bit-identical even though lanes race. The memory-splice schedule is
+    /// exactly the serial/exact loop's (batch `j` lags `min(k, j - 1)`
+    /// commits); only the parameter chain is relaxed. Config validation
+    /// guarantees `W - 1 <= bounded_staleness`, which is what makes batch
+    /// `i + W` already spliced when it is submitted.
+    ///
+    /// Like the exact loop, `self.state` (params, Adam moments, step
+    /// counter) is read once at epoch start and written once at successful
+    /// epoch end — the working banks live in coordinator-local
+    /// `Vec<Vec<f32>>`s — so a mid-epoch error (dead lane, bad payload)
+    /// leaves `ModelState` at its consistent epoch-start values.
+    ///
+    /// [`adam_update`]: crate::runtime::host_step::adam_update
+    fn run_relaxed_multistream_epoch(
+        &mut self,
+        epoch: usize,
+        n_train: usize,
+        timer: &mut EpochTimer,
+    ) -> Result<(Vec<(f64, f64, f64, f64)>, usize)> {
+        let stale = self.cfg.pipeline.bounded_staleness;
+        let window = self
+            .cfg
+            .pipeline
+            .param_staleness
+            .min(self.cfg.pipeline.exec_streams - 1)
+            + 1;
+        // validate() enforces this; re-check because benches/tests mutate
+        // cfg.pipeline after construction
+        anyhow::ensure!(
+            window - 1 <= stale,
+            "param_staleness window holds {} commits in flight but bounded_staleness = {} \
+             cannot pre-splice that far ahead",
+            window - 1,
+            stale
+        );
+        let grad_step = self
+            .engine
+            .step(&self.cfg.model, self.cfg.batch_size, "grad")
+            .context("loading grad step")?;
+        let spec = grad_step.spec.clone();
+        let host_step = grad_step.host_step().ok_or_else(|| {
+            anyhow::anyhow!(
+                "param_staleness = {} requires the host EXEC backend: PJRT handles are \
+                 not Send, so grad steps cannot run on stream lanes",
+                self.cfg.pipeline.param_staleness
+            )
+        })?;
+        let streams = StreamPool::new(self.cfg.pipeline.exec_streams, host_step)?;
+        let ctx = self.prep_context(epoch);
+        let mut pf = Prefetcher::spawn(ctx, 1..n_train, self.cfg.pipeline.depth)?;
+        let mut commits = CommitQueue::new();
+        let mut results = Vec::with_capacity(n_train.saturating_sub(1));
+        let mut splice_lag_max = 0usize;
+        let n = self.state.len();
+        let last = n_train - 1;
+        let step0 = self.state.step;
+
+        // coordinator-owned working banks: cloned params travel into each
+        // job, gradients come back, Adam applies here in strict plan order
+        let export = |lits: &[Literal]| -> Result<Vec<Vec<f32>>> {
+            lits.iter()
+                .map(|lit| {
+                    let mut v = vec![0.0f32; lit.element_count()];
+                    lit.copy_raw_to(&mut v)?;
+                    Ok(v)
+                })
+                .collect()
+        };
+        let mut params = export(&self.state.params)?;
+        let mut adam_m = export(&self.state.adam_m)?;
+        let mut adam_v = export(&self.state.adam_v)?;
+
+        // ---- prologue: batch 1 splices exactly, the memory window
+        // pre-splices 2..=1+k against the initial view (the serial loop's
+        // iteration-1 fill), then the first W steps go in flight against
+        // params v0 — step j's snapshot misses its j - 1 predecessors
+        self.recv_install_splice(&mut pf, 1, timer)?;
+        timer.record_splice_lag(0);
+        let mut hi = 1usize; // highest plan index spliced so far
+        while hi < (1 + stale).min(last) {
+            let next = hi + 1;
+            self.recv_install_splice(&mut pf, next, timer)?;
+            splice_lag_max = splice_lag_max.max(next - 1);
+            timer.record_splice_lag(next - 1);
+            hi = next;
+        }
+        for j in 1..=window.min(last) {
+            timer.record_param_lag(j - 1);
+            let job = self.submit_grad_slot(&streams, j, &spec, &params, timer)?;
+            commits.push(j, job);
+        }
+
+        for i in 1..n_train {
+            // ---- ordered commit: wait for step i (always the queue front)
+            let t0 = Instant::now();
+            let done = commits.wait_next()?;
+            let waited = t0.elapsed();
+            timer.add_exec_wait(waited);
+            trace::record_span(Stage::CommitWait, t0, t0 + waited, i as u64);
+            anyhow::ensure!(
+                done.seq == i,
+                "commit queue returned step {}, expected {i}",
+                done.seq
+            );
+            timer.record_exec(done.stream, done.started, done.finished);
+            let mut outs = done
+                .outputs
+                .with_context(|| format!("EXEC stream step {i}"))?;
+            anyhow::ensure!(
+                outs.len() == spec.outputs.len(),
+                "EXEC stream step {i}: got {} outputs, ABI expects {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+
+            // ---- the coordinator's Adam commit, strictly in plan order:
+            // gradients are the leading n outputs of the grad ABI
+            let t1 = Instant::now();
+            let step_outs = outs.split_off(n);
+            let mut grads = Vec::with_capacity(n);
+            for (gi, g) in outs.into_iter().enumerate() {
+                match g {
+                    PlainArg::F32(v) => grads.push(v),
+                    PlainArg::I32(_) => anyhow::bail!(
+                        "EXEC stream step {i}: gradient output {} is not f32",
+                        spec.outputs[gi].name
+                    ),
+                }
+            }
+            crate::runtime::host_step::adam_update(
+                &mut params,
+                &grads,
+                &mut adam_m,
+                &mut adam_v,
+                self.cfg.lr,
+                (step0 + i as u64) as f32,
+            );
+            let outputs = plain_to_literals(&step_outs, &spec.outputs[n..])?;
+            timer.writeback += t1.elapsed();
+
+            // ---- WRITEBACK i, strictly in plan order
+            let t2 = Instant::now();
+            let metrics = self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i)?;
+            let took = t2.elapsed();
+            timer.add_writeback(took);
+            trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
+            results.push(metrics);
+
+            // ---- top up the memory staleness window: batch i+1+k sees
+            // commits <= i, exactly the serial loop's iteration-(i+1) fill
+            while hi < (i + 1 + stale).min(last) {
+                let next = hi + 1;
+                self.recv_install_splice(&mut pf, next, timer)?;
+                splice_lag_max = splice_lag_max.max(next - (i + 1));
+                timer.record_splice_lag(next - (i + 1));
+                hi = next;
+            }
+
+            // ---- refill the in-flight window: step i+W snapshots the
+            // params with commits 1..=i applied — lag W-1 = min(p, s-1)
+            if i + window <= last {
+                timer.record_param_lag(window - 1);
+                let job = self.submit_grad_slot(&streams, i + window, &spec, &params, timer)?;
+                commits.push(i + window, job);
+            }
+        }
+
+        // ---- single state import on success (eval and reporting read
+        // `state`; an error above leaves it at the epoch-start values)
+        for (dst, src) in [
+            (&mut self.state.params, &params),
+            (&mut self.state.adam_m, &adam_m),
+            (&mut self.state.adam_v, &adam_v),
+        ] {
+            for ((lit, vals), tspec) in dst.iter_mut().zip(src).zip(&spec.inputs[..n]) {
+                *lit = crate::runtime::engine::lit_f32(vals, &tspec.shape)?;
+            }
+        }
+        self.state.step = step0 + results.len() as u64;
+        Ok((results, splice_lag_max))
+    }
+
+    /// Stage host slot `i % slots` as plain payloads behind a *cloned*
+    /// parameter snapshot and put the grad step in flight on a
+    /// [`StreamPool`] lane. Unlike [`Trainer::submit_train_slot`] the bank
+    /// is copied, not moved — that copy is exactly what lets
+    /// `min(p, streams - 1) + 1` steps share lanes concurrently — and the
+    /// grad ABI takes no trailing lr / step_t (the coordinator owns the
+    /// optimizer step). Pack time lands in the assemble bucket.
+    fn submit_grad_slot(
+        &mut self,
+        streams: &StreamPool,
+        i: usize,
+        spec: &ArtifactSpec,
+        params: &[Vec<f32>],
+        timer: &mut EpochTimer,
+    ) -> Result<std::sync::mpsc::Receiver<crate::pipeline::StepDone>> {
+        let n_params = self.state.len();
+        debug_assert_eq!(params.len(), n_params, "parameter bank out of step");
+        let t0 = Instant::now();
+        let mut args: Vec<PlainArg> = params.iter().map(|v| PlainArg::F32(v.clone())).collect();
+        args.extend(self.hosts[i % self.hosts.len()].pack_plain(spec, n_params, 0)?);
+        if self.exec_fault_at == Some(i) {
+            args.pop(); // fault injection: the lane rejects the short payload
+        }
+        timer.add_assemble(t0.elapsed());
+        Ok(streams.submit(i, args))
+    }
+
+    /// Consistency witness over the optimizer-visible state: the Adam step
+    /// counter plus per-tensor f64 sums of params / m / v, in bank order.
+    /// Summing identical bits yields identical doubles, so tests can
+    /// assert "unchanged across a failed epoch" without reaching into the
+    /// literals.
+    pub fn param_state_digest(&self) -> Result<(u64, Vec<f64>)> {
+        let mut sums = Vec::with_capacity(3 * self.state.len());
+        for lit in self
+            .state
+            .params
+            .iter()
+            .chain(self.state.adam_m.iter())
+            .chain(self.state.adam_v.iter())
+        {
+            let mut buf = vec![0.0f32; lit.element_count()];
+            lit.copy_raw_to(&mut buf)?;
+            sums.push(buf.iter().map(|&x| x as f64).sum::<f64>());
+        }
+        Ok((self.state.step, sums))
     }
 
     /// Block for the PREP worker's batch `idx` (stall time accounted),
@@ -713,7 +985,7 @@ impl Trainer {
         // -------- WRITEBACK + metrics
         let t2 = Instant::now();
         self.state.absorb_outputs(&mut outputs);
-        let metrics = self.consume_step_outputs(&spec, &outputs, 0, i, true)?;
+        let metrics = self.consume_step_outputs(&spec, &outputs, 0, i)?;
         let took = t2.elapsed();
         timer.add_writeback(took);
         trace::record_span(Stage::Writeback, t2, t2 + took, i as u64);
@@ -824,23 +1096,32 @@ impl Trainer {
         args.extend(self.hosts[i % self.hosts.len()].pack_plain(spec, 3 * n_params, 2)?);
         args.push(PlainArg::F32(vec![self.cfg.lr]));
         args.push(PlainArg::F32(vec![step_t as f32]));
+        if self.exec_fault_at == Some(i) {
+            args.pop(); // fault injection: the lane rejects the short payload
+        }
         timer.add_assemble(t0.elapsed());
         Ok(streams.submit(i, args))
     }
 
     /// Shared post-step handling: write-back, trackers, metrics. `slot` is
-    /// the host staging the step ran from.
+    /// the host staging the step ran from. `outputs` holds the *step*
+    /// outputs only; the leading ABI block — params/m/v on "train"
+    /// (stripped by `absorb_outputs`), gradients on "grad" (consumed by
+    /// the coordinator's Adam commit), nothing on eval kinds — determines
+    /// the index offset, derived here from the spec's kind.
     fn consume_step_outputs(
         &mut self,
         spec: &ArtifactSpec,
         outputs: &[Literal],
         slot: usize,
         i: usize,
-        train: bool,
     ) -> Result<(f64, f64, f64, f64)> {
-        // output indices are relative to the *step* outputs (train outputs
-        // had params/m/v stripped by absorb_outputs)
-        let off = if train { 3 * self.state.len() } else { 0 };
+        let off = match spec.kind.as_str() {
+            "train" => 3 * self.state.len(),
+            "grad" => self.state.len(),
+            _ => 0,
+        };
+        let train = matches!(spec.kind.as_str(), "train" | "grad");
         let idx = |name: &str| -> Result<usize> { Ok(spec.output_index(name)? - off) };
 
         fetch_f32(&outputs[idx("u_sbar")?], &mut self.sbar_scratch)?;
@@ -938,7 +1219,7 @@ impl Trainer {
             let args: Vec<&Literal> =
                 self.state.params.iter().chain(data_lits.iter()).collect();
             let outputs = self.eval_step.run(&args)?;
-            let (_, _, _, _) = self.consume_step_outputs(&spec, &outputs, 0, i, false)?;
+            let (_, _, _, _) = self.consume_step_outputs(&spec, &outputs, 0, i)?;
             for (j, ev_i) in self.plans[i].range.clone().enumerate() {
                 if ev_i >= lo && ev_i < hi {
                     logits.push((ev_i, self.logit_scratch[0][j], self.logit_scratch[1][j]));

@@ -136,6 +136,18 @@ mod tests {
     }
 
     #[test]
+    fn param_staleness_option_parses_both_spellings() {
+        // `--param-staleness p` relaxes the multi-stream parameter chain;
+        // absent means "0 = exact" decided by the config layer, not here
+        let a = parse(&["train", "--param-staleness", "2"], &[]);
+        assert_eq!(a.usize_opt("param-staleness").unwrap(), Some(2));
+        let b = parse(&["train", "--param-staleness=1"], &[]);
+        assert_eq!(b.usize_opt("param-staleness").unwrap(), Some(1));
+        let c = parse(&["train"], &[]);
+        assert_eq!(c.usize_opt("param-staleness").unwrap(), None);
+    }
+
+    #[test]
     fn pool_workers_option_parses_both_spellings() {
         // `--pool-workers N` sizes the trainer's persistent worker pool;
         // absent means "0 = auto" decided by the config layer, not here

@@ -76,9 +76,9 @@ fn host_pipelined_is_bit_identical_to_sequential() {
     // the host step is a pure function of its literal inputs, so the
     // pipelined loop must reproduce the sequential loop bit for bit
     let mut seq_cfg = host_cfg("tiny", "tgn", 50, true);
-    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut pipe_cfg = host_cfg("tiny", "tgn", 50, true);
-    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut seq = Trainer::from_config(&seq_cfg).unwrap();
     let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
     for e in 0..2 {

@@ -22,9 +22,9 @@ fn cfg(model: &str, pres: bool, batch: usize) -> ExperimentConfig {
 #[test]
 fn depth1_staleness0_is_bit_identical_to_sequential() {
     let mut seq_cfg = cfg("tgn", true, 50);
-    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut pipe_cfg = cfg("tgn", true, 50);
-    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    pipe_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
 
     let mut seq = Trainer::from_config(&seq_cfg).unwrap();
     let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
@@ -49,9 +49,9 @@ fn deeper_lookahead_stays_bit_identical_without_staleness() {
     // PREP never reads memory, so ANY depth with staleness 0 is exact —
     // lookahead only changes when prep work happens, not what it computes.
     let mut a_cfg = cfg("jodie", false, 50);
-    a_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    a_cfg.pipeline = PipelineConfig { depth: 1, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut b_cfg = cfg("jodie", false, 50);
-    b_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    b_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut a = Trainer::from_config(&a_cfg).unwrap();
     let mut b = Trainer::from_config(&b_cfg).unwrap();
     for e in 0..2 {
@@ -67,7 +67,7 @@ fn bounded_staleness_trains_to_finite_loss() {
     // but must stay numerically sane and produce a working model
     let mut c = cfg("tgn", true, 50);
     c.epochs = 3;
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 1 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut tr = Trainer::from_config(&c).unwrap();
     for e in 0..3 {
         let r = tr.train_epoch(e).unwrap();
@@ -83,9 +83,9 @@ fn staleness_zero_stays_bit_identical_and_reports_zero_lag() {
     // metric: every splice is exact (lag 0) and the results are the
     // sequential loop's, bit for bit
     let mut seq_cfg = cfg("tgn", true, 50);
-    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    seq_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut pipe_cfg = cfg("tgn", true, 50);
-    pipe_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    pipe_cfg.pipeline = PipelineConfig { depth: 3, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut seq = Trainer::from_config(&seq_cfg).unwrap();
     let mut pipe = Trainer::from_config(&pipe_cfg).unwrap();
     for e in 0..2 {
@@ -111,7 +111,7 @@ fn staleness_k_views_lag_exactly_k_commits() {
     for k in [1usize, 2] {
         let mut c = cfg("tgn", true, 50);
         c.epochs = 2;
-        c.pipeline = PipelineConfig { depth: k + 1, bounded_staleness: k, pool_workers: 0, exec_streams: 1 };
+        c.pipeline = PipelineConfig { depth: k + 1, bounded_staleness: k, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
         let mut tr = Trainer::from_config(&c).unwrap();
         for e in 0..2 {
             let r = tr.train_epoch(e).unwrap();
@@ -131,7 +131,7 @@ fn staleness_schedule_is_timing_independent() {
     // PREP thread timing, so this could flake apart
     let mut c = cfg("tgn", true, 50);
     c.epochs = 2;
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 1 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut a = Trainer::from_config(&c).unwrap();
     let mut b = Trainer::from_config(&c).unwrap();
     for e in 0..2 {
@@ -155,7 +155,7 @@ fn stream_counts_are_bit_identical_under_staleness() {
         let mut ref_cfg = cfg("tgn", true, 50);
         ref_cfg.epochs = 2;
         ref_cfg.pipeline =
-            PipelineConfig { depth: k + 1, bounded_staleness: k, pool_workers: 0, exec_streams: 1 };
+            PipelineConfig { depth: k + 1, bounded_staleness: k, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
         let mut reference = Trainer::from_config(&ref_cfg).unwrap();
         let mut ref_epochs = Vec::new();
         for e in 0..2 {
@@ -171,6 +171,7 @@ fn stream_counts_are_bit_identical_under_staleness() {
                 bounded_staleness: k,
                 pool_workers: 0,
                 exec_streams: streams,
+                param_staleness: 0,
             };
             let mut tr = Trainer::from_config(&c).unwrap();
             for (e, want) in ref_epochs.iter().enumerate() {
@@ -190,6 +191,11 @@ fn stream_counts_are_bit_identical_under_staleness() {
                     r.splice_lag_max, want.splice_lag_max,
                     "k = {k}, streams = {streams}, epoch {e}: staleness schedule diverged"
                 );
+                assert_eq!(
+                    r.param_lag_max, 0,
+                    "k = {k}, streams = {streams}, epoch {e}: the exact chain must never \
+                     execute a step against stale parameters"
+                );
             }
             // the memory/neighbor/mailbox state machines stayed in lockstep
             assert_eq!(
@@ -204,7 +210,7 @@ fn stream_counts_are_bit_identical_under_staleness() {
 #[test]
 fn multistream_reports_per_stream_execute() {
     let mut c = cfg("tgn", false, 50);
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 2 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 2, param_staleness: 0 };
     let mut tr = Trainer::from_config(&c).unwrap();
     let r = tr.train_epoch(0).unwrap();
     assert!(r.execute_secs > 0.0, "lane busy time must be recorded");
@@ -224,11 +230,177 @@ fn multistream_reports_per_stream_execute() {
 }
 
 #[test]
+fn param_lag_realizes_min_p_streams_minus_one_exactly() {
+    // the relaxed chain's bound is tight AND deterministic: with
+    // param_staleness = p and exec_streams = s the in-flight window holds
+    // min(p, s - 1) + 1 steps, so the largest parameter lag any step
+    // executes against is exactly min(p, s - 1) once the window fills —
+    // not "at most", exactly, because submissions happen at fixed loop
+    // positions, never in response to lane timing
+    for (p, s) in [(1usize, 2usize), (2, 2), (1, 4), (2, 4), (3, 4)] {
+        let want = p.min(s - 1);
+        let k = want.max(1);
+        let mut c = cfg("tgn", true, 50);
+        c.pipeline = PipelineConfig {
+            depth: k + 1,
+            bounded_staleness: k,
+            pool_workers: 0,
+            exec_streams: s,
+            param_staleness: p,
+        };
+        let mut tr = Trainer::from_config(&c).unwrap();
+        for e in 0..2 {
+            let r = tr.train_epoch(e).unwrap();
+            assert_eq!(
+                r.param_lag_max, want,
+                "p = {p}, s = {s}, epoch {e}: param lag must realize min(p, s - 1) exactly"
+            );
+            assert!(r.train_loss.is_finite(), "p = {p}, s = {s}, epoch {e}");
+        }
+    }
+    // streams = 1 runs the inline exact chain: p is a documented no-op
+    let mut c = cfg("tgn", true, 50);
+    c.pipeline = PipelineConfig {
+        depth: 1,
+        bounded_staleness: 0,
+        pool_workers: 0,
+        exec_streams: 1,
+        param_staleness: 3,
+    };
+    let mut tr = Trainer::from_config(&c).unwrap();
+    let r = tr.train_epoch(0).unwrap();
+    assert_eq!(r.param_lag_max, 0, "inline chain is exact regardless of p");
+}
+
+#[test]
+fn relaxed_chain_is_deterministic_across_identical_runs() {
+    // the relaxed schedule must be a pure function of (n_train, k, p,
+    // streams): two fresh trainers produce bit-identical losses, APs and
+    // lag witnesses even though lanes genuinely race for work
+    let mut c = cfg("tgn", true, 50);
+    c.pipeline = PipelineConfig {
+        depth: 3,
+        bounded_staleness: 2,
+        pool_workers: 0,
+        exec_streams: 4,
+        param_staleness: 2,
+    };
+    let mut a = Trainer::from_config(&c).unwrap();
+    let mut b = Trainer::from_config(&c).unwrap();
+    for e in 0..2 {
+        let ra = a.train_epoch(e).unwrap();
+        let rb = b.train_epoch(e).unwrap();
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {e}: relaxed schedule drifted");
+        assert_eq!(ra.train_bce, rb.train_bce, "epoch {e}");
+        assert_eq!(ra.train_ap, rb.train_ap, "epoch {e}");
+        assert_eq!(ra.coherence, rb.coherence, "epoch {e}");
+        assert_eq!(ra.gamma, rb.gamma, "epoch {e}");
+        assert_eq!(ra.splice_lag_max, rb.splice_lag_max, "epoch {e}");
+        assert_eq!(ra.param_lag_max, rb.param_lag_max, "epoch {e}");
+    }
+    assert_eq!(
+        a.eval_val().unwrap(),
+        b.eval_val().unwrap(),
+        "post-training memory state diverged between identical relaxed runs"
+    );
+}
+
+#[test]
+fn relaxed_chain_clamps_p_to_lanes_so_excess_p_is_schedule_invariant() {
+    // p is clamped by the lane count: at s = 2 both p = 1 and p = 3 keep
+    // the same W = 2 window, so the schedules — and therefore the results
+    // — must be bit-identical
+    let mk = |p: usize| {
+        let mut c = cfg("tgn", true, 50);
+        c.pipeline = PipelineConfig {
+            depth: 2,
+            bounded_staleness: 1,
+            pool_workers: 0,
+            exec_streams: 2,
+            param_staleness: p,
+        };
+        Trainer::from_config(&c).unwrap()
+    };
+    let mut a = mk(1);
+    let mut b = mk(3);
+    for e in 0..2 {
+        let ra = a.train_epoch(e).unwrap();
+        let rb = b.train_epoch(e).unwrap();
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {e}: clamped p changed the schedule");
+        assert_eq!(ra.param_lag_max, rb.param_lag_max, "epoch {e}");
+        assert_eq!(ra.param_lag_max, 1, "epoch {e}: both clamp to lag 1");
+    }
+    assert_eq!(a.eval_val().unwrap(), b.eval_val().unwrap());
+}
+
+#[test]
+fn relaxed_chain_trains_to_working_model() {
+    // bounded gradient delay is allowed to change numerics but must not
+    // wreck convergence: the quality gate behind the staleness study
+    let mut c = cfg("tgn", true, 50);
+    c.epochs = 3;
+    c.pipeline = PipelineConfig {
+        depth: 3,
+        bounded_staleness: 2,
+        pool_workers: 0,
+        exec_streams: 4,
+        param_staleness: 2,
+    };
+    let mut tr = Trainer::from_config(&c).unwrap();
+    for e in 0..3 {
+        let r = tr.train_epoch(e).unwrap();
+        assert!(r.train_loss.is_finite(), "epoch {e} loss {}", r.train_loss);
+    }
+    let ap = tr.eval_val().unwrap();
+    assert!(ap > 0.5, "relaxed-chain val AP collapsed: {ap}");
+}
+
+#[test]
+fn mid_epoch_fault_leaves_model_state_at_epoch_start() {
+    // the error-path contract for BOTH multi-stream loops: a lane
+    // rejecting a step mid-epoch must error the epoch without touching
+    // ModelState — params, Adam moments and the step counter stay at
+    // their consistent epoch-start values, and training can resume as if
+    // the failed epoch never happened
+    for p in [0usize, 2] {
+        let mut c = cfg("tgn", true, 50);
+        c.pipeline = PipelineConfig {
+            depth: 3,
+            bounded_staleness: 2,
+            pool_workers: 0,
+            exec_streams: if p == 0 { 2 } else { 4 },
+            param_staleness: p,
+        };
+        let mut tr = Trainer::from_config(&c).unwrap();
+        let before = tr.param_state_digest().unwrap();
+        tr.exec_fault_at = Some(5);
+        let err = tr.train_epoch(0).unwrap_err().to_string();
+        assert!(err.contains("step 5"), "p = {p}: unexpected error: {err}");
+        assert_eq!(
+            tr.param_state_digest().unwrap(),
+            before,
+            "p = {p}: a failed epoch must not move ModelState"
+        );
+
+        // recovery: the next epoch must match a fresh trainer bit-for-bit
+        tr.exec_fault_at = None;
+        let r = tr.train_epoch(0).unwrap();
+        let mut fresh = Trainer::from_config(&c).unwrap();
+        let want = fresh.train_epoch(0).unwrap();
+        assert_eq!(
+            r.train_loss, want.train_loss,
+            "p = {p}: post-fault epoch diverged from a fresh trainer"
+        );
+        assert_eq!(r.train_ap, want.train_ap, "p = {p}");
+    }
+}
+
+#[test]
 fn stream_misconfigurations_are_rejected_with_clear_errors() {
     // streams without a staleness window: nothing is pre-spliced, so lanes
     // could never overlap anything — rejected at validation
     let mut c = cfg("tgn", true, 50);
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 2 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 2, param_staleness: 0 };
     let err = match Trainer::from_config(&c) {
         Ok(_) => panic!("streams without a staleness window must be rejected"),
         Err(e) => e.to_string(),
@@ -239,7 +411,7 @@ fn stream_misconfigurations_are_rejected_with_clear_errors() {
     // Send) — the config layer rejects the explicit request up front
     let mut c = cfg("tgn", true, 50);
     c.exec = "pjrt".into();
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 2 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 1, pool_workers: 0, exec_streams: 2, param_staleness: 0 };
     let err = c.validate().unwrap_err().to_string();
     assert!(err.contains("host EXEC backend"), "unexpected error: {err}");
 }
@@ -247,7 +419,7 @@ fn stream_misconfigurations_are_rejected_with_clear_errors() {
 #[test]
 fn overlap_metrics_are_reported_when_pipelined() {
     let mut c = cfg("tgn", false, 50);
-    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    c.pipeline = PipelineConfig { depth: 2, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut tr = Trainer::from_config(&c).unwrap();
     tr.train_epoch(0).unwrap(); // warm the executable cache
     let r = tr.train_epoch(1).unwrap();
@@ -260,7 +432,7 @@ fn overlap_metrics_are_reported_when_pipelined() {
     );
     assert!((0.0..=1.0).contains(&r.device_idle_frac));
     // sequential epochs report no overlap
-    tr.cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    tr.cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let r = tr.train_epoch(2).unwrap();
     assert_eq!(r.prep_secs, 0.0);
     assert_eq!(r.assemble_hidden_secs, 0.0);

@@ -256,9 +256,9 @@ fn training_is_bit_identical_for_every_pool_worker_count() {
 fn sharded_training_matches_flat_in_sequential_mode_too() {
     // depth = 0 exercises the inline-PREP path's router plumbing
     let mut a_cfg = cfg("jodie", false, 50);
-    a_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    a_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     let mut b_cfg = cfg("jodie", false, 50);
-    b_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1 };
+    b_cfg.pipeline = PipelineConfig { depth: 0, bounded_staleness: 0, pool_workers: 0, exec_streams: 1, param_staleness: 0 };
     b_cfg.memory_shards = 4;
     let mut a = Trainer::from_config(&a_cfg).unwrap();
     let mut b = Trainer::from_config(&b_cfg).unwrap();

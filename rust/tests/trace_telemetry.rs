@@ -27,6 +27,7 @@ fn cfg(streams: usize) -> ExperimentConfig {
         bounded_staleness: 1,
         pool_workers: 0,
         exec_streams: streams,
+        param_staleness: 0,
     };
     c
 }
