@@ -1,0 +1,112 @@
+//! GEMM kernel throughput: naive vs blocked across the host step's
+//! dominant matmul shapes, swept over pool worker counts.
+//!
+//!     cargo bench --bench gemm_kernels [-- --quick]
+//!
+//! Lands in `BENCH_gemm.json`: per-case kernel wall time and GFLOP/s. Two
+//! acceptance signals live here: blocked must beat naive at `w1` (a
+//! single-lane pool — the speedup is the microkernel's, not the pool's)
+//! AND at `w4` (the kernels scale across lanes). Shapes are the step-ABI
+//! sizes at wiki batch 200 (`u = 2b = 400` update rows, `u * k_nbr = 2000`
+//! attention rows) so the numbers transfer to `benches/host_exec.rs`.
+
+use std::sync::Arc;
+
+use pres::runtime::gemm::{self, Act, GemmBackendKind};
+use pres::util::bench::{black_box, Bench};
+use pres::util::json::Json;
+use pres::util::pool::WorkerPool;
+use pres::util::rng::Pcg32;
+
+fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * 0.3).collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut bench = Bench::new("gemm_kernels");
+    bench.header();
+    let mut cases = Vec::new();
+
+    // (site, op, m-or-r, k, n): the step-ABI shapes. NN rows fuse
+    // bias + relu (the message-MLP epilogue); NT/TN are the backward
+    // shapes of the first MLP layer (dX = dH @ W^T, dW = X^T @ dH).
+    let shapes: &[(&str, &str, usize, usize, usize)] = &[
+        ("msg_h1", "nn", 400, 160, 128),
+        ("msg_out", "nn", 400, 128, 64),
+        ("gru_gates", "nn", 400, 64, 192),
+        ("att_qkv", "nn", 2000, 96, 64),
+        ("clf_h1", "nn", 200, 128, 128),
+        ("msg_h1_dx", "nt", 400, 128, 160),
+        ("msg_h1_dw", "tn", 400, 160, 128),
+    ];
+    let workers: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
+
+    for &(site, op, m, k, n) in shapes {
+        let mut rng = Pcg32::new(42);
+        // NT reads b as [n, k]; TN reads a as [r=m, k-as-rows] — sized for
+        // the widest layout so every op can share the same buffers
+        let a = randv(&mut rng, m * k.max(n));
+        let b = randv(&mut rng, k.max(m) * n);
+        let bias = randv(&mut rng, n);
+        let mut out = vec![0.0f32; m.max(k) * n];
+        for &w in workers {
+            let pool = Arc::new(WorkerPool::new(w));
+            for g in [GemmBackendKind::Naive, GemmBackendKind::Blocked] {
+                let label = format!("{site}_w{w}_{}", g.name());
+                let flops: f64;
+                let ns = match op {
+                    "nn" => {
+                        flops = 2.0 * m as f64 * k as f64 * n as f64;
+                        let (a, b, o) = (&a[..m * k], &b[..k * n], &mut out[..m * n]);
+                        bench
+                            .run(&label, || {
+                                gemm::mm_nn(g, &pool, a, b, m, k, n, Some(&bias), Act::Relu, o);
+                                black_box(o[0]);
+                            })
+                            .mean_ns
+                    }
+                    "nt" => {
+                        flops = 2.0 * m as f64 * k as f64 * n as f64;
+                        let (a, b, o) = (&a[..m * k], &b[..n * k], &mut out[..m * n]);
+                        bench
+                            .run(&label, || {
+                                gemm::mm_nt(g, &pool, a, b, m, k, n, o);
+                                black_box(o[0]);
+                            })
+                            .mean_ns
+                    }
+                    "tn" => {
+                        // out[k, n] += a[m, k]^T @ b[m, n]
+                        flops = 2.0 * m as f64 * k as f64 * n as f64;
+                        let (a, b, o) = (&a[..m * k], &b[..m * n], &mut out[..k * n]);
+                        bench
+                            .run(&label, || {
+                                gemm::mm_tn_acc(g, &pool, a, b, m, k, n, o);
+                                black_box(o[0]);
+                            })
+                            .mean_ns
+                    }
+                    other => unreachable!("unknown op {other}"),
+                };
+                cases.push(Json::obj(vec![
+                    ("label", Json::str(&label)),
+                    ("site", Json::str(site)),
+                    ("op", Json::str(op)),
+                    ("m", Json::num(m as f64)),
+                    ("k", Json::num(k as f64)),
+                    ("n", Json::num(n as f64)),
+                    ("pool_workers", Json::num(w as f64)),
+                    ("gemm", Json::str(g.name())),
+                    ("kernel_ns", Json::num(ns)),
+                    ("gflops", Json::num(flops / ns)),
+                ]));
+            }
+        }
+    }
+
+    bench.write_csv().unwrap();
+    let report = bench.report_json(cases);
+    std::fs::write("BENCH_gemm.json", report.to_string_pretty()).unwrap();
+    pres::log_info!("-> wrote BENCH_gemm.json");
+}

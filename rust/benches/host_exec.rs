@@ -7,13 +7,15 @@
 //! an events/s figure (batch events per step). The worker sweep is the
 //! acceptance signal that host EXEC actually exercises the PR 3 worker
 //! pool — steps/s should improve from 1 lane to multiple lanes at the
-//! larger batch sizes.
+//! larger batch sizes. The gemm sweep (naive vs blocked kernels) is the
+//! end-to-end acceptance signal for the blocked GEMM backend: steps/s
+//! should improve under `blocked` at every worker count.
 
 use std::sync::Arc;
 
 use pres::model::ModelState;
 use pres::runtime::engine::{lit_f32, lit_i32};
-use pres::runtime::{DType, Engine};
+use pres::runtime::{DType, Engine, GemmBackendKind};
 use pres::util::bench::{black_box, Bench};
 use pres::util::json::Json;
 use pres::util::pool::WorkerPool;
@@ -76,37 +78,41 @@ fn main() {
     for model in ["tgn", "jodie", "apan"] {
         for &b in batches {
             for &w in workers {
-                let engine = Engine::host();
-                engine.set_host_pool(Arc::new(WorkerPool::new(w)));
-                let step = engine.step(model, b, "train").unwrap();
-                let state = ModelState::init(&engine, model, 0).unwrap();
-                let n = state.len();
-                let data = data_literals(&step.spec, 3 * n, 7);
-                let params = clone_f32(&state.params);
-                let m = clone_f32(&state.adam_m);
-                let v = clone_f32(&state.adam_v);
-                let args: Vec<&Literal> = params
-                    .iter()
-                    .chain(m.iter())
-                    .chain(v.iter())
-                    .chain(data.iter())
-                    .collect();
-                let label = format!("{model}_b{b}_w{w}");
-                let ns = bench
-                    .run(&label, || {
-                        black_box(step.run(&args).unwrap().len());
-                    })
-                    .mean_ns;
-                let steps_per_sec = 1e9 / ns;
-                cases.push(Json::obj(vec![
-                    ("label", Json::str(&label)),
-                    ("model", Json::str(model)),
-                    ("batch", Json::num(b as f64)),
-                    ("pool_workers", Json::num(w as f64)),
-                    ("step_ns", Json::num(ns)),
-                    ("steps_per_sec", Json::num(steps_per_sec)),
-                    ("events_per_sec", Json::num(steps_per_sec * b as f64)),
-                ]));
+                for g in [GemmBackendKind::Naive, GemmBackendKind::Blocked] {
+                    let engine = Engine::host();
+                    engine.set_host_pool(Arc::new(WorkerPool::new(w)));
+                    engine.set_host_gemm(g);
+                    let step = engine.step(model, b, "train").unwrap();
+                    let state = ModelState::init(&engine, model, 0).unwrap();
+                    let n = state.len();
+                    let data = data_literals(&step.spec, 3 * n, 7);
+                    let params = clone_f32(&state.params);
+                    let m = clone_f32(&state.adam_m);
+                    let v = clone_f32(&state.adam_v);
+                    let args: Vec<&Literal> = params
+                        .iter()
+                        .chain(m.iter())
+                        .chain(v.iter())
+                        .chain(data.iter())
+                        .collect();
+                    let label = format!("{model}_b{b}_w{w}_{}", g.name());
+                    let ns = bench
+                        .run(&label, || {
+                            black_box(step.run(&args).unwrap().len());
+                        })
+                        .mean_ns;
+                    let steps_per_sec = 1e9 / ns;
+                    cases.push(Json::obj(vec![
+                        ("label", Json::str(&label)),
+                        ("model", Json::str(model)),
+                        ("batch", Json::num(b as f64)),
+                        ("pool_workers", Json::num(w as f64)),
+                        ("gemm", Json::str(g.name())),
+                        ("step_ns", Json::num(ns)),
+                        ("steps_per_sec", Json::num(steps_per_sec)),
+                        ("events_per_sec", Json::num(steps_per_sec * b as f64)),
+                    ]));
+                }
             }
         }
     }

@@ -100,6 +100,11 @@ pub struct ExperimentConfig {
     /// EXEC backend: "auto" (default — PJRT when `artifacts_dir` holds a
     /// manifest, else the pure-Rust host step), "host", or "pjrt".
     pub exec: String,
+    /// Host GEMM kernel backend: "auto" (default — resolves to blocked),
+    /// "naive" (original scalar loops, bit-identical to pre-gemm builds),
+    /// or "blocked" (cache-blocked SIMD-width panels; see
+    /// `runtime/gemm.rs` for the tolerance contract). Ignored by PJRT.
+    pub gemm: String,
     /// Evaluate on val split every n epochs (0 = only at the end).
     pub eval_every: usize,
     /// Reuse batch plans across epochs (false rebuilds per epoch — the
@@ -137,6 +142,7 @@ impl ExperimentConfig {
             anchor_fraction: 1.0,
             artifacts_dir: "artifacts".to_string(),
             exec: "auto".to_string(),
+            gemm: "auto".to_string(),
             eval_every: 0,
             prefetch: true,
             pipeline: PipelineConfig::default(),
@@ -179,6 +185,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.opt("exec") {
             cfg.exec = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("gemm") {
+            cfg.gemm = v.as_str()?.to_string();
         }
         if let Some(v) = j.opt("eval_every") {
             cfg.eval_every = v.as_usize()?;
@@ -235,6 +244,12 @@ impl ExperimentConfig {
         }
         if !["auto", "host", "pjrt"].contains(&self.exec.as_str()) {
             bail!("exec must be one of auto | host | pjrt, got '{}'", self.exec);
+        }
+        if !["auto", "naive", "blocked"].contains(&self.gemm.as_str()) {
+            bail!(
+                "gemm must be one of auto | naive | blocked, got '{}'",
+                self.gemm
+            );
         }
         if self.pipeline.bounded_staleness > 0 && self.pipeline.depth == 0 {
             bail!("bounded_staleness > 0 requires pipeline depth >= 1");
@@ -335,6 +350,10 @@ impl ExperimentConfig {
         }
         if let Some(p) = &self.metrics_out {
             j.set("metrics_out", Json::str(p));
+        }
+        // Same rationale: "auto" is the default, so omit it unless pinned.
+        if self.gemm != "auto" {
+            j.set("gemm", Json::str(&self.gemm));
         }
         j
     }
@@ -514,6 +533,23 @@ mod tests {
         assert!(cfg.validate().is_ok());
         cfg.exec = "tpu".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn gemm_backend_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        assert_eq!(cfg.gemm, "auto"); // default resolves to blocked
+        // omitted from JSON when left at the default, so configs written
+        // by pre-gemm builds keep round-tripping byte-for-byte
+        assert!(!cfg.to_json().to_string().contains("gemm"));
+        cfg.gemm = "naive".into();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.gemm, "naive");
+        cfg.gemm = "blocked".into();
+        assert!(cfg.validate().is_ok());
+        cfg.gemm = "cublas".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("auto | naive | blocked"), "unexpected error: {err}");
     }
 
     #[test]

@@ -83,6 +83,7 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.anchor_fraction = args.f32_or("anchor", 1.0)?;
     cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     cfg.exec = args.get_or("exec", "auto").to_string();
+    cfg.gemm = args.get_or("gemm", "auto").to_string();
     cfg.eval_every = args.usize_or("eval-every", 1)?;
     cfg.prefetch = !args.flag("no-prefetch");
     if let Some(depth) = args.usize_opt("pipeline-depth")? {
@@ -142,6 +143,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             pres::runtime::ExecBackendKind::Host => "host",
         },
         cfg.exec
+    );
+    log_info!(
+        "# gemm: {} kernels (requested '{}')",
+        match trainer.engine.host_gemm() {
+            Some(k) => k.name(),
+            None => "none (pjrt)",
+        },
+        cfg.gemm
     );
     let (pend_frac, pend_pairs) = trainer.pending_summary();
     log_info!(

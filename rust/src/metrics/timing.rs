@@ -70,6 +70,11 @@ pub struct StageHists {
     /// (`param_staleness = 0`); bounded by `min(p, exec_streams - 1)` in
     /// the relaxed chain.
     pub param_lag: LogHistogram,
+    /// Per-call GEMM kernel latency (all host-step matmuls; drained from
+    /// the global recorder in `runtime::gemm` once per epoch via
+    /// [`EpochTimer::absorb_gemm`]). Empty unless metrics are enabled —
+    /// the per-call histogram is only recorded under `--metrics-out`.
+    pub gemm: LogHistogram,
 }
 
 /// p50/p95/p99 for one stage, as surfaced in `EpochReport`.
@@ -120,6 +125,12 @@ pub struct EpochTimer {
     /// EXEC busy intervals as offsets from epoch start, for the union.
     exec_spans: Vec<(Duration, Duration)>,
     pub other: Duration,
+    /// GEMM kernel busy time accrued inside step executions this epoch
+    /// (a subset of `execute`; always-on nanosecond counters in
+    /// `runtime::gemm`, drained once per epoch via [`absorb_gemm`]).
+    ///
+    /// [`absorb_gemm`]: EpochTimer::absorb_gemm
+    pub gemm_busy: Duration,
     epoch_start: Option<Instant>,
     pub total: Duration,
     pub steps: usize,
@@ -209,6 +220,16 @@ impl EpochTimer {
         self.hist.prep.record_duration(d);
     }
 
+    /// Absorb the per-epoch GEMM snapshot drained from the global
+    /// recorders in `runtime::gemm`: `busy` is the epoch's delta of the
+    /// always-on nanosecond counter; `hist` is the per-call latency
+    /// histogram taken via `gemm::take_call_hist` (empty unless metrics
+    /// were enabled for the epoch).
+    pub fn absorb_gemm(&mut self, busy: Duration, hist: &LogHistogram) {
+        self.gemm_busy += busy;
+        self.hist.gemm.merge(hist);
+    }
+
     /// Record the memory-version lag (in commits) one step's splice saw.
     pub fn record_splice_lag(&mut self, lag: usize) {
         self.hist.splice_lag.record(lag as u64);
@@ -239,6 +260,7 @@ impl EpochTimer {
             time_q("prep", &self.hist.prep),
             time_q("assemble", &self.hist.assemble),
             time_q("exec", &self.hist.exec),
+            time_q("gemm", &self.hist.gemm),
             time_q("writeback", &self.hist.writeback),
             time_q("exec_wait", &self.hist.exec_wait),
             time_q("prep_stall", &self.hist.prep_stall),
@@ -502,6 +524,25 @@ mod tests {
         assert_eq!(plag.unit, "commits");
         assert_eq!(plag.count, 2);
         assert_eq!(t.param_lag_max, 2, "max witness tracks the largest recorded lag");
+    }
+
+    #[test]
+    fn absorb_gemm_accrues_busy_and_merges_hist() {
+        let mut t = EpochTimer::default();
+        t.start_epoch();
+        let mut h = LogHistogram::new();
+        h.record(1_000);
+        h.record(50_000);
+        t.absorb_gemm(ms(3), &h);
+        t.absorb_gemm(ms(2), &LogHistogram::new());
+        t.finish_epoch();
+        assert_eq!(t.gemm_busy, ms(5));
+        assert_eq!(t.hist.gemm.count(), 2);
+        let qs = t.stage_quantiles();
+        let g = qs.iter().find(|q| q.stage == "gemm").unwrap();
+        assert_eq!(g.unit, "s");
+        assert_eq!(g.count, 2);
+        assert!(g.p50 > 0.0);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! step's input slots. Measured cost is ~0.2 ms per step at b = 200 vs
 //! ~10 ms of step compute (EXPERIMENTS.md §Perf).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -33,6 +33,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
+use crate::runtime::gemm::GemmBackendKind;
 use crate::runtime::host_step::HostStep;
 use crate::runtime::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 use crate::util::pool::WorkerPool;
@@ -47,8 +48,13 @@ pub enum ExecBackendKind {
 }
 
 enum BackendImpl {
-    Pjrt { client: PjRtClient },
-    Host { pool: RefCell<Arc<WorkerPool>> },
+    Pjrt {
+        client: PjRtClient,
+    },
+    Host {
+        pool: RefCell<Arc<WorkerPool>>,
+        gemm: Cell<GemmBackendKind>,
+    },
 }
 
 /// Process-wide runtime: the manifest + a per-(model, batch, kind) step
@@ -77,7 +83,10 @@ impl Engine {
     /// pool with [`Engine::set_host_pool`]).
     pub fn host() -> Engine {
         Engine {
-            backend: BackendImpl::Host { pool: RefCell::new(WorkerPool::global().clone()) },
+            backend: BackendImpl::Host {
+                pool: RefCell::new(WorkerPool::global().clone()),
+                gemm: Cell::new(GemmBackendKind::Blocked),
+            },
             manifest: Manifest::builtin(),
             cache: RefCell::new(HashMap::new()),
         }
@@ -117,9 +126,28 @@ impl Engine {
     /// call use the new pool; results are lane-count-invariant either way.
     /// No-op on the PJRT backend.
     pub fn set_host_pool(&self, pool: Arc<WorkerPool>) {
-        if let BackendImpl::Host { pool: slot } = &self.backend {
+        if let BackendImpl::Host { pool: slot, .. } = &self.backend {
             *slot.borrow_mut() = pool;
             self.cache.borrow_mut().clear(); // rebuild steps on the new pool
+        }
+    }
+
+    /// Select the GEMM kernel backend (`--gemm`) for host-executed steps.
+    /// Steps created *after* this call dispatch on the new kind; the step
+    /// cache is cleared so stale steps can't mix backends mid-run. No-op
+    /// on the PJRT backend.
+    pub fn set_host_gemm(&self, kind: GemmBackendKind) {
+        if let BackendImpl::Host { gemm, .. } = &self.backend {
+            gemm.set(kind);
+            self.cache.borrow_mut().clear(); // rebuild steps on the new kernels
+        }
+    }
+
+    /// The GEMM backend host steps dispatch on (`None` on PJRT).
+    pub fn host_gemm(&self) -> Option<GemmBackendKind> {
+        match &self.backend {
+            BackendImpl::Host { gemm, .. } => Some(gemm.get()),
+            BackendImpl::Pjrt { .. } => None,
         }
     }
 
@@ -140,13 +168,14 @@ impl Engine {
             return Ok(step.clone());
         }
         let imp = match &self.backend {
-            BackendImpl::Host { pool } => {
+            BackendImpl::Host { pool, gemm } => {
                 let n_params = self.manifest.param_specs(model)?.len();
                 StepImpl::Host(Arc::new(HostStep::new(
                     spec.clone(),
                     self.manifest.dims,
                     n_params,
                     pool.borrow().clone(),
+                    gemm.get(),
                 )))
             }
             BackendImpl::Pjrt { client } => {

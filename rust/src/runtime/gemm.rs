@@ -1,0 +1,923 @@
+//! Blocked + SIMD GEMM backend for host EXEC, with fused bias/activation.
+//!
+//! Every matmul the host step runs (`runtime/host_step.rs`) routes through
+//! the four entry points here — [`mm_nn`], [`mm_nn_acc`], [`mm_nt`],
+//! [`mm_tn_acc`] — plus [`dot`] for the per-head attention scores and the
+//! width-1 decoder/classifier heads. Dispatch is a closed enum
+//! ([`GemmBackendKind`], the PR 3/4 devirtualization pattern: a `match`,
+//! not a vtable), selected per [`HostStep`](crate::runtime::HostStep) via
+//! `--gemm {auto|naive|blocked}`:
+//!
+//! * **Naive** — the original scalar loops, lifted verbatim: ikj
+//!   accumulation for NN, a sequential dot per element for NT, and the
+//!   zero-skipping r-loop for TN-accumulate (relu-sparse gradients make
+//!   the skip worthwhile there). The fused bias/activation epilogue
+//!   applies the exact per-element operation sequence the old separate
+//!   `add_bias` + activation sweeps did, so `--gemm naive` is
+//!   bit-identical to the pre-GEMM-subsystem code.
+//! * **Blocked** — a cache-blocked, register-tiled microkernel: B is
+//!   packed once per call into zero-padded `MR x NR` column panels
+//!   (`[k][NR]` layout, contiguous per panel), and an `MR = 4` by
+//!   `NR = 16` tile of accumulators (`[[f32; 16]; 4]` — fixed-size arrays
+//!   LLVM keeps in SIMD registers and auto-vectorizes at opt-level 2+)
+//!   sweeps the k dimension once per tile. Bias and activation fuse into
+//!   the tile write-back, so no separate output sweep ever happens.
+//!
+//! Both backends fan row panels out on the shared [`WorkerPool`] above the
+//! same `MM_PAR_MIN_ROWS` crossover, and both are **bit-identical across
+//! lane counts**: every output element is accumulated by exactly one lane
+//! in a fixed order, so chunking moves work, never values.
+//!
+//! ## Tolerance contract (naive vs blocked)
+//!
+//! Rust never contracts `a * b + c` into an fma and never reassociates
+//! float sums, so accumulation order fully determines the result:
+//!
+//! * `mm_nn` / `mm_nn_acc` / `mm_nt`: the blocked microkernel gives each
+//!   output element its own accumulator and walks k in ascending order —
+//!   the same per-element order as the naive loops — so these match the
+//!   naive backend *bitwise*.
+//! * `mm_tn_acc`: naive accumulates directly into `out` (`out += a_i*b_i`
+//!   interleaved with the existing value); blocked sums the update into a
+//!   fresh accumulator first and applies one `out += acc`. Same terms,
+//!   different association.
+//! * `dot`: blocked uses eight parallel partial accumulators (chunks of
+//!   8) with a fixed-order horizontal reduction; naive is one sequential
+//!   sum.
+//!
+//! The reordered cases differ by at most a few ulps per element — bounded
+//! by `k * eps * sum_i |a_i * b_i|` with `eps = f32::EPSILON` — and the
+//! property tests below pin every shape against the naive backend with a
+//! per-element tolerance of `1e-5 * (k * max|a| * max|b|) + 1e-6`. Epoch
+//! level, `tests/gemm_equivalence.rs` gates that naive and blocked train
+//! to matching losses/AP within loose tolerance.
+//!
+//! Shapes here are modest (k <= a few hundred for every step ABI shape),
+//! so there is deliberately no k-blocking: an MR-row slab of A plus one
+//! packed B panel fit L1, and skipping the k-split keeps per-element
+//! accumulation order equal to naive's (the bitwise guarantee above).
+//!
+//! ## Timing
+//!
+//! Every `mm_*` call accrues wall time + call count into process-global
+//! relaxed atomics ([`timing_totals`]) — cheap enough to stay always-on —
+//! and, when telemetry metrics are enabled (`--metrics-out`), records the
+//! per-call latency into a global histogram drained per epoch by the
+//! trainer ([`take_call_hist`]) into the `gemm` stage histogram
+//! (`metrics/timing.rs`). `dot` is *not* timed: it runs per attention
+//! score, where a clock read would cost more than the kernel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::trace::telemetry::metrics_enabled;
+use crate::trace::LogHistogram;
+use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
+
+/// Register tile height (rows of A per microkernel invocation).
+pub const MR: usize = 4;
+/// Register tile width (columns of B per packed panel).
+pub const NR: usize = 16;
+
+/// Rows below which a pooled matmul stays on one lane (a chunk handoff
+/// costs ~1–2 µs; a 64-row by 64-wide GEMM slice is ~0.5 µs of FMA).
+pub(crate) const MM_PAR_MIN_ROWS: usize = 64;
+
+/// Which GEMM kernel family a host step runs its matmuls on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmBackendKind {
+    /// The original scalar loops (bit-identical to the pre-GEMM code).
+    Naive,
+    /// Cache-blocked, register-tiled, packed-panel microkernel (default).
+    Blocked,
+}
+
+impl GemmBackendKind {
+    /// Resolve a `--gemm` / config choice string. `auto` (and empty)
+    /// resolve to [`GemmBackendKind::Blocked`].
+    pub fn resolve(choice: &str) -> Result<GemmBackendKind> {
+        match choice {
+            "auto" | "" | "blocked" => Ok(GemmBackendKind::Blocked),
+            "naive" => Ok(GemmBackendKind::Naive),
+            other => bail!("unknown gemm backend '{other}' (auto | naive | blocked)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmBackendKind::Naive => "naive",
+            GemmBackendKind::Blocked => "blocked",
+        }
+    }
+}
+
+/// Activation fused into the GEMM epilogue (applied after the optional
+/// bias add, element-wise at tile write-back).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Tanh,
+    Sigmoid,
+}
+
+impl Act {
+    #[inline(always)]
+    fn apply(self, x: f32) -> f32 {
+        match self {
+            Act::None => x,
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+            Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+}
+
+// --------------------------------------------------------------- timing
+
+static GEMM_NANOS: AtomicU64 = AtomicU64::new(0);
+static GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
+static GEMM_HIST: OnceLock<Mutex<LogHistogram>> = OnceLock::new();
+
+#[inline]
+fn record_call(t0: Instant) {
+    let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    GEMM_NANOS.fetch_add(ns, Ordering::Relaxed);
+    GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
+    if metrics_enabled() {
+        let h = GEMM_HIST.get_or_init(|| Mutex::new(LogHistogram::new()));
+        if let Ok(mut h) = h.lock() {
+            h.record(ns);
+        }
+    }
+}
+
+/// Monotonic process-wide `(nanoseconds, calls)` totals across every timed
+/// GEMM entry point. The trainer snapshots this at epoch boundaries and
+/// reports the delta as the epoch's GEMM time share.
+pub fn timing_totals() -> (u64, u64) {
+    (
+        GEMM_NANOS.load(Ordering::Relaxed),
+        GEMM_CALLS.load(Ordering::Relaxed),
+    )
+}
+
+/// Drain the per-call latency histogram accumulated since the last drain.
+/// Populated only while telemetry metrics are enabled; empty otherwise.
+pub fn take_call_hist() -> LogHistogram {
+    match GEMM_HIST.get() {
+        Some(m) => m.lock().map(|mut h| std::mem::take(&mut *h)).unwrap_or_default(),
+        None => LogHistogram::new(),
+    }
+}
+
+// ------------------------------------------------------ row fan-out
+
+/// Run `f(first_row, rows_chunk)` over `out` split into row chunks across
+/// the pool. Per-row outputs land in fixed disjoint slots, so lane count
+/// can never change results.
+pub(crate) fn par_rows<F>(pool: &WorkerPool, out: &mut [f32], m: usize, row_w: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    par_rows_min(pool, out, m, row_w, MM_PAR_MIN_ROWS, f)
+}
+
+/// [`par_rows`] with an explicit parallelism crossover (minimum rows per
+/// chunk) for sweeps whose per-row cost differs from a GEMM row.
+pub(crate) fn par_rows_min<F>(
+    pool: &WorkerPool,
+    out: &mut [f32],
+    m: usize,
+    row_w: usize,
+    min_rows: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * row_w);
+    if m == 0 {
+        return;
+    }
+    let chunk = chunk_for(m, pool.lanes(), min_rows);
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::with_capacity(m.div_ceil(chunk));
+    let mut cursor = out;
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = chunk.min(m - r0);
+        tasks.push((r0, take_chunk(&mut cursor, rows * row_w)));
+        r0 += rows;
+    }
+    pool.run(&mut tasks, |t| f(t.0, &mut *t.1));
+}
+
+// ------------------------------------------------------ public entry points
+
+/// `out = act(a @ b + bias)` for `a: [m, k]`, `b: [k, n]` (overwrites
+/// `out`; `bias` is per-column, length `n`).
+#[allow(clippy::too_many_arguments)]
+pub fn mm_nn(
+    kind: GemmBackendKind,
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert!(bias.is_none_or(|bv| bv.len() == n));
+    let t0 = Instant::now();
+    match kind {
+        GemmBackendKind::Naive => naive_nn(pool, a, b, m, k, n, bias, act, false, out),
+        GemmBackendKind::Blocked => blocked_mm(pool, a, b, m, k, n, bias, act, false, false, out),
+    }
+    record_call(t0);
+}
+
+/// `out = act(out + a @ b + bias)`: the accumulate flavor of [`mm_nn`],
+/// used where a step sums two matmuls before a pointwise epilogue (e.g.
+/// the JODIE RNN cell `tanh(msg@wx + h@wh + b)`). Evaluation order per
+/// element is `act((out + sum_k a*b) + bias)`.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_nn_acc(
+    kind: GemmBackendKind,
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert!(bias.is_none_or(|bv| bv.len() == n));
+    let t0 = Instant::now();
+    match kind {
+        GemmBackendKind::Naive => naive_nn(pool, a, b, m, k, n, bias, act, true, out),
+        GemmBackendKind::Blocked => blocked_mm(pool, a, b, m, k, n, bias, act, true, false, out),
+    }
+    record_call(t0);
+}
+
+/// `out = a @ b^T` for `a: [m, k]`, `b: [n, k]` (overwrites `out`). No
+/// fused epilogue: every step-ABI use is a backward data-gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_nt(
+    kind: GemmBackendKind,
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let t0 = Instant::now();
+    match kind {
+        GemmBackendKind::Naive => naive_nt(pool, a, b, m, k, n, out),
+        GemmBackendKind::Blocked => {
+            blocked_mm(pool, a, b, m, k, n, None, Act::None, false, true, out)
+        }
+    }
+    record_call(t0);
+}
+
+/// `out += a^T @ b` for `a: [r, m]`, `b: [r, n]` (weight-gradient
+/// accumulation into a possibly-nonzero `out`).
+#[allow(clippy::too_many_arguments)]
+pub fn mm_tn_acc(
+    kind: GemmBackendKind,
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), r * m);
+    debug_assert_eq!(b.len(), r * n);
+    debug_assert_eq!(out.len(), m * n);
+    let t0 = Instant::now();
+    match kind {
+        GemmBackendKind::Naive => naive_tn_acc(pool, a, b, r, m, n, out),
+        GemmBackendKind::Blocked => blocked_tn_acc(pool, a, b, r, m, n, out),
+    }
+    record_call(t0);
+}
+
+/// Dot product of two equal-length slices. Naive: one sequential sum
+/// (bit-identical to `iter().zip().map().sum()`); blocked: eight partial
+/// accumulators over chunks of 8 with a fixed-order horizontal reduction,
+/// then a sequential tail.
+pub fn dot(kind: GemmBackendKind, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match kind {
+        GemmBackendKind::Naive => a.iter().zip(b).map(|(&x, &y)| x * y).sum(),
+        GemmBackendKind::Blocked => {
+            let mut acc = [0.0f32; 8];
+            let mut ca = a.chunks_exact(8);
+            let mut cb = b.chunks_exact(8);
+            for (ar, br) in ca.by_ref().zip(cb.by_ref()) {
+                for j in 0..8 {
+                    acc[j] += ar[j] * br[j];
+                }
+            }
+            // fixed-order pairwise horizontal reduction (deterministic)
+            let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6]))
+                + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+            for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+                s += x * y;
+            }
+            s
+        }
+    }
+}
+
+// ---------------------------------------------------------- naive backend
+
+/// ikj-order accumulation of one A row against row-major B into `dst`
+/// (the exact inner loop of the original `mm_nn`).
+#[inline]
+fn accum_row_nn(ar: &[f32], b: &[f32], n: usize, dst: &mut [f32]) {
+    for (kk, &av) in ar.iter().enumerate() {
+        let br = &b[kk * n..(kk + 1) * n];
+        for (o, &bv) in dst.iter_mut().zip(br) {
+            *o += av * bv;
+        }
+    }
+}
+
+#[inline]
+fn epilogue_row(or: &mut [f32], bias: Option<&[f32]>, act: Act) {
+    // separate passes on purpose: per-element op order matches the old
+    // whole-matrix add_bias sweep followed by the activation sweep
+    if let Some(bias) = bias {
+        for (o, &bv) in or.iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+    if act != Act::None {
+        for o in or.iter_mut() {
+            *o = act.apply(*o);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn naive_nn(
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    acc_out: bool,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    par_rows(pool, out, m, n, |r0, rows| {
+        let mut scratch = vec![0.0f32; if acc_out { n } else { 0 }];
+        for (i, or) in rows.chunks_exact_mut(n).enumerate() {
+            let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            if acc_out {
+                scratch.fill(0.0);
+                accum_row_nn(ar, b, n, &mut scratch);
+                match bias {
+                    Some(bias) => {
+                        for ((o, &s), &bv) in or.iter_mut().zip(&scratch).zip(bias) {
+                            *o = act.apply((*o + s) + bv);
+                        }
+                    }
+                    None => {
+                        for (o, &s) in or.iter_mut().zip(&scratch) {
+                            *o = act.apply(*o + s);
+                        }
+                    }
+                }
+            } else {
+                or.fill(0.0);
+                accum_row_nn(ar, b, n, or);
+                epilogue_row(or, bias, act);
+            }
+        }
+    });
+}
+
+fn naive_nt(pool: &WorkerPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    par_rows(pool, out, m, n, |r0, rows| {
+        for (i, or) in rows.chunks_exact_mut(n).enumerate() {
+            let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            for (j, o) in or.iter_mut().enumerate() {
+                let br = &b[j * k..(j + 1) * k];
+                *o = ar.iter().zip(br).map(|(&x, &y)| x * y).sum();
+            }
+        }
+    });
+}
+
+fn naive_tn_acc(
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    par_rows(pool, out, m, n, |p0, rows| {
+        for (pi, or) in rows.chunks_exact_mut(n).enumerate() {
+            let p = p0 + pi;
+            for i in 0..r {
+                let av = a[i * m + p];
+                // relu-sparse gradients make the zero-skip a real win on
+                // the scalar path (the blocked kernel drops it: full
+                // vectorized panels beat data-dependent branches)
+                if av != 0.0 {
+                    let br = &b[i * n..(i + 1) * n];
+                    for (o, &bv) in or.iter_mut().zip(br) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+// -------------------------------------------------------- blocked backend
+
+/// Pack row-major `b: [k, n]` into `ceil(n/NR)` zero-padded column panels,
+/// each `[k][NR]` contiguous — the layout the microkernel streams.
+fn pack_panels_nn(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let panels = n.div_ceil(NR);
+    let mut bp = vec![0.0f32; panels * k * NR];
+    for pnl in 0..panels {
+        let j0 = pnl * NR;
+        let w = NR.min(n - j0);
+        let base = pnl * k * NR;
+        for kk in 0..k {
+            bp[base + kk * NR..base + kk * NR + w]
+                .copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+    bp
+}
+
+/// Pack `b: [n, k]` (the NT operand: logical `B[kk][j] = b[j*k + kk]`)
+/// into the same `[k][NR]` panel layout.
+fn pack_panels_nt(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let panels = n.div_ceil(NR);
+    let mut bp = vec![0.0f32; panels * k * NR];
+    for pnl in 0..panels {
+        let j0 = pnl * NR;
+        let w = NR.min(n - j0);
+        let base = pnl * k * NR;
+        for jj in 0..w {
+            let src = &b[(j0 + jj) * k..(j0 + jj + 1) * k];
+            for (kk, &v) in src.iter().enumerate() {
+                bp[base + kk * NR + jj] = v;
+            }
+        }
+    }
+    bp
+}
+
+/// The register-tile inner loop: accumulate `MRC` A rows against one
+/// packed `[k][NR]` panel. `AT = false` reads `a[(row0+ii)*lda + kk]`
+/// (row-major A, `lda = k`); `AT = true` reads `a[kk*lda + row0 + ii]`
+/// (transposed access for TN, `lda = m`). Each `acc[ii][jj]` sweeps k in
+/// ascending order — one accumulator per output element, so per-element
+/// summation order equals the naive loops'.
+#[inline(always)]
+fn microkernel<const MRC: usize, const AT: bool>(
+    a: &[f32],
+    lda: usize,
+    row0: usize,
+    k: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    for kk in 0..k {
+        let brow: &[f32; NR] = panel[kk * NR..(kk + 1) * NR].try_into().unwrap();
+        for ii in 0..MRC {
+            let av = if AT { a[kk * lda + row0 + ii] } else { a[(row0 + ii) * lda + kk] };
+            for (o, &bv) in acc[ii].iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn run_microkernel<const AT: bool>(
+    mr: usize,
+    a: &[f32],
+    lda: usize,
+    row0: usize,
+    k: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    match mr {
+        4 => microkernel::<4, AT>(a, lda, row0, k, panel, acc),
+        3 => microkernel::<3, AT>(a, lda, row0, k, panel, acc),
+        2 => microkernel::<2, AT>(a, lda, row0, k, panel, acc),
+        _ => microkernel::<1, AT>(a, lda, row0, k, panel, acc),
+    }
+}
+
+/// Tile write-back with the fused epilogue. `acc_out` chooses
+/// `act((out + s) + bias)` over `act(s + bias)`.
+#[inline(always)]
+fn write_row(out: &mut [f32], acc: &[f32], bias: Option<&[f32]>, act: Act, acc_out: bool) {
+    match (bias, acc_out) {
+        (Some(bias), true) => {
+            for ((o, &s), &bv) in out.iter_mut().zip(acc).zip(bias) {
+                *o = act.apply((*o + s) + bv);
+            }
+        }
+        (Some(bias), false) => {
+            for ((o, &s), &bv) in out.iter_mut().zip(acc).zip(bias) {
+                *o = act.apply(s + bv);
+            }
+        }
+        (None, true) => {
+            for (o, &s) in out.iter_mut().zip(acc) {
+                *o = act.apply(*o + s);
+            }
+        }
+        (None, false) => {
+            for (o, &s) in out.iter_mut().zip(acc) {
+                *o = act.apply(s);
+            }
+        }
+    }
+}
+
+/// Blocked NN / NT driver (`bt` selects the NT pack). Packs B once on the
+/// calling thread, then fans MR-row tiles out over the pool.
+#[allow(clippy::too_many_arguments)]
+fn blocked_mm(
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    act: Act,
+    acc_out: bool,
+    bt: bool,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let bp = if bt { pack_panels_nt(b, k, n) } else { pack_panels_nn(b, k, n) };
+    let bp = &bp;
+    par_rows(pool, out, m, n, move |r0, rows| {
+        let m_chunk = rows.len() / n;
+        let panels = n.div_ceil(NR);
+        let mut i = 0;
+        while i < m_chunk {
+            let mr = MR.min(m_chunk - i);
+            for pnl in 0..panels {
+                let j0 = pnl * NR;
+                let w = NR.min(n - j0);
+                let panel = &bp[pnl * k * NR..(pnl + 1) * k * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                run_microkernel::<false>(mr, a, k, r0 + i, k, panel, &mut acc);
+                let pbias = bias.map(|bv| &bv[j0..j0 + w]);
+                for ii in 0..mr {
+                    let orow = &mut rows[(i + ii) * n + j0..(i + ii) * n + j0 + w];
+                    write_row(orow, &acc[ii][..w], pbias, act, acc_out);
+                }
+            }
+            i += mr;
+        }
+    });
+}
+
+/// Blocked TN-accumulate: `out += a^T @ b` with `a: [r, m]` read
+/// column-wise (`AT = true`, `lda = m`); B packs exactly like NN with the
+/// k dimension = r.
+fn blocked_tn_acc(
+    pool: &WorkerPool,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if n == 0 || r == 0 {
+        // r = 0: no update terms — leave `out` untouched (the naive loop
+        // does the same; even `+= 0.0` would flip -0.0 to +0.0)
+        return;
+    }
+    let bp = pack_panels_nn(b, r, n);
+    let bp = &bp;
+    par_rows(pool, out, m, n, move |p0, rows| {
+        let m_chunk = rows.len() / n;
+        let panels = n.div_ceil(NR);
+        let mut i = 0;
+        while i < m_chunk {
+            let mr = MR.min(m_chunk - i);
+            for pnl in 0..panels {
+                let j0 = pnl * NR;
+                let w = NR.min(n - j0);
+                let panel = &bp[pnl * r * NR..(pnl + 1) * r * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                run_microkernel::<true>(mr, a, m, p0 + i, r, panel, &mut acc);
+                for ii in 0..mr {
+                    let orow = &mut rows[(i + ii) * n + j0..(i + ii) * n + j0 + w];
+                    write_row(orow, &acc[ii][..w], None, Act::None, true);
+                }
+            }
+            i += mr;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Per-element tolerance for reordered accumulation over k terms (the
+    /// documented contract: `1e-5 * k * max|a| * max|b| + 1e-6`).
+    fn tol(k: usize, a: &[f32], b: &[f32]) -> f32 {
+        let ma = a.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mb = b.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        1e-5 * (k.max(1) as f32) * ma.max(1.0) * mb.max(1.0) + 1e-6
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol,
+                "{what}[{i}]: got {g}, want {w} (tol {tol})"
+            );
+        }
+    }
+
+    /// The edge sweep the satellite asks for: every dim in
+    /// {0, 1, tile-1, tile, tile+1} plus step-ABI-sized shapes, across
+    /// pool worker counts {1, 2, 4}.
+    fn shape_grid() -> Vec<(usize, usize, usize)> {
+        let edge_m = [0usize, 1, MR - 1, MR, MR + 1, 2 * MR + 1, 67];
+        let edge_n = [0usize, 1, NR - 1, NR, NR + 1, 33];
+        let edge_k = [0usize, 1, 7, 8, 9, 64];
+        let mut shapes = Vec::new();
+        for &m in &edge_m {
+            for &n in &edge_n {
+                for &k in &edge_k {
+                    shapes.push((m, k, n));
+                }
+            }
+        }
+        // step-ABI shapes (wiki profile, b = 200): msg MLP, GRU banks,
+        // attention kv rows, decoder
+        shapes.extend([
+            (400, 160, 128),
+            (400, 128, 64),
+            (400, 64, 192),
+            (2000, 96, 64),
+            (200, 128, 128),
+        ]);
+        shapes
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes_nn_nt() {
+        for workers in [1usize, 2, 4] {
+            let pool = Arc::new(WorkerPool::new(workers));
+            let mut rng = Pcg32::new(42);
+            for (m, k, n) in shape_grid() {
+                let a = randv(&mut rng, m * k);
+                let b_nn = randv(&mut rng, k * n);
+                let b_nt = randv(&mut rng, n * k);
+                let t = tol(k, &a, &b_nn);
+                let mut want = vec![0.0f32; m * n];
+                let mut got = vec![0.0f32; m * n];
+                mm_nn(GemmBackendKind::Naive, &pool, &a, &b_nn, m, k, n, None, Act::None, &mut want);
+                mm_nn(GemmBackendKind::Blocked, &pool, &a, &b_nn, m, k, n, None, Act::None, &mut got);
+                assert_close(&got, &want, t, &format!("nn {m}x{k}x{n} w{workers}"));
+                mm_nt(GemmBackendKind::Naive, &pool, &a, &b_nt, m, k, n, &mut want);
+                mm_nt(GemmBackendKind::Blocked, &pool, &a, &b_nt, m, k, n, &mut got);
+                assert_close(&got, &want, t, &format!("nt {m}x{k}x{n} w{workers}"));
+            }
+        }
+    }
+
+    #[test]
+    fn tn_acc_accumulates_into_nonzero_out_on_both_backends() {
+        for workers in [1usize, 2, 4] {
+            let pool = Arc::new(WorkerPool::new(workers));
+            let mut rng = Pcg32::new(7);
+            for (m, k, n) in shape_grid() {
+                let r = k; // reduction dim
+                let a = randv(&mut rng, r * m);
+                let b = randv(&mut rng, r * n);
+                let seed = randv(&mut rng, m * n); // nonzero starting out
+                let t = tol(r + 1, &a, &b);
+                let mut want = seed.clone();
+                let mut got = seed.clone();
+                mm_tn_acc(GemmBackendKind::Naive, &pool, &a, &b, r, m, n, &mut want);
+                mm_tn_acc(GemmBackendKind::Blocked, &pool, &a, &b, r, m, n, &mut got);
+                assert_close(&got, &want, t, &format!("tn_acc {r}x{m}x{n} w{workers}"));
+                // r = 0 leaves out untouched on both backends
+                let mut w0 = seed.clone();
+                let mut g0 = seed.clone();
+                mm_tn_acc(GemmBackendKind::Naive, &pool, &a[..0], &b[..0], 0, m, n, &mut w0);
+                mm_tn_acc(GemmBackendKind::Blocked, &pool, &a[..0], &b[..0], 0, m, n, &mut g0);
+                assert_eq!(w0, seed);
+                assert_eq!(g0, seed);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_bias_activation_matches_separate_sweeps() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut rng = Pcg32::new(19);
+        for act in [Act::None, Act::Relu, Act::Tanh, Act::Sigmoid] {
+            for (m, k, n) in [(5usize, 9usize, 17usize), (64, 32, 16), (3, 1, 1)] {
+                let a = randv(&mut rng, m * k);
+                let b = randv(&mut rng, k * n);
+                let bias = randv(&mut rng, n);
+                // reference: plain GEMM then separate bias + act sweeps
+                let mut want = vec![0.0f32; m * n];
+                mm_nn(GemmBackendKind::Naive, &pool, &a, &b, m, k, n, None, Act::None, &mut want);
+                for row in want.chunks_exact_mut(n) {
+                    for (v, &bv) in row.iter_mut().zip(&bias) {
+                        *v += bv;
+                    }
+                }
+                want.iter_mut().for_each(|v| *v = act.apply(*v));
+                let t = tol(k, &a, &b);
+                for kind in [GemmBackendKind::Naive, GemmBackendKind::Blocked] {
+                    let mut got = vec![0.0f32; m * n];
+                    mm_nn(kind, &pool, &a, &b, m, k, n, Some(&bias), act, &mut got);
+                    assert_close(&got, &want, t, &format!("fused {kind:?} {act:?} {m}x{k}x{n}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nn_acc_sums_existing_out_before_bias_and_act() {
+        let pool = Arc::new(WorkerPool::new(1));
+        let mut rng = Pcg32::new(23);
+        let (m, k, n) = (9usize, 13usize, 21usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        let seed = randv(&mut rng, m * n);
+        // reference: act((seed + a@b) + bias), evaluated with a plain GEMM
+        let mut prod = vec![0.0f32; m * n];
+        mm_nn(GemmBackendKind::Naive, &pool, &a, &b, m, k, n, None, Act::None, &mut prod);
+        let want: Vec<f32> = seed
+            .iter()
+            .zip(&prod)
+            .enumerate()
+            .map(|(i, (&s, &p))| Act::Tanh.apply((s + p) + bias[i % n]))
+            .collect();
+        let t = tol(k + 1, &a, &b);
+        for kind in [GemmBackendKind::Naive, GemmBackendKind::Blocked] {
+            let mut got = seed.clone();
+            mm_nn_acc(kind, &pool, &a, &b, m, k, n, Some(&bias), Act::Tanh, &mut got);
+            assert_close(&got, &want, t, &format!("nn_acc {kind:?}"));
+        }
+    }
+
+    #[test]
+    fn results_are_lane_count_invariant_per_backend() {
+        // chunking moves work, never values — for BOTH backends
+        let mut rng = Pcg32::new(31);
+        let (m, k, n) = (131usize, 37usize, 45usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let b_tn = randv(&mut rng, m * n); // [r = m, n] operand for tn_acc
+        for kind in [GemmBackendKind::Naive, GemmBackendKind::Blocked] {
+            let p1 = Arc::new(WorkerPool::new(1));
+            let p4 = Arc::new(WorkerPool::new(4));
+            let mut o1 = vec![0.0f32; m * n];
+            let mut o4 = vec![0.0f32; m * n];
+            mm_nn(kind, &p1, &a, &b, m, k, n, None, Act::Relu, &mut o1);
+            mm_nn(kind, &p4, &a, &b, m, k, n, None, Act::Relu, &mut o4);
+            assert_eq!(o1, o4, "{kind:?} nn must be bit-identical across lanes");
+            // a reinterpreted as [r = m, m = k]: out [k, n] += a^T @ b_tn
+            let mut t1 = vec![0.1f32; k * n];
+            let mut t4 = vec![0.1f32; k * n];
+            mm_tn_acc(kind, &p1, &a, &b_tn, m, k, n, &mut t1);
+            mm_tn_acc(kind, &p4, &a, &b_tn, m, k, n, &mut t4);
+            assert_eq!(t1, t4, "{kind:?} tn_acc must be bit-identical across lanes");
+        }
+    }
+
+    #[test]
+    fn blocked_nn_preserves_per_element_k_order_bitwise() {
+        // documented in the module docs: NN/NT keep one accumulator per
+        // element in ascending k, so blocked == naive BITWISE there (the
+        // tolerance contract only has to absorb tn_acc + dot reordering)
+        let pool = Arc::new(WorkerPool::new(1));
+        let mut rng = Pcg32::new(5);
+        let (m, k, n) = (23usize, 50usize, 19usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut naive = vec![0.0f32; m * n];
+        let mut blocked = vec![0.0f32; m * n];
+        mm_nn(GemmBackendKind::Naive, &pool, &a, &b, m, k, n, None, Act::None, &mut naive);
+        mm_nn(GemmBackendKind::Blocked, &pool, &a, &b, m, k, n, None, Act::None, &mut blocked);
+        assert_eq!(naive, blocked);
+    }
+
+    #[test]
+    fn dot_matches_sequential_within_tolerance() {
+        let mut rng = Pcg32::new(61);
+        // strided attention-head lengths: dk in {1, 3, 8, 24, 32, 37}
+        for len in [0usize, 1, 3, 8, 24, 32, 37, 64, 100] {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            let want = dot(GemmBackendKind::Naive, &a, &b);
+            let got = dot(GemmBackendKind::Blocked, &a, &b);
+            let t = tol(len, &a, &b);
+            assert!((want - got).abs() <= t, "dot len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_on_strided_attention_head_slices() {
+        // heads interleave in the row: per-head slices are strided views;
+        // both backends must agree on every head offset
+        let mut rng = Pcg32::new(77);
+        let (heads, dk) = (2usize, 32usize);
+        let q = randv(&mut rng, heads * dk);
+        let k = randv(&mut rng, heads * dk);
+        for h in 0..heads {
+            let qs = &q[h * dk..(h + 1) * dk];
+            let ks = &k[h * dk..(h + 1) * dk];
+            let want = dot(GemmBackendKind::Naive, qs, ks);
+            let got = dot(GemmBackendKind::Blocked, qs, ks);
+            assert!((want - got).abs() <= tol(dk, qs, ks), "head {h}");
+        }
+    }
+
+    #[test]
+    fn resolve_maps_auto_to_blocked_and_rejects_unknowns() {
+        assert_eq!(GemmBackendKind::resolve("auto").unwrap(), GemmBackendKind::Blocked);
+        assert_eq!(GemmBackendKind::resolve("").unwrap(), GemmBackendKind::Blocked);
+        assert_eq!(GemmBackendKind::resolve("blocked").unwrap(), GemmBackendKind::Blocked);
+        assert_eq!(GemmBackendKind::resolve("naive").unwrap(), GemmBackendKind::Naive);
+        let err = GemmBackendKind::resolve("fast").unwrap_err().to_string();
+        assert!(err.contains("fast") && err.contains("blocked"), "{err}");
+        assert_eq!(GemmBackendKind::Blocked.name(), "blocked");
+        assert_eq!(GemmBackendKind::Naive.name(), "naive");
+    }
+
+    #[test]
+    fn timing_totals_accrue_across_calls() {
+        let pool = Arc::new(WorkerPool::new(1));
+        let (ns0, c0) = timing_totals();
+        let a = vec![1.0f32; 32 * 32];
+        let b = vec![1.0f32; 32 * 32];
+        let mut out = vec![0.0f32; 32 * 32];
+        mm_nn(GemmBackendKind::Blocked, &pool, &a, &b, 32, 32, 32, None, Act::None, &mut out);
+        let (ns1, c1) = timing_totals();
+        assert!(c1 >= c0 + 1, "call count must advance: {c0} -> {c1}");
+        assert!(ns1 >= ns0, "nanos are monotonic");
+    }
+}

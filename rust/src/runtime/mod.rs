@@ -69,6 +69,31 @@
 //! * nothing in this module is ever captured by a spawned closure, which
 //!   the compiler enforces (`Rc` in `Engine`/`Step` makes them `!Send`).
 //!
+//! ## GEMM backends (`--gemm {auto | naive | blocked}`)
+//!
+//! Every host-step matmul routes through the [`gemm`] kernel subsystem,
+//! a second closed-enum dispatch ([`gemm::GemmBackendKind`]) nested
+//! inside the Host EXEC backend:
+//!
+//! * **naive** — the original scalar loops, lifted verbatim. Per output
+//!   element the accumulation order is exactly the pre-gemm code, and the
+//!   fused bias/activation epilogue replays the old separate sweeps
+//!   element-for-element, so `--gemm naive` is **bit-identical** to the
+//!   pre-gemm host backend (and stays the reference the equivalence gates
+//!   pin against).
+//! * **blocked** — cache-blocked, register-tiled panels with portable
+//!   SIMD-width accumulators, pool-parallel over row panels. NN-shape
+//!   products keep the naive per-element accumulation order (bitwise
+//!   equal); only the TN-accumulate shape and the dot-product reduction
+//!   reorder sums. Tolerance contract: per element
+//!   `|Δ| ≤ 1e-5 · k · max|a| · max|b| + 1e-6` (see `gemm.rs`).
+//! * **auto** (default) — resolves to blocked.
+//!
+//! Selection flows `--gemm` / config `"gemm"` → [`Engine::set_host_gemm`]
+//! → every [`HostStep`] the engine builds; the PJRT backend ignores it.
+//! Per-epoch GEMM time share is reported in `EpochReport` and as a
+//! `gemm` stage histogram (`--metrics-out`).
+//!
 //! The one sanctioned crossing is the raw [`host_step::HostStep`], which
 //! IS Send + Sync (plain data plus an `Arc<WorkerPool>`): multi-stream
 //! EXEC (`pipeline/stream.rs`, `--exec-streams N`) Arc-shares exactly that
@@ -80,9 +105,11 @@
 //! smuggle this one.
 
 pub mod engine;
+pub mod gemm;
 pub mod host_step;
 pub mod manifest;
 
 pub use engine::{Engine, ExecBackendKind, Step};
+pub use gemm::{Act, GemmBackendKind};
 pub use host_step::HostStep;
 pub use manifest::{ArtifactSpec, DType, Dims, InitSpec, Manifest, ParamSpec, TensorSpec};

@@ -128,6 +128,18 @@ impl LogHistogram {
         self.sum = 0;
         self.max = 0;
     }
+
+    /// Fold another histogram into this one (bucket-wise add). Used to
+    /// absorb per-epoch snapshots drained from global recorders (e.g. the
+    /// GEMM call histogram) into a stage histogram.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (b, &o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +220,31 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 1);
         assert!(h.quantile(0.5) > 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts_sums_and_buckets() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in [100u64, 2_000, 50_000] {
+            a.record(v);
+        }
+        for v in [7u64, 900_000] {
+            b.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), 5);
+        assert_eq!(merged.max(), 900_000);
+        // mean equals the pooled mean of all samples (within bucket-free
+        // exact arithmetic: sum is tracked exactly, not bucketed)
+        let want = (100.0 + 2_000.0 + 50_000.0 + 7.0 + 900_000.0) / 5.0;
+        assert!((merged.mean() - want).abs() < 1e-9);
+        // merging an empty histogram changes nothing
+        let before = merged.quantile(0.5);
+        merged.merge(&LogHistogram::new());
+        assert_eq!(merged.count(), 5);
+        assert_eq!(merged.quantile(0.5), before);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::pipeline::{
     PrepContext, Prefetcher, StreamPool,
 };
 use crate::runtime::engine::{fetch_f32, fetch_scalar, lit_scalar};
-use crate::runtime::{ArtifactSpec, Engine, ExecBackendKind, Step};
+use crate::runtime::{gemm, ArtifactSpec, Engine, ExecBackendKind, GemmBackendKind, Step};
 use crate::sampler::{NegativeSampler, NeighborIndex};
 use crate::trace::{self, Stage};
 use crate::training::{Assembler, HostBatch};
@@ -83,6 +83,16 @@ pub struct EpochReport {
     /// in-flight window fills.
     pub param_lag_max: usize,
     pub events_per_sec: f64,
+    /// Resolved host GEMM kernel backend ("naive" | "blocked"; "none" on
+    /// the PJRT backend, which has its own kernels).
+    pub gemm_backend: String,
+    /// GEMM kernel busy seconds accrued inside this epoch's step
+    /// executions (a subset of `execute_secs`; always-on counters in
+    /// `runtime::gemm`, drained once per epoch).
+    pub gemm_secs: f64,
+    /// Share of summed EXEC busy time spent inside GEMM kernels
+    /// (`gemm_secs / execute_secs`; 0 when no step executed).
+    pub gemm_share: f64,
     pub gamma: f32,
     /// Per-stage per-step p50/p95/p99 from the epoch's latency histograms.
     pub stage_quantiles: Vec<StageQuantiles>,
@@ -120,6 +130,9 @@ impl EpochReport {
             ("splice_lag_max", Json::num(self.splice_lag_max as f64)),
             ("param_lag_max", Json::num(self.param_lag_max as f64)),
             ("events_per_sec", Json::finite(self.events_per_sec)),
+            ("gemm_backend", Json::str(&self.gemm_backend)),
+            ("gemm_secs", Json::finite(self.gemm_secs)),
+            ("gemm_share", Json::finite(self.gemm_share)),
             ("gamma", Json::finite(self.gamma as f64)),
             (
                 "stage_quantiles",
@@ -265,6 +278,9 @@ impl Trainer {
             n => Arc::new(WorkerPool::new(n)),
         };
         engine.set_host_pool(pool.clone());
+        // resolve the GEMM kernel backend before any step is built
+        // ("auto" -> blocked; no-op on the PJRT backend)
+        engine.set_host_gemm(GemmBackendKind::resolve(&cfg.gemm)?);
         let train_step = engine
             .step(&cfg.model, b, "train")
             .context("loading train step")?;
@@ -365,6 +381,10 @@ impl Trainer {
         self.nan_logits = 0;
         let n_train = self.train_plan_count();
         let mut timer = EpochTimer::default();
+        // snapshot the process-global GEMM counters so the epoch delta
+        // attributes kernel time to this epoch only (lane threads included
+        // — the counters are shared atomics)
+        let (gemm_ns0, _) = gemm::timing_totals();
         timer.start_epoch();
 
         let (results, splice_lag_max) = if self.cfg.pipeline.depth > 0 && n_train > 1 {
@@ -399,6 +419,11 @@ impl Trainer {
         }
         timer.steps = n_train.saturating_sub(1);
         timer.finish_epoch();
+        let (gemm_ns1, _) = gemm::timing_totals();
+        timer.absorb_gemm(
+            Duration::from_nanos(gemm_ns1.saturating_sub(gemm_ns0)),
+            &gemm::take_call_hist(),
+        );
 
         Ok(EpochReport {
             epoch,
@@ -421,6 +446,17 @@ impl Trainer {
             splice_lag_max,
             param_lag_max: timer.param_lag_max,
             events_per_sec: timer.events_per_sec(executed_events(&self.plans, n_train)),
+            gemm_backend: self
+                .engine
+                .host_gemm()
+                .map(|k| k.name().to_string())
+                .unwrap_or_else(|| "none".to_string()),
+            gemm_secs: timer.gemm_busy.as_secs_f64(),
+            gemm_share: if timer.execute.is_zero() {
+                0.0
+            } else {
+                timer.gemm_busy.as_secs_f64() / timer.execute.as_secs_f64()
+            },
             gamma: self.state.gamma().unwrap_or(f32::NAN),
             stage_quantiles: timer.stage_quantiles(),
             gmm_tracked: self.gmm.tracked_vertices(),
