@@ -47,4 +47,7 @@ fn main() {
         });
     }
     b.write_csv().unwrap();
+    // comparable-artifact convention (bench-manifest lint): the timing
+    // rows land in the JSON doc; this bench has no extra case records
+    b.write_json("BENCH_ablations.json", vec![]).unwrap();
 }

@@ -50,6 +50,7 @@ fn scoped_gather(
         let r = if routes.is_empty() { router.route(vs[i]) } else { routes[i] };
         work[r.shard as usize].push((r.local, slot));
     }
+    // lint: allow(thread-discipline) — the scoped-spawn baseline IS the comparison subject
     std::thread::scope(|scope| {
         for (shard, items) in shards.iter().zip(work) {
             if items.is_empty() {
@@ -83,6 +84,7 @@ fn scoped_scatter(
         let rt = if routes.is_empty() { router.route(v) } else { routes[r] };
         work[rt.shard as usize].push((rt.local, row, ts[r]));
     }
+    // lint: allow(thread-discipline) — the scoped-spawn baseline IS the comparison subject
     std::thread::scope(|scope| {
         for (shard, items) in shards.iter_mut().zip(work) {
             if items.is_empty() {

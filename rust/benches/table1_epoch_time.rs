@@ -32,4 +32,7 @@ fn main() {
         );
     }
     b.write_csv().unwrap();
+    // comparable-artifact convention (bench-manifest lint): the timing
+    // rows land in the JSON doc; this bench has no extra case records
+    b.write_json("BENCH_table1.json", vec![]).unwrap();
 }

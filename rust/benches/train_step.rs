@@ -37,4 +37,7 @@ fn main() {
         }
     }
     b.write_csv().unwrap();
+    // comparable-artifact convention (bench-manifest lint): the timing
+    // rows land in the JSON doc; this bench has no extra case records
+    b.write_json("BENCH_train_step.json", vec![]).unwrap();
 }

@@ -1,0 +1,58 @@
+//! `pallas-lint`: the repo-invariant lint CLI. Walks `src/`, `benches/`
+//! and `tests/` enforcing the rules documented in [`pres::lint`]; exits
+//! nonzero on any finding so CI (and pre-push hooks) can gate on it.
+//!
+//! Usage: `pallas-lint [--json] [crate-root]`. With no root argument it
+//! accepts being launched from either the crate directory (`rust/`) or
+//! the repo root. This file is sanctioned for direct printing — the
+//! findings are its stdout product.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pres::lint;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("usage: pallas-lint [--json] [crate-root]");
+                println!("rules:");
+                for (name, what) in lint::RULES {
+                    println!("  {name:<18} {what}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => root = Some(PathBuf::from(other)),
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        if PathBuf::from("src").is_dir() {
+            PathBuf::from(".")
+        } else {
+            PathBuf::from("rust")
+        }
+    });
+    match lint::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("pallas-lint: {e:#}");
+            ExitCode::from(2)
+        }
+        Ok(findings) if findings.is_empty() => {
+            println!("pallas-lint: clean ({} rules over {})", lint::RULES.len(), root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            if json {
+                println!("{}", lint::to_json(&findings).to_string_pretty());
+            } else {
+                print!("{}", lint::render(&findings));
+                println!("pallas-lint: {} finding(s)", findings.len());
+            }
+            ExitCode::FAILURE
+        }
+    }
+}

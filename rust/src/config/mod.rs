@@ -311,6 +311,24 @@ impl ExperimentConfig {
         if self.memory_shards == 0 {
             bail!("memory_shards must be >= 1 (1 = flat legacy store)");
         }
+        // Catch unwritable telemetry destinations at config time: missing
+        // parent directories are created at open (see
+        // `util::ensure_parent_dir`), but an empty path or one naming an
+        // existing directory would otherwise only fail after the run —
+        // for --trace-out, after the *whole training run* completed.
+        for (flag, path) in [
+            ("--trace-out", &self.trace_out),
+            ("--metrics-out", &self.metrics_out),
+        ] {
+            if let Some(p) = path {
+                if p.trim().is_empty() {
+                    bail!("{flag} requires a non-empty file path");
+                }
+                if Path::new(p).is_dir() {
+                    bail!("{flag}: '{p}' is an existing directory, expected a file path");
+                }
+            }
+        }
         Ok(())
     }
 
@@ -566,6 +584,31 @@ mod tests {
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.trace_out.as_deref(), Some("trace.json"));
         assert_eq!(back.metrics_out.as_deref(), Some("metrics.jsonl"));
+    }
+
+    #[test]
+    fn observability_paths_validate_at_config_time() {
+        let mut cfg = ExperimentConfig::default_with("wiki", "tgn", 200, false);
+        // nested not-yet-existing parents are fine (created at open)
+        cfg.trace_out = Some("runs/not/yet/there/trace.json".into());
+        cfg.metrics_out = Some("metrics.jsonl".into());
+        assert!(cfg.validate().is_ok());
+        // empty / whitespace paths fail up front, naming the flag
+        cfg.trace_out = Some("  ".into());
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--trace-out"), "unexpected error: {err}");
+        cfg.trace_out = None;
+        cfg.metrics_out = Some(String::new());
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--metrics-out"), "unexpected error: {err}");
+        // a path naming an existing directory fails up front, not after
+        // the run when the file is finally opened
+        let dir = std::env::temp_dir().join(format!("pres-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        cfg.metrics_out = Some(dir.to_str().unwrap().to_string());
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("existing directory"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod datagen;
 pub mod eval;
 pub mod figures;
 pub mod graph;
+pub mod lint;
 pub mod memory;
 pub mod metrics;
 pub mod model;

@@ -1,0 +1,819 @@
+//! Repo-invariant lint (`pallas-lint`): mechanical checks for the
+//! hand-maintained soundness rules the concurrent runtime rests on.
+//!
+//! PRs 1–8 turned the sequential PRES loop into a pipelined runtime whose
+//! correctness is carried by conventions — pooled loops write disjoint
+//! slots, the span rings have a single seqlock writer, commits apply in
+//! plan order, every `unsafe` is justified by an argument about the
+//! generation barrier. Conventions rot silently. This module walks
+//! `src/`, `benches/` and `tests/` at the line/token level (comments and
+//! string/char literals are lexed away first; zero external parser
+//! crates) and enforces the rules below. The same pass runs three ways:
+//! the `pallas-lint` binary (human output, `--json` for machines), the
+//! `repo_tree_is_lint_clean` unit test (so the tier-1 `cargo test` gate
+//! catches violations), and a dedicated CI step.
+//!
+//! # Repo invariants
+//!
+//! ## `safety-comment`
+//! Every line of `unsafe` code must carry a `// SAFETY:` comment on the
+//! same line or in the comment/attribute block directly above it. The
+//! pool's `'static` transmute in `WorkerPool::broadcast` is sound *only
+//! because the submitter blocks at the generation barrier* — that kind of
+//! argument stops being re-checked the moment it is not written next to
+//! the code it justifies.
+//!
+//! ## `no-direct-print`
+//! No `println!` / `eprintln!` / `print!` / `eprint!` outside `src/trace/`
+//! — use the leveled `log_*!` macros. The CLI is scripted (CI parses the
+//! traced run's artifacts); a stray print either corrupts machine-read
+//! output or silently bypasses `--log-level`. Sanctioned: `src/trace/`
+//! (the logger's own sink) and `src/bin/lint.rs` (findings *are* its
+//! stdout product).
+//!
+//! ## `total-cmp`
+//! No `partial_cmp(..).unwrap()` — the PR 5 bug class: ranking NaN-scored
+//! candidates panicked mid-epoch because `partial_cmp` returns `None` for
+//! NaN. `f32::total_cmp` / `f64::total_cmp` are total orders and never
+//! panic.
+//!
+//! ## `thread-discipline`
+//! No `std::thread::{spawn, scope, Builder}` outside the sanctioned
+//! runtime modules: `util/pool.rs` (the generation-barrier pool),
+//! `pipeline/stream.rs` (EXEC stream lanes), `pipeline/prep.rs` and
+//! `pipeline/runner.rs` (the PREP stage and the prefetch thread it runs
+//! on). All other host parallelism must flow through `WorkerPool::run` so
+//! panic propagation, barrier semantics and span-ring registration hold.
+//! Tests that genuinely need bare threads (the seqlock stress readers,
+//! the scoped-spawn baseline in `benches/pool_scaling.rs`) carry an
+//! explicit allow directive.
+//!
+//! ## `clock-discipline`
+//! No `Instant::now()` outside `src/trace/` and `src/metrics/` — stage
+//! code takes timestamps through `crate::util::now()` instead, one
+//! greppable choke point, so clock-origin refactors (span origin
+//! anchoring, a virtual clock for replay) touch a single function.
+//! Sanctioned: `src/trace/`, `src/metrics/`, `src/util/mod.rs` (the
+//! helper itself) and `src/util/bench.rs` (the bench harness timing its
+//! own reps).
+//!
+//! ## `bench-manifest`
+//! Every `[[bench]]` target in `Cargo.toml` has a `benches/<name>.rs`
+//! that writes its `BENCH_*.json` artifact (`Bench::write_json`, or
+//! `report_json` + `fs::write` for benches that post-process the doc), so
+//! the ROADMAP's "benches emit comparable artifacts" promise stays true
+//! as benches accrete instead of only holding for the ones CI uploads.
+//!
+//! # Suppression
+//! `// lint: allow(<rule>) — <justification>` on the offending line or
+//! the line directly above it. The justification is mandatory and the
+//! rule name must be one of the rules above; a directive with an unknown
+//! rule or an empty justification is itself a finding (`bad-allow`).
+//! There is deliberately no file- or repo-level suppression: every
+//! exception is visible at the site it excuses.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the crate root, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name (one of [`RULES`]).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Every rule this pass enforces, with a one-line summary (the long-form
+/// rationale lives in the module docs above).
+pub const RULES: &[(&str, &str)] = &[
+    ("safety-comment", "unsafe code must carry a `// SAFETY:` comment"),
+    ("no-direct-print", "no direct print macros outside src/trace/ — use log_*!"),
+    ("total-cmp", "no partial_cmp(..).unwrap() — use total_cmp"),
+    ("thread-discipline", "no raw std::thread outside the sanctioned runtime modules"),
+    ("clock-discipline", "no Instant::now() outside trace/metrics — use crate::util::now()"),
+    ("bench-manifest", "every [[bench]] target writes its BENCH_*.json artifact"),
+    ("bad-allow", "allow directives must name a known rule and justify themselves"),
+];
+
+const SAFETY_RULE: &str = RULES[0].0;
+const PRINT_RULE: &str = RULES[1].0;
+const CMP_RULE: &str = RULES[2].0;
+const THREAD_RULE: &str = RULES[3].0;
+const CLOCK_RULE: &str = RULES[4].0;
+const BENCH_RULE: &str = RULES[5].0;
+const ALLOW_RULE: &str = RULES[6].0;
+
+/// Files (exact) or directories (trailing `/`) exempt from
+/// `no-direct-print`.
+const PRINT_SANCTIONED: &[&str] = &["src/trace/", "src/bin/lint.rs"];
+
+/// Modules allowed to create threads directly (see module docs).
+const THREAD_SANCTIONED: &[&str] = &[
+    "src/util/pool.rs",
+    "src/pipeline/stream.rs",
+    "src/pipeline/prep.rs",
+    "src/pipeline/runner.rs",
+];
+
+/// Modules allowed to read the raw monotonic clock.
+const CLOCK_SANCTIONED: &[&str] =
+    &["src/trace/", "src/metrics/", "src/util/mod.rs", "src/util/bench.rs"];
+
+// ------------------------------------------------------------------ lexer
+
+/// One source line split into executable code and comment text. String,
+/// raw-string and char literals are dropped from `code` (a bare `"` marks
+/// where each string literal sat); `//` and `/* */` bodies land in
+/// `comment`.
+#[derive(Debug, Default, Clone)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    /// Inside `/* */`, tracking nesting depth.
+    Block(u32),
+    /// Inside a `"..."` literal (persists across lines).
+    Str,
+    /// Inside a raw string literal with this many `#`s.
+    RawStr(u32),
+}
+
+/// Count `#`s after `chars[i] == 'r'` and require an opening quote; returns
+/// the hash count for a raw-string start, `None` otherwise (covers raw
+/// identifiers like `r#type`, which have no quote).
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn lex(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for raw in text.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let n = chars.len();
+        let mut line = Line::default();
+        let mut i = 0;
+        while i < n {
+            match mode {
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        i += 2;
+                        mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        mode = Mode::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        line.comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        i += 2; // skip the escaped char (may run past line end)
+                    } else if chars[i] == '"' {
+                        line.code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    let h = hashes as usize;
+                    if chars[i] == '"' && chars[i + 1..].len() >= h && chars[i + 1..i + 1 + h].iter().all(|&c| c == '#') {
+                        line.code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                        // line comment (incl. /// and //!) runs to line end
+                        line.comment.extend(chars[i + 2..].iter());
+                        i = n;
+                    } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == 'r' {
+                        if let Some(h) = raw_string_hashes(&chars, i) {
+                            line.code.push('"');
+                            mode = Mode::RawStr(h);
+                            i += 2 + h as usize;
+                        } else {
+                            line.code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // char literal vs lifetime
+                        if i + 1 < n && chars[i + 1] == '\\' {
+                            if i + 2 < n && chars[i + 2] == 'u' {
+                                // '\u{..}': scan to the closing quote
+                                let mut j = i + 3;
+                                while j < n && chars[j] != '\'' {
+                                    j += 1;
+                                }
+                                i = j + 1;
+                            } else {
+                                i += 4; // ' \ x '
+                            }
+                        } else if i + 2 < n && chars[i + 2] == '\'' {
+                            i += 3; // 'x'
+                        } else {
+                            line.code.push('\''); // lifetime
+                            i += 1;
+                        }
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(line);
+    }
+    out
+}
+
+// ------------------------------------------------------------- rule scans
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `word` appears in `code` with non-identifier characters (or the text
+/// boundary) on both sides.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// `name!` is invoked in `code` (left identifier boundary, literal `!` on
+/// the right — so `eprintln!` does not double-count as `println!`).
+fn calls_macro(code: &str, name: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(name) {
+        let at = start + pos;
+        let end = at + name.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        if before_ok && bytes.get(end) == Some(&b'!') {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// An `unsafe` token at `lines[idx]` is covered if a `SAFETY` comment sits
+/// on the same line or in the contiguous comment/attribute/blank block
+/// directly above it. A line ending in `=` also passes through: the
+/// comment above a multi-line `let x =\n    unsafe { .. }` binding covers
+/// the whole statement.
+fn safety_covered(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.comment.contains("SAFETY") {
+            return true;
+        }
+        let code = l.code.trim();
+        let passive = code.is_empty()
+            || code.starts_with("#[")
+            || code.starts_with("#![")
+            || code.ends_with('=');
+        if !passive {
+            break;
+        }
+    }
+    false
+}
+
+fn sanctioned(path: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| {
+        if let Some(dir) = p.strip_suffix('/') {
+            Path::new(path).starts_with(dir)
+        } else {
+            path == *p
+        }
+    })
+}
+
+// -------------------------------------------------------- allow directives
+
+#[derive(Debug, Clone)]
+struct Allow {
+    rule: String,
+    justified: bool,
+}
+
+const ALLOW_PREFIX: &str = "lint: allow(";
+
+/// A directive must be the whole comment (`// lint: allow(rule) — why`),
+/// so prose *about* the syntax (like the module docs above) never parses
+/// as one.
+fn parse_allow(comment: &str) -> Option<Allow> {
+    let rest = comment.trim_start().strip_prefix(ALLOW_PREFIX)?;
+    match rest.find(')') {
+        None => Some(Allow { rule: rest.trim().to_string(), justified: false }),
+        Some(close) => {
+            let rule = rest[..close].trim().to_string();
+            let just = rest[close + 1..]
+                .trim_matches(|c: char| c.is_whitespace() || c == '\u{2014}' || c == '-' || c == ':');
+            Some(Allow { rule, justified: !just.is_empty() })
+        }
+    }
+}
+
+// ------------------------------------------------------------ single file
+
+/// Lint one source file. `path` is crate-root-relative with forward
+/// slashes (it selects the per-rule sanctioned-module exemptions).
+pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
+    let lines = lex(text);
+    let mut findings = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        findings.push(Finding { file: path.to_string(), line, rule, msg });
+    };
+
+    let check_print = !sanctioned(path, PRINT_SANCTIONED);
+    let check_thread = !sanctioned(path, THREAD_SANCTIONED);
+    let check_clock = !sanctioned(path, CLOCK_SANCTIONED);
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        if has_word(code, "unsafe") && !safety_covered(&lines, idx) {
+            push(
+                lineno,
+                SAFETY_RULE,
+                "`unsafe` without a `// SAFETY:` comment on this line or directly above".to_string(),
+            );
+        }
+        if check_print {
+            for mac in ["println", "eprintln", "print", "eprint"] {
+                if calls_macro(code, mac) {
+                    push(
+                        lineno,
+                        PRINT_RULE,
+                        format!("direct `{mac}!` outside src/trace/ — use the log_*! macros"),
+                    );
+                    break;
+                }
+            }
+        }
+        if code.contains("partial_cmp") && code.contains("unwrap") {
+            push(
+                lineno,
+                CMP_RULE,
+                "`partial_cmp(..).unwrap()` panics on NaN — use `total_cmp`".to_string(),
+            );
+        }
+        if check_thread {
+            for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+                if code.contains(pat) {
+                    push(
+                        lineno,
+                        THREAD_RULE,
+                        format!("raw `{pat}` outside the sanctioned runtime modules — use WorkerPool"),
+                    );
+                    break;
+                }
+            }
+        }
+        if check_clock && code.contains("Instant::now") {
+            push(
+                lineno,
+                CLOCK_RULE,
+                "`Instant::now()` outside trace/metrics — take timestamps via `crate::util::now()`"
+                    .to_string(),
+            );
+        }
+    }
+
+    // Allow directives: validate every directive, then drop findings the
+    // valid ones cover (their own line or the line directly below).
+    let mut allows: Vec<(usize, Allow)> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if let Some(a) = parse_allow(&line.comment) {
+            allows.push((idx + 1, a));
+        }
+    }
+    for (lineno, a) in &allows {
+        if !RULES.iter().any(|(name, _)| name == &a.rule) {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: *lineno,
+                rule: ALLOW_RULE,
+                msg: format!("allow directive names unknown rule `{}`", a.rule),
+            });
+        } else if !a.justified {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: *lineno,
+                rule: ALLOW_RULE,
+                msg: format!(
+                    "allow({}) without a justification — write `// lint: allow({}) — <why>`",
+                    a.rule, a.rule
+                ),
+            });
+        }
+    }
+    findings.retain(|f| {
+        f.rule == ALLOW_RULE
+            || !allows.iter().any(|(lineno, a)| {
+                a.justified && a.rule == f.rule && (f.line == *lineno || f.line == *lineno + 1)
+            })
+    });
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+// --------------------------------------------------------- bench manifest
+
+/// `(line, name)` of every `[[bench]]` target in a `Cargo.toml` text.
+fn bench_targets(cargo_toml: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut in_bench = false;
+    let mut section_line = 0usize;
+    for (idx, line) in cargo_toml.lines().enumerate() {
+        let t = line.trim();
+        if t.starts_with('[') {
+            in_bench = t == "[[bench]]";
+            section_line = idx + 1;
+            continue;
+        }
+        if !in_bench {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("name") {
+            let rest = rest.trim_start();
+            if let Some(v) = rest.strip_prefix('=') {
+                let v = v.trim().trim_matches('"');
+                out.push((section_line, v.to_string()));
+            }
+        }
+    }
+    out
+}
+
+fn check_bench_manifest(root: &Path, findings: &mut Vec<Finding>) -> crate::Result<()> {
+    let manifest = root.join("Cargo.toml");
+    let toml = fs::read_to_string(&manifest)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", manifest.display()))?;
+    for (line, name) in bench_targets(&toml) {
+        let bench_path = root.join("benches").join(format!("{name}.rs"));
+        match fs::read_to_string(&bench_path) {
+            Err(_) => findings.push(Finding {
+                file: "Cargo.toml".to_string(),
+                line,
+                rule: BENCH_RULE,
+                msg: format!("[[bench]] `{name}` has no benches/{name}.rs"),
+            }),
+            Ok(text) => {
+                // either Bench::write_json or report_json + fs::write lands
+                // the artifact; doc-comment mentions alone don't count
+                let writes = text.contains("write_json") || text.contains("report_json");
+                if !(text.contains("BENCH_") && writes) {
+                    findings.push(Finding {
+                        file: format!("benches/{name}.rs"),
+                        line: 1,
+                        rule: BENCH_RULE,
+                        msg: format!(
+                            "bench `{name}` does not write its BENCH_*.json artifact (write_json/report_json)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- tree walk
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole crate rooted at `root` (the directory holding
+/// `Cargo.toml`): `src/`, `benches/` and `tests/`, plus the bench
+/// manifest cross-check. `vendor/` is deliberately out of scope — the
+/// offline `xla` stub mirrors an external API and is not ours to style.
+pub fn lint_tree(root: &Path) -> crate::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for sub in ["src", "benches", "tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut findings = Vec::new();
+    for file in &files {
+        let rel = file.strip_prefix(root).unwrap_or(file);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let text = fs::read_to_string(file)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", file.display()))?;
+        findings.extend(lint_source(&rel, &text));
+    }
+    check_bench_manifest(root, &mut findings)?;
+    Ok(findings)
+}
+
+// ------------------------------------------------------------------ output
+
+/// Human-readable report, one finding per line.
+pub fn render(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Machine-readable report for `pallas-lint --json`.
+pub fn to_json(findings: &[Finding]) -> Json {
+    Json::obj(vec![
+        (
+            "findings",
+            Json::arr(findings.iter().map(|f| {
+                Json::obj(vec![
+                    ("file", Json::str(f.file.clone())),
+                    ("line", Json::num(f.line as u32)),
+                    ("rule", Json::str(f.rule)),
+                    ("message", Json::str(f.msg.clone())),
+                ])
+            })),
+        ),
+        ("count", Json::num(findings.len() as u32)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ------------------------------------------------------------ lexer
+
+    #[test]
+    fn lexer_strips_strings_and_captures_comments() {
+        let lines = lex("let x = \"unsafe println!\"; // SAFETY: not really code");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("println"));
+        assert!(lines[0].comment.contains("SAFETY"));
+    }
+
+    #[test]
+    fn lexer_handles_nested_block_comments_and_raw_strings() {
+        let src = "a /* one /* two */ still comment */ b\nlet s = r#\"thread::spawn\"#;";
+        let lines = lex(src);
+        assert!(lines[0].code.contains('a') && lines[0].code.contains('b'));
+        assert!(lines[0].comment.contains("still comment"));
+        assert!(!lines[1].code.contains("thread::spawn"));
+    }
+
+    #[test]
+    fn lexer_distinguishes_char_literals_from_lifetimes() {
+        let lines = lex("fn f<'a>(x: &'a str) -> char { '\"' }");
+        // the double quote inside the char literal must not open a string
+        assert!(lines[0].code.contains("str"));
+        let lines = lex("let c = '\\''; let d = 'x'; let l: &'static str = \"s\";");
+        assert!(lines[0].code.contains("static"));
+        assert!(!lines[0].code.contains('x'));
+    }
+
+    #[test]
+    fn lexer_keeps_multiline_string_state() {
+        let src = "let s = \"line one\nline two with unsafe\";\nlet t = 1;";
+        let lines = lex(src);
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[2].code.contains("let t"));
+    }
+
+    // -------------------------------------------- one negative per rule
+
+    #[test]
+    fn catches_undocumented_unsafe() {
+        let src = "fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec!["safety-comment"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn accepts_safety_comment_same_line_or_above() {
+        let above = "// SAFETY: p is valid for reads\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert!(lint_source("src/foo.rs", above).is_empty());
+        let trailing = "unsafe impl Send for X {} // SAFETY: X owns no borrows\n";
+        assert!(lint_source("src/foo.rs", trailing).is_empty());
+        let through_attr =
+            "// SAFETY: repr(C) layout\n#[allow(dead_code)]\nunsafe fn g() {}\n";
+        assert!(lint_source("src/foo.rs", through_attr).is_empty());
+        let continuation =
+            "// SAFETY: in bounds\nlet bytes =\n    unsafe { f(p) };\n";
+        assert!(lint_source("src/foo.rs", continuation).is_empty());
+    }
+
+    #[test]
+    fn catches_direct_print_outside_trace() {
+        let src = "fn f() { println!(\"hi\"); }\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", src)), vec!["no-direct-print"]);
+        // the logger's own sink and the lint CLI are sanctioned
+        assert!(lint_source("src/trace/log.rs", src).is_empty());
+        assert!(lint_source("src/bin/lint.rs", src).is_empty());
+        // a print in a doc example is a comment, not code
+        let doc = "/// ```\n/// println!(\"demo\");\n/// ```\nfn f() {}\n";
+        assert!(lint_source("src/foo.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn catches_the_nan_panic_comparator_class() {
+        let src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", src)), vec!["total-cmp"]);
+        let fixed = "v.sort_by(|a, b| a.total_cmp(b));\n";
+        assert!(lint_source("src/foo.rs", fixed).is_empty());
+    }
+
+    #[test]
+    fn catches_raw_thread_outside_sanctioned_modules() {
+        let src = "let h = std::thread::spawn(|| {});\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", src)), vec!["thread-discipline"]);
+        assert!(lint_source("src/util/pool.rs", src).is_empty());
+        assert!(lint_source("src/pipeline/runner.rs", src).is_empty());
+        let builder = "std::thread::Builder::new()\n    .spawn(f)\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", builder)), vec!["thread-discipline"]);
+    }
+
+    #[test]
+    fn catches_instant_now_outside_trace_and_metrics() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", src)), vec!["clock-discipline"]);
+        assert!(lint_source("src/trace/span.rs", src).is_empty());
+        assert!(lint_source("src/metrics/timing.rs", src).is_empty());
+        assert!(lint_source("src/util/mod.rs", src).is_empty());
+        let routed = "let t0 = crate::util::now();\n";
+        assert!(lint_source("src/foo.rs", routed).is_empty());
+    }
+
+    // -------------------------------------------------- allow directives
+
+    #[test]
+    fn justified_allow_suppresses_same_and_next_line() {
+        let above = "// lint: allow(no-direct-print) — CLI usage text\nprintln!(\"usage\");\n";
+        assert!(lint_source("src/foo.rs", above).is_empty());
+        let inline = "println!(\"usage\"); // lint: allow(no-direct-print) — CLI usage text\n";
+        assert!(lint_source("src/foo.rs", inline).is_empty());
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_the_next_line() {
+        let src = "// lint: allow(no-direct-print) — only covers the next line\nprintln!(\"ok\");\nprintln!(\"not covered\");\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-direct-print"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unjustified_or_unknown_allow_is_itself_a_finding() {
+        let bare = "// lint: allow(no-direct-print)\nprintln!(\"hi\");\n";
+        let f = lint_source("src/foo.rs", bare);
+        assert_eq!(rules_of(&f), vec!["bad-allow", "no-direct-print"]);
+        let unknown = "// lint: allow(no-such-rule) — because\nlet x = 1;\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", unknown)), vec!["bad-allow"]);
+    }
+
+    #[test]
+    fn allow_only_suppresses_its_own_rule() {
+        let src = "// lint: allow(total-cmp) — wrong rule named\nprintln!(\"hi\");\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-direct-print"]);
+    }
+
+    // --------------------------------------------------- bench manifest
+
+    #[test]
+    fn bench_targets_parse_from_manifest_text() {
+        let toml = "[package]\nname = \"x\"\n\n[[bench]]\nname = \"alpha\"\nharness = false\n\n[[bin]]\nname = \"tool\"\n\n[[bench]]\nname = \"beta\"\n";
+        let targets = bench_targets(toml);
+        let names: Vec<&str> = targets.iter().map(|(_, n)| n.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta"]);
+        assert_eq!(targets[0].0, 4);
+    }
+
+    #[test]
+    fn bench_manifest_flags_missing_file_and_missing_artifact() {
+        let root = std::env::temp_dir().join(format!("pallas-lint-test-{}", std::process::id()));
+        let benches = root.join("benches");
+        fs::create_dir_all(&benches).unwrap();
+        fs::write(
+            root.join("Cargo.toml"),
+            "[[bench]]\nname = \"ghost\"\n\n[[bench]]\nname = \"mute\"\n",
+        )
+        .unwrap();
+        fs::write(benches.join("mute.rs"), "fn main() {}\n").unwrap();
+        let mut findings = Vec::new();
+        check_bench_manifest(&root, &mut findings).unwrap();
+        assert_eq!(rules_of(&findings), vec!["bench-manifest", "bench-manifest"]);
+        assert!(findings[0].msg.contains("ghost"));
+        assert!(findings[1].msg.contains("mute"));
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    // ------------------------------------------------------- the gate
+
+    #[test]
+    fn repo_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_tree(root).unwrap();
+        assert!(
+            findings.is_empty(),
+            "pallas-lint found {} violation(s):\n{}",
+            findings.len(),
+            render(&findings)
+        );
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let findings = vec![Finding {
+            file: "src/a.rs".to_string(),
+            line: 7,
+            rule: "total-cmp",
+            msg: "uses \"quotes\" and \\ backslash".to_string(),
+        }];
+        let doc = to_json(&findings);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("count").unwrap().as_usize().unwrap(), 1);
+        let arr = parsed.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("line").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(arr[0].get("rule").unwrap().as_str().unwrap(), "total-cmp");
+        assert!(arr[0].get("message").unwrap().as_str().unwrap().contains("quotes"));
+    }
+}

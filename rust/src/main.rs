@@ -38,7 +38,7 @@ fn main() {
 }
 
 fn print_usage() {
-    // deliberately a bare eprintln: usage must print whatever the log level
+    // lint: allow(no-direct-print) — usage must print whatever the log level
     eprintln!(
         "usage: pres-train <train|datagen|pending|figure|table|inspect> [options]\n\
          see README.md for the full option list"

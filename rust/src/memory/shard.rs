@@ -44,7 +44,7 @@ use std::sync::Arc;
 
 use crate::memory::store::{MemorySnapshot, MemoryStore};
 use crate::memory::MemoryBackend;
-use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
+use crate::util::pool::{chunk_for, claims, take_chunk, WorkerPool};
 
 /// Elements (`rows * d`) of *per-shard* work below which gather/scatter
 /// stay serial. The scoped-spawn design this store started with paid
@@ -115,6 +115,10 @@ impl ShardRouter {
         }
         let router = *self;
         pool.run(&mut tasks, |(vs, out)| {
+            // checked-claims: chunks come from a split_at_mut cursor, so
+            // they are disjoint by construction; claim them anyway so the
+            // barrier re-proves it every run
+            claims::claim(&out[..], "route-chunk");
             for (slot, &v) in out.iter_mut().zip(vs.iter()) {
                 *slot = router.route(v);
             }
@@ -288,6 +292,10 @@ impl ShardedMemoryStore {
                 .collect();
             self.pool.run(&mut tasks, |(shard, items)| {
                 for (local, slot) in items.iter_mut() {
+                    // checked-claims: rows route to exactly one shard, so
+                    // out-slots are cross-task disjoint by construction —
+                    // the claim table asserts it at the barrier
+                    claims::claim(&slot[..], "shard-gather-row");
                     slot.copy_from_slice(shard.row(*local));
                 }
             });
@@ -408,6 +416,14 @@ impl MemoryBackend for ShardedMemoryStore {
                 .filter(|(_, items)| !items.is_empty())
                 .collect();
             pool.run(&mut tasks, |(shard, items)| {
+                // checked-claims: the task owns its whole `&mut` shard, so
+                // it claims the shard's backing storage outright
+                #[cfg(any(debug_assertions, feature = "checked-claims"))]
+                {
+                    let (data, last) = shard.claim_ranges();
+                    claims::claim(data, "shard-scatter-data");
+                    claims::claim(last, "shard-scatter-clock");
+                }
                 for &(local, row, t) in items.iter() {
                     shard.scatter(local, row, t);
                 }

@@ -33,6 +33,15 @@ impl MemoryStore {
         self.d
     }
 
+    /// Backing-storage views for checked-claims registration: a pooled
+    /// scatter task claims the whole shard it exclusively owns (see
+    /// `util::pool::claims`). Gated like the checker so release builds
+    /// carry no extra surface.
+    #[cfg(any(debug_assertions, feature = "checked-claims"))]
+    pub(crate) fn claim_ranges(&self) -> (&[f32], &[f32]) {
+        (&self.data, &self.last_update)
+    }
+
     pub fn num_nodes(&self) -> usize {
         self.last_update.len()
     }

@@ -23,8 +23,6 @@
 //! the pipeline-vs-sequential equivalence intact while deep prefetch
 //! finally scales with cores instead of saturating one PREP thread.
 
-use std::time::Instant;
-
 use crate::batching::BatchPlan;
 use crate::graph::EventLog;
 use crate::memory::{ShardRouter, ShardRoutes};
@@ -148,7 +146,7 @@ pub fn fill_prep_with(
     router: ShardRouter,
     pool: &WorkerPool,
 ) {
-    let t0 = Instant::now();
+    let t0 = crate::util::now();
     sampler.sample_batch_rowwise(log, cur.range.clone(), base, &mut prep.negatives, pool);
     fill_prep_from_with(prep, log, prev, cur, router, pool);
     prep.prep_ns = t0.elapsed().as_nanos() as u64;
@@ -177,7 +175,7 @@ pub fn fill_prep_from_with(
     router: ShardRouter,
     pool: &WorkerPool,
 ) {
-    let t0 = Instant::now();
+    let t0 = crate::util::now();
     let b = prev.batch_size();
     debug_assert_eq!(cur.batch_size(), b);
     debug_assert_eq!(prep.batch_size(), b);

@@ -240,14 +240,14 @@ fn run_job(
     let lits = match stage_inputs(step, args) {
         Ok(lits) => lits,
         Err(e) => {
-            let t = Instant::now();
+            let t = crate::util::now();
             return (Err(e), (t, t));
         }
     };
     let refs: Vec<&Literal> = lits.iter().collect();
-    let started = Instant::now();
+    let started = crate::util::now();
     let outs = step.run(&refs);
-    let finished = Instant::now();
+    let finished = crate::util::now();
     let flattened = outs.and_then(|outs| outs.iter().map(PlainArg::from_literal).collect());
     (flattened, (started, finished))
 }
@@ -472,5 +472,75 @@ mod tests {
         // wrong length and wrong dtype both fail loudly
         assert!(PlainArg::F32(vec![0.0; 3]).to_literal(&spec).is_err());
         assert!(PlainArg::I32(vec![0; 4]).to_literal(&spec).is_err());
+    }
+
+    /// Hand-made completion record for driving `CommitQueue` without a
+    /// `StreamPool` (the queue only reads `seq` on its control path).
+    fn done(seq: usize) -> StepDone {
+        let t = crate::util::now();
+        StepDone {
+            seq,
+            stream: 0,
+            outputs: Ok(vec![]),
+            started: t,
+            finished: t,
+        }
+    }
+
+    #[test]
+    fn commit_queue_empty_epoch_is_a_clean_error() {
+        let mut commits = CommitQueue::new();
+        assert!(commits.is_empty());
+        assert_eq!(commits.len(), 0);
+        assert_eq!(commits.front_seq(), None);
+        let err = commits.wait_next().unwrap_err();
+        assert!(
+            err.to_string().contains("no step in flight"),
+            "unexpected error: {err}"
+        );
+        // erroring on an empty queue must not poison it
+        let (tx, rx) = channel();
+        commits.push(0, rx);
+        tx.send(done(0)).unwrap();
+        assert_eq!(commits.wait_next().unwrap().seq, 0);
+    }
+
+    #[test]
+    fn commit_queue_single_in_flight_step_and_dead_lane() {
+        // one in-flight step: completion surfaces and empties the queue
+        let mut commits = CommitQueue::new();
+        let (tx, rx) = channel();
+        commits.push(7, rx);
+        assert_eq!(commits.front_seq(), Some(7));
+        tx.send(done(7)).unwrap();
+        let got = commits.wait_next().unwrap();
+        assert_eq!(got.seq, 7);
+        assert!(commits.is_empty());
+        // a dropped sender models a lane that died mid-step: the error
+        // names the lost step instead of hanging
+        let (tx, rx) = channel::<StepDone>();
+        commits.push(8, rx);
+        drop(tx);
+        let err = commits.wait_next().unwrap_err();
+        assert!(
+            err.to_string().contains("lane died running step 8"),
+            "unexpected error: {err}"
+        );
+        assert!(commits.is_empty(), "a failed wait still consumes the front");
+    }
+
+    #[test]
+    fn commit_queue_flags_out_of_order_arrival() {
+        // the queue front says step 3 is oldest; a lane handing back step 5
+        // on that channel is a plumbing bug the queue must refuse to commit
+        let mut commits = CommitQueue::new();
+        let (tx, rx) = channel();
+        commits.push(3, rx);
+        tx.send(done(5)).unwrap();
+        let err = commits.wait_next().unwrap_err();
+        assert!(
+            err.to_string().contains("commit order violated"),
+            "unexpected error: {err}"
+        );
     }
 }

@@ -207,6 +207,9 @@ impl Engine {
 
 /// Build an f32 literal directly from host data (single copy).
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: reinterpreting an f32 slice as its raw bytes — same
+    // allocation, `len * 4` bytes, u8 has alignment 1 and no invalid bit
+    // patterns; the view ends before `data` does.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(
@@ -218,6 +221,8 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
 
 /// Build an i32 literal directly from host data.
 pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    // SAFETY: as in `lit_f32` — i32 slice viewed as `len * 4` raw bytes,
+    // u8 alignment 1, no invalid bit patterns, same lifetime as `data`.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(

@@ -235,7 +235,7 @@ pub fn mm_nn(
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
     debug_assert!(bias.is_none_or(|bv| bv.len() == n));
-    let t0 = Instant::now();
+    let t0 = crate::util::now();
     match kind {
         GemmBackendKind::Naive => naive_nn(pool, a, b, m, k, n, bias, act, false, out),
         GemmBackendKind::Blocked => blocked_mm(pool, a, b, m, k, n, bias, act, false, false, out),
@@ -264,7 +264,7 @@ pub fn mm_nn_acc(
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
     debug_assert!(bias.is_none_or(|bv| bv.len() == n));
-    let t0 = Instant::now();
+    let t0 = crate::util::now();
     match kind {
         GemmBackendKind::Naive => naive_nn(pool, a, b, m, k, n, bias, act, true, out),
         GemmBackendKind::Blocked => blocked_mm(pool, a, b, m, k, n, bias, act, true, false, out),
@@ -288,7 +288,7 @@ pub fn mm_nt(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    let t0 = Instant::now();
+    let t0 = crate::util::now();
     match kind {
         GemmBackendKind::Naive => naive_nt(pool, a, b, m, k, n, out),
         GemmBackendKind::Blocked => {
@@ -314,7 +314,7 @@ pub fn mm_tn_acc(
     debug_assert_eq!(a.len(), r * m);
     debug_assert_eq!(b.len(), r * n);
     debug_assert_eq!(out.len(), m * n);
-    let t0 = Instant::now();
+    let t0 = crate::util::now();
     match kind {
         GemmBackendKind::Naive => naive_tn_acc(pool, a, b, r, m, n, out),
         GemmBackendKind::Blocked => blocked_tn_acc(pool, a, b, r, m, n, out),

@@ -9,14 +9,20 @@
 
 use anyhow::{Context, Result};
 
-use super::span::snapshot;
+use super::span::{snapshot, ThreadSpans};
 use crate::util::json::Json;
 
 /// Build the full Chrome trace document from the current span rings.
 pub fn chrome_trace_json() -> Json {
-    let snaps = snapshot();
+    build(&snapshot())
+}
+
+/// Pure document builder over an explicit snapshot. Split from
+/// [`chrome_trace_json`] so escaping/structure tests can feed synthetic
+/// rings instead of racing other tests for the global span state.
+fn build(snaps: &[ThreadSpans]) -> Json {
     let mut events = Vec::new();
-    for t in &snaps {
+    for t in snaps {
         events.push(Json::obj(vec![
             ("name", Json::str("thread_name")),
             ("ph", Json::str("M")),
@@ -51,14 +57,17 @@ pub fn chrome_trace_json() -> Json {
     ])
 }
 
-/// Write the trace document to `path`. Warns (does not fail the run) when
-/// ring wraparound dropped spans.
+/// Write the trace document to `path`, creating missing parent
+/// directories. Warns (does not fail the run) when ring wraparound
+/// dropped spans.
 pub fn export_chrome(path: &str) -> Result<()> {
-    let dropped: u64 = snapshot().iter().map(|t| t.dropped).sum();
+    let snaps = snapshot();
+    let dropped: u64 = snaps.iter().map(|t| t.dropped).sum();
     if dropped > 0 {
         crate::log_warn!("trace ring wrapped: {dropped} spans dropped from {path}");
     }
-    let doc = chrome_trace_json();
+    let doc = build(&snaps);
+    crate::util::ensure_parent_dir(path)?;
     std::fs::write(path, doc.to_string())
         .with_context(|| format!("writing trace file {path}"))?;
     Ok(())
@@ -67,6 +76,16 @@ pub fn export_chrome(path: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::span::{SpanRec, Stage};
+
+    fn ring(name: &str, tid: u64, spans: Vec<SpanRec>) -> ThreadSpans {
+        ThreadSpans {
+            thread: name.to_string(),
+            tid,
+            dropped: 0,
+            spans,
+        }
+    }
 
     #[test]
     fn empty_trace_is_valid_chrome_json() {
@@ -78,5 +97,96 @@ mod tests {
             parsed.get("displayTimeUnit").unwrap().as_str().unwrap(),
             "ms"
         );
+    }
+
+    #[test]
+    fn hostile_thread_names_survive_a_serialize_parse_roundtrip() {
+        // every character class the escaper must handle: quotes,
+        // backslashes, newline/tab/CR, and a bare control byte
+        let nasty = [
+            "quote\"in\"name",
+            "back\\slash\\path",
+            "multi\nline\tname\r",
+            "ctrl\u{1}byte",
+            "unicode π λ — name",
+        ];
+        let snaps: Vec<ThreadSpans> = nasty
+            .iter()
+            .enumerate()
+            .map(|(i, n)| ring(n, i as u64 + 1, vec![]))
+            .collect();
+        let text = build(&snaps).to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("escaper emitted unparseable JSON: {e}\n{text}")
+        });
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), nasty.len());
+        for (ev, want) in events.iter().zip(nasty) {
+            assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "M");
+            let got = ev
+                .get("args")
+                .unwrap()
+                .get("name")
+                .unwrap()
+                .as_str()
+                .unwrap();
+            assert_eq!(got, want, "thread name mangled by escape/parse");
+        }
+    }
+
+    #[test]
+    fn span_events_carry_scaled_timestamps_and_args() {
+        let snaps = vec![ring(
+            "exec-0",
+            9,
+            vec![SpanRec {
+                stage: Stage::Exec,
+                start_ns: 1_500,
+                dur_ns: 2_500,
+                arg: 42,
+            }],
+        )];
+        let parsed = Json::parse(&build(&snaps).to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // one metadata event + one complete event
+        assert_eq!(events.len(), 2);
+        let ev = &events[1];
+        assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.get("name").unwrap().as_str().unwrap(), Stage::Exec.name());
+        assert_eq!(ev.get("tid").unwrap().as_f64().unwrap(), 9.0);
+        // nanoseconds scale to fractional microseconds
+        assert_eq!(ev.get("ts").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(ev.get("dur").unwrap().as_f64().unwrap(), 2.5);
+        let arg = ev.get("args").unwrap().get("arg").unwrap();
+        assert_eq!(arg.as_f64().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn dropped_span_counts_aggregate_across_rings() {
+        let mut a = ring("a", 1, vec![]);
+        let mut b = ring("b", 2, vec![]);
+        a.dropped = 3;
+        b.dropped = 4;
+        let parsed = Json::parse(&build(&[a, b]).to_string()).unwrap();
+        let dropped = parsed
+            .get("otherData")
+            .unwrap()
+            .get("dropped_spans")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(dropped, 7.0);
+    }
+
+    #[test]
+    fn export_creates_missing_parent_directories() {
+        let root =
+            std::env::temp_dir().join(format!("pres-chrome-{}", std::process::id()));
+        let path = root.join("nested/deeper/trace.json");
+        let path = path.to_str().unwrap();
+        export_chrome(path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_dir_all(&root).unwrap();
     }
 }

@@ -371,6 +371,7 @@ mod tests {
         clear();
         let t0 = Instant::now();
         record_span(Stage::Splice, t0, t0 + Duration::from_micros(1), 0);
+        // lint: allow(thread-discipline) — per-thread ring registration is the subject under test
         let handle = std::thread::Builder::new()
             .name("trace-test-worker".into())
             .spawn(move || {
@@ -388,5 +389,66 @@ mod tests {
         let tids: std::collections::BTreeSet<u64> = snaps.iter().map(|t| t.tid).collect();
         assert_eq!(tids.len(), snaps.len(), "tids are unique per thread");
         clear();
+    }
+
+    /// Seqlock stress: one writer hammers its ring (several wraps) while
+    /// two readers snapshot concurrently. Every span carries
+    /// `arg == dur_ns + 7`, and consecutive overwrites of any slot differ
+    /// in `dur_ns` (the cycle length 997 is coprime to the ring size), so
+    /// a torn read — fields mixed across two generations of a slot — would
+    /// break the relation. The seq protocol must instead *skip* slots
+    /// caught mid-write, so every span a reader sees satisfies it.
+    #[test]
+    fn concurrent_snapshots_never_observe_torn_spans() {
+        let _g = lock();
+        start();
+        clear();
+        let t0 = Instant::now();
+        // Miri runs threads with a large interpretive slowdown; a couple
+        // thousand pushes still races the readers without timing out.
+        let rounds: usize = if cfg!(miri) { 2_000 } else { 120_000 };
+        // seed one span so this thread's ring exists and we learn its tid
+        record_span(Stage::Exec, t0, t0 + Duration::from_nanos(1), 8);
+        let writer_tid = my_spans().tid;
+        let done = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for r in 0..2 {
+            let done = done.clone();
+            // lint: allow(thread-discipline) — seqlock readers must race the writer for real
+            let h = std::thread::Builder::new()
+                .name(format!("seqlock-reader-{r}"))
+                .spawn(move || {
+                    let mut seen = 0u64;
+                    while !done.load(Ordering::Relaxed) {
+                        for t in snapshot() {
+                            if t.tid != writer_tid {
+                                continue;
+                            }
+                            for s in &t.spans {
+                                assert_eq!(
+                                    s.arg,
+                                    s.dur_ns + 7,
+                                    "torn span read: dur_ns={} arg={}",
+                                    s.dur_ns,
+                                    s.arg
+                                );
+                                seen += 1;
+                            }
+                        }
+                    }
+                    seen
+                })
+                .unwrap();
+            readers.push(h);
+        }
+        for i in 0..rounds {
+            let d = (i % 997) as u64 + 1;
+            record_span(Stage::Exec, t0, t0 + Duration::from_nanos(d), d + 7);
+        }
+        done.store(true, Ordering::Relaxed);
+        let observed: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+        stop();
+        clear();
+        assert!(observed > 0, "readers never observed a span — vacuous stress");
     }
 }

@@ -148,6 +148,7 @@ pub struct MetricsSink {
 
 impl MetricsSink {
     pub fn create(path: &str) -> Result<MetricsSink> {
+        crate::util::ensure_parent_dir(path)?;
         let f = File::create(path).with_context(|| format!("creating metrics file {path}"))?;
         Ok(MetricsSink {
             w: BufWriter::new(f),

@@ -12,7 +12,7 @@ use std::collections::VecDeque;
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 use xla::Literal;
@@ -530,7 +530,7 @@ impl Trainer {
             }
 
             // ---- WRITEBACK
-            let t2 = Instant::now();
+            let t2 = crate::util::now();
             self.state.absorb_outputs(&mut outputs);
             let metrics = self.consume_step_outputs(&spec, &outputs, i % slots, i)?;
             let took = t2.elapsed();
@@ -638,7 +638,7 @@ impl Trainer {
 
         for i in 1..n_train {
             // ---- ordered commit: wait for step i (always the queue front)
-            let t0 = Instant::now();
+            let t0 = crate::util::now();
             let done = commits.wait_next()?;
             let waited = t0.elapsed();
             timer.add_exec_wait(waited);
@@ -662,7 +662,7 @@ impl Trainer {
             // ---- reclaim the updated parameter bank (zero-copy) and put
             // batch i+1 (pre-spliced) in flight so it executes under the
             // write-back below
-            let t1 = Instant::now();
+            let t1 = crate::util::now();
             let step_outs = outs.split_off(3 * n);
             bank = outs;
             let outputs = plain_to_literals(&step_outs, &spec.outputs[3 * n..])?;
@@ -680,7 +680,7 @@ impl Trainer {
             }
 
             // ---- WRITEBACK i, strictly in plan order
-            let t2 = Instant::now();
+            let t2 = crate::util::now();
             let metrics =
                 self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i)?;
             let took = t2.elapsed();
@@ -829,7 +829,7 @@ impl Trainer {
 
         for i in 1..n_train {
             // ---- ordered commit: wait for step i (always the queue front)
-            let t0 = Instant::now();
+            let t0 = crate::util::now();
             let done = commits.wait_next()?;
             let waited = t0.elapsed();
             timer.add_exec_wait(waited);
@@ -852,7 +852,7 @@ impl Trainer {
 
             // ---- the coordinator's Adam commit, strictly in plan order:
             // gradients are the leading n outputs of the grad ABI
-            let t1 = Instant::now();
+            let t1 = crate::util::now();
             let step_outs = outs.split_off(n);
             let mut grads = Vec::with_capacity(n);
             for (gi, g) in outs.into_iter().enumerate() {
@@ -876,7 +876,7 @@ impl Trainer {
             timer.writeback += t1.elapsed();
 
             // ---- WRITEBACK i, strictly in plan order
-            let t2 = Instant::now();
+            let t2 = crate::util::now();
             let metrics = self.consume_step_outputs(&spec, &outputs, i % self.hosts.len(), i)?;
             let took = t2.elapsed();
             timer.add_writeback(took);
@@ -934,7 +934,7 @@ impl Trainer {
     ) -> Result<std::sync::mpsc::Receiver<crate::pipeline::StepDone>> {
         let n_params = self.state.len();
         debug_assert_eq!(params.len(), n_params, "parameter bank out of step");
-        let t0 = Instant::now();
+        let t0 = crate::util::now();
         let mut args: Vec<PlainArg> = params.iter().map(|v| PlainArg::F32(v.clone())).collect();
         args.extend(self.hosts[i % self.hosts.len()].pack_plain(spec, n_params, 0)?);
         if self.exec_fault_at == Some(i) {
@@ -974,7 +974,7 @@ impl Trainer {
         idx: usize,
         timer: &mut EpochTimer,
     ) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = crate::util::now();
         let prep = pf.recv()?;
         let stalled = t0.elapsed();
         timer.add_prep_stall(stalled);
@@ -991,7 +991,7 @@ impl Trainer {
         timer: &mut EpochTimer,
     ) -> Result<(f64, f64, f64, f64)> {
         // -------- PREP + SPLICE (assemble)
-        let t0 = Instant::now();
+        let t0 = crate::util::now();
         {
             let prev = &self.plans[i - 1];
             let cur = &self.plans[i];
@@ -1019,7 +1019,7 @@ impl Trainer {
         let (spec, mut outputs) = self.exec_train_slot(0, timer)?;
 
         // -------- WRITEBACK + metrics
-        let t2 = Instant::now();
+        let t2 = crate::util::now();
         self.state.absorb_outputs(&mut outputs);
         let metrics = self.consume_step_outputs(&spec, &outputs, 0, i)?;
         let took = t2.elapsed();
@@ -1046,7 +1046,7 @@ impl Trainer {
             idx
         );
         timer.add_prep_busy(Duration::from_nanos(prep.prep_ns));
-        let t = Instant::now();
+        let t = crate::util::now();
         let slot = idx % self.hosts.len();
         let old = self.hosts[slot].install_prep(prep);
         pf.recycle(old);
@@ -1084,7 +1084,7 @@ impl Trainer {
     ) -> Result<(ArtifactSpec, Vec<Literal>)> {
         let spec = self.train_step.spec.clone();
         let n_params = self.state.len();
-        let t0 = Instant::now();
+        let t0 = crate::util::now();
         let data_lits = self.hosts[slot].pack(&spec, 3 * n_params, 2)?;
         let lr_lit = lit_scalar(self.cfg.lr)?;
         let t_lit = lit_scalar((self.state.step + 1) as f32)?;
@@ -1098,9 +1098,9 @@ impl Trainer {
             .chain([&lr_lit, &t_lit])
             .collect();
         timer.add_assemble(t0.elapsed());
-        let t1 = Instant::now();
+        let t1 = crate::util::now();
         let outputs = self.train_step.run(&args)?;
-        let t_end = Instant::now();
+        let t_end = crate::util::now();
         timer.record_exec_inline(t1, t_end);
         trace::record_span(Stage::Exec, t1, t_end, slot as u64);
         Ok((spec, outputs))
@@ -1125,7 +1125,7 @@ impl Trainer {
         let spec = &step.spec;
         let n_params = self.state.len();
         debug_assert_eq!(bank.len(), 3 * n_params, "parameter bank out of step");
-        let t0 = Instant::now();
+        let t0 = crate::util::now();
         let mut args = bank;
         // data tensors straight from the staged host buffers (the same ABI
         // slice the inline path packs), then the trailing lr / step_t
@@ -1321,7 +1321,7 @@ impl Trainer {
     pub fn run(&mut self) -> Result<RunReport> {
         let mut epochs = Vec::new();
         let mut best_val = f64::NEG_INFINITY;
-        let t0 = std::time::Instant::now();
+        let t0 = crate::util::now();
         for e in 0..self.cfg.epochs {
             let mut report = self.train_epoch(e)?;
             let evaluate = self.cfg.eval_every > 0 && (e + 1) % self.cfg.eval_every == 0;

@@ -11,7 +11,42 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
-/// Monotonic wall-clock helper used across benches/metrics.
+/// Monotonic wall-clock helper: the sanctioned clock entry point for all
+/// stage/bench code (the `clock-discipline` lint in `crate::lint` rejects
+/// raw `Instant::now()` outside `trace/`/`metrics/`). One greppable choke
+/// point means clock-origin refactors — span-origin anchoring, a virtual
+/// clock for deterministic replay — touch exactly one function.
 pub fn now() -> std::time::Instant {
     std::time::Instant::now()
+}
+
+/// Create the parent directory of `path` if it does not exist yet, so
+/// `--trace-out runs/a/trace.json` works without a manual `mkdir -p`.
+/// A bare filename (no parent, or an empty parent after stripping the
+/// final component) is already writable and is left alone.
+pub fn ensure_parent_dir(path: &str) -> anyhow::Result<()> {
+    use anyhow::Context;
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating parent directory for {path}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ensure_parent_dir_creates_nested_dirs_and_tolerates_bare_names() {
+        let root = std::env::temp_dir().join(format!("pres-parent-{}", std::process::id()));
+        let file = root.join("a/b/out.json");
+        let file = file.to_str().unwrap();
+        super::ensure_parent_dir(file).unwrap();
+        assert!(root.join("a/b").is_dir());
+        // idempotent on an existing parent; a bare filename is a no-op
+        super::ensure_parent_dir(file).unwrap();
+        super::ensure_parent_dir("just-a-file.json").unwrap();
+        std::fs::remove_dir_all(&root).unwrap();
+    }
 }

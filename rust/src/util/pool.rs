@@ -171,10 +171,14 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
+        // checked-claims: compiled out in release unless the feature is on
+        let run_id = claims::begin_run();
         if self.handles.is_empty() || n == 1 {
-            for t in tasks.iter_mut() {
+            for (i, t) in tasks.iter_mut().enumerate() {
+                let _task = claims::task_scope(run_id, i);
                 f(t);
             }
+            claims::verify(run_id);
             return;
         }
         let base = TaskPtr(tasks.as_mut_ptr());
@@ -184,6 +188,7 @@ impl WorkerPool {
             if i >= n {
                 break;
             }
+            let _task = claims::task_scope(run_id, i);
             // SAFETY: `i` is claimed exactly once across all lanes, so this
             // is the unique `&mut` to task `i`; the slice outlives
             // `broadcast`, which does not return before every lane is done.
@@ -194,6 +199,9 @@ impl WorkerPool {
         let span = trace::span(Stage::PoolBarrier, n as u64);
         telemetry::count_pool_generation(n as u64, self.lanes() as u64);
         self.broadcast(&body);
+        // every task claim is in once the barrier fires; disjointness is
+        // asserted before the results are handed back to the caller
+        claims::verify(run_id);
         drop(span);
     }
 
@@ -273,6 +281,10 @@ fn worker_loop(shared: &PoolShared, lane: usize) {
             }
         };
         // run outside the lock so lanes actually overlap
+        // SAFETY: `job.ptr` was published under the state lock this
+        // generation and the submitter blocks in `broadcast` until
+        // `remaining` hits zero, so the erased-lifetime referent is alive
+        // for the whole call (the soundness argument behind `erase`).
         let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (&*job.ptr)(lane) })).is_ok();
         let mut s = lock(&shared.state);
         if !ok {
@@ -317,6 +329,176 @@ pub fn take_chunk<'a, T>(cursor: &mut &'a mut [T], n: usize) -> &'a mut [T] {
     let (head, tail) = std::mem::take(cursor).split_at_mut(n);
     *cursor = tail;
     head
+}
+
+// ---- checked-claims mode (dynamic disjoint-write checking) --------------
+
+/// The pool's Exactness invariant — every pooled loop writes disjoint
+/// fixed slots — is what makes the `&mut`-per-task handoff sound and the
+/// results lane-count-invariant. This module checks it *dynamically*:
+/// pooled tasks register the output ranges they are about to write
+/// ([`claims::claim`] / [`claims::claim_raw`]), and the generation barrier
+/// asserts pairwise disjointness across tasks before [`WorkerPool::run`]
+/// returns results to the caller. Same-task overlap is allowed (a task may
+/// claim a whole buffer and then its rows).
+///
+/// Gated on `debug_assertions` OR the `checked-claims` cargo feature:
+/// `cargo test` exercises it everywhere the pool runs, while release
+/// builds compile the no-op twin below and pay nothing (soak runs can opt
+/// back in with `--features checked-claims`).
+#[cfg(any(debug_assertions, feature = "checked-claims"))]
+pub mod claims {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, OnceLock, PoisonError};
+
+    #[derive(Clone, Copy, Debug)]
+    struct Claim {
+        run: u64,
+        task: usize,
+        base: usize,
+        len: usize,
+        tag: &'static str,
+    }
+
+    /// Run ids are global (not per-pool): two pools — or two concurrent
+    /// inline runs on 1-lane pools — interleave in one table without
+    /// cross-talk because every claim carries its run id.
+    static NEXT_RUN: AtomicU64 = AtomicU64::new(1);
+
+    fn table() -> &'static Mutex<Vec<Claim>> {
+        static TABLE: OnceLock<Mutex<Vec<Claim>>> = OnceLock::new();
+        TABLE.get_or_init(|| Mutex::new(Vec::new()))
+    }
+
+    thread_local! {
+        /// (run, task) the current thread is executing for, if any.
+        static CURRENT: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+        /// Per-lane claim buffer, flushed into [`table`] once per task so
+        /// row-granular claims don't take the global lock per row.
+        static LOCAL: std::cell::RefCell<Vec<Claim>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
+
+    pub(super) fn begin_run() -> u64 {
+        NEXT_RUN.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// RAII task context: claims registered while the guard lives are
+    /// attributed to `(run, task)`. Drop clears the context and flushes
+    /// the lane-local buffer — including on unwind, so a panicking task
+    /// neither leaks its identity onto later claims nor loses the claims
+    /// it already made.
+    pub(super) struct TaskScope;
+
+    impl Drop for TaskScope {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(None));
+            LOCAL.with(|l| {
+                let mut buf = l.borrow_mut();
+                if !buf.is_empty() {
+                    let mut t = table().lock().unwrap_or_else(PoisonError::into_inner);
+                    t.append(&mut buf);
+                }
+            });
+        }
+    }
+
+    pub(super) fn task_scope(run: u64, task: usize) -> TaskScope {
+        CURRENT.with(|c| c.set(Some((run, task))));
+        TaskScope
+    }
+
+    /// Register the slice this pooled task is about to write. No-op when
+    /// called outside a pool task, so serial code paths may call it
+    /// unconditionally.
+    pub fn claim<T>(xs: &[T], tag: &'static str) {
+        claim_raw(xs.as_ptr() as usize, std::mem::size_of_val(xs), tag);
+    }
+
+    /// Raw-range flavor of [`claim`]: base address + extent in bytes.
+    pub fn claim_raw(base: usize, len: usize, tag: &'static str) {
+        let Some((run, task)) = CURRENT.with(|c| c.get()) else {
+            return;
+        };
+        if len == 0 {
+            return;
+        }
+        LOCAL.with(|l| l.borrow_mut().push(Claim { run, task, base, len, tag }));
+    }
+
+    /// Drain this run's claims and assert cross-task disjointness (sweep
+    /// over base-sorted ranges tracking the furthest extent; the panic
+    /// fires at the earliest overlap). Runs at the generation barrier,
+    /// before results are published to the submitter.
+    pub(super) fn verify(run: u64) {
+        let mut mine: Vec<Claim> = Vec::new();
+        {
+            let mut t = table().lock().unwrap_or_else(PoisonError::into_inner);
+            t.retain(|c| {
+                if c.run == run {
+                    mine.push(*c);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        mine.sort_by_key(|c| c.base);
+        let mut furthest: Option<usize> = None; // index of max-end claim so far
+        for i in 0..mine.len() {
+            if let Some(m) = furthest {
+                let prev = mine[m];
+                let cur = mine[i];
+                if cur.base < prev.base + prev.len && cur.task != prev.task {
+                    panic!(
+                        "checked-claims: overlapping pooled writes — task {} ({}: {:#x}..{:#x}) \
+                         vs task {} ({}: {:#x}..{:#x})",
+                        prev.task,
+                        prev.tag,
+                        prev.base,
+                        prev.base + prev.len,
+                        cur.task,
+                        cur.tag,
+                        cur.base,
+                        cur.base + cur.len
+                    );
+                }
+                if cur.base + cur.len > prev.base + prev.len {
+                    furthest = Some(i);
+                }
+            } else {
+                furthest = Some(i);
+            }
+        }
+    }
+}
+
+/// No-op twin of the checked-claims module: with the gate off every entry
+/// point is an empty `#[inline(always)]` fn, so claim registrations at
+/// call sites (shard gathers/scatters) compile to nothing in release.
+#[cfg(not(any(debug_assertions, feature = "checked-claims")))]
+pub mod claims {
+    #[inline(always)]
+    pub fn claim<T>(_xs: &[T], _tag: &'static str) {}
+
+    #[inline(always)]
+    pub fn claim_raw(_base: usize, _len: usize, _tag: &'static str) {}
+
+    pub(super) struct TaskScope;
+
+    #[inline(always)]
+    pub(super) fn begin_run() -> u64 {
+        0
+    }
+
+    #[inline(always)]
+    pub(super) fn task_scope(_run: u64, _task: usize) -> TaskScope {
+        TaskScope
+    }
+
+    #[inline(always)]
+    pub(super) fn verify(_run: u64) {}
 }
 
 #[cfg(test)]
@@ -455,5 +637,55 @@ mod tests {
         assert_eq!(a, &[0, 1, 2, 3]);
         assert_eq!(b, &[4, 5, 6, 7, 8, 9]);
         assert!(cur.is_empty());
+    }
+
+    #[test]
+    #[cfg(any(debug_assertions, feature = "checked-claims"))]
+    fn checked_claims_accept_disjoint_pooled_writes() {
+        let pool = WorkerPool::new(4);
+        let mut buf = vec![0u8; 1024];
+        let base = buf.as_mut_ptr() as usize;
+        // 8 tasks each claim (and write) their own 128-byte stripe; a task
+        // may also re-claim rows inside its own stripe (self-overlap is
+        // legal — only cross-task overlap is a violation)
+        let mut tasks: Vec<(usize, usize)> = (0..8).map(|i| (i * 128, 128)).collect();
+        pool.run(&mut tasks, |t| {
+            claims::claim_raw(base + t.0, t.1, "stripe");
+            claims::claim_raw(base + t.0, 16, "stripe-head");
+        });
+        // inline (1-lane) runs verify too
+        WorkerPool::new(1).run(&mut tasks, |t| claims::claim_raw(base + t.0, t.1, "stripe"));
+        drop(buf);
+    }
+
+    #[test]
+    #[cfg(any(debug_assertions, feature = "checked-claims"))]
+    fn checked_claims_catch_an_overlapping_scatter_claim() {
+        let pool = WorkerPool::new(2);
+        // deliberately overlapping "scatter" claims: task 0 takes bytes
+        // 0x1000..0x1060, task 1 takes 0x1040..0x10a0 (32-byte collision)
+        let mut tasks: Vec<(usize, usize)> = vec![(0x1000, 0x60), (0x1040, 0x60)];
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut tasks, |t| claims::claim_raw(t.0, t.1, "scatter"));
+        }));
+        let payload = caught.expect_err("overlapping claims must panic at the barrier");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        assert!(msg.contains("checked-claims"), "unexpected panic: {msg}");
+        // the claim table drained despite the panic; the pool still works
+        let mut ok: Vec<(usize, usize)> = vec![(0, 16), (16, 16)];
+        pool.run(&mut ok, |t| claims::claim_raw(t.0, t.1, "disjoint"));
+    }
+
+    #[test]
+    #[cfg(any(debug_assertions, feature = "checked-claims"))]
+    fn claims_outside_a_pool_task_are_ignored() {
+        // serial code paths may call claim unconditionally: without a task
+        // scope on this thread the registration is a no-op
+        claims::claim_raw(0x2000, 64, "no-task-context");
+        let xs = [0f32; 8];
+        claims::claim(&xs, "no-task-context");
     }
 }

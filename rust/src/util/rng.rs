@@ -112,7 +112,7 @@ impl Pcg32 {
     pub fn weighted(&mut self, cumulative: &[f64]) -> usize {
         let total = *cumulative.last().expect("non-empty weights");
         let x = self.f64() * total;
-        match cumulative.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+        match cumulative.binary_search_by(|c| c.total_cmp(&x)) {
             Ok(i) => (i + 1).min(cumulative.len() - 1),
             Err(i) => i.min(cumulative.len() - 1),
         }
