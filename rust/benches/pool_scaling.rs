@@ -18,6 +18,10 @@
 //!   ∈ {1, 2, 4, 8} on a wiki-like event stream (sampling + features +
 //!   matches + routes).
 
+// The scoped-spawn baseline this bench compares against is deliberately the
+// banned pattern — that is the point of the comparison.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::Arc;
 
 use pres::batching::BatchPlan;

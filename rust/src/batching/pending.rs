@@ -14,7 +14,7 @@
 //!   updated states into its own rows (the in-graph lag-one gather);
 //! * measures pending statistics, the quantity Theorems 1-2 reason about.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::graph::EventLog;
 
@@ -48,12 +48,15 @@ pub struct BatchPlan {
     pub collided: Vec<f32>,
     /// vertex -> its last update row (the row whose corrected state the
     /// next batch should splice in).
-    last_row: HashMap<u32, u32>,
+    last_row: BTreeMap<u32, u32>,
     pub stats: PendingStats,
 }
 
 impl BatchPlan {
-    /// Analyze `range` of `log`. O(b) time, O(distinct vertices) space.
+    /// Analyze `range` of `log`. O(b log b) time, O(distinct vertices)
+    /// space; the per-vertex tables are `BTreeMap`s so every traversal
+    /// below is in sorted vertex order (determinism by construction, not
+    /// by each consumer happening to be order-independent).
     pub fn build(log: &EventLog, range: std::ops::Range<usize>) -> BatchPlan {
         let b = range.len();
         let u = 2 * b;
@@ -61,17 +64,17 @@ impl BatchPlan {
         let mut upd_event = vec![0u32; u];
         let mut wmask = vec![0.0f32; u];
         let mut collided = vec![0.0f32; u];
-        let mut last_row: HashMap<u32, u32> = HashMap::with_capacity(u);
+        let mut last_row: BTreeMap<u32, u32> = BTreeMap::new();
         // per-vertex update-ROW count (a self-loop contributes two rows):
         // drives collided marking, i.e. "this vertex's intermediate state is
         // lost under batch processing"
-        let mut occurrences: HashMap<u32, u32> = HashMap::with_capacity(u);
+        let mut occurrences: BTreeMap<u32, u32> = BTreeMap::new();
         // per-vertex prior-EVENT count (a self-loop counts once): drives the
         // pending math, which reasons about event pairs sharing a vertex
-        let mut event_occ: HashMap<u32, u32> = HashMap::with_capacity(u);
+        let mut event_occ: BTreeMap<u32, u32> = BTreeMap::new();
         // prior events per normalized endpoint pair: corrects the double
         // count when a prior event shares BOTH endpoints with this one
-        let mut pair_counts: HashMap<(u32, u32), u32> = HashMap::with_capacity(u);
+        let mut pair_counts: BTreeMap<(u32, u32), u32> = BTreeMap::new();
         let mut pending_events = 0usize;
         let mut pending_pairs = 0usize;
 
@@ -372,7 +375,7 @@ mod tests {
             |pairs| {
                 let log = log_with(pairs);
                 let plan = BatchPlan::build(&log, 0..pairs.len());
-                let mut winners: HashMap<u32, Vec<u32>> = HashMap::new();
+                let mut winners: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
                 for (r, &v) in plan.upd_vertex.iter().enumerate() {
                     if plan.wmask[r] == 1.0 {
                         winners.entry(v).or_default().push(r as u32);
@@ -395,7 +398,7 @@ mod tests {
                     }
                 }
                 // every distinct vertex has exactly one winner
-                let distinct: std::collections::HashSet<u32> =
+                let distinct: std::collections::BTreeSet<u32> =
                     plan.upd_vertex.iter().copied().collect();
                 if winners.len() != distinct.len() {
                     return Err("some vertex lost its winner".into());

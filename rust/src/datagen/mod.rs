@@ -290,7 +290,7 @@ mod tests {
         assert!(stats.labeled_events > 0);
         assert!(stats.label_positive_rate > 0.0, "{stats:?}");
         // stickiness: per actor, once labeled 1 never labeled 0 afterwards
-        let mut flipped = std::collections::HashSet::new();
+        let mut flipped = std::collections::BTreeSet::new();
         for e in &d.log.events {
             match e.label {
                 1 => {

@@ -3,7 +3,7 @@
 //! terminal ASCII plots.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::Arc;
@@ -22,7 +22,7 @@ pub struct Lab {
     pub engine: Rc<Engine>,
     /// `Arc` (not `Rc`): trainers hand the dataset to their background
     /// PREP worker (see `pipeline/`), so the handle must be Send.
-    datasets: RefCell<HashMap<(String, u64, u32), Arc<Dataset>>>,
+    datasets: RefCell<BTreeMap<(String, u64, u32), Arc<Dataset>>>,
     /// Effort knobs (CLI-overridable; --quick shrinks everything).
     pub trials: usize,
     pub epochs: usize,
@@ -37,7 +37,7 @@ impl Lab {
                 Path::new(args.get_or("artifacts", "artifacts")),
                 args.get_or("exec", "auto"),
             )?),
-            datasets: RefCell::new(HashMap::new()),
+            datasets: RefCell::new(BTreeMap::new()),
             trials: args.usize_or("trials", if quick { 1 } else { 3 })?,
             epochs: args.usize_or("epochs", if quick { 3 } else { 6 })?,
             data_scale: args.f32_or("data-scale", if quick { 0.25 } else { 0.5 })?,

@@ -93,7 +93,7 @@ impl EventLog {
     /// Fraction of events whose (src, dst) pair occurred before — the
     /// "repeat interaction" ratio that makes memory modules pay off.
     pub fn repeat_ratio(&self) -> f64 {
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         let mut repeats = 0usize;
         for e in &self.events {
             if !seen.insert((e.src, e.dst)) {

@@ -51,6 +51,7 @@ pub mod tables;
 pub mod trace;
 pub mod training;
 pub mod util;
+pub mod verify;
 
 /// Crate-wide result alias (anyhow is the only error dependency available
 /// in the offline registry snapshot).

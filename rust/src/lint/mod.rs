@@ -6,12 +6,17 @@
 //! slots, the span rings have a single seqlock writer, commits apply in
 //! plan order, every `unsafe` is justified by an argument about the
 //! generation barrier. Conventions rot silently. This module walks
-//! `src/`, `benches/` and `tests/` at the line/token level (comments and
-//! string/char literals are lexed away first; zero external parser
-//! crates) and enforces the rules below. The same pass runs three ways:
-//! the `pallas-lint` binary (human output, `--json` for machines), the
-//! `repo_tree_is_lint_clean` unit test (so the tier-1 `cargo test` gate
-//! catches violations), and a dedicated CI step.
+//! `src/`, `benches/` and `tests/` with a lightweight token-stream pass
+//! (comments and string/char literals are lexed away first, the surviving
+//! code is tokenized into identifier/punctuation streams; zero external
+//! parser crates) and enforces the rules below. Line endings are
+//! normalized before lexing (`\r\n` and `\n` lint identically), and
+//! directive/safety-comment matching only ever sees real comment text —
+//! a directive smuggled inside a string literal is data, not policy.
+//! The same pass runs three ways: the `pallas-lint` binary (human
+//! output, `--json` for machines), the `repo_tree_is_lint_clean` unit
+//! test (so the tier-1 `cargo test` gate catches violations), and a
+//! dedicated CI step.
 //!
 //! # Repo invariants
 //!
@@ -56,6 +61,42 @@
 //! Sanctioned: `src/trace/`, `src/metrics/`, `src/util/mod.rs` (the
 //! helper itself) and `src/util/bench.rs` (the bench harness timing its
 //! own reps).
+//!
+//! ## `hash-iter-order`
+//! No `HashMap`/`HashSet` anywhere in `src/`, `benches/` or `tests/` —
+//! use `BTreeMap`/`BTreeSet` or a sorted `Vec` + `binary_search`.
+//! `RandomState` hashing makes iteration order a per-process accident,
+//! and the determinism contract (bit-identical results across shards,
+//! workers and streams) cannot rest on every consumer of a hash table
+//! happening to be order-independent. The historical hazard is exactly
+//! that shape: `batching/pending.rs` built its last-row and
+//! occurrence-count tables in hash order and stayed deterministic only
+//! because each consumer was order-independent — one refactor (say,
+//! emitting the write-mask from the iteration itself) away from a
+//! nondeterministic splice. A *probe-only* table that is provably never
+//! iterated may carry a justified allow instead of a conversion.
+//!
+//! ## `rng-discipline`
+//! No `thread_rng` / `from_entropy` / `OsRng` / `StdRng` / `SmallRng` /
+//! `getrandom` / `SystemTime::now()` — all randomness must be a `Pcg32`
+//! stream derived from the run seed via `split` (`util/rng.rs`), so the
+//! draw sequence is a pure function of `(seed, stream id)` no matter how
+//! work lands on shards, workers or streams. The hazard is that an
+//! entropy- or clock-seeded sampler passes every in-process equivalence
+//! gate (both sides of the comparison share the process-local seed)
+//! while silently destroying cross-run reproducibility — the failure
+//! only surfaces when a CI rerun can't reproduce a regression.
+//!
+//! ## `float-reduction`
+//! No bare `.sum::<f32>()` and no `fold` with an `f32` accumulator
+//! outside the sanctioned reduction helpers (`src/runtime/gemm.rs`,
+//! `src/runtime/host_step.rs`). f32 addition is not associative; a
+//! reduction whose order follows worker count or stream interleaving
+//! drifts in the last ulp and breaks the bit-equivalence gates that
+//! license every pipelining optimization since PR 1. Inside the
+//! sanctioned helpers the reduction tree is fixed by the kernel ABI
+//! (blocked loops in a deterministic order), not by the schedule —
+//! route new reductions through them or accumulate in a fixed order.
 //!
 //! ## `bench-manifest`
 //! Every `[[bench]]` target in `Cargo.toml` has a `benches/<name>.rs`
@@ -105,6 +146,9 @@ pub const RULES: &[(&str, &str)] = &[
     ("total-cmp", "no partial_cmp(..).unwrap() — use total_cmp"),
     ("thread-discipline", "no raw std::thread outside the sanctioned runtime modules"),
     ("clock-discipline", "no Instant::now() outside trace/metrics — use crate::util::now()"),
+    ("hash-iter-order", "no HashMap/HashSet — use BTreeMap/BTreeSet or a sorted Vec"),
+    ("rng-discipline", "all randomness via seed-derived rng streams, never entropy or clocks"),
+    ("float-reduction", "no bare f32 reductions outside the sanctioned kernel helpers"),
     ("bench-manifest", "every [[bench]] target writes its BENCH_*.json artifact"),
     ("bad-allow", "allow directives must name a known rule and justify themselves"),
 ];
@@ -114,12 +158,15 @@ const PRINT_RULE: &str = RULES[1].0;
 const CMP_RULE: &str = RULES[2].0;
 const THREAD_RULE: &str = RULES[3].0;
 const CLOCK_RULE: &str = RULES[4].0;
-const BENCH_RULE: &str = RULES[5].0;
-const ALLOW_RULE: &str = RULES[6].0;
+const HASH_RULE: &str = RULES[5].0;
+const RNG_RULE: &str = RULES[6].0;
+const FLOAT_RULE: &str = RULES[7].0;
+const BENCH_RULE: &str = RULES[8].0;
+const ALLOW_RULE: &str = RULES[9].0;
 
 /// Files (exact) or directories (trailing `/`) exempt from
 /// `no-direct-print`.
-const PRINT_SANCTIONED: &[&str] = &["src/trace/", "src/bin/lint.rs"];
+const PRINT_SANCTIONED: &[&str] = &["src/trace/", "src/bin/lint.rs", "src/bin/verify.rs"];
 
 /// Modules allowed to create threads directly (see module docs).
 const THREAD_SANCTIONED: &[&str] = &[
@@ -133,16 +180,52 @@ const THREAD_SANCTIONED: &[&str] = &[
 const CLOCK_SANCTIONED: &[&str] =
     &["src/trace/", "src/metrics/", "src/util/mod.rs", "src/util/bench.rs"];
 
+/// The reduction helpers whose f32 accumulation order is fixed by the
+/// kernel ABI rather than the schedule (see module docs).
+const FLOAT_SANCTIONED: &[&str] = &["src/runtime/gemm.rs", "src/runtime/host_step.rs"];
+
 // ------------------------------------------------------------------ lexer
 
 /// One source line split into executable code and comment text. String,
 /// raw-string and char literals are dropped from `code` (a bare `"` marks
 /// where each string literal sat); `//` and `/* */` bodies land in
-/// `comment`.
+/// `comment`; `toks` is the token stream of `code` (so every rule scan
+/// sees identifiers with hard word boundaries, never literal contents).
 #[derive(Debug, Default, Clone)]
 struct Line {
     code: String,
     comment: String,
+    toks: Vec<Tok>,
+}
+
+/// One token of literal-stripped line code. Whitespace is dropped; runs
+/// of `[A-Za-z0-9_]` become `Ident`, everything else is a single-char
+/// `Punct` (`::` is two `Punct(':')` in a row).
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+fn tokenize(code: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    for c in code.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            cur.push(c);
+        } else {
+            if !cur.is_empty() {
+                toks.push(Tok::Ident(std::mem::take(&mut cur)));
+            }
+            if !c.is_whitespace() {
+                toks.push(Tok::Punct(c));
+            }
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(Tok::Ident(cur));
+    }
+    toks
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -176,7 +259,17 @@ fn raw_string_hashes(chars: &[char], i: usize) -> Option<u32> {
 fn lex(text: &str) -> Vec<Line> {
     let mut out = Vec::new();
     let mut mode = Mode::Code;
-    for raw in text.lines() {
+    // Split on `\n` manually (rather than `str::lines`) so the CRLF
+    // handling is explicit and regression-testable: exactly one trailing
+    // `\r` is stripped per line *before* lexing. A surviving `\r` would
+    // defeat the `ends_with('=')` continuation rule in `safety_covered`
+    // and shift the scan-up window on CRLF checkouts.
+    let mut segs: Vec<&str> = text.split('\n').collect();
+    if segs.last() == Some(&"") && (text.is_empty() || text.ends_with('\n')) {
+        segs.pop(); // match `lines()`: no phantom line after a final newline
+    }
+    for raw in segs {
+        let raw = raw.strip_suffix('\r').unwrap_or(raw);
         let chars: Vec<char> = raw.chars().collect();
         let n = chars.len();
         let mut line = Line::default();
@@ -264,6 +357,7 @@ fn lex(text: &str) -> Vec<Line> {
                 }
             }
         }
+        line.toks = tokenize(&line.code);
         out.push(line);
     }
     out
@@ -271,43 +365,48 @@ fn lex(text: &str) -> Vec<Line> {
 
 // ------------------------------------------------------------- rule scans
 
-fn is_ident_byte(b: u8) -> bool {
-    b.is_ascii_alphanumeric() || b == b'_'
+/// `name` appears as a whole identifier token (so `eprintln` never
+/// matches a scan for `println`, and text inside literals never matches
+/// at all — literals were stripped before tokenizing).
+fn has_ident(toks: &[Tok], name: &str) -> bool {
+    toks.iter().any(|t| matches!(t, Tok::Ident(s) if s == name))
 }
 
-/// `word` appears in `code` with non-identifier characters (or the text
-/// boundary) on both sides.
-fn has_word(code: &str, word: &str) -> bool {
-    let bytes = code.as_bytes();
-    let mut start = 0;
-    while let Some(pos) = code[start..].find(word) {
-        let at = start + pos;
-        let end = at + word.len();
-        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
-        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
-        if before_ok && after_ok {
-            return true;
-        }
-        start = at + 1;
-    }
-    false
+/// `name!` is invoked: the identifier immediately followed by `!`.
+fn calls_macro(toks: &[Tok], name: &str) -> bool {
+    toks.windows(2).any(|w| {
+        matches!((&w[0], &w[1]), (Tok::Ident(s), Tok::Punct('!')) if s == name)
+    })
 }
 
-/// `name!` is invoked in `code` (left identifier boundary, literal `!` on
-/// the right — so `eprintln!` does not double-count as `println!`).
-fn calls_macro(code: &str, name: &str) -> bool {
-    let bytes = code.as_bytes();
-    let mut start = 0;
-    while let Some(pos) = code[start..].find(name) {
-        let at = start + pos;
-        let end = at + name.len();
-        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
-        if before_ok && bytes.get(end) == Some(&b'!') {
-            return true;
-        }
-        start = at + 1;
-    }
-    false
+/// `a::b` appears as four consecutive tokens (`a` `:` `:` `b`), which is
+/// how both `thread::spawn` and a reformatted `thread :: spawn` tokenize.
+fn tok_path2(toks: &[Tok], a: &str, b: &str) -> bool {
+    toks.windows(4).any(|w| {
+        matches!(
+            (&w[0], &w[1], &w[2], &w[3]),
+            (Tok::Ident(x), Tok::Punct(':'), Tok::Punct(':'), Tok::Ident(y))
+                if x == a && y == b
+        )
+    })
+}
+
+/// `.sum::<f32>()` — the turbofish tokenizes as `sum` `:` `:` `<` `f32`.
+fn f32_sum_turbofish(toks: &[Tok]) -> bool {
+    toks.windows(5).any(|w| {
+        matches!(
+            (&w[0], &w[1], &w[2], &w[3], &w[4]),
+            (Tok::Ident(s), Tok::Punct(':'), Tok::Punct(':'), Tok::Punct('<'), Tok::Ident(t))
+                if s == "sum" && t == "f32"
+        )
+    })
+}
+
+/// Any identifier naming or suffixed with `f32` (`f32`, `0f32`,
+/// `0.5f32`'s fractional token) — the accumulator-type signal for the
+/// `fold` arm of `float-reduction`.
+fn mentions_f32(toks: &[Tok]) -> bool {
+    toks.iter().any(|t| matches!(t, Tok::Ident(s) if s.ends_with("f32")))
 }
 
 /// An `unsafe` token at `lines[idx]` is covered if a `SAFETY` comment sits
@@ -388,11 +487,12 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
     let check_print = !sanctioned(path, PRINT_SANCTIONED);
     let check_thread = !sanctioned(path, THREAD_SANCTIONED);
     let check_clock = !sanctioned(path, CLOCK_SANCTIONED);
+    let check_float = !sanctioned(path, FLOAT_SANCTIONED);
 
     for (idx, line) in lines.iter().enumerate() {
         let lineno = idx + 1;
-        let code = line.code.as_str();
-        if has_word(code, "unsafe") && !safety_covered(&lines, idx) {
+        let toks = line.toks.as_slice();
+        if has_ident(toks, "unsafe") && !safety_covered(&lines, idx) {
             push(
                 lineno,
                 SAFETY_RULE,
@@ -401,7 +501,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
         }
         if check_print {
             for mac in ["println", "eprintln", "print", "eprint"] {
-                if calls_macro(code, mac) {
+                if calls_macro(toks, mac) {
                     push(
                         lineno,
                         PRINT_RULE,
@@ -411,7 +511,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
                 }
             }
         }
-        if code.contains("partial_cmp") && code.contains("unwrap") {
+        if has_ident(toks, "partial_cmp") && has_ident(toks, "unwrap") {
             push(
                 lineno,
                 CMP_RULE,
@@ -419,22 +519,65 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
             );
         }
         if check_thread {
-            for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
-                if code.contains(pat) {
+            for meth in ["spawn", "scope", "Builder"] {
+                if tok_path2(toks, "thread", meth) {
                     push(
                         lineno,
                         THREAD_RULE,
-                        format!("raw `{pat}` outside the sanctioned runtime modules — use WorkerPool"),
+                        format!(
+                            "raw `thread::{meth}` outside the sanctioned runtime modules — use WorkerPool"
+                        ),
                     );
                     break;
                 }
             }
         }
-        if check_clock && code.contains("Instant::now") {
+        if check_clock && tok_path2(toks, "Instant", "now") {
             push(
                 lineno,
                 CLOCK_RULE,
                 "`Instant::now()` outside trace/metrics — take timestamps via `crate::util::now()`"
+                    .to_string(),
+            );
+        }
+        for ty in ["HashMap", "HashSet"] {
+            if has_ident(toks, ty) {
+                push(
+                    lineno,
+                    HASH_RULE,
+                    format!(
+                        "`{ty}` has nondeterministic iteration order — use BTreeMap/BTreeSet or a sorted Vec (probe-only tables may carry a justified allow)"
+                    ),
+                );
+                break;
+            }
+        }
+        let entropy = ["thread_rng", "from_entropy", "OsRng", "StdRng", "SmallRng", "getrandom"]
+            .into_iter()
+            .find(|&name| has_ident(toks, name));
+        if let Some(name) = entropy {
+            push(
+                lineno,
+                RNG_RULE,
+                format!(
+                    "`{name}` draws outside the seed-derived stream discipline — split a Pcg32 stream from the run seed (util/rng.rs)"
+                ),
+            );
+        } else if tok_path2(toks, "SystemTime", "now") {
+            push(
+                lineno,
+                RNG_RULE,
+                "clock-derived state (`SystemTime::now`) breaks cross-run reproducibility — derive from the run seed instead"
+                    .to_string(),
+            );
+        }
+        if check_float
+            && (f32_sum_turbofish(toks) || (has_ident(toks, "fold") && mentions_f32(toks)))
+        {
+            push(
+                lineno,
+                FLOAT_RULE,
+                "bare f32 reduction outside the sanctioned kernel helpers — reduction order must not depend on worker count or stream interleaving"
                     .to_string(),
             );
         }
@@ -720,6 +863,100 @@ mod tests {
         assert!(lint_source("src/util/mod.rs", src).is_empty());
         let routed = "let t0 = crate::util::now();\n";
         assert!(lint_source("src/foo.rs", routed).is_empty());
+    }
+
+    #[test]
+    fn catches_hash_collections_anywhere_in_code() {
+        let map = "use std::collections::HashMap;\nlet m: HashMap<u32, u32> = HashMap::new();\n";
+        let f = lint_source("src/foo.rs", map);
+        assert_eq!(rules_of(&f), vec!["hash-iter-order", "hash-iter-order"]);
+        let set = "let s: std::collections::HashSet<u32> = Default::default();\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", set)), vec!["hash-iter-order"]);
+        // ordered replacements and mere mentions (comments, strings) pass
+        let btree = "use std::collections::BTreeMap;\nlet m: BTreeMap<u32, u32> = BTreeMap::new();\n";
+        assert!(lint_source("src/foo.rs", btree).is_empty());
+        let prose = "// HashMap iteration order is the hazard\nlet s = \"HashMap\";\n";
+        assert!(lint_source("src/foo.rs", prose).is_empty());
+    }
+
+    #[test]
+    fn justified_allow_covers_a_probe_only_hash_table() {
+        let src = "// lint: allow(hash-iter-order) — probe-only membership set, never iterated\nlet seen: HashSet<(u32, u32)> = HashSet::new();\n";
+        assert!(lint_source("src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catches_entropy_and_clock_seeded_rng() {
+        let entropy = "let mut rng = rand::thread_rng();\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", entropy)), vec!["rng-discipline"]);
+        let reseed = "let rng = Pcg32::from_entropy();\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", reseed)), vec!["rng-discipline"]);
+        let clock = "let seed = SystemTime::now().duration_since(UNIX_EPOCH)?.as_nanos();\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", clock)), vec!["rng-discipline"]);
+        // the sanctioned pattern: a stream split off the run seed
+        let stream = "let rng = base.split(plan_idx as u64);\n";
+        assert!(lint_source("src/foo.rs", stream).is_empty());
+    }
+
+    #[test]
+    fn justified_allow_covers_an_rng_exception() {
+        let src = "let mut rng = rand::thread_rng(); // lint: allow(rng-discipline) — bench warm-up only, draws never reach results\n";
+        assert!(lint_source("src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catches_bare_f32_reductions_outside_kernels() {
+        let sum = "let total = xs.iter().sum::<f32>();\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", sum)), vec!["float-reduction"]);
+        let fold = "let total = xs.iter().fold(0.0f32, |a, &b| a + b);\n";
+        assert_eq!(rules_of(&lint_source("src/foo.rs", fold)), vec!["float-reduction"]);
+        // the sanctioned kernel helpers own their reduction order
+        assert!(lint_source("src/runtime/gemm.rs", sum).is_empty());
+        assert!(lint_source("src/runtime/host_step.rs", fold).is_empty());
+        // f64 accumulation is associative enough for the stats paths
+        let f64_sum = "let total = xs.iter().map(|&x| x as f64).sum::<f64>();\n";
+        assert!(lint_source("src/foo.rs", f64_sum).is_empty());
+        let f64_fold = "let m = xs.iter().fold(f64::MAX, |a, &b| a.min(b));\n";
+        assert!(lint_source("src/foo.rs", f64_fold).is_empty());
+    }
+
+    #[test]
+    fn justified_allow_covers_a_fixed_order_reduction() {
+        let src = "// lint: allow(float-reduction) — single-threaded scan, order fixed by event id\nlet total = xs.iter().sum::<f32>();\n";
+        assert!(lint_source("src/foo.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------- lexer regressions
+
+    #[test]
+    fn allow_directive_inside_string_literal_is_not_honored() {
+        // the directive text is literal DATA here — it must neither
+        // suppress the finding on the next line nor parse as a directive
+        let src = "let s = \"// lint: allow(no-direct-print) — smuggled\";\nprintln!(\"hi\");\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-direct-print"]);
+        assert_eq!(f[0].line, 2);
+        // same for banned names smuggled into literals: data, not code
+        let data = "let s = \"HashMap thread_rng sum::<f32>\";\n";
+        assert!(lint_source("src/foo.rs", data).is_empty());
+    }
+
+    #[test]
+    fn crlf_line_endings_do_not_shift_findings_or_the_safety_window() {
+        let lf = "// SAFETY: in bounds\n#[inline]\nunsafe fn g() {}\nfn f() { println!(\"x\"); }\n";
+        let crlf = lf.replace('\n', "\r\n");
+        let a = lint_source("src/foo.rs", lf);
+        let b = lint_source("src/foo.rs", &crlf);
+        assert_eq!(rules_of(&a), vec!["no-direct-print"]);
+        assert_eq!(rules_of(&b), rules_of(&a));
+        assert_eq!(a[0].line, b[0].line, "CRLF must not shift line numbers");
+        // the `=`-continuation scan-up must see through a trailing \r:
+        // a surviving \r would break `ends_with('=')` and flag the unsafe
+        let cont = "// SAFETY: bounds checked\nlet x =\r\n    unsafe { f(p) };\r\n";
+        assert!(lint_source("src/foo.rs", cont).is_empty());
+        // and a CRLF allow directive still covers the line below it
+        let allow = "// lint: allow(no-direct-print) — CLI usage text\r\nprintln!(\"usage\");\r\n";
+        assert!(lint_source("src/foo.rs", allow).is_empty());
     }
 
     // -------------------------------------------------- allow directives

@@ -77,6 +77,7 @@ pub struct Prefetcher {
 impl Prefetcher {
     /// Spawn the worker prepping plan indices `range` (each index `i` pairs
     /// plans `i-1`/`i`), at most `depth` batches ahead of consumption.
+    #[allow(clippy::disallowed_methods)] // sanctioned thread-builder site
     pub fn spawn(ctx: PrepContext, range: Range<usize>, depth: usize) -> Result<Prefetcher> {
         assert!(depth > 0, "Prefetcher requires depth >= 1");
         assert!(range.start >= 1, "plan index 0 has no predecessor");

@@ -164,6 +164,7 @@ pub struct StreamPool {
 impl StreamPool {
     /// Spawn `streams` lanes executing `step`. Lane threads live until the
     /// pool drops; an idle lane costs one parked thread.
+    #[allow(clippy::disallowed_methods)] // sanctioned thread-builder site
     pub fn new(streams: usize, step: Arc<HostStep>) -> Result<StreamPool> {
         anyhow::ensure!(streams >= 1, "StreamPool requires >= 1 lane");
         let lanes = (0..streams)

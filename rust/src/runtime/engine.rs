@@ -25,7 +25,7 @@
 //! ~10 ms of step compute (EXPERIMENTS.md §Perf).
 
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::Arc;
@@ -62,7 +62,7 @@ enum BackendImpl {
 pub struct Engine {
     backend: BackendImpl,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Step>>>,
+    cache: RefCell<BTreeMap<String, Rc<Step>>>,
 }
 
 impl Engine {
@@ -74,7 +74,7 @@ impl Engine {
         Ok(Engine {
             backend: BackendImpl::Pjrt { client },
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
         })
     }
 
@@ -88,7 +88,7 @@ impl Engine {
                 gemm: Cell::new(GemmBackendKind::Blocked),
             },
             manifest: Manifest::builtin(),
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
         }
     }
 

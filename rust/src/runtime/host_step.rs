@@ -34,7 +34,7 @@
 //! `time_enc_bwd`) pool-parallelize the same way above a crossover,
 //! partitioned so per-slot accumulation order never changes.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
@@ -210,7 +210,7 @@ fn read_i32(lit: &Literal, spec: &TensorSpec) -> Result<Vec<i32>> {
 
 /// Parameter bank: values in ABI order plus name lookup.
 struct Params {
-    index: HashMap<String, usize>,
+    index: BTreeMap<String, usize>,
     vals: Vec<Vec<f32>>,
 }
 
@@ -222,8 +222,8 @@ impl Params {
 
 /// Data tensors by name (f32 and the i32 match indices).
 struct Data {
-    f: HashMap<String, Vec<f32>>,
-    i: HashMap<String, Vec<i32>>,
+    f: BTreeMap<String, Vec<f32>>,
+    i: BTreeMap<String, Vec<i32>>,
 }
 
 impl Data {
@@ -329,7 +329,7 @@ impl HostStep {
     }
 
     fn parse_params(&self, args: &[&Literal]) -> Result<Params> {
-        let mut index = HashMap::new();
+        let mut index = BTreeMap::new();
         let mut vals = Vec::with_capacity(self.n_params);
         for (i, spec) in self.spec.inputs[..self.n_params].iter().enumerate() {
             index.insert(spec.name.clone(), i);
@@ -339,8 +339,8 @@ impl HostStep {
     }
 
     fn parse_data(&self, args: &[&Literal], offset: usize, count: usize) -> Result<Data> {
-        let mut f = HashMap::new();
-        let mut i32s = HashMap::new();
+        let mut f = BTreeMap::new();
+        let mut i32s = BTreeMap::new();
         for (spec, lit) in self.spec.inputs[offset..offset + count]
             .iter()
             .zip(&args[offset..offset + count])
@@ -1457,7 +1457,7 @@ mod tests {
         let m = Manifest::builtin();
         let specs = builtin_param_specs(m.dims, model);
         let mut rng = Pcg32::new(seed);
-        let mut index = HashMap::new();
+        let mut index = BTreeMap::new();
         let mut vals = Vec::new();
         for (i, s) in specs.iter().enumerate() {
             index.insert(s.name.clone(), i);
@@ -1470,8 +1470,8 @@ mod tests {
     /// lag-one matches, pres gating on, nonzero beta.
     fn make_data(step: &HostStep, seed: u64, pres_on: f32) -> Data {
         let mut rng = Pcg32::new(seed ^ 0xDA7A);
-        let mut f = HashMap::new();
-        let mut i = HashMap::new();
+        let mut f = BTreeMap::new();
+        let mut i = BTreeMap::new();
         let n = step.n_params;
         let train = step.spec.kind == "train";
         let off = if train { 3 * n } else { n };
@@ -1526,7 +1526,7 @@ mod tests {
         let eps = 5e-3f32;
         let mut rng = Pcg32::new(99);
         let mut checked = 0;
-        // iterate in ABI order (NOT HashMap order) so each tensor draws
+        // iterate in ABI order (not keyed-map order) so each tensor draws
         // the same direction every run — the check must be reproducible
         let specs = builtin_param_specs(Manifest::builtin().dims, model);
         for (name_idx, ps) in specs.iter().enumerate() {
@@ -1875,7 +1875,7 @@ mod tests {
         let m = Manifest::builtin();
         let specs = crate::runtime::manifest::builtin_clf_param_specs(m.dims);
         let mut rng = Pcg32::new(seed);
-        let mut index = HashMap::new();
+        let mut index = BTreeMap::new();
         let mut vals = Vec::new();
         for (i, s) in specs.iter().enumerate() {
             index.insert(s.name.clone(), i);

@@ -5,14 +5,13 @@
 //! the batch window — the standard TGN/TGL protocol. The sampler is seeded
 //! per (trial, batch) so Assumption 1's variance is reproducible.
 
-use std::collections::HashSet;
-
 use crate::graph::{Event, EventLog};
 use crate::util::pool::{chunk_for, take_chunk, WorkerPool};
 use crate::util::rng::Pcg32;
 
-/// Rows below which row-wise sampling stays on one lane (HashSet probes +
-/// a handful of RNG draws per row — parallelism only pays on real batches).
+/// Rows below which row-wise sampling stays on one lane (binary-search
+/// probes + a handful of RNG draws per row — parallelism only pays on
+/// real batches).
 const SAMPLE_PAR_MIN_ROWS: usize = 256;
 
 #[derive(Clone, Debug)]
@@ -41,15 +40,19 @@ impl NegativeSampler {
         out: &mut [u32],
     ) {
         debug_assert_eq!(out.len(), events.len());
-        let pairs: HashSet<(u32, u32)> = log.events[events.clone()]
+        // sorted probe table (deterministic by construction; probed with
+        // binary_search, never iterated)
+        let mut pairs: Vec<(u32, u32)> = log.events[events.clone()]
             .iter()
             .map(|e| (e.src, e.dst))
             .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
         let n_dst = self.dst_hi - self.dst_lo;
         for (slot, ev) in out.iter_mut().zip(&log.events[events]) {
             let mut dst = self.dst_lo + rng.below(n_dst);
             for _ in 0..8 {
-                if !pairs.contains(&(ev.src, dst)) {
+                if pairs.binary_search(&(ev.src, dst)).is_err() {
                     break;
                 }
                 dst = self.dst_lo + rng.below(n_dst);
@@ -73,10 +76,14 @@ impl NegativeSampler {
         pool: &WorkerPool,
     ) {
         debug_assert_eq!(out.len(), events.len());
-        let pairs: HashSet<(u32, u32)> = log.events[events.clone()]
+        // sorted probe table (deterministic by construction; probed with
+        // binary_search, never iterated)
+        let mut pairs: Vec<(u32, u32)> = log.events[events.clone()]
             .iter()
             .map(|e| (e.src, e.dst))
             .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
         let n_dst = self.dst_hi - self.dst_lo;
         let evs = &log.events[events];
 
@@ -100,7 +107,7 @@ impl NegativeSampler {
                 let mut rng = base.clone().split((c.j0 + k) as u64);
                 let mut dst = self.dst_lo + rng.below(n_dst);
                 for _ in 0..8 {
-                    if !pairs.contains(&(ev.src, dst)) {
+                    if pairs.binary_search(&(ev.src, dst)).is_err() {
                         break;
                     }
                     dst = self.dst_lo + rng.below(n_dst);

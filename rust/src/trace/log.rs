@@ -13,6 +13,9 @@
 use std::fmt;
 use std::sync::atomic::{AtomicU8, Ordering};
 
+// derive(PartialOrd) expands to partial_cmp calls on the discriminant,
+// which the clippy.toml ban would otherwise flag.
+#[allow(clippy::disallowed_methods)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {

@@ -18,6 +18,10 @@
 //! quiescent (between epochs / after join); a concurrent snapshot is still
 //! memory-safe and simply skips slots that are mid-write.
 
+// Sanctioned clock module: raw `Instant::now()` IS the product here (span
+// timestamps), and the stress tests spawn their own reader threads.
+#![allow(clippy::disallowed_methods)]
+
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};

@@ -16,6 +16,7 @@ pub mod stats;
 /// raw `Instant::now()` outside `trace/`/`metrics/`). One greppable choke
 /// point means clock-origin refactors — span-origin anchoring, a virtual
 /// clock for deterministic replay — touch exactly one function.
+#[allow(clippy::disallowed_methods)] // the choke point itself
 pub fn now() -> std::time::Instant {
     std::time::Instant::now()
 }

@@ -114,6 +114,7 @@ impl WorkerPool {
     /// Pool with `lanes` total lanes (including the caller's). `lanes = 1`
     /// spawns nothing and runs everything inline; `lanes = 0` means "auto"
     /// (one lane per available core).
+    #[allow(clippy::disallowed_methods)] // sanctioned thread-builder site
     pub fn new(lanes: usize) -> WorkerPool {
         let lanes = if lanes == 0 { default_lanes() } else { lanes };
         let shared = Arc::new(PoolShared {
@@ -572,6 +573,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::disallowed_methods)] // raw spawn: the test IS the second thread
     fn concurrent_submitters_serialize_without_deadlock() {
         // the PREP thread and the coordinator share one pool in the trainer
         let pool = Arc::new(WorkerPool::new(2));

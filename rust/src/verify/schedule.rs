@@ -1,0 +1,661 @@
+//! The schedule state machines and their exhaustive checker.
+//!
+//! See the module docs on [`crate::verify`] for the abstraction. The
+//! scripts here must mirror the coordinator loop bodies in
+//! `training/trainer.rs` statement-for-statement; the cross-validation
+//! test in `tests/pipeline_equivalence.rs` keeps the two from drifting by
+//! replaying [`predicted`] against the real trainer's epoch witnesses.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// The pipeline knobs a schedule is a pure function of.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Knobs {
+    /// Train-split plan count; iterations run `1..n_train` (plan 0 only
+    /// seeds the first splice), so `n_train - 1` steps commit per epoch.
+    pub n_train: usize,
+    /// `bounded_staleness`: memory-splice lag bound (MSPipe-style).
+    pub k: usize,
+    /// `param_staleness`: parameter lag bound (DistTGL-style).
+    pub p: usize,
+    /// `exec_streams`: EXEC lane count.
+    pub streams: usize,
+}
+
+/// Which coordinator loop `train_epoch` dispatches to (with prefetch
+/// depth > 0, which every staleness configuration requires anyway).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopKind {
+    /// `n_train <= 1`: nothing to overlap, no loop body runs.
+    Trivial,
+    /// `streams == 1`: inline EXEC, pre-splicing up to `k` ahead.
+    Pipelined,
+    /// `streams > 1`, `p == 0`: lanes hide coordinator work, exact
+    /// parameter chain (at most one step mid-flight).
+    ExactMultistream,
+    /// `streams > 1`, `p > 0`: `W = min(p, streams-1) + 1` steps
+    /// genuinely in flight against bounded-lag parameter snapshots.
+    RelaxedMultistream,
+}
+
+impl Knobs {
+    /// Mirror of the `PipelineConfig` rules in `config::validate` (the
+    /// combinations a user can actually run): at least one lane;
+    /// multi-stream requires `k >= 1` (nothing can overlap at `k = 0`);
+    /// a realized parameter lag must fit inside the memory window
+    /// (`min(p, streams-1) <= k`, which is what makes batch `i + W`
+    /// already spliced when it is submitted).
+    pub fn valid(&self) -> bool {
+        if self.streams == 0 {
+            return false;
+        }
+        if self.streams > 1 && self.k == 0 {
+            return false;
+        }
+        if self.p > 0 && self.p.min(self.streams - 1) > self.k {
+            return false;
+        }
+        true
+    }
+
+    /// The loop `train_epoch` dispatches this configuration to.
+    pub fn loop_kind(&self) -> LoopKind {
+        if self.n_train <= 1 {
+            LoopKind::Trivial
+        } else if self.streams > 1 {
+            if self.p > 0 {
+                LoopKind::RelaxedMultistream
+            } else {
+                LoopKind::ExactMultistream
+            }
+        } else {
+            LoopKind::Pipelined
+        }
+    }
+
+    /// The in-flight window `W = min(p, streams - 1) + 1` (1 for every
+    /// exact loop: submissions happen only after the previous wait).
+    pub fn window(&self) -> usize {
+        self.p.min(self.streams - 1) + 1
+    }
+}
+
+impl fmt::Display for Knobs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "n_train={} k={} p={} streams={}",
+            self.n_train, self.k, self.p, self.streams
+        )
+    }
+}
+
+/// One coordinator operation. `j` is always a plan index in
+/// `1..n_train`; `lag`s are the values the real loops record into the
+/// epoch timer (the static pass re-derives them from first principles
+/// and rejects any mismatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Install batch `j`'s memory splice; its view misses `lag` commits.
+    Splice { j: usize, lag: usize },
+    /// Put step `j` in flight on a lane; its parameter snapshot misses
+    /// `param_lag` plan-order optimizer commits.
+    Submit { j: usize, param_lag: usize },
+    /// Block until step `j` (the commit-queue front) returns, then apply
+    /// its optimizer commit.
+    Wait { j: usize },
+    /// Apply step `j`'s memory write-back, strictly in plan order.
+    Writeback { j: usize },
+}
+
+/// Compile the coordinator loop for `kn` to its action script. Each arm
+/// mirrors the corresponding `run_*_epoch` body in
+/// `training/trainer.rs`, including the prologue fills and the in-loop
+/// window top-ups, so the script *is* the schedule.
+pub fn script(kn: &Knobs) -> Vec<Action> {
+    let n_train = kn.n_train;
+    let stale = kn.k;
+    let mut s = Vec::new();
+    if n_train <= 1 {
+        return s;
+    }
+    let last = n_train - 1;
+    match kn.loop_kind() {
+        LoopKind::Trivial => {}
+        LoopKind::Pipelined => {
+            // mirrors run_pipelined_epoch: splice-exec inline, then the
+            // pre-splice window fill, then the write-back
+            let mut presliced: std::collections::VecDeque<usize> = Default::default();
+            for i in 1..n_train {
+                if presliced.front() == Some(&i) {
+                    presliced.pop_front();
+                } else {
+                    s.push(Action::Splice { j: i, lag: 0 });
+                }
+                s.push(Action::Submit { j: i, param_lag: 0 });
+                s.push(Action::Wait { j: i });
+                while stale > 0 && presliced.len() < stale {
+                    let next = i + presliced.len() + 1;
+                    if next >= n_train {
+                        break;
+                    }
+                    s.push(Action::Splice { j: next, lag: next - i });
+                    presliced.push_back(next);
+                }
+                s.push(Action::Writeback { j: i });
+            }
+        }
+        LoopKind::ExactMultistream => {
+            // mirrors run_multistream_epoch: prologue splice + submit 1,
+            // window fill, then wait i -> submit i+1 -> WB i -> top-up
+            s.push(Action::Splice { j: 1, lag: 0 });
+            s.push(Action::Submit { j: 1, param_lag: 0 });
+            let mut hi = 1usize;
+            while hi < (1 + stale).min(last) {
+                let next = hi + 1;
+                s.push(Action::Splice { j: next, lag: next - 1 });
+                hi = next;
+            }
+            for i in 1..n_train {
+                s.push(Action::Wait { j: i });
+                if i < last {
+                    s.push(Action::Submit { j: i + 1, param_lag: 0 });
+                }
+                s.push(Action::Writeback { j: i });
+                while hi < (i + 1 + stale).min(last) {
+                    let next = hi + 1;
+                    s.push(Action::Splice { j: next, lag: next - (i + 1) });
+                    hi = next;
+                }
+            }
+        }
+        LoopKind::RelaxedMultistream => {
+            // mirrors run_relaxed_multistream_epoch: prologue splices,
+            // then the first W submissions against params v0, then
+            // wait i -> (Adam) -> WB i -> splice top-up -> submit i+W
+            let w = kn.window();
+            s.push(Action::Splice { j: 1, lag: 0 });
+            let mut hi = 1usize;
+            while hi < (1 + stale).min(last) {
+                let next = hi + 1;
+                s.push(Action::Splice { j: next, lag: next - 1 });
+                hi = next;
+            }
+            for j in 1..=w.min(last) {
+                s.push(Action::Submit { j, param_lag: j - 1 });
+            }
+            for i in 1..n_train {
+                s.push(Action::Wait { j: i });
+                s.push(Action::Writeback { j: i });
+                while hi < (i + 1 + stale).min(last) {
+                    let next = hi + 1;
+                    s.push(Action::Splice { j: next, lag: next - (i + 1) });
+                    hi = next;
+                }
+                if i + w <= last {
+                    s.push(Action::Submit { j: i + w, param_lag: w - 1 });
+                }
+            }
+        }
+    }
+    s
+}
+
+/// The closed-form schedule witnesses: what the real trainer's
+/// `EpochReport` must report for this configuration. The checker proves
+/// these are exact (bounds hold AND are attained) for every grid point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Prediction {
+    /// `min(k, n_train - 2)` for any pipelined loop (0 when nothing runs):
+    /// the window wants lag `k` but is capped by the last batch.
+    pub splice_lag_max: usize,
+    /// `min(p, streams - 1, n_train - 2)` for the relaxed loop, else 0.
+    pub param_lag_max: usize,
+    /// Peak submitted-but-uncommitted steps: `min(W, n_train - 1)`.
+    pub window_peak: usize,
+}
+
+/// Closed-form witnesses for `kn` (see [`Prediction`]).
+pub fn predicted(kn: &Knobs) -> Prediction {
+    if kn.n_train <= 1 {
+        return Prediction { splice_lag_max: 0, param_lag_max: 0, window_peak: 0 };
+    }
+    let last = kn.n_train - 1;
+    let splice_lag_max = kn.k.min(kn.n_train - 2);
+    match kn.loop_kind() {
+        LoopKind::RelaxedMultistream => Prediction {
+            splice_lag_max,
+            param_lag_max: kn.window().min(last) - 1,
+            window_peak: kn.window().min(last),
+        },
+        _ => Prediction { splice_lag_max, param_lag_max: 0, window_peak: 1 },
+    }
+}
+
+/// One invariant violation at one grid point.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub knobs: Knobs,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.knobs, self.msg)
+    }
+}
+
+/// Per-configuration check report.
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    /// Script length (coordinator operations this epoch).
+    pub actions: usize,
+    /// Distinct `(pc, in-flight set)` states the exhaustive DFS visited.
+    pub states: usize,
+    /// The witnessed schedule quantities (equal to [`predicted`]).
+    pub observed: Prediction,
+}
+
+/// Check one configuration: static plan-order/lag/window pass plus the
+/// exhaustive completion-interleaving DFS. See the module docs.
+pub fn check(kn: &Knobs) -> Result<Report, Violation> {
+    let s = script(kn);
+    let observed = check_script(kn, &s)?;
+    let states = check_interleavings(kn, &s)?;
+    Ok(Report { actions: s.len(), states, observed })
+}
+
+/// The static pass: replay the script against counters that define the
+/// ground truth (`spliced`/`submitted`/`waited`/`committed` front
+/// indices) and reject any recorded lag, ordering, or window excursion
+/// that contradicts them. Returns the witnessed quantities.
+fn check_script(kn: &Knobs, s: &[Action]) -> Result<Prediction, Violation> {
+    let fail = |msg: String| Violation { knobs: *kn, msg };
+    if !kn.valid() {
+        return Err(fail("invalid knob combination reached the checker".to_string()));
+    }
+    let pred = predicted(kn);
+    let param_bound = kn.p.min(kn.streams.saturating_sub(1));
+    let w = kn.window();
+    let last = kn.n_train.saturating_sub(1);
+
+    let mut spliced = 0usize; // splices land in plan order: highest so far
+    let mut submitted = 0usize;
+    let mut waited = 0usize; // optimizer commits land at the wait
+    let mut committed = 0usize; // memory write-backs
+    let mut splice_lag_max = 0usize;
+    let mut param_lag_max = 0usize;
+    let mut window_peak = 0usize;
+
+    for (pos, a) in s.iter().enumerate() {
+        match *a {
+            Action::Splice { j, lag } => {
+                if j != spliced + 1 {
+                    return Err(fail(format!(
+                        "action {pos}: splice {j} out of plan order (previous {spliced})"
+                    )));
+                }
+                spliced = j;
+                // batch j's exact view needs memory commits ..= j-1; only
+                // `committed` have landed when it is spliced
+                let true_lag = (j - 1) - committed.min(j - 1);
+                if lag != true_lag {
+                    return Err(fail(format!(
+                        "splice {j}: recorded lag {lag} != true lag {true_lag}"
+                    )));
+                }
+                if lag > kn.k {
+                    return Err(fail(format!(
+                        "splice {j}: lag {lag} exceeds bounded_staleness {}",
+                        kn.k
+                    )));
+                }
+                splice_lag_max = splice_lag_max.max(lag);
+            }
+            Action::Submit { j, param_lag } => {
+                if j != submitted + 1 {
+                    return Err(fail(format!(
+                        "action {pos}: submit {j} out of plan order (previous {submitted})"
+                    )));
+                }
+                if j > spliced {
+                    return Err(fail(format!(
+                        "submit {j}: batch not yet spliced (spliced through {spliced})"
+                    )));
+                }
+                submitted = j;
+                // step j's snapshot needs optimizer commits ..= j-1; only
+                // `waited` have been applied when it is submitted
+                let true_lag = (j - 1) - waited.min(j - 1);
+                if param_lag != true_lag {
+                    return Err(fail(format!(
+                        "submit {j}: recorded param lag {param_lag} != true lag {true_lag}"
+                    )));
+                }
+                if param_lag > param_bound {
+                    return Err(fail(format!(
+                        "submit {j}: param lag {param_lag} exceeds min(p, streams-1) = {param_bound}"
+                    )));
+                }
+                param_lag_max = param_lag_max.max(param_lag);
+                let in_window = submitted - waited;
+                if in_window > w {
+                    return Err(fail(format!(
+                        "submit {j}: {in_window} steps in flight exceeds window W = {w}"
+                    )));
+                }
+                if in_window > kn.streams {
+                    return Err(fail(format!(
+                        "submit {j}: {in_window} steps in flight exceeds {} lane(s)",
+                        kn.streams
+                    )));
+                }
+                window_peak = window_peak.max(in_window);
+            }
+            Action::Wait { j } => {
+                if j > submitted {
+                    return Err(fail(format!(
+                        "wait {j}: step never submitted (submitted through {submitted}) — deadlock"
+                    )));
+                }
+                if j != waited + 1 {
+                    return Err(fail(format!(
+                        "action {pos}: wait {j} out of plan order (previous {waited})"
+                    )));
+                }
+                waited = j;
+            }
+            Action::Writeback { j } => {
+                if j != committed + 1 {
+                    return Err(fail(format!(
+                        "action {pos}: write-back {j} out of plan order (previous {committed})"
+                    )));
+                }
+                if j > waited {
+                    return Err(fail(format!(
+                        "write-back {j} before its commit wait (waited through {waited})"
+                    )));
+                }
+                committed = j;
+            }
+        }
+    }
+
+    for (what, got) in [
+        ("spliced", spliced),
+        ("submitted", submitted),
+        ("waited", waited),
+        ("committed", committed),
+    ] {
+        if got != last {
+            return Err(fail(format!(
+                "epoch ends with {got}/{last} steps {what} — steps lost"
+            )));
+        }
+    }
+    let got = Prediction { splice_lag_max, param_lag_max, window_peak };
+    if got != pred {
+        return Err(fail(format!(
+            "witness mismatch: observed {got:?} but closed form predicts {pred:?}"
+        )));
+    }
+    Ok(got)
+}
+
+/// The dynamic pass: memoized DFS over every interleaving of lane
+/// completions with the coordinator script. State is `(pc, in-flight
+/// bitmask)`; from each state the coordinator may advance (unless it is
+/// at a `Wait` whose job has not completed) and any in-flight job may
+/// complete. Proves deadlock-freedom for all completion orders and
+/// returns the number of distinct states visited.
+fn check_interleavings(kn: &Knobs, s: &[Action]) -> Result<usize, Violation> {
+    let fail = |msg: String| Violation { knobs: *kn, msg };
+    let bit = |j: usize| 1u32 << j; // plan indices <= 12 on the grid
+    let mut seen: BTreeSet<(usize, u32)> = BTreeSet::new();
+    let mut stack: Vec<(usize, u32)> = vec![(0, 0)];
+    while let Some((pc, pending)) = stack.pop() {
+        if !seen.insert((pc, pending)) {
+            continue;
+        }
+        if pc == s.len() {
+            if pending != 0 {
+                return Err(fail(format!(
+                    "script ended with {} job(s) still in flight",
+                    pending.count_ones()
+                )));
+            }
+            continue; // terminal: epoch drained
+        }
+        let mut progressed = false;
+        let advance_ok = match s[pc] {
+            Action::Wait { j } => pending & bit(j) == 0,
+            _ => true,
+        };
+        if advance_ok {
+            let npending = match s[pc] {
+                Action::Submit { j, .. } => pending | bit(j),
+                _ => pending,
+            };
+            stack.push((pc + 1, npending));
+            progressed = true;
+        }
+        // nondeterminism: any in-flight job may complete now
+        let mut m = pending;
+        while m != 0 {
+            let b = m & m.wrapping_neg();
+            stack.push((pc, pending & !b));
+            m &= !b;
+            progressed = true;
+        }
+        if !progressed {
+            return Err(fail(format!(
+                "deadlock: stuck at action {pc} ({:?}) with nothing in flight",
+                s[pc]
+            )));
+        }
+    }
+    Ok(seen.len())
+}
+
+/// The exhaustive grid `pallas-verify` gates CI on.
+pub const GRID_N_TRAIN: usize = 12;
+pub const GRID_K: usize = 3;
+pub const GRID_P: usize = 3;
+pub const GRID_STREAMS: usize = 4;
+
+/// Totals from one full-grid run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GridSummary {
+    /// Valid configurations exhaustively checked.
+    pub checked: usize,
+    /// Knob combinations config validation rejects (mirrored, skipped).
+    pub skipped: usize,
+    /// Total coordinator actions across all scripts.
+    pub actions: usize,
+    /// Total distinct interleaving states explored.
+    pub states: usize,
+}
+
+/// Check every configuration with `n_train <= 12`, `k <= 3`, `p <= 3`,
+/// `1 <= streams <= 4`, stopping at the first violation.
+pub fn check_grid() -> Result<GridSummary, Violation> {
+    let mut sum = GridSummary::default();
+    for n_train in 0..=GRID_N_TRAIN {
+        for k in 0..=GRID_K {
+            for p in 0..=GRID_P {
+                for streams in 1..=GRID_STREAMS {
+                    let kn = Knobs { n_train, k, p, streams };
+                    if !kn.valid() {
+                        sum.skipped += 1;
+                        continue;
+                    }
+                    let rep = check(&kn)?;
+                    sum.checked += 1;
+                    sum.actions += rep.actions;
+                    sum.states += rep.states;
+                }
+            }
+        }
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_grid_is_clean() {
+        // the tier-1 mirror of the pallas-verify CI gate
+        let sum = check_grid().unwrap_or_else(|v| panic!("schedule violation: {v}"));
+        assert!(sum.checked > 500, "grid unexpectedly small: {sum:?}");
+        assert!(sum.skipped > 0, "the invalid-knob mirror never fired");
+    }
+
+    #[test]
+    fn loop_dispatch_mirrors_trainer() {
+        let kn = |n_train, k, p, streams| Knobs { n_train, k, p, streams };
+        assert_eq!(kn(1, 2, 0, 1).loop_kind(), LoopKind::Trivial);
+        assert_eq!(kn(6, 2, 0, 1).loop_kind(), LoopKind::Pipelined);
+        assert_eq!(kn(6, 2, 0, 3).loop_kind(), LoopKind::ExactMultistream);
+        assert_eq!(kn(6, 2, 2, 3).loop_kind(), LoopKind::RelaxedMultistream);
+        // p with a single stream is a validated no-op: still pipelined
+        assert_eq!(kn(6, 2, 2, 1).loop_kind(), LoopKind::Pipelined);
+    }
+
+    #[test]
+    fn validity_mirrors_config_rules() {
+        let kn = |n_train, k, p, streams| Knobs { n_train, k, p, streams };
+        assert!(!kn(6, 0, 0, 0).valid(), "zero lanes");
+        assert!(!kn(6, 0, 0, 2).valid(), "multi-stream at k = 0");
+        assert!(!kn(6, 1, 3, 4).valid(), "realized param lag 3 > k = 1");
+        assert!(kn(6, 3, 3, 4).valid());
+        assert!(kn(6, 0, 3, 1).valid(), "p with one stream is a no-op");
+        assert!(kn(6, 0, 0, 1).valid(), "the sequential default");
+    }
+
+    #[test]
+    fn witnesses_match_hand_computed_schedules() {
+        // pipelined, k = 2, 5 steps: window wants lag 2 and gets it
+        let got = check(&Knobs { n_train: 6, k: 2, p: 0, streams: 1 }).unwrap();
+        assert_eq!(got.observed.splice_lag_max, 2);
+        assert_eq!(got.observed.param_lag_max, 0);
+        assert_eq!(got.observed.window_peak, 1);
+        // exact multistream keeps the parameter chain exact
+        let got = check(&Knobs { n_train: 6, k: 2, p: 0, streams: 3 }).unwrap();
+        assert_eq!(got.observed.param_lag_max, 0);
+        assert_eq!(got.observed.window_peak, 1);
+        // relaxed: W = min(2, 2) + 1 = 3 in flight, param lag 2
+        let got = check(&Knobs { n_train: 6, k: 2, p: 2, streams: 3 }).unwrap();
+        assert_eq!(got.observed.param_lag_max, 2);
+        assert_eq!(got.observed.window_peak, 3);
+        // streams cap p: W - 1 = min(3, 1) = 1
+        let got = check(&Knobs { n_train: 6, k: 3, p: 3, streams: 2 }).unwrap();
+        assert_eq!(got.observed.param_lag_max, 1);
+        assert_eq!(got.observed.window_peak, 2);
+        // n_train caps everything: one step, nothing can lag
+        let got = check(&Knobs { n_train: 2, k: 3, p: 3, streams: 4 }).unwrap();
+        assert_eq!(got.observed, Prediction { splice_lag_max: 0, param_lag_max: 0, window_peak: 1 });
+        // trivial epoch: empty script
+        let got = check(&Knobs { n_train: 1, k: 2, p: 1, streams: 2 }).unwrap();
+        assert_eq!(got.actions, 0);
+        assert_eq!(got.observed, Prediction { splice_lag_max: 0, param_lag_max: 0, window_peak: 0 });
+    }
+
+    #[test]
+    fn static_pass_rejects_corrupted_schedules() {
+        let kn = Knobs { n_train: 6, k: 2, p: 2, streams: 3 };
+        let good = script(&kn);
+        assert!(check_script(&kn, &good).is_ok());
+
+        // swap two write-backs: commits leave plan order
+        let mut bad = good.clone();
+        let wbs: Vec<usize> = bad
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a, Action::Writeback { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        bad.swap(wbs[1], wbs[2]);
+        let err = check_script(&kn, &bad).unwrap_err();
+        assert!(err.msg.contains("out of plan order"), "{err}");
+
+        // claim a submission saw fresher params than it could have
+        let mut bad = good.clone();
+        let pos = bad
+            .iter()
+            .position(|a| matches!(a, Action::Submit { param_lag: 2, .. }))
+            .unwrap();
+        if let Action::Submit { j, .. } = bad[pos] {
+            bad[pos] = Action::Submit { j, param_lag: 0 };
+        }
+        let err = check_script(&kn, &bad).unwrap_err();
+        assert!(err.msg.contains("recorded param lag"), "{err}");
+
+        // submit a step whose batch was never spliced
+        let mut bad = good.clone();
+        let pos = bad.iter().position(|a| matches!(a, Action::Splice { j: 3, .. })).unwrap();
+        bad.remove(pos);
+        let err = check_script(&kn, &bad).unwrap_err();
+        assert!(
+            err.msg.contains("not yet spliced") || err.msg.contains("out of plan order"),
+            "{err}"
+        );
+
+        // drop the last write-back: a step never commits
+        let mut bad = good.clone();
+        let pos = bad.iter().rposition(|a| matches!(a, Action::Writeback { .. })).unwrap();
+        bad.remove(pos);
+        let err = check_script(&kn, &bad).unwrap_err();
+        assert!(err.msg.contains("steps lost"), "{err}");
+
+        // wait for a step that was never submitted: deadlock shape
+        let kn1 = Knobs { n_train: 2, k: 1, p: 0, streams: 2 };
+        let bad = vec![Action::Splice { j: 1, lag: 0 }, Action::Wait { j: 1 }];
+        let err = check_script(&kn1, &bad).unwrap_err();
+        assert!(err.msg.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn static_pass_rejects_window_overflow() {
+        // more submissions in flight than W (and than lanes) must be caught
+        let kn = Knobs { n_train: 4, k: 3, p: 1, streams: 2 }; // W = 2
+        let bad = vec![
+            Action::Splice { j: 1, lag: 0 },
+            Action::Splice { j: 2, lag: 1 },
+            Action::Splice { j: 3, lag: 2 },
+            Action::Submit { j: 1, param_lag: 0 },
+            Action::Submit { j: 2, param_lag: 1 },
+            Action::Submit { j: 3, param_lag: 2 },
+        ];
+        let err = check_script(&kn, &bad).unwrap_err();
+        assert!(
+            err.msg.contains("exceeds window") || err.msg.contains("exceeds min"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn dfs_explores_more_states_as_the_window_widens() {
+        // exact loop: one job in flight, the interleaving space is a line
+        let kn1 = Knobs { n_train: 8, k: 1, p: 0, streams: 2 };
+        let r1 = check(&kn1).unwrap();
+        // relaxed W = 3: genuinely concurrent jobs multiply the states
+        let kn3 = Knobs { n_train: 8, k: 3, p: 3, streams: 4 };
+        let r3 = check(&kn3).unwrap();
+        assert!(
+            r3.states > r1.states,
+            "wider window should widen the state space: {} vs {}",
+            r3.states,
+            r1.states
+        );
+    }
+
+    #[test]
+    fn scripts_are_pure_functions_of_the_knobs() {
+        let kn = Knobs { n_train: 9, k: 2, p: 1, streams: 3 };
+        assert_eq!(script(&kn), script(&kn));
+        assert_eq!(predicted(&kn), predicted(&kn));
+    }
+}

@@ -396,6 +396,64 @@ fn mid_epoch_fault_leaves_model_state_at_epoch_start() {
 }
 
 #[test]
+fn model_checker_predictions_match_trainer_witnesses() {
+    // the pallas-verify cross-validation gate: the schedule model's
+    // closed-form witnesses — proved exhaustively over the small-scope
+    // grid by `pres::verify::schedule::check_grid` — must equal the real
+    // trainer's EpochReport witnesses on a sampled sub-grid of runnable
+    // configurations covering all three coordinator loops. This is what
+    // pins the abstract state machines to the real loop bodies.
+    use pres::batching::partition;
+    use pres::verify::schedule::{predicted, Knobs};
+
+    // n_train exactly as the trainer computes it: plans whose predicted
+    // range lies inside the train split
+    let base = cfg("tgn", true, 50);
+    let ds = Trainer::make_dataset(&base).unwrap();
+    let n_train = partition(0..ds.log.len(), 50)
+        .into_iter()
+        .filter(|r| r.end <= ds.split.train_end)
+        .count();
+    assert!(n_train > 4, "tiny dataset too small to exercise the schedules");
+
+    for (k, p, s) in [
+        (0usize, 0usize, 1usize), // pipelined, staleness off
+        (1, 0, 1),                // pipelined, k = 1
+        (2, 0, 1),                // pipelined, k = 2
+        (1, 0, 2),                // exact multistream
+        (2, 0, 4),                // exact multistream, wide
+        (1, 1, 2),                // relaxed, W = 2
+        (2, 2, 3),                // relaxed, W = 3
+        (2, 2, 4),                // relaxed, p below lane count
+        (3, 3, 4),                // relaxed, W = 4 (grid corner)
+    ] {
+        let kn = Knobs { n_train, k, p, streams: s };
+        assert!(kn.valid(), "k = {k}, p = {p}, s = {s}: sub-grid point must be runnable");
+        let pred = predicted(&kn);
+
+        let mut c = cfg("tgn", true, 50);
+        c.pipeline = PipelineConfig {
+            depth: k + 1,
+            bounded_staleness: k,
+            pool_workers: 0,
+            exec_streams: s,
+            param_staleness: p,
+        };
+        let mut tr = Trainer::from_config(&c).unwrap();
+        let r = tr.train_epoch(0).unwrap();
+        assert_eq!(
+            r.splice_lag_max, pred.splice_lag_max,
+            "k = {k}, p = {p}, s = {s}: trainer splice-lag witness disagrees with the model"
+        );
+        assert_eq!(
+            r.param_lag_max, pred.param_lag_max,
+            "k = {k}, p = {p}, s = {s}: trainer param-lag witness disagrees with the model"
+        );
+        assert!(r.train_loss.is_finite(), "k = {k}, p = {p}, s = {s}");
+    }
+}
+
+#[test]
 fn stream_misconfigurations_are_rejected_with_clear_errors() {
     // streams without a staleness window: nothing is pre-spliced, so lanes
     // could never overlap anything — rejected at validation
